@@ -1,0 +1,69 @@
+//! Ablation bench for SUMO's design choices (DESIGN.md §4):
+//!   (a) projection rank r sweep,
+//!   (b) subspace refresh frequency K sweep,
+//!   (c) norm-growth limiter on/off,
+//! all on the same synthetic-QNLI fine-tune used by Figure 2.
+
+use sumo::bench::{scaled, TableWriter};
+use sumo::config::{OptimCfg, OptimKind, Schedule, TrainCfg};
+use sumo::coordinator::Coordinator;
+use sumo::data::glue::GlueTask;
+use sumo::runtime::Runtime;
+use sumo::train::Trainer;
+
+fn run(rt: &Runtime, ocfg: &OptimCfg, steps: usize) -> anyhow::Result<(f64, usize)> {
+    let tcfg = TrainCfg {
+        steps,
+        eval_batches: 8,
+        log_every: 1_000_000,
+        seed: 13,
+        schedule: Schedule::CosineWarmup {
+            warmup: 5,
+            min_ratio: 0.1,
+        },
+        ..TrainCfg::default()
+    };
+    let mut coord = Coordinator::native(rt, "micro_cls2", ocfg, tcfg.seed, 1)?;
+    let task = GlueTask::by_name("QNLI", coord.runner.cfg.vocab, coord.runner.seq_len()).unwrap();
+    let report = Trainer::new(tcfg).finetune_glue(&mut coord, &task)?;
+    Ok((report.metric, report.optimizer_state_bytes))
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::from_default_artifacts()?;
+    let steps = scaled(240);
+
+    let mut t = TableWriter::new(
+        "ablation_rank",
+        &["rank r", "accuracy", "optim-state (KB)"],
+    );
+    for r in [2usize, 4, 8, 16, 32] {
+        let ocfg = OptimCfg::new(OptimKind::Sumo).with_lr(0.02).with_rank(r).with_update_freq(50);
+        let (acc, bytes) = run(&rt, &ocfg, steps)?;
+        t.row(&[format!("{r}"), format!("{acc:.4}"), format!("{:.1}", bytes as f64 / 1e3)]);
+        eprintln!("rank {r}: acc {acc:.4}");
+    }
+    t.finish().unwrap();
+
+    let mut t = TableWriter::new("ablation_update_freq", &["K", "accuracy"]);
+    for k in [10usize, 50, 200, 1_000_000] {
+        let ocfg = OptimCfg::new(OptimKind::Sumo).with_lr(0.02).with_rank(8).with_update_freq(k);
+        let (acc, _) = run(&rt, &ocfg, steps)?;
+        let label = if k >= 1_000_000 { "fixed".to_string() } else { k.to_string() };
+        t.row(&[label, format!("{acc:.4}")]);
+        eprintln!("K {k}: acc {acc:.4}");
+    }
+    t.finish().unwrap();
+
+    let mut t = TableWriter::new("ablation_limiter", &["limiter", "accuracy"]);
+    for on in [true, false] {
+        let mut ocfg = OptimCfg::new(OptimKind::Sumo).with_lr(0.02).with_rank(8).with_update_freq(50);
+        ocfg.use_limiter = on;
+        let (acc, _) = run(&rt, &ocfg, steps)?;
+        t.row(&[format!("{}", if on { "on (γ=1.1)" } else { "off" }), format!("{acc:.4}")]);
+        eprintln!("limiter {on}: acc {acc:.4}");
+    }
+    t.finish().unwrap();
+    println!("\ndesign-choice ablations: moderate ranks + periodic refresh + limiter = the paper's defaults.");
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! Figure 2 — convergence speed on QNLI: SUMO (SVD) vs SUMO (NS5) vs
+//! GaLore. The paper reports ~1.6× fewer steps to reach GaLore's final
+//! accuracy. We run the three fine-tunes with identical budgets, log the
+//! accuracy-vs-step curves, and report the steps-to-target ratios.
+
+use sumo::bench::{scaled, TableWriter};
+use sumo::config::{OptimCfg, OptimKind, Schedule, TrainCfg};
+use sumo::coordinator::Coordinator;
+use sumo::data::glue::GlueTask;
+use sumo::runtime::Runtime;
+use sumo::train::Trainer;
+use sumo::util::plot::ascii_plot;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::from_default_artifacts()?;
+    let steps = scaled(240);
+    let eval_every = (steps / 16).max(2);
+    let mut curves: Vec<(&'static str, Vec<(f64, f64)>)> = Vec::new();
+    let mut t = TableWriter::new("fig2_convergence", &["step", "galore", "sumo_ns5", "sumo_svd"]);
+    let mut table_rows: std::collections::BTreeMap<usize, [f64; 3]> = Default::default();
+
+    for (col, kind, label) in [
+        (0usize, OptimKind::GaLore, "GaLore"),
+        (1, OptimKind::SumoNs5, "SUMO-NS5"),
+        (2, OptimKind::Sumo, "SUMO-SVD"),
+    ] {
+        let ocfg = OptimCfg::new(kind)
+            .with_lr(0.02)
+            .with_rank(8)
+            .with_update_freq(50);
+        let tcfg = TrainCfg {
+            steps,
+            eval_every,
+            eval_batches: 10,
+            log_every: 1_000_000,
+            seed: 5,
+            schedule: Schedule::CosineWarmup {
+                warmup: 5,
+                min_ratio: 0.1,
+            },
+            ..TrainCfg::default()
+        };
+        let mut coord = Coordinator::native(&rt, "micro_cls2", &ocfg, tcfg.seed, 1)?;
+        let task =
+            GlueTask::by_name("QNLI", coord.runner.cfg.vocab, coord.runner.seq_len()).unwrap();
+        let report = Trainer::new(tcfg).finetune_glue(&mut coord, &task)?;
+        for &(s, m) in &report.curve {
+            table_rows.entry(s).or_insert([f64::NAN; 3])[col] = m;
+        }
+        curves.push((label, report.curve.iter().map(|&(s, m)| (s as f64, m)).collect()));
+        println!("{label:<10} final acc {:.4} ({:.1}s)", report.metric, report.seconds);
+    }
+    for (step, row) in &table_rows {
+        t.row(&[
+            format!("{step}"),
+            format!("{:.4}", row[0]),
+            format!("{:.4}", row[1]),
+            format!("{:.4}", row[2]),
+        ]);
+    }
+    t.finish().unwrap();
+
+    let plot_series: Vec<(&str, &[(f64, f64)])> =
+        curves.iter().map(|(n, c)| (*n, c.as_slice())).collect();
+    println!("{}", ascii_plot(&plot_series, 70, 14));
+
+    // Steps-to-target on running-best (cummax) curves against a fixed
+    // target below saturation — the protocol behind the paper's "~1.6x
+    // fewer optimization steps" claim, robust to eval noise.
+    let target = 0.80f64;
+    let steps_to = |c: &[(f64, f64)]| {
+        let mut best = 0.0f64;
+        for (s, m) in c {
+            best = best.max(*m);
+            if best >= target {
+                return *s;
+            }
+        }
+        f64::INFINITY
+    };
+    let s_galore = steps_to(&curves[0].1).max(1.0);
+    let s_ns5 = steps_to(&curves[1].1).max(1.0);
+    let s_svd = steps_to(&curves[2].1).max(1.0);
+    println!(
+        "steps to reach GaLore-final acc {target:.3}: GaLore {s_galore}, SUMO-NS5 {s_ns5}, SUMO-SVD {s_svd}"
+    );
+    println!(
+        "speedup SUMO-SVD vs GaLore: {:.2}x (paper reports ~1.6x); vs SUMO-NS5: {:.2}x",
+        s_galore / s_svd,
+        s_ns5 / s_svd
+    );
+    Ok(())
+}

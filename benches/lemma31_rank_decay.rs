@@ -1,0 +1,102 @@
+//! Lemma 3.1 — the first moment collapses toward rank one during training:
+//! κ_M(t) = ‖M − P(1)M‖²_F / ‖M‖²_F ≤ O(C^{-t}) for reversible layers.
+//!
+//! The proof's mechanism: for a reversible layer the gradient takes the
+//! form G = (1/N)Σᵢ(Aᵢ − Bᵢ W Cᵢ); under gradient descent the residual
+//! decays eigen-mode by eigen-mode, so G(t) (and hence the EMA moment)
+//! aligns with the slowest mode — becoming rank one at rate C =
+//! ((1−ηλ₁)/(1−ηλ₂))⁻¹. We instantiate exactly that system (linear
+//! regression layer, spread spectrum), run momentum accumulation, log
+//! κ_M(t), and fit C.
+
+use sumo::bench::TableWriter;
+use sumo::linalg::norms::lowrank_residual;
+use sumo::linalg::{matmul, matmul_a_bt, Mat};
+use sumo::util::plot::ascii_plot;
+use sumo::util::Rng;
+
+fn main() {
+    let mut rng = Rng::new(31);
+    let (d_out, d_in, batch) = (12usize, 16usize, 64usize);
+    // Inputs whose covariance has one well-separated slow mode: the
+    // lemma's rate is C = (1−ηλ₁)/(1−ηλ₂) for the two smallest distinct
+    // eigenvalues, so a clear λ₂ ≫ λ₁ gap exhibits the collapse sharply.
+    let mut x = Mat::randn(d_in, batch, 1.0, &mut rng);
+    for i in 0..d_in {
+        let scale = if i + 1 == d_in { 0.22 } else { 1.0 - 0.02 * i as f32 };
+        for v in x.row_mut(i) {
+            *v *= scale;
+        }
+    }
+    let w_true = Mat::randn(d_out, d_in, 0.8, &mut rng);
+    let y = matmul(&w_true, &x);
+    let mut w = Mat::randn(d_out, d_in, 0.2, &mut rng);
+    let mut m = Mat::zeros(d_out, d_in);
+    let beta = 0.9f32;
+    // η chosen against λ_max of Σ = x xᵀ / batch for stable, fast decay.
+    let sigma = {
+        let mut s = matmul_a_bt(&x, &x);
+        s.scale(1.0 / batch as f32);
+        s
+    };
+    let lmax = sumo::linalg::spectral_norm(&sigma, 50);
+    let lr = 0.9 / lmax;
+
+    let mut t = TableWriter::new("lemma31_rank_decay", &["step", "kappa_M(t)"]);
+    let mut series = Vec::new();
+    for step in 0..400 {
+        // Reversible-layer gradient: G = (W x − y) xᵀ / batch.
+        let mut err = matmul(&w, &x);
+        err.axpy(-1.0, &y);
+        let mut g = matmul_a_bt(&err, &x);
+        g.scale(1.0 / batch as f32);
+        m.ema(beta, 1.0, &g); // the lemma's M = βM + G accumulation
+        w.axpy(-lr, &g);
+        if step % 20 == 0 || step == 399 {
+            let k = lowrank_residual(&m, 1);
+            t.row(&[format!("{step}"), format!("{k:.3e}")]);
+            if k > 0.0 {
+                series.push((step as f64, (k as f64).ln()));
+            }
+        }
+    }
+    t.finish().unwrap();
+    println!(
+        "{}",
+        ascii_plot(&[("ln kappa_M(t)", &series)], 70, 12)
+    );
+
+    // Fit ln κ_M(t) = a − t·ln C over the decaying segment: from the peak
+    // (early steps mix fast-mode transients into the fresh moment) to the
+    // minimum (after which float round-off sets a plateau).
+    let peak = series
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1 .1.partial_cmp(&b.1 .1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    let trough = series
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1 .1.partial_cmp(&b.1 .1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(series.len() - 1);
+    let tail: Vec<(f64, f64)> = series[peak..=trough.max(peak + 1)].to_vec();
+    let n = tail.len() as f64;
+    let sx: f64 = tail.iter().map(|p| p.0).sum();
+    let sy: f64 = tail.iter().map(|p| p.1).sum();
+    let sxx: f64 = tail.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = tail.iter().map(|p| p.0 * p.1).sum();
+    let slope = (n * sxy - sx * sy) / (n * sxx - sx * sx);
+    let c = (-slope).exp();
+    println!(
+        "fitted κ_M(t) ≈ O(C^-t) with C = {c:.4} (paper: C > 1 ⇒ exponential rank-1 collapse: {})",
+        if c > 1.0 { "CONFIRMED" } else { "NOT OBSERVED" }
+    );
+    println!(
+        "κ_M: {:.4} at step {} → {:.3e} at step 399",
+        series.first().unwrap().1.exp(),
+        series.first().unwrap().0,
+        series.last().unwrap().1.exp()
+    );
+}

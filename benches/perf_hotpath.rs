@@ -1,0 +1,115 @@
+//! §Perf — hot-path microbenchmarks for the optimization pass:
+//! L3 native kernels (matmul shapes of the SUMO step, orth, rSVD refresh),
+//! the full native SUMO step, the HLO SUMO step, and end-to-end train
+//! iterations per preset. Run before/after each optimization and record
+//! deltas in EXPERIMENTS.md §Perf.
+
+use sumo::bench::{fmt_ms, TableWriter};
+use sumo::config::{OptimCfg, OptimKind, TrainCfg};
+use sumo::coordinator::Coordinator;
+use sumo::data::{Batcher, SyntheticCorpus};
+use sumo::linalg::{matmul, matmul_at_b, newton_schulz5, orth_svd, randomized_range, Mat, RsvdOpts};
+use sumo::runtime::Runtime;
+use sumo::util::timer::time_fn;
+use sumo::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut t = TableWriter::new("perf_hotpath", &["kernel", "shape", "time"]);
+    let mut rng = Rng::new(99);
+
+    // L3 linalg kernels at the shapes the small-preset SUMO step uses.
+    for &(m, k, n, label) in &[
+        (2048usize, 256usize, 16usize, "proj GᵀQ-ish"),
+        (256, 2048, 16, "proj (wide)"),
+        (2048, 16, 256, "back-proj"),
+        (512, 512, 512, "square matmul"),
+    ] {
+        let a = Mat::randn(m, k, 1.0, &mut rng);
+        let b = Mat::randn(k, n, 1.0, &mut rng);
+        let s = time_fn(1, 5, || {
+            let _ = matmul(&a, &b);
+        });
+        t.row(&[format!("matmul {label}"), format!("{m}x{k}x{n}"), fmt_ms(&s)]);
+    }
+    {
+        let a = Mat::randn(2048, 256, 1.0, &mut rng);
+        let q = Mat::randn(2048, 16, 1.0, &mut rng);
+        let s = time_fn(1, 5, || {
+            let _ = matmul_at_b(&q, &a);
+        });
+        t.row(&["matmul_at_b (QᵀG)".into(), "16x2048x256".into(), fmt_ms(&s)]);
+    }
+    for &r in &[4usize, 16, 64] {
+        let m = Mat::randn(r, 2048, 1.0, &mut rng);
+        let s = time_fn(1, 8, || {
+            let _ = orth_svd(&m);
+        });
+        t.row(&[format!("orth_svd"), format!("{r}x2048"), fmt_ms(&s)]);
+        let s = time_fn(1, 8, || {
+            let _ = newton_schulz5(&m, 5);
+        });
+        t.row(&[format!("ns5"), format!("{r}x2048"), fmt_ms(&s)]);
+    }
+    {
+        let g = Mat::randn(2048, 256, 1.0, &mut rng);
+        let s = time_fn(1, 3, || {
+            let mut r2 = Rng::new(5);
+            let _ = randomized_range(&g, 16, RsvdOpts::default(), &mut r2);
+        });
+        t.row(&["rsvd range (refresh)".into(), "2048x256 r16".into(), fmt_ms(&s)]);
+    }
+
+    // Native SUMO step on the biggest layer shape.
+    {
+        let cfg = OptimCfg::new(OptimKind::Sumo).with_rank(16).with_update_freq(100);
+        let mut opt = sumo::optim::build(&cfg, &[(2048, 256)], &[true], 1);
+        let mut w = Mat::randn(2048, 256, 0.1, &mut rng);
+        let g = Mat::randn(2048, 256, 1.0, &mut rng);
+        opt.step(0, &mut w, &g, 1.0); // allocate states + first refresh
+        let s = time_fn(2, 10, || {
+            opt.step(0, &mut w, &g, 1.0);
+            opt.end_step();
+        });
+        t.row(&["native SUMO step".into(), "2048x256 r16".into(), fmt_ms(&s)]);
+    }
+
+    // End-to-end iterations (fwd/bwd via PJRT + optimizer).
+    if let Ok(rt) = Runtime::from_default_artifacts() {
+        for preset in ["nano", "micro", "small"] {
+            let cfg = OptimCfg::new(OptimKind::Sumo)
+                .with_lr(0.02)
+                .with_rank(if preset == "small" { 16 } else { 4 })
+                .with_update_freq(100);
+            let model = format!("{preset}_lm");
+            let mut coord = Coordinator::native(&rt, &model, &cfg, 1, 1)?;
+            let corpus = SyntheticCorpus::new(coord.runner.cfg.vocab, 1);
+            let mut batcher = Batcher::new(corpus, coord.runner.batch, coord.runner.seq_len());
+            let warm = batcher.next();
+            coord.train_iteration(&warm, 1.0)?; // compile
+            let mut batches: Vec<_> = (0..4).map(|_| batcher.next()).collect();
+            let mut i = 0;
+            let s = time_fn(0, 4, || {
+                let b = batches[i % batches.len()].clone();
+                coord.train_iteration(&b, 1.0).unwrap();
+                i += 1;
+            });
+            let _ = &mut batches;
+            t.row(&[format!("e2e train step (native)"), model.clone(), fmt_ms(&s)]);
+            // HLO engine for presets with artifacts.
+            if sumo::runtime::HloSumo::new(&rt, &coord.params, &cfg, 1).is_ok() {
+                let mut hcoord = Coordinator::hlo_sumo(&rt, &model, &cfg, 1)?;
+                hcoord.train_iteration(&warm, 1.0)?;
+                let mut j = 0;
+                let batches2: Vec<_> = (0..4).map(|_| batcher.next()).collect();
+                let s = time_fn(0, 4, || {
+                    let b = batches2[j % batches2.len()].clone();
+                    hcoord.train_iteration(&b, 1.0).unwrap();
+                    j += 1;
+                });
+                t.row(&["e2e train step (hlo sumo)".into(), model.clone(), fmt_ms(&s)]);
+            }
+        }
+    }
+    t.finish().unwrap();
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! Remark 3.7 / §3.1 — the FLOP trade between exact SVD in the subspace and
+//! Newton-Schulz5: analytic FLOP model next to measured wallclock over a
+//! (rank, width) sweep. The paper's worked example: at m=8, n=1024 the SVD
+//! route costs ≈2× NS5's FLOPs on the *subspace* matrix — but replaces
+//! Muon's *full-space* NS5, which is orders of magnitude more work.
+
+use sumo::bench::TableWriter;
+use sumo::linalg::{newton_schulz5, orth_svd, Mat};
+use sumo::util::timer::time_fn;
+use sumo::util::Rng;
+
+/// §3.1 FLOP models (m = rank of the subspace matrix, n = layer width).
+fn svd_flops(m: u64, n: u64) -> u64 {
+    4 * m * n * n.min(m) + 8 * m.min(n).pow(3) + n * m * m + n * n.min(m) * m
+}
+
+fn ns5_flops(m: u64, n: u64) -> u64 {
+    n * m * m + m * m * n + 20 * m * m * m + 10 * m * m
+}
+
+fn main() {
+    let mut rng = Rng::new(37);
+    let mut t = TableWriter::new(
+        "remark37_crossover",
+        &[
+            "r (rows)",
+            "n (cols)",
+            "SVD FLOPs (analytic)",
+            "NS5 FLOPs (analytic)",
+            "SVD/NS5 (analytic)",
+            "orth_svd ms",
+            "ns5 ms",
+            "SVD/NS5 (measured)",
+        ],
+    );
+    for &(r, n) in &[
+        (4usize, 256usize),
+        (8, 1024), // the paper's worked example
+        (16, 1024),
+        (32, 2048),
+        (64, 2048),
+    ] {
+        let m = Mat::randn(r, n, 1.0, &mut rng);
+        let s_svd = time_fn(1, 5, || {
+            let _ = orth_svd(&m);
+        });
+        let s_ns5 = time_fn(1, 5, || {
+            let _ = newton_schulz5(&m, 5);
+        });
+        let f_svd = svd_flops(r as u64, n as u64);
+        let f_ns5 = ns5_flops(r as u64, n as u64);
+        t.row(&[
+            format!("{r}"),
+            format!("{n}"),
+            format!("{:.2e}", f_svd as f64),
+            format!("{:.2e}", f_ns5 as f64),
+            format!("{:.2}", f_svd as f64 / f_ns5 as f64),
+            format!("{:.3}", s_svd.mean() * 1e3),
+            format!("{:.3}", s_ns5.mean() * 1e3),
+            format!("{:.2}", s_svd.mean() / s_ns5.mean()),
+        ]);
+    }
+    t.finish().unwrap();
+
+    // The macro comparison the remark actually argues: SUMO's subspace SVD
+    // vs Muon's full-space NS5 on a real layer shape.
+    let (big_m, big_n, r) = (512usize, 512usize, 16usize);
+    let full = Mat::randn(big_m, big_n, 1.0, &mut rng);
+    let sub = Mat::randn(r, big_n, 1.0, &mut rng);
+    let t_full = time_fn(0, 2, || {
+        let _ = newton_schulz5(&full, 5);
+    });
+    let t_sub = time_fn(1, 5, || {
+        let _ = orth_svd(&sub);
+    });
+    println!(
+        "full-space NS5 on {big_m}x{big_n}: {:.1} ms vs subspace exact SVD on {r}x{big_n}: {:.2} ms ({:.0}x cheaper)",
+        t_full.mean() * 1e3,
+        t_sub.mean() * 1e3,
+        t_full.mean() / t_sub.mean()
+    );
+}

@@ -1,0 +1,86 @@
+//! **The end-to-end driver** (EXPERIMENTS.md §E2E).
+//!
+//! Pretrains the `small` preset (~5.3M params — the largest this 1-core CPU
+//! testbed trains in minutes; DESIGN.md §3 logs the substitution for the
+//! paper's 60M–1B H200 runs) for a few hundred steps on the synthetic
+//! C4-like corpus, through the **full stack**:
+//!
+//!   streaming sharded data pipeline (backpressure)
+//!     -> PJRT-compiled JAX fwd/bwd (Pallas matmul kernels inside)
+//!     -> coordinator per-layer dispatch
+//!     -> **HLO SUMO updates** (Pallas orth_svd Block 2, rSVD Block 1)
+//!
+//! Logs the loss curve to bench_out/pretrain_loss.csv, checkpoints, and
+//! prints a validation perplexity + memory summary.
+//!
+//! ```bash
+//! cargo run --release --example pretrain_c4 [-- steps]   # default 300
+//! ```
+
+use sumo::config::{OptimCfg, OptimKind, Schedule, TrainCfg};
+use sumo::coordinator::Coordinator;
+use sumo::model::checkpoint;
+use sumo::runtime::Runtime;
+use sumo::train::Trainer;
+use sumo::util::logging::CsvWriter;
+use sumo::util::plot::ascii_plot;
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+    let rt = Runtime::from_default_artifacts()?;
+    let optim = OptimCfg::new(OptimKind::Sumo)
+        .with_lr(0.02)
+        .with_rank(16)
+        .with_update_freq(100);
+    let train = TrainCfg {
+        steps,
+        log_every: 10,
+        eval_batches: 8,
+        seed: 42,
+        schedule: Schedule::CosineWarmup {
+            warmup: steps / 20 + 1,
+            min_ratio: 0.1,
+        },
+        ..TrainCfg::default()
+    };
+
+    // HLO engine: the SUMO update itself runs as compiled Pallas HLO.
+    let mut coord = Coordinator::hlo_sumo(&rt, "small_lm", &optim, train.seed)?;
+    println!(
+        "pretrain small_lm ({} params) for {steps} steps, engine={}, batch={} seq={}",
+        coord.params.n_params(),
+        coord.engine_name(),
+        coord.runner.batch,
+        coord.runner.seq_len()
+    );
+
+    let mut csv = CsvWriter::create(
+        "bench_out/pretrain_loss.csv",
+        &["step", "loss", "lr_mult", "seconds"],
+    )?;
+    let report = Trainer::new(train).pretrain(&mut coord, Some(&mut csv))?;
+
+    let curve: Vec<(f64, f64)> = report
+        .loss_curve
+        .iter()
+        .map(|&(s, l)| (s as f64, l as f64))
+        .collect();
+    println!("\n{}", ascii_plot(&[("loss", &curve)], 70, 14));
+    println!(
+        "steps={} tokens={} final_loss={:.4} val_loss={:.4} val_ppl={:.2}",
+        report.steps, report.tokens_seen, report.final_loss, report.val_loss, report.val_ppl
+    );
+    println!(
+        "optimizer_state={:.2} MB (weights {:.2} MB) wall={:.1}s ({:.2} s/step)",
+        report.optimizer_state_bytes as f64 / 1e6,
+        coord.params.weight_bytes() as f64 / 1e6,
+        report.seconds,
+        report.seconds / report.steps.max(1) as f64
+    );
+    checkpoint::save(&coord.params, report.steps, "bench_out/pretrain_small.ckpt")?;
+    println!("checkpoint: bench_out/pretrain_small.ckpt; curve: bench_out/pretrain_loss.csv");
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Quickstart: 30 seconds from artifacts to a training run.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Loads the `nano` LM artifact, trains 40 steps with SUMO (native engine)
+//! on the synthetic corpus, evaluates perplexity, and prints the
+//! optimizer-state memory next to Adam's for the same model.
+
+use sumo::config::{OptimCfg, OptimKind, Schedule, TrainCfg};
+use sumo::coordinator::Coordinator;
+use sumo::runtime::Runtime;
+use sumo::train::Trainer;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::from_default_artifacts()?;
+    println!("PJRT platform: {}", rt.platform());
+
+    let optim = OptimCfg::new(OptimKind::Sumo)
+        .with_lr(0.02)
+        .with_rank(4)
+        .with_update_freq(20);
+    let train = TrainCfg {
+        steps: 40,
+        log_every: 10,
+        eval_batches: 4,
+        schedule: Schedule::CosineWarmup {
+            warmup: 5,
+            min_ratio: 0.1,
+        },
+        ..TrainCfg::default()
+    };
+
+    let mut coord = Coordinator::native(&rt, "nano_lm", &optim, 42, 1)?;
+    println!(
+        "model nano_lm: {} params in {} tensors",
+        coord.params.n_params(),
+        coord.params.len()
+    );
+    let report = Trainer::new(train).pretrain(&mut coord, None)?;
+    println!(
+        "\nSUMO: final loss {:.4}, val ppl {:.2}, optimizer state {:.1} KB",
+        report.final_loss,
+        report.val_ppl,
+        report.optimizer_state_bytes as f64 / 1e3
+    );
+
+    // Contrast optimizer-state memory with full-rank Adam on the same model.
+    let adam = OptimCfg::new(OptimKind::Adam);
+    let mut coord_adam = Coordinator::native(&rt, "nano_lm", &adam, 42, 1)?;
+    let quick = TrainCfg {
+        steps: 1,
+        log_every: 100,
+        eval_batches: 1,
+        ..TrainCfg::default()
+    };
+    Trainer::new(quick).pretrain(&mut coord_adam, None)?;
+    println!(
+        "Adam would hold {:.1} KB of optimizer state ({}x more)",
+        coord_adam.optimizer_state_bytes() as f64 / 1e3,
+        coord_adam.optimizer_state_bytes() / report.optimizer_state_bytes.max(1)
+    );
+    Ok(())
+}

@@ -1,0 +1,246 @@
+"""AOT lowering: JAX/Pallas programs -> HLO *text* artifacts + manifest.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1 rejects;
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Run via ``make artifacts`` (no-op when sources are unchanged):
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Outputs:
+    artifacts/<id>.hlo.txt      one per lowered program
+    artifacts/manifest.json     shapes/dtypes/param specs for the Rust side
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import optim as O
+
+BATCH = 8  # baked into every model artifact; mirrored in the manifest
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to_file(fn, args, out_dir: str, name: str, quiet=False) -> str:
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    if not quiet:
+        print(f"  {name}: {len(text) / 1e6:.2f} MB in {time.time() - t0:.1f}s",
+              flush=True)
+    return f"{name}.hlo.txt"
+
+
+# ---------------------------------------------------------------------------
+# manifest plan
+# ---------------------------------------------------------------------------
+
+# Models to lower: (preset, head). nano drives tests, micro/mini the
+# fine-tuning benches, small the e2e pretraining driver.
+MODEL_PLAN = [
+    ("nano", "lm"),
+    ("nano", "cls2"),
+    ("micro", "lm"),
+    ("micro", "cls2"),
+    ("micro", "cls3"),
+    ("micro", "reg"),
+    ("mini", "lm"),
+    ("small", "lm"),
+]
+
+# SUMO update/refresh artifacts per model preset: rank used by the e2e
+# driver + integration tests (native Rust optimizers cover other ranks).
+SUMO_RANK = {"nano": 4, "micro": 8, "mini": 8, "small": 16}
+
+# Cross-validation updates for baselines (nano shapes only; native Rust
+# implementations are the bench path).
+BASELINE_SHAPES = [(64, 64)]
+
+
+def projected_shapes(cfg) -> list:
+    """Unique 2-D layer shapes that low-rank optimizers project."""
+    shapes = []
+    for name, m, n in M.param_specs(cfg):
+        if m > 1 and n > 1 and not name.endswith("norm") and name != "head":
+            if (m, n) not in shapes:
+                shapes.append((m, n))
+    return shapes
+
+
+def build_all(out_dir: str, only: str | None = None) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"batch": BATCH, "models": {}, "optim": {}, "kernels": {}}
+
+    for preset, head in MODEL_PLAN:
+        cfg = M.resolve(preset, head)
+        mid = f"{preset}_{head}"
+        if only and only not in mid:
+            continue
+        print(f"model {mid}", flush=True)
+        flat, tokens, labels = M.example_args(cfg, BATCH)
+        train_file = lower_to_file(
+            M.make_train_step(cfg), (*flat, tokens, labels), out_dir, f"{mid}_train"
+        )
+        eval_file = lower_to_file(
+            M.make_eval_step(cfg), (*flat, tokens, labels), out_dir, f"{mid}_eval"
+        )
+        entry = {
+            "cfg": cfg,
+            "params": [[name, m, n] for name, m, n in M.param_specs(cfg)],
+            "train": train_file,
+            "eval": eval_file,
+            "batch": BATCH,
+            "label_dtype": "f32" if head == "reg" else "i32",
+        }
+        if head == "lm":
+            entry["logits"] = lower_to_file(
+                M.make_logits_step(cfg), (*flat, tokens), out_dir, f"{mid}_logits"
+            )
+        manifest["models"][mid] = entry
+
+    # SUMO per-layer update + refresh artifacts.
+    for preset in ["nano", "small"]:
+        if only and "sumo" not in (only or "") and only not in preset:
+            if only:
+                continue
+        cfg = M.resolve(preset, "lm")
+        r = SUMO_RANK[preset]
+        for m, n in projected_shapes(cfg):
+            sid = f"sumo_update_{m}x{n}_r{r}"
+            if sid not in manifest["optim"]:
+                print(f"optim {sid}", flush=True)
+                manifest["optim"][sid] = {
+                    "kind": "sumo_update",
+                    "m": m,
+                    "n": n,
+                    "rank": r,
+                    "left": O.project_left(m, n),
+                    "file": lower_to_file(
+                        O.make_sumo_update(m, n, r),
+                        O.sumo_update_args(m, n, r),
+                        out_dir,
+                        sid,
+                    ),
+                }
+            rid = f"sumo_refresh_{m}x{n}_r{r}"
+            if rid not in manifest["optim"]:
+                print(f"optim {rid}", flush=True)
+                manifest["optim"][rid] = {
+                    "kind": "sumo_refresh",
+                    "m": m,
+                    "n": n,
+                    "rank": r,
+                    "left": O.project_left(m, n),
+                    "oversample": 4,
+                    "file": lower_to_file(
+                        O.make_sumo_refresh(m, n, r),
+                        O.sumo_refresh_args(m, n, r),
+                        out_dir,
+                        rid,
+                    ),
+                }
+
+    # Baseline update graphs (cross-validated against native Rust impls).
+    if not only:
+        import jax.numpy as jnp
+
+        s = jax.ShapeDtypeStruct
+        for m, n in BASELINE_SHAPES:
+            w = s((m, n), jnp.float32)
+            print(f"optim baselines {m}x{n}", flush=True)
+            manifest["optim"][f"muon_update_{m}x{n}"] = {
+                "kind": "muon_update",
+                "m": m,
+                "n": n,
+                "file": lower_to_file(
+                    O.make_muon_update(m, n),
+                    [w, w, w, *O.scalar_args(3)],
+                    out_dir,
+                    f"muon_update_{m}x{n}",
+                ),
+            }
+            manifest["optim"][f"adam_update_{m}x{n}"] = {
+                "kind": "adam_update",
+                "m": m,
+                "n": n,
+                "file": lower_to_file(
+                    O.make_adam_update(m, n),
+                    [w, w, w, w, *O.scalar_args(6)],
+                    out_dir,
+                    f"adam_update_{m}x{n}",
+                ),
+            }
+            r = 4
+            left = O.project_left(m, n)
+            q = s((m if left else n, r), jnp.float32)
+            mom = s((r, n) if left else (m, r), jnp.float32)
+            manifest["optim"][f"galore_update_{m}x{n}_r{r}"] = {
+                "kind": "galore_update",
+                "m": m,
+                "n": n,
+                "rank": r,
+                "left": left,
+                "file": lower_to_file(
+                    O.make_galore_update(m, n, r),
+                    [w, mom, mom, q, w, *O.scalar_args(7)],
+                    out_dir,
+                    f"galore_update_{m}x{n}_r{r}",
+                ),
+            }
+
+        # Standalone kernel artifacts (runtime smoke tests / kernel benches).
+        from .kernels import newton_schulz5, orth_svd
+
+        km = s((8, 64), jnp.float32)
+        manifest["kernels"]["orth_svd_8x64"] = {
+            "file": lower_to_file(
+                lambda x: (orth_svd(x),), [km], out_dir, "orth_svd_8x64"
+            ),
+            "m": 8,
+            "n": 64,
+        }
+        manifest["kernels"]["ns5_8x64"] = {
+            "file": lower_to_file(
+                lambda x: (newton_schulz5(x),), [km], out_dir, "ns5_8x64"
+            ),
+            "m": 8,
+            "n": 64,
+        }
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"manifest: {len(manifest['models'])} models, "
+          f"{len(manifest['optim'])} optim graphs, "
+          f"{len(manifest['kernels'])} kernels", flush=True)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter for ids")
+    args = ap.parse_args()
+    build_all(args.out, args.only)
+
+
+if __name__ == "__main__":
+    main()

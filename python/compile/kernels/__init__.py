@@ -1,0 +1,20 @@
+"""Layer-1 Pallas kernels — the paper's compute hot-spot.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so interpret mode lowers them to plain HLO that the Rust
+runtime (xla_extension 0.5.1) executes. Block shapes are still chosen for the
+TPU VMEM/MXU budget (see DESIGN.md "Hardware Adaptation"); correctness is
+checked against the pure-jnp oracles in ``ref.py``.
+"""
+
+from .matmul import matmul, matmul_tiled
+from .newton_schulz import newton_schulz5
+from .orth import jacobi_eigh, orth_svd
+
+__all__ = [
+    "matmul",
+    "matmul_tiled",
+    "newton_schulz5",
+    "orth_svd",
+    "jacobi_eigh",
+]

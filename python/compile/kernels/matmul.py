@@ -1,0 +1,81 @@
+"""Tiled Pallas matmul kernel with a custom VJP.
+
+This is the workhorse of the SUMO update graphs (Q^T G projections, Q O
+back-projections) and is also called from the Layer-2 model's MLP so the
+kernel lowers into the train-step HLO.
+
+TPU thinking (DESIGN.md §Hardware-Adaptation): the grid tiles HBM->VMEM
+transfers at (TM, TK)x(TK, TN) blocks sized for the MXU's 128x128 systolic
+array; the k-dimension of the grid accumulates into the output block, which
+stays resident in VMEM across the k loop ("revisiting" schedule). On CPU we
+run the same program under interpret=True.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Preferred tile edge (MXU native tile). Actual tiles divide the problem.
+_PREF_TILE = 128
+
+
+def _pick_tile(dim: int, pref: int = _PREF_TILE) -> int:
+    """Largest divisor of ``dim`` that is <= pref (prefers pref itself)."""
+    if dim <= pref:
+        return dim
+    for t in range(pref, 0, -1):
+        if dim % t == 0:
+            return t
+    return dim
+
+
+def _mm_kernel(a_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def matmul_tiled(a, b, interpret: bool = True):
+    """C = A @ B via the tiled Pallas kernel (no autodiff — see matmul)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"matmul dims {a.shape} x {b.shape}"
+    tm, tk, tn = _pick_tile(m), _pick_tile(k), _pick_tile(n)
+    grid = (m // tm, n // tn, k // tk)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+@jax.custom_vjp
+def matmul(a, b):
+    """Differentiable A @ B where forward *and* both backward products run
+    through the Pallas kernel (so model fwd/bwd HLO contains the kernel)."""
+    return matmul_tiled(a, b)
+
+
+def _matmul_fwd(a, b):
+    return matmul_tiled(a, b), (a, b)
+
+
+def _matmul_bwd(res, g):
+    a, b = res
+    da = matmul_tiled(g, b.T)
+    db = matmul_tiled(a.T, g)
+    return da, db
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

@@ -1,0 +1,47 @@
+"""Newton-Schulz5 orthogonalization kernel — Muon's approximation, kept as
+the paper's ablation baseline (Table 2 "SUMO (Newton-Schulz5)" rows and the
+Lemma 3.2 error-bound experiments).
+
+One Pallas block holds X (r x n) and the r x r Gram; the quintic
+X <- aX + (bA + cA^2)X with A = X X^T runs ``iters`` times in VMEM.
+Coefficients are Muon's tuned (3.4445, -4.7750, 2.0315).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NS_A, NS_B, NS_C = 3.4445, -4.7750, 2.0315
+
+
+def _ns5_block(m, iters):
+    norm = jnp.maximum(jnp.sqrt(jnp.sum(m * m)), 1e-30)
+    x0 = m / norm
+
+    def body(_, x):
+        a = jnp.dot(x, x.T, preferred_element_type=jnp.float32)
+        a2 = jnp.dot(a, a, preferred_element_type=jnp.float32)
+        bmat = NS_B * a + NS_C * a2
+        return NS_A * x + jnp.dot(bmat, x, preferred_element_type=jnp.float32)
+
+    return jax.lax.fori_loop(0, iters, body, x0)
+
+
+def _ns5_kernel(m_ref, o_ref, *, iters):
+    o_ref[...] = _ns5_block(m_ref[...], iters)
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "interpret"))
+def newton_schulz5(m, iters: int = 5, interpret: bool = True):
+    """Approximate polar factor via ``iters`` quintic Newton-Schulz steps."""
+    r, n = m.shape
+    if r > n:
+        return newton_schulz5(m.T, iters=iters, interpret=interpret).T
+    kernel = functools.partial(_ns5_kernel, iters=iters)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((r, n), jnp.float32),
+        interpret=interpret,
+    )(m.astype(jnp.float32))

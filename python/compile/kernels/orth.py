@@ -1,0 +1,125 @@
+"""Exact SVD moment-orthogonalization — SUMO's Block 2 as a Pallas kernel.
+
+``orth_svd(M)`` computes the polar factor ``(M M^T)^{-1/2} M`` *exactly* (to
+float precision) via a cyclic Jacobi eigendecomposition of the r x r Gram
+matrix, entirely inside one Pallas block:
+
+  * the r x n moment block and the r x r Gram live in VMEM for every rank
+    the paper uses (r <= 512);
+  * the Jacobi sweeps are O(r^3) VPU work — *no* HBM traffic, versus
+    Newton-Schulz5's five rounds of full-matrix matmuls;
+  * the final (M M^T)^{-1/2} @ M is one MXU pass.
+
+This is the TPU re-thinking of the paper's CUDA claim that "exact SVD is
+affordable in the subspace" (Remark 3.7).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# Relative eigenvalue floor for pseudo-inverse behaviour on rank-deficient
+# moments (matches rust/src/linalg/orth.rs EPS_REL).
+_EPS_REL = 1e-10
+_DEFAULT_SWEEPS = 12
+
+
+def pair_indices(r: int):
+    """Static (p, q) index arrays for the cyclic Jacobi sweep order."""
+    ps_np, qs_np = np.triu_indices(r, 1)
+    return (
+        jnp.asarray(ps_np, dtype=jnp.int32),
+        jnp.asarray(qs_np, dtype=jnp.int32),
+    )
+
+
+def jacobi_eigh(b, sweeps: int = _DEFAULT_SWEEPS, pairs=None):
+    """Cyclic Jacobi eigendecomposition of a symmetric matrix.
+
+    Returns (eigenvalues desc, eigenvectors in columns). The sweep runs in a
+    bounded fori_loop; the pair rotations inside a sweep are statically
+    unrolled (static indices only). The dynamic-index formulation
+    (fori_loop over pairs + gather/scatter) mis-executes on xla_extension
+    0.5.1's CPU runtime — the AOT consumer — so static unrolling is
+    correctness-critical here, and is also what a Mosaic/TPU lowering would
+    do for these tiny O(r²) rotation schedules.
+
+    ``pairs`` is accepted for API compatibility and ignored (indices are
+    compile-time constants).
+    """
+    del pairs
+    r = b.shape[0]
+    if r == 1:
+        return b[0], jnp.ones((1, 1), b.dtype)
+    ps_np, qs_np = np.triu_indices(r, 1)
+
+    def sweep_body(_, carry):
+        a, v = carry
+        for p, q in zip(ps_np.tolist(), qs_np.tolist()):
+            app = a[p, p]
+            aqq = a[q, q]
+            apq = a[p, q]
+            small = jnp.abs(apq) < 1e-30
+            tau = (aqq - app) / (2.0 * jnp.where(small, 1.0, apq))
+            t = jnp.sign(tau) / (jnp.abs(tau) + jnp.sqrt(1.0 + tau * tau))
+            t = jnp.where(tau == 0.0, 1.0, t)
+            c = 1.0 / jnp.sqrt(1.0 + t * t)
+            s = t * c
+            c = jnp.where(small, 1.0, c)
+            s = jnp.where(small, 0.0, s)
+            rp = a[p, :]
+            rq = a[q, :]
+            a = a.at[p, :].set(c * rp - s * rq).at[q, :].set(s * rp + c * rq)
+            cp = a[:, p]
+            cq = a[:, q]
+            a = a.at[:, p].set(c * cp - s * cq).at[:, q].set(s * cp + c * cq)
+            vp = v[:, p]
+            vq = v[:, q]
+            v = v.at[:, p].set(c * vp - s * vq).at[:, q].set(s * vp + c * vq)
+        return (a, v)
+
+    a, v = jax.lax.fori_loop(
+        0, sweeps, sweep_body, (b.astype(jnp.float32), jnp.eye(r, dtype=jnp.float32))
+    )
+    w = jnp.diagonal(a)
+    order = jnp.argsort(-w)
+    return w[order], v[:, order]
+
+
+def _polar_from_block(m, sweeps, pairs=None):
+    """(M M^T)^{-1/2} M for one VMEM-resident block (r <= n)."""
+    gram = jnp.dot(m, m.T, preferred_element_type=jnp.float32)
+    w, v = jacobi_eigh(gram, sweeps, pairs=pairs)
+    lam_max = jnp.maximum(w[0], 0.0)
+    inv = jnp.where(
+        w > _EPS_REL * lam_max, 1.0 / jnp.sqrt(jnp.maximum(w, 1e-38)), 0.0
+    )
+    inv_sqrt = (v * inv[None, :]) @ v.T
+    return jnp.dot(inv_sqrt, m, preferred_element_type=jnp.float32)
+
+
+def _orth_kernel(m_ref, o_ref, *, sweeps):
+    o_ref[...] = _polar_from_block(m_ref[...], sweeps)
+
+
+@functools.partial(jax.jit, static_argnames=("sweeps", "interpret"))
+def orth_svd(m, sweeps: int = _DEFAULT_SWEEPS, interpret: bool = True):
+    """Exact Orthogonalization_SVD(M): the closest (semi-)orthogonal matrix
+    in Frobenius norm. Transpose convention applied so the smaller side is
+    orthonormalized (as in the paper: "either O^T O = I or O O^T = I")."""
+    r, n = m.shape
+    if r > n:
+        return orth_svd(m.T, sweeps=sweeps, interpret=interpret).T
+    if r == 1:
+        # Degenerate rank-1 moment: polar factor is the normalized row.
+        norm = jnp.maximum(jnp.sqrt(jnp.sum(m * m)), 1e-30)
+        return (m / norm).astype(jnp.float32)
+    kernel = functools.partial(_orth_kernel, sweeps=sweeps)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((r, n), jnp.float32),
+        interpret=interpret,
+    )(m.astype(jnp.float32))

@@ -1,0 +1,47 @@
+"""Pure-jnp / numpy oracles for every Layer-1 kernel.
+
+pytest (with hypothesis sweeps) asserts each Pallas kernel against these.
+They are intentionally written in the most obvious way possible.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+NS_A, NS_B, NS_C = 3.4445, -4.7750, 2.0315
+
+
+def matmul_ref(a, b):
+    return jnp.asarray(a, jnp.float32) @ jnp.asarray(b, jnp.float32)
+
+
+def orth_svd_ref(m):
+    """Exact polar factor U V^T via numpy's LAPACK SVD (build-time only)."""
+    m = np.asarray(m, np.float64)
+    transpose = m.shape[0] > m.shape[1]
+    if transpose:
+        m = m.T
+    u, s, vt = np.linalg.svd(m, full_matrices=False)
+    # Pseudo-inverse convention for (near-)zero singular values.
+    keep = s > 1e-7 * max(s[0], 1e-30)
+    o = (u[:, keep] @ vt[keep, :]).astype(np.float32)
+    return o.T if transpose else o
+
+
+def newton_schulz5_ref(m, iters=5):
+    m = np.asarray(m, np.float32)
+    transpose = m.shape[0] > m.shape[1]
+    if transpose:
+        m = m.T
+    x = m / max(np.linalg.norm(m), 1e-30)
+    for _ in range(iters):
+        a = x @ x.T
+        b = NS_B * a + NS_C * (a @ a)
+        x = NS_A * x + b @ x
+    return x.T if transpose else x
+
+
+def eigh_ref(b):
+    """Symmetric eigendecomposition, eigenvalues descending."""
+    w, v = np.linalg.eigh(np.asarray(b, np.float64))
+    order = np.argsort(-w)
+    return w[order].astype(np.float32), v[:, order].astype(np.float32)

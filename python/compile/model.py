@@ -1,0 +1,272 @@
+"""Layer-2: LLaMA-style transformer forward/backward in JAX.
+
+Architecture (matches the paper's LLaMA family, scaled — see DESIGN.md §3):
+RMSNorm -> RoPE multi-head causal attention -> RMSNorm -> SwiGLU MLP, with
+tied input/output embeddings. MLP projections route through the Layer-1
+Pallas ``matmul`` kernel (custom-VJP) so the kernel lowers into the same
+train-step HLO the Rust runtime executes.
+
+Parameter registration order is defined by ``param_specs`` and mirrored
+exactly by ``rust/src/config/model_cfg.rs``; the AOT manifest carries the
+spec list so the Rust integration tests can assert agreement.
+
+``train_step(params, inputs, targets) -> (loss, *grads)`` and the eval/
+predict variants are the functions ``aot.py`` lowers to HLO text.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul
+
+# Special token ids (mirrors rust/src/data/corpus.rs).
+PAD, BOS, EOS = 0, 1, 2
+
+# Named presets — MUST mirror rust/src/config/model_cfg.rs::preset.
+PRESETS = {
+    "nano": dict(vocab=256, d_model=64, n_layers=2, n_heads=4, seq_len=32),
+    "micro": dict(vocab=512, d_model=128, n_layers=3, n_heads=4, seq_len=64),
+    "mini": dict(vocab=1024, d_model=192, n_layers=4, n_heads=6, seq_len=64),
+    "small": dict(vocab=2048, d_model=256, n_layers=6, n_heads=8, seq_len=128),
+}
+
+
+def d_ff_for(d_model: int) -> int:
+    """SwiGLU hidden width: (8/3)·d rounded up to a multiple of 16
+    (mirrors the Rust preset arithmetic)."""
+    return (8 * d_model // 3 + 15) // 16 * 16
+
+
+def resolve(preset: str, head: str = "lm") -> dict:
+    cfg = dict(PRESETS[preset])
+    cfg["d_ff"] = d_ff_for(cfg["d_model"])
+    cfg["name"] = preset
+    cfg["head"] = head  # "lm" | "clsK" | "reg"
+    return cfg
+
+
+def param_specs(cfg: dict):
+    """(name, rows, cols) in registration order — the Rust twin of
+    ModelCfg::param_specs."""
+    d = cfg["d_model"]
+    specs = [("embed", cfg["vocab"], d)]
+    for l in range(cfg["n_layers"]):
+        specs += [
+            (f"l{l}.attn_norm", 1, d),
+            (f"l{l}.wq", d, d),
+            (f"l{l}.wk", d, d),
+            (f"l{l}.wv", d, d),
+            (f"l{l}.wo", d, d),
+            (f"l{l}.mlp_norm", 1, d),
+            (f"l{l}.w_gate", d, cfg["d_ff"]),
+            (f"l{l}.w_up", d, cfg["d_ff"]),
+            (f"l{l}.w_down", cfg["d_ff"], d),
+        ]
+    specs.append(("final_norm", 1, d))
+    head = cfg["head"]
+    if head.startswith("cls"):
+        specs.append(("head", d, int(head[3:])))
+    elif head == "reg":
+        specs.append(("head", d, 1))
+    return specs
+
+
+# --------------------------------------------------------------------------
+# building blocks
+# --------------------------------------------------------------------------
+
+
+def rmsnorm(x, scale):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-6) * scale.reshape(-1)
+
+
+def rope_tables(seq_len: int, head_dim: int):
+    """cos/sin tables, shape (seq, head_dim/2)."""
+    half = head_dim // 2
+    inv_freq = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    t = jnp.arange(seq_len, dtype=jnp.float32)
+    freqs = jnp.outer(t, inv_freq)
+    return jnp.cos(freqs), jnp.sin(freqs)
+
+
+def apply_rope(x, cos, sin):
+    """x: (b, h, s, hd), split-halves convention."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[None, None, :, :]
+    s = sin[None, None, :, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+
+
+def attention(x, wq, wk, wv, wo, n_heads: int, cos, sin):
+    b, s, d = x.shape
+    hd = d // n_heads
+    xf = x.reshape(b * s, d)
+    q = (xf @ wq).reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+    k = (xf @ wk).reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+    v = (xf @ wv).reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    causal = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(causal[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(b * s, d)
+    return (ctx @ wo).reshape(b, s, d)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    b, s, d = x.shape
+    xf = x.reshape(b * s, d)
+    g = matmul(xf, w_gate)
+    u = matmul(xf, w_up)
+    h = jax.nn.silu(g) * u
+    return matmul(h, w_down).reshape(b, s, d)
+
+
+def backbone(params: dict, cfg: dict, tokens):
+    """tokens: (b, s) int32 -> hidden states (b, s, d)."""
+    d = cfg["d_model"]
+    h = params["embed"][tokens]  # gather
+    cos, sin = rope_tables(tokens.shape[1], d // cfg["n_heads"])
+    for l in range(cfg["n_layers"]):
+        h = h + attention(
+            rmsnorm(h, params[f"l{l}.attn_norm"]),
+            params[f"l{l}.wq"],
+            params[f"l{l}.wk"],
+            params[f"l{l}.wv"],
+            params[f"l{l}.wo"],
+            cfg["n_heads"],
+            cos,
+            sin,
+        )
+        h = h + swiglu(
+            rmsnorm(h, params[f"l{l}.mlp_norm"]),
+            params[f"l{l}.w_gate"],
+            params[f"l{l}.w_up"],
+            params[f"l{l}.w_down"],
+        )
+    return rmsnorm(h, params["final_norm"])
+
+
+def lm_loss(params: dict, cfg: dict, tokens, targets):
+    """Mean next-token cross-entropy, PAD targets masked."""
+    h = backbone(params, cfg, tokens)  # (b, s, d)
+    b, s, d = h.shape
+    logits = h.reshape(b * s, d) @ params["embed"].T  # tied head
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tgt = targets.reshape(b * s)
+    nll = -jnp.take_along_axis(logp, tgt[:, None], axis=-1)[:, 0]
+    mask = (tgt != PAD).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def pooled(params: dict, cfg: dict, tokens):
+    """Mean-pooled final hidden state over non-PAD positions."""
+    h = backbone(params, cfg, tokens)
+    mask = (tokens != PAD).astype(jnp.float32)[..., None]
+    return jnp.sum(h * mask, axis=1) / jnp.maximum(jnp.sum(mask, axis=1), 1.0)
+
+
+def cls_logits(params: dict, cfg: dict, tokens):
+    return pooled(params, cfg, tokens) @ params["head"]
+
+
+def cls_loss(params: dict, cfg: dict, tokens, labels):
+    logits = cls_logits(params, cfg, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    lab = labels.astype(jnp.int32)
+    return -jnp.mean(jnp.take_along_axis(logp, lab[:, None], axis=-1))
+
+
+def reg_loss(params: dict, cfg: dict, tokens, scores):
+    pred = cls_logits(params, cfg, tokens)[:, 0]
+    return jnp.mean((pred - scores) ** 2)
+
+
+# --------------------------------------------------------------------------
+# lowered entry points
+# --------------------------------------------------------------------------
+
+
+def _params_from_flat(cfg, flat):
+    names = [name for name, _, _ in param_specs(cfg)]
+    assert len(names) == len(flat), (len(names), len(flat))
+    return dict(zip(names, flat))
+
+
+def make_train_step(cfg: dict):
+    """(params..., tokens, labels) -> (loss, *grads) for this config."""
+    head = cfg["head"]
+
+    def loss_fn(flat_params, tokens, labels):
+        params = _params_from_flat(cfg, flat_params)
+        if head == "lm":
+            return lm_loss(params, cfg, tokens, labels)
+        if head == "reg":
+            return reg_loss(params, cfg, tokens, labels)
+        return cls_loss(params, cfg, tokens, labels)
+
+    def step(*args):
+        n = len(param_specs(cfg))
+        flat, tokens, labels = list(args[:n]), args[n], args[n + 1]
+        loss, grads = jax.value_and_grad(loss_fn)(flat, tokens, labels)
+        return (loss, *grads)
+
+    return step
+
+
+def make_eval_step(cfg: dict):
+    """(params..., tokens, labels) -> (loss,) for LM; (loss, logits) for
+    cls/reg heads so Rust computes accuracy / F1 / Pearson."""
+    head = cfg["head"]
+
+    def step(*args):
+        n = len(param_specs(cfg))
+        flat, tokens, labels = list(args[:n]), args[n], args[n + 1]
+        params = _params_from_flat(cfg, flat)
+        if head == "lm":
+            return (lm_loss(params, cfg, tokens, labels),)
+        logits = cls_logits(params, cfg, tokens)
+        if head == "reg":
+            loss = jnp.mean((logits[:, 0] - labels) ** 2)
+        else:
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            lab = labels.astype(jnp.int32)
+            loss = -jnp.mean(jnp.take_along_axis(logp, lab[:, None], axis=-1))
+        return (loss, logits)
+
+    return step
+
+
+def make_logits_step(cfg: dict):
+    """(params..., tokens) -> (last-position LM logits,) for greedy decoding
+    in the math-reasoning evals."""
+
+    def step(*args):
+        n = len(param_specs(cfg))
+        flat, tokens = list(args[:n]), args[n]
+        params = _params_from_flat(cfg, flat)
+        h = backbone(params, cfg, tokens)  # (b, s, d)
+        last = h[:, -1, :]
+        return (last @ params["embed"].T,)
+
+    return step
+
+
+def example_args(cfg: dict, batch: int):
+    """ShapeDtypeStructs for lowering: params, tokens, labels."""
+    flat = [
+        jax.ShapeDtypeStruct((m, n), jnp.float32) for _, m, n in param_specs(cfg)
+    ]
+    tokens = jax.ShapeDtypeStruct((batch, cfg["seq_len"]), jnp.int32)
+    head = cfg["head"]
+    if head == "lm":
+        labels = jax.ShapeDtypeStruct((batch, cfg["seq_len"]), jnp.int32)
+    elif head == "reg":
+        labels = jax.ShapeDtypeStruct((batch,), jnp.float32)
+    else:
+        labels = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    return flat, tokens, labels

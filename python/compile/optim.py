@@ -1,0 +1,201 @@
+"""Layer-2 optimizer update graphs, built on the Layer-1 kernels.
+
+Each builder returns a jax function that ``aot.py`` lowers to one HLO
+artifact per (layer shape, rank). The Rust coordinator executes these on
+the request path — one call per layer per step — so Python never runs at
+training time.
+
+Conventions (mirrors rust/src/optim/):
+  * Projection side follows the paper: for W (m x n) with m >= n the
+    subspace basis Q is m x r and the projected gradient is Q^T G (r x n);
+    for m < n, Q is n x r and the projected gradient is G Q (m x r).
+  * The moment update is the convex-combination form of Appendix C:
+    M <- beta * M + (1 - beta) * Ghat.
+  * Block 3 (norm-growth limiter) and Block 4 (back-projection + weight
+    decay + RMS-consistent scaling) are fused into the same artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul_tiled, newton_schulz5, orth_svd
+
+
+def project_left(m: int, n: int) -> bool:
+    """True when the basis multiplies from the left (m >= n)."""
+    return m >= n
+
+
+def rms_scale(m: int, n: int) -> float:
+    """Muon-style RMS-consistent per-layer LR scale (§Method Block 4 /
+    Liu et al. 2025): sqrt(max(m, n)) * 0.2."""
+    return 0.2 * float(max(m, n)) ** 0.5
+
+
+def make_sumo_update(m: int, n: int, r: int, use_ns5: bool = False, ns_iters: int = 5):
+    """SUMO Blocks 2-4 for one layer shape.
+
+    Inputs:  W (m,n), M (r,n) or (m,r), Q (m,r) or (n,r), G (m,n),
+             o_prev_norm (), lr (), beta (), wd (), gamma (), alpha ()
+    Outputs: W', M', o_norm
+    """
+    left = project_left(m, n)
+
+    def step(w, mom, q, g, o_prev_norm, lr, beta, wd, gamma, alpha):
+        # Block 1 tail: project the gradient into the subspace.
+        ghat = matmul_tiled(q.T, g) if left else matmul_tiled(g, q)
+        # Block 2: moment EMA + exact orthogonalization (or NS5 ablation).
+        mom_new = beta * mom + (1.0 - beta) * ghat
+        if use_ns5:
+            o = newton_schulz5(mom_new, iters=ns_iters)
+        else:
+            o = orth_svd(mom_new)
+        # Block 3: norm-growth limiter (NL), gamma-threshold form.
+        o_norm = jnp.sqrt(jnp.sum(o * o))
+        prev = jnp.maximum(o_prev_norm, 1e-12)
+        ratio = o_norm / prev
+        limited = jnp.where(
+            (ratio > gamma) & (o_prev_norm > 0.0),
+            o * (gamma * prev / jnp.maximum(o_norm, 1e-30)),
+            o,
+        )
+        # Block 4: back-project + weight decay, RMS-consistent scale.
+        full = matmul_tiled(q, limited) if left else matmul_tiled(limited, q.T)
+        scale = rms_scale(m, n)
+        w_new = w - lr * alpha * scale * full - lr * wd * w
+        return w_new, mom_new, o_norm
+
+    return step
+
+
+def sumo_update_args(m: int, n: int, r: int):
+    left = project_left(m, n)
+    mom_shape = (r, n) if left else (m, r)
+    q_shape = (m, r) if left else (n, r)
+    f32 = jnp.float32
+    s = jax.ShapeDtypeStruct
+    return [
+        s((m, n), f32),  # W
+        s(mom_shape, f32),  # M
+        s(q_shape, f32),  # Q
+        s((m, n), f32),  # G
+        s((), f32),  # o_prev_norm
+        s((), f32),  # lr
+        s((), f32),  # beta
+        s((), f32),  # wd
+        s((), f32),  # gamma
+        s((), f32),  # alpha
+    ]
+
+
+def make_sumo_refresh(m: int, n: int, r: int, power_iters: int = 1):
+    """Block 1 + Block 1.1: randomized range finder on G and moment
+    transport into the new subspace.
+
+    Inputs:  G (m,n), Q_prev, M_prev, Omega (sketch test matrix)
+    Outputs: Q_new, M_transported
+    The Gaussian Omega is drawn by the Rust coordinator (seeded) so the
+    graph stays deterministic and RNG-free.
+    """
+    left = project_left(m, n)
+
+    def mgs_qr_q(y):
+        """Orthonormal basis of the columns of y via modified Gram-Schmidt
+        (two passes), LAPACK-free so it lowers to plain HLO."""
+        cols = y.shape[1]
+
+        def body(i, ym):
+            col = ym[:, i]
+            # Subtract projections onto all previous columns (mask j >= i).
+            idx = jnp.arange(cols)
+            mask = (idx < i).astype(y.dtype)
+            for _ in range(2):
+                coeffs = (ym.T @ col) * mask  # (cols,)
+                col = col - ym @ coeffs
+            norm = jnp.sqrt(jnp.sum(col * col))
+            col = jnp.where(norm > 1e-20, col / norm, col * 0.0)
+            return ym.at[:, i].set(col)
+
+        return jax.lax.fori_loop(0, cols, body, y)
+
+    def refresh(g, q_prev, m_prev, omega):
+        a = g if left else g.T  # work on the tall side: (big, small)
+        y = matmul_tiled(a, omega)  # (big, r+p)
+        for _ in range(power_iters):
+            q = mgs_qr_q(y)
+            z = matmul_tiled(a.T, q)
+            qz = mgs_qr_q(z)
+            y = matmul_tiled(a, qz)
+        q_full = mgs_qr_q(y)
+        q_new = q_full[:, :r]
+        # Block 1.1: transport the moment between subspaces.
+        rmat = matmul_tiled(q_new.T, q_prev)  # (r, r)
+        m_t = matmul_tiled(rmat, m_prev) if left else matmul_tiled(m_prev, rmat.T)
+        return q_new, m_t
+
+    return refresh
+
+
+def sumo_refresh_args(m: int, n: int, r: int, oversample: int = 4):
+    left = project_left(m, n)
+    big, small = (m, n) if left else (n, m)
+    sketch = min(r + oversample, small)
+    mom_shape = (r, n) if left else (m, r)
+    q_shape = (big, r)
+    f32 = jnp.float32
+    s = jax.ShapeDtypeStruct
+    return [
+        s((m, n), f32),  # G
+        s(q_shape, f32),  # Q_prev
+        s(mom_shape, f32),  # M_prev
+        s((small, sketch), f32),  # Omega
+    ]
+
+
+def make_muon_update(m: int, n: int, ns_iters: int = 5):
+    """Muon baseline: full-space NS5 orthogonalization of the moment."""
+
+    def step(w, mom, g, lr, beta, wd):
+        mom_new = beta * mom + (1.0 - beta) * g
+        o = newton_schulz5(mom_new, iters=ns_iters)
+        scale = rms_scale(m, n)
+        w_new = w - lr * scale * o - lr * wd * w
+        return w_new, mom_new
+
+    return step
+
+
+def make_adam_update(m: int, n: int):
+    """Adam with bias correction; t passed as a float scalar."""
+
+    def step(w, mm, vv, g, lr, beta1, beta2, eps, wd, t):
+        m_new = beta1 * mm + (1.0 - beta1) * g
+        v_new = beta2 * vv + (1.0 - beta2) * g * g
+        mhat = m_new / (1.0 - beta1**t)
+        vhat = v_new / (1.0 - beta2**t)
+        w_new = w - lr * mhat / (jnp.sqrt(vhat) + eps) - lr * wd * w
+        return w_new, m_new, v_new
+
+    return step
+
+
+def make_galore_update(m: int, n: int, r: int):
+    """GaLore: Adam in the projected subspace, back-projected (scale alpha)."""
+    left = project_left(m, n)
+
+    def step(w, mm, vv, q, g, lr, beta1, beta2, eps, wd, alpha, t):
+        ghat = matmul_tiled(q.T, g) if left else matmul_tiled(g, q)
+        m_new = beta1 * mm + (1.0 - beta1) * ghat
+        v_new = beta2 * vv + (1.0 - beta2) * ghat * ghat
+        mhat = m_new / (1.0 - beta1**t)
+        vhat = v_new / (1.0 - beta2**t)
+        upd = mhat / (jnp.sqrt(vhat) + eps)
+        full = matmul_tiled(q, upd) if left else matmul_tiled(upd, q.T)
+        w_new = w - lr * alpha * full - lr * wd * w
+        return w_new, m_new, v_new
+
+    return step
+
+
+def scalar_args(k: int):
+    return [jax.ShapeDtypeStruct((), jnp.float32) for _ in range(k)]

@@ -1,0 +1,176 @@
+"""Layer-1 kernel correctness: Pallas vs pure oracles (ref.py).
+
+Hypothesis sweeps shapes/ranks/seeds; every kernel must match its oracle to
+float32 tolerance. These tests are the core correctness signal for the HLO
+that the Rust runtime executes.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import jacobi_eigh, matmul, matmul_tiled, newton_schulz5, orth_svd
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(rng, *shape):
+    return rng.normal(size=shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.sampled_from([1, 3, 16, 64, 96]),
+    k=st.sampled_from([1, 8, 48, 128]),
+    n=st.sampled_from([1, 4, 32, 88]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a, b = rand(rng, m, k), rand(rng, k, n)
+    got = np.asarray(matmul_tiled(a, b))
+    want = np.asarray(ref.matmul_ref(a, b))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_grad_matches_jnp():
+    import jax
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(0)
+    a, b = rand(rng, 32, 16), rand(rng, 16, 24)
+
+    g_kernel = jax.grad(lambda x: jnp.sum(matmul(x, b) ** 2))(a)
+    g_ref = jax.grad(lambda x: jnp.sum((x @ b) ** 2))(a)
+    np.testing.assert_allclose(np.asarray(g_kernel), np.asarray(g_ref), rtol=1e-4, atol=1e-4)
+
+    gb_kernel = jax.grad(lambda x: jnp.sum(matmul(a, x) ** 2))(b)
+    gb_ref = jax.grad(lambda x: jnp.sum((a @ x) ** 2))(b)
+    np.testing.assert_allclose(np.asarray(gb_kernel), np.asarray(gb_ref), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# orth_svd (SUMO Block 2)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    r=st.sampled_from([2, 4, 8, 16]),
+    n=st.sampled_from([64, 200]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_orth_svd_matches_lapack(r, n, seed):
+    # n >= 2r keeps sigma_min of a Gaussian matrix bounded away from zero
+    # (Marchenko-Pastur), where the polar factor is well-conditioned and a
+    # float32-vs-float64 element-wise comparison is meaningful. Square /
+    # near-square inputs are covered by the orthogonality property below
+    # (the polar factor itself is unstable as sigma_min -> 0).
+    rng = np.random.default_rng(seed)
+    m = rand(rng, r, n)
+    got = np.asarray(orth_svd(m))
+    want = ref.orth_svd_ref(m)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=2e-4)
+
+
+@settings(**SETTINGS)
+@given(r=st.sampled_from([2, 4, 8, 24]), n=st.sampled_from([32, 100]), seed=st.integers(0, 2**31 - 1))
+def test_orth_svd_output_is_orthogonal(r, n, seed):
+    rng = np.random.default_rng(seed)
+    o = np.asarray(orth_svd(rand(rng, r, n)))
+    np.testing.assert_allclose(o @ o.T, np.eye(r), atol=5e-4)
+
+
+def test_orth_svd_tall_input():
+    rng = np.random.default_rng(1)
+    o = np.asarray(orth_svd(rand(rng, 64, 8)))
+    np.testing.assert_allclose(o.T @ o, np.eye(8), atol=5e-4)
+
+
+def test_orth_svd_rank_deficient():
+    rng = np.random.default_rng(2)
+    a = rand(rng, 2, 32)
+    m = np.vstack([a, 0.5 * a])  # rank 2 in a 4x32
+    o = np.asarray(orth_svd(m))
+    assert np.all(np.isfinite(o))
+    s = np.linalg.svd(o, compute_uv=False)
+    # Singular values must be ~0 or ~1 (pseudo-inverse convention).
+    assert np.all((s < 0.05) | (s > 0.95)), s
+
+
+def test_orth_svd_rank1_row():
+    m = np.ones((1, 16), np.float32) * 3.0
+    o = np.asarray(orth_svd(m))
+    np.testing.assert_allclose(np.linalg.norm(o), 1.0, rtol=1e-5)
+
+
+def test_orth_is_fixed_point_on_orthogonal():
+    rng = np.random.default_rng(3)
+    q, _ = np.linalg.qr(rand(rng, 32, 6))
+    o = np.asarray(orth_svd(q.T.astype(np.float32)))
+    np.testing.assert_allclose(o, q.T, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# jacobi_eigh
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(r=st.sampled_from([2, 3, 8, 16]), seed=st.integers(0, 2**31 - 1))
+def test_jacobi_eigh_matches_lapack(r, seed):
+    rng = np.random.default_rng(seed)
+    b = rand(rng, r, 2 * r)
+    gram = (b @ b.T).astype(np.float32)
+    w, v = jacobi_eigh(gram)
+    w, v = np.asarray(w), np.asarray(v)
+    w_ref, _ = ref.eigh_ref(gram)
+    np.testing.assert_allclose(w, w_ref, rtol=1e-3, atol=1e-3)
+    # V diag(w) V^T reconstructs.
+    np.testing.assert_allclose(v @ np.diag(w) @ v.T, gram, rtol=1e-2, atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# newton_schulz5
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(r=st.sampled_from([4, 8]), n=st.sampled_from([32, 96]), seed=st.integers(0, 2**31 - 1))
+def test_ns5_matches_ref(r, n, seed):
+    rng = np.random.default_rng(seed)
+    m = rand(rng, r, n)
+    got = np.asarray(newton_schulz5(m))
+    want = ref.newton_schulz5_ref(m)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_ns5_error_grows_with_condition_number_lemma32():
+    """Lemma 3.2's qualitative claim: NS error increases with kappa."""
+    rng = np.random.default_rng(7)
+
+    def err(kappa):
+        r, n = 8, 64
+        q, _ = np.linalg.qr(rng.normal(size=(n, r)))
+        s = np.linspace(1.0, 1.0 / kappa, r)
+        m = (np.diag(s) @ q.T).astype(np.float32)
+        exact = ref.orth_svd_ref(m)
+        approx = np.asarray(newton_schulz5(m))
+        return np.abs(approx - exact).max()
+
+    assert err(1000.0) > err(2.0)
+
+
+def test_ns5_iterations_reduce_error_for_moderate_kappa():
+    rng = np.random.default_rng(11)
+    m = rand(rng, 8, 64)
+    exact = ref.orth_svd_ref(m)
+    e1 = np.abs(np.asarray(newton_schulz5(m, iters=1)) - exact).max()
+    e5 = np.abs(np.asarray(newton_schulz5(m, iters=5)) - exact).max()
+    assert e5 < e1

@@ -1,0 +1,152 @@
+"""Layer-2 model checks: shapes, masking, learning signal, preset parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def nano():
+    return M.resolve("nano", "lm")
+
+
+def make_params(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    flat = []
+    for name, m, n in M.param_specs(cfg):
+        if name.endswith("norm"):
+            flat.append(jnp.ones((m, n), jnp.float32))
+        else:
+            std = 0.02 if name == "embed" else (2.0 / (m + n)) ** 0.5
+            flat.append(jnp.asarray(rng.normal(0, std, size=(m, n)), jnp.float32))
+    return flat
+
+
+def test_param_specs_counts(nano):
+    specs = M.param_specs(nano)
+    assert specs[0][0] == "embed"
+    assert specs[-1][0] == "final_norm"
+    assert len(specs) == 2 + 9 * nano["n_layers"]
+    n_params = sum(m * n for _, m, n in specs)
+    assert 100_000 < n_params < 500_000  # "nano" ballpark
+
+
+def test_d_ff_matches_rust_arithmetic():
+    # (8*d/3 + 15)//16*16 — must agree with rust/src/config/model_cfg.rs.
+    assert M.d_ff_for(64) == 176
+    assert M.d_ff_for(128) == 352
+    assert M.d_ff_for(192) == 512
+    assert M.d_ff_for(256) == 688
+
+
+def test_train_step_shapes(nano):
+    flat = make_params(nano)
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(3, nano["vocab"], size=(4, nano["seq_len"])), jnp.int32)
+    tgts = jnp.asarray(rng.integers(3, nano["vocab"], size=(4, nano["seq_len"])), jnp.int32)
+    out = M.make_train_step(nano)(*flat, toks, tgts)
+    loss, grads = out[0], out[1:]
+    assert loss.shape == ()
+    assert np.isfinite(float(loss))
+    assert len(grads) == len(flat)
+    for g, p in zip(grads, flat):
+        assert g.shape == p.shape
+        assert bool(jnp.all(jnp.isfinite(g)))
+
+
+def test_initial_loss_near_uniform(nano):
+    """Fresh model ≈ uniform predictor: CE ≈ log(vocab)."""
+    flat = make_params(nano)
+    rng = np.random.default_rng(2)
+    toks = jnp.asarray(rng.integers(3, nano["vocab"], size=(4, nano["seq_len"])), jnp.int32)
+    loss = M.make_train_step(nano)(*flat, toks, toks)[0]
+    assert abs(float(loss) - np.log(nano["vocab"])) < 1.0
+
+
+def test_sgd_reduces_loss(nano):
+    """A few SGD steps on one fixed batch must reduce the loss — the
+    learning-signal sanity check for the whole fwd/bwd graph."""
+    flat = make_params(nano)
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(3, nano["vocab"], size=(4, nano["seq_len"])), jnp.int32)
+    tgts = jnp.asarray(rng.integers(3, nano["vocab"], size=(4, nano["seq_len"])), jnp.int32)
+    step = jax.jit(M.make_train_step(nano))
+    first = None
+    for _ in range(8):
+        out = step(*flat, toks, tgts)
+        loss, grads = out[0], out[1:]
+        if first is None:
+            first = float(loss)
+        flat = [p - 0.5 * g for p, g in zip(flat, grads)]
+    assert float(loss) < first - 0.2, (first, float(loss))
+
+
+def test_pad_targets_are_masked(nano):
+    flat = make_params(nano)
+    rng = np.random.default_rng(4)
+    toks = jnp.asarray(rng.integers(3, nano["vocab"], size=(2, nano["seq_len"])), jnp.int32)
+    tgts_a = jnp.asarray(rng.integers(3, nano["vocab"], size=(2, nano["seq_len"])), jnp.int32)
+    # Replace second half of targets with PAD: loss must only change through
+    # masking, and differ from the full-target loss.
+    tgts_b = tgts_a.at[:, nano["seq_len"] // 2 :].set(M.PAD)
+    step = M.make_train_step(nano)
+    la = float(step(*flat, toks, tgts_a)[0])
+    lb = float(step(*flat, toks, tgts_b)[0])
+    assert la != lb
+    assert np.isfinite(lb)
+
+
+def test_cls_head_shapes():
+    cfg = M.resolve("nano", "cls3")
+    flat = make_params(cfg)
+    assert M.param_specs(cfg)[-1][0] == "head"
+    rng = np.random.default_rng(5)
+    toks = jnp.asarray(rng.integers(3, cfg["vocab"], size=(4, cfg["seq_len"])), jnp.int32)
+    labels = jnp.asarray([0, 1, 2, 1], jnp.int32)
+    out = M.make_train_step(cfg)(*flat, toks, labels)
+    assert out[0].shape == ()
+    loss, logits = M.make_eval_step(cfg)(*flat, toks, labels)
+    assert logits.shape == (4, 3)
+    # Random init: loss finite and within an order of log(n_classes).
+    assert 0.0 < float(loss) < 10.0 * np.log(3)
+
+
+def test_reg_head():
+    cfg = M.resolve("nano", "reg")
+    flat = make_params(cfg)
+    rng = np.random.default_rng(6)
+    toks = jnp.asarray(rng.integers(3, cfg["vocab"], size=(4, cfg["seq_len"])), jnp.int32)
+    scores = jnp.asarray([0.1, 0.5, 0.9, 0.3], jnp.float32)
+    out = M.make_train_step(cfg)(*flat, toks, scores)
+    assert np.isfinite(float(out[0]))
+    _, logits = M.make_eval_step(cfg)(*flat, toks, scores)
+    assert logits.shape == (4, 1)
+
+
+def test_logits_step_shape(nano):
+    flat = make_params(nano)
+    rng = np.random.default_rng(7)
+    toks = jnp.asarray(rng.integers(3, nano["vocab"], size=(2, nano["seq_len"])), jnp.int32)
+    (logits,) = M.make_logits_step(nano)(*flat, toks)
+    assert logits.shape == (2, nano["vocab"])
+
+
+def test_causality():
+    """Changing a future token must not affect earlier LM logits."""
+    cfg = M.resolve("nano", "lm")
+    flat = make_params(cfg)
+    rng = np.random.default_rng(8)
+    toks = jnp.asarray(rng.integers(3, cfg["vocab"], size=(1, cfg["seq_len"])), jnp.int32)
+    params = dict(zip([n for n, _, _ in M.param_specs(cfg)], flat))
+    h1 = M.backbone(params, cfg, toks)
+    toks2 = toks.at[0, -1].set((int(toks[0, -1]) + 5) % cfg["vocab"])
+    h2 = M.backbone(params, cfg, toks2)
+    np.testing.assert_allclose(
+        np.asarray(h1[0, : cfg["seq_len"] - 1]),
+        np.asarray(h2[0, : cfg["seq_len"] - 1]),
+        atol=1e-5,
+    )
+    assert not np.allclose(np.asarray(h1[0, -1]), np.asarray(h2[0, -1]))

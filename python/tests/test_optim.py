@@ -1,0 +1,160 @@
+"""Optimizer update graphs vs numpy oracles.
+
+These same semantics are implemented natively in rust/src/optim/; the Rust
+integration tests then check HLO-vs-native equivalence through the PJRT
+runtime, closing the loop: numpy oracle == JAX graph == native Rust.
+"""
+
+import numpy as np
+import pytest
+
+from compile import optim as O
+from compile.kernels import ref
+
+
+def rand(rng, *shape):
+    return rng.normal(size=shape).astype(np.float32)
+
+
+HP = dict(lr=0.01, beta=0.9, wd=0.05, gamma=1.1, alpha=1.0)
+
+
+def sumo_update_oracle(w, mom, q, g, o_prev, left, use_ns5=False, **hp):
+    ghat = (q.T @ g) if left else (g @ q)
+    mom_new = hp["beta"] * mom + (1 - hp["beta"]) * ghat
+    o = ref.newton_schulz5_ref(mom_new) if use_ns5 else ref.orth_svd_ref(mom_new)
+    o_norm = np.linalg.norm(o)
+    if o_prev > 0 and o_norm / max(o_prev, 1e-12) > hp["gamma"]:
+        o = o * (hp["gamma"] * o_prev / max(o_norm, 1e-30))
+    full = (q @ o) if left else (o @ q.T)
+    scale = 0.2 * max(w.shape) ** 0.5
+    w_new = w - hp["lr"] * hp["alpha"] * scale * full - hp["lr"] * hp["wd"] * w
+    return w_new, mom_new, o_norm
+
+
+@pytest.mark.parametrize("m,n,r", [(64, 32, 4), (32, 64, 4), (64, 64, 8)])
+def test_sumo_update_matches_oracle(m, n, r):
+    rng = np.random.default_rng(0)
+    left = O.project_left(m, n)
+    w, g = rand(rng, m, n), rand(rng, m, n)
+    mom = rand(rng, r, n) if left else rand(rng, m, r)
+    qbase = rand(rng, m if left else n, r)
+    q, _ = np.linalg.qr(qbase)
+    q = q.astype(np.float32)
+    o_prev = np.float32(2.0)
+    step = O.make_sumo_update(m, n, r)
+    got = step(w, mom, q, g, o_prev, *(np.float32(HP[k]) for k in ["lr", "beta", "wd", "gamma", "alpha"]))
+    want = sumo_update_oracle(w, mom, q, g, float(o_prev), left, **HP)
+    for got_x, want_x, tol in zip(got, want, [5e-4, 1e-4, 1e-3]):
+        np.testing.assert_allclose(np.asarray(got_x), want_x, rtol=1e-2, atol=tol)
+
+
+def test_sumo_update_limiter_engages():
+    """With a tiny o_prev_norm, the limiter must cap the step size."""
+    rng = np.random.default_rng(1)
+    m, n, r = 64, 32, 4
+    w, g = rand(rng, m, n), rand(rng, m, n)
+    mom = rand(rng, r, n)
+    q, _ = np.linalg.qr(rand(rng, m, r))
+    q = q.astype(np.float32)
+    step = O.make_sumo_update(m, n, r)
+    hp = [np.float32(HP[k]) for k in ["lr", "beta", "wd", "gamma", "alpha"]]
+    w_small_prev = np.asarray(step(w, mom, q, g, np.float32(0.01), *hp)[0])
+    w_big_prev = np.asarray(step(w, mom, q, g, np.float32(100.0), *hp)[0])
+    # Limited step moves weights strictly less.
+    d_small = np.abs(w_small_prev - w).sum()
+    d_big = np.abs(w_big_prev - w).sum()
+    assert d_small < d_big
+
+
+def test_sumo_update_ns5_variant_differs():
+    rng = np.random.default_rng(2)
+    m, n, r = 64, 32, 4
+    w, g = rand(rng, m, n), rand(rng, m, n)
+    # Ill-conditioned moment: NS5 differs visibly from exact SVD.
+    mom = np.diag([1.0, 0.1, 0.01, 0.001]).astype(np.float32) @ rand(rng, r, n)
+    q, _ = np.linalg.qr(rand(rng, m, r))
+    q = q.astype(np.float32)
+    hp = [np.float32(HP[k]) for k in ["lr", "beta", "wd", "gamma", "alpha"]]
+    w_svd = np.asarray(O.make_sumo_update(m, n, r)(w, mom, q, g, np.float32(0.0), *hp)[0])
+    w_ns5 = np.asarray(
+        O.make_sumo_update(m, n, r, use_ns5=True)(w, mom, q, g, np.float32(0.0), *hp)[0]
+    )
+    assert np.abs(w_svd - w_ns5).max() > 1e-5
+
+
+def test_sumo_refresh_orthonormal_and_transport():
+    rng = np.random.default_rng(3)
+    m, n, r = 96, 48, 6
+    # Low-rank-ish gradient.
+    g = (rand(rng, m, r) @ rand(rng, r, n)).astype(np.float32)
+    q_prev, _ = np.linalg.qr(rand(rng, m, r))
+    q_prev = q_prev.astype(np.float32)
+    mom = rand(rng, r, n)
+    sketch = min(r + 4, n)
+    omega = rand(rng, n, sketch)
+    q_new, m_t = O.make_sumo_refresh(m, n, r)(g, q_prev, mom, omega)
+    q_new, m_t = np.asarray(q_new), np.asarray(m_t)
+    np.testing.assert_allclose(q_new.T @ q_new, np.eye(r), atol=2e-3)
+    # Q captures the column space of the rank-r G.
+    res = g - q_new @ (q_new.T @ g)
+    assert np.linalg.norm(res) / np.linalg.norm(g) < 1e-2
+    # Transport: M' = (Q_new^T Q_prev) M.
+    want = (q_new.T @ q_prev) @ mom
+    np.testing.assert_allclose(m_t, want, rtol=1e-2, atol=1e-3)
+
+
+def test_adam_update_matches_oracle():
+    rng = np.random.default_rng(4)
+    m, n = 32, 16
+    w, g = rand(rng, m, n), rand(rng, m, n)
+    mm, vv = np.zeros((m, n), np.float32), np.zeros((m, n), np.float32)
+    step = O.make_adam_update(m, n)
+    lr, b1, b2, eps, wd, t = 0.01, 0.9, 0.999, 1e-8, 0.0, 1.0
+    got = step(w, mm, vv, g, *(np.float32(x) for x in [lr, b1, b2, eps, wd, t]))
+    m_new = (1 - b1) * g
+    v_new = (1 - b2) * g * g
+    mhat = m_new / (1 - b1**t)
+    vhat = v_new / (1 - b2**t)
+    w_new = w - lr * mhat / (np.sqrt(vhat) + eps)
+    np.testing.assert_allclose(np.asarray(got[0]), w_new, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got[1]), m_new, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got[2]), v_new, rtol=1e-5, atol=1e-6)
+
+
+def test_galore_update_is_subspace_adam():
+    rng = np.random.default_rng(5)
+    m, n, r = 48, 24, 4
+    w, g = rand(rng, m, n), rand(rng, m, n)
+    q, _ = np.linalg.qr(rand(rng, m, r))
+    q = q.astype(np.float32)
+    mm = np.zeros((r, n), np.float32)
+    vv = np.zeros((r, n), np.float32)
+    lr, b1, b2, eps, wd, alpha, t = 0.01, 0.9, 0.999, 1e-8, 0.0, 1.0, 1.0
+    got = O.make_galore_update(m, n, r)(
+        w, mm, vv, q, g, *(np.float32(x) for x in [lr, b1, b2, eps, wd, alpha, t])
+    )
+    ghat = q.T @ g
+    m_new = (1 - b1) * ghat
+    v_new = (1 - b2) * ghat * ghat
+    upd = (m_new / (1 - b1**t)) / (np.sqrt(v_new / (1 - b2**t)) + eps)
+    w_new = w - lr * alpha * (q @ upd)
+    np.testing.assert_allclose(np.asarray(got[0]), w_new, rtol=1e-3, atol=1e-4)
+
+
+def test_muon_update_uses_ns5():
+    rng = np.random.default_rng(6)
+    m, n = 32, 64
+    w, g = rand(rng, m, n), rand(rng, m, n)
+    mom = np.zeros((m, n), np.float32)
+    lr, beta, wd = 0.01, 0.9, 0.0
+    got = O.make_muon_update(m, n)(w, mom, g, *(np.float32(x) for x in [lr, beta, wd]))
+    mom_new = (1 - beta) * g
+    o = ref.newton_schulz5_ref(mom_new)
+    w_new = w - lr * (0.2 * max(m, n) ** 0.5) * o
+    np.testing.assert_allclose(np.asarray(got[0]), w_new, rtol=1e-3, atol=1e-4)
+
+
+def test_rms_scale_formula():
+    assert O.rms_scale(2048, 256) == pytest.approx(0.2 * 2048**0.5)
+    assert O.rms_scale(64, 688) == pytest.approx(0.2 * 688**0.5)

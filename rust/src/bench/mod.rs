@@ -1,0 +1,34 @@
+//! Benchmark harness (criterion is unavailable offline): timing via
+//! `util::timer`, result tables as aligned markdown mirroring the paper's
+//! rows, and CSV dumps under `bench_out/`.
+
+pub mod table;
+
+pub use table::TableWriter;
+
+use crate::util::timer::Stats;
+
+/// Format a Stats as "mean ± ci (min..max)" in milliseconds.
+pub fn fmt_ms(s: &Stats) -> String {
+    format!(
+        "{:.3} ± {:.3} ms (n={})",
+        s.mean() * 1e3,
+        s.ci95() * 1e3,
+        s.n
+    )
+}
+
+/// Scale factor for bench workloads: SUMO_BENCH_SCALE=quick|full
+/// (quick is the default so `cargo bench` completes on the 1-core testbed).
+pub fn bench_scale() -> f64 {
+    match std::env::var("SUMO_BENCH_SCALE").as_deref() {
+        Ok("full") => 1.0,
+        Ok("quarter") => 0.25,
+        _ => 0.12,
+    }
+}
+
+/// Scaled step count helper.
+pub fn scaled(steps: usize) -> usize {
+    ((steps as f64 * bench_scale()).round() as usize).max(4)
+}

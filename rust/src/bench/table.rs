@@ -1,0 +1,103 @@
+//! Markdown table emitter for the bench harness: prints the paper-style
+//! rows to stdout and mirrors them to bench_out/<name>.md + .csv.
+
+use std::fs::File;
+use std::io::Write;
+use std::path::PathBuf;
+
+/// Collects rows and renders an aligned markdown table.
+pub struct TableWriter {
+    name: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    out_dir: PathBuf,
+}
+
+impl TableWriter {
+    pub fn new(name: &str, header: &[&str]) -> TableWriter {
+        TableWriter {
+            name: name.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            out_dir: PathBuf::from("bench_out"),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rowf(&mut self, cells: &[&dyn std::fmt::Display]) {
+        self.row(&cells.iter().map(|c| c.to_string()).collect::<Vec<_>>());
+    }
+
+    /// Render as markdown.
+    pub fn markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let padded: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:w$}", c, w = widths[i]))
+                .collect();
+            format!("| {} |", padded.join(" | "))
+        };
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        let mut out = String::new();
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&fmt_row(&sep));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print to stdout and write .md + .csv under bench_out/.
+    pub fn finish(&self) -> std::io::Result<()> {
+        let md = self.markdown();
+        println!("\n### {}\n\n{md}", self.name);
+        std::fs::create_dir_all(&self.out_dir)?;
+        let mut f = File::create(self.out_dir.join(format!("{}.md", self.name)))?;
+        writeln!(f, "### {}\n\n{md}", self.name)?;
+        let mut c = File::create(self.out_dir.join(format!("{}.csv", self.name)))?;
+        writeln!(c, "{}", self.header.join(","))?;
+        for row in &self.rows {
+            writeln!(c, "{}", row.join(","))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_markdown() {
+        let mut t = TableWriter::new("test_table", &["Method", "PPL"]);
+        t.row(&["SUMO".into(), "24.87".into()]);
+        t.row(&["GaLore-longer-name".into(), "25.36".into()]);
+        let md = t.markdown();
+        assert!(md.contains("| Method"));
+        assert!(md.contains("| SUMO "));
+        let lines: Vec<&str> = md.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = TableWriter::new("x", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,112 @@
+//! Minimal argument parser: positional command + `--key value` /
+//! `--flag` options, with typed accessors and an unknown-flag check.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> crate::Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(cmd) = it.peek() {
+            if !cmd.starts_with("--") {
+                args.command = it.next().unwrap().clone();
+            }
+        }
+        while let Some(tok) = it.next() {
+            let Some(key) = tok.strip_prefix("--") else {
+                anyhow::bail!("unexpected positional argument: {tok}");
+            };
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    args.options.insert(key.to_string(), it.next().unwrap().clone());
+                }
+                _ => args.flags.push(key.to_string()),
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> crate::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> crate::Result<f32> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> crate::Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn parses_command_and_options() {
+        let a = parse(&["train", "--preset", "nano", "--steps", "50", "--verbose"]);
+        assert_eq!(a.command, "train");
+        assert_eq!(a.get("preset"), Some("nano"));
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 50);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn rejects_bad_types() {
+        let a = parse(&["x", "--steps", "abc"]);
+        assert!(a.usize_or("steps", 0).is_err());
+    }
+
+    #[test]
+    fn rejects_stray_positionals() {
+        let argv: Vec<String> = ["train", "oops"].iter().map(|s| s.to_string()).collect();
+        assert!(Args::parse(&argv).is_err());
+    }
+
+    #[test]
+    fn empty_is_ok() {
+        let a = parse(&[]);
+        assert_eq!(a.command, "");
+    }
+}

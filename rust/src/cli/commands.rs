@@ -1,0 +1,289 @@
+//! CLI subcommands: the launcher surface of the framework.
+
+use crate::config::{OptimCfg, OptimKind, Schedule, TrainCfg};
+use crate::coordinator::Coordinator;
+use crate::data::glue::GlueTask;
+use crate::model::{adapter, checkpoint};
+use crate::runtime::Runtime;
+use crate::train::Trainer;
+use crate::util::logging::CsvWriter;
+use crate::util::Rng;
+use crate::{log_info, Result};
+
+use super::Args;
+
+const USAGE: &str = "sumo — Subspace-Aware Moment-Orthogonalization training framework
+
+USAGE: sumo <COMMAND> [OPTIONS]
+
+COMMANDS:
+  train       pretrain a model on the synthetic C4-like corpus
+              --preset nano|micro|mini|small  --optimizer sumo|galore|adam|...
+              --steps N --lr X --rank R --update-freq K --seed S
+              --dp N (data-parallel shards) --hlo (use the HLO SUMO engine)
+              --save PATH (checkpoint) --csv PATH (loss curve)
+  finetune    fine-tune on a synthetic GLUE task
+              --task RTE|QNLI|SST2|... --preset micro --optimizer ... --steps N
+              --load PATH (start from checkpoint)
+  eval        evaluate a checkpoint's LM perplexity
+              --load PATH --batches N
+  adapter     extract a post-hoc LoRA adapter between two checkpoints
+              --pre PATH --post PATH --max-rank R
+  inspect     print the artifact manifest summary
+  help        this text
+
+Benchmarks live under `cargo bench` (one target per paper table/figure).";
+
+pub fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "train" => cmd_train(args),
+        "finetune" => cmd_finetune(args),
+        "eval" => cmd_eval(args),
+        "adapter" => cmd_adapter(args),
+        "inspect" => cmd_inspect(args),
+        "" | "help" | "--help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command {other:?}\n\n{USAGE}"),
+    }
+}
+
+fn optim_cfg_from(args: &Args) -> Result<OptimCfg> {
+    let kind_str = args.get_or("optimizer", "sumo");
+    let kind = OptimKind::parse(&kind_str)
+        .ok_or_else(|| anyhow::anyhow!("unknown optimizer {kind_str:?}"))?;
+    let mut cfg = OptimCfg::new(kind);
+    cfg.lr = args.f32_or("lr", default_lr(kind))?;
+    cfg.rank = args.usize_or("rank", 8)?;
+    cfg.update_freq = args.usize_or("update-freq", 200)?;
+    cfg.weight_decay = args.f32_or("weight-decay", 0.0)?;
+    cfg.scale = args.f32_or("scale", 1.0)?;
+    if args.has_flag("no-limiter") {
+        cfg.use_limiter = false;
+    }
+    Ok(cfg)
+}
+
+/// Per-method default peak LR (tuned on the nano preset; overridable).
+pub fn default_lr(kind: OptimKind) -> f32 {
+    match kind {
+        OptimKind::Sumo | OptimKind::SumoNs5 => 2e-2,
+        OptimKind::Muon => 1e-2,
+        OptimKind::GaLore => 2e-2,
+        OptimKind::Adam | OptimKind::AdamW => 2e-3,
+        OptimKind::Osgdm => 1e-3,
+        OptimKind::Sgd => 5e-2,
+        OptimKind::LowRank => 5e-2,
+        OptimKind::Lora | OptimKind::ReLora => 2e-3,
+    }
+}
+
+fn train_cfg_from(args: &Args) -> Result<TrainCfg> {
+    Ok(TrainCfg {
+        steps: args.usize_or("steps", 100)?,
+        seed: args.u64_or("seed", 42)?,
+        log_every: args.usize_or("log-every", 10)?,
+        eval_every: args.usize_or("eval-every", 0)?,
+        eval_batches: args.usize_or("eval-batches", 8)?,
+        dp_workers: args.usize_or("dp", 1)?,
+        schedule: Schedule::CosineWarmup {
+            warmup: args.usize_or("warmup", 10)?,
+            min_ratio: 0.1,
+        },
+        ..TrainCfg::default()
+    })
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let rt = Runtime::new(args.get_or("artifacts", "artifacts"))?;
+    let preset = args.get_or("preset", "nano");
+    let model_id = format!("{preset}_lm");
+    let ocfg = optim_cfg_from(args)?;
+    let tcfg = train_cfg_from(args)?;
+    log_info!(
+        "train {model_id} optimizer={} steps={} (platform {})",
+        ocfg.kind.name(),
+        tcfg.steps,
+        rt.platform()
+    );
+    let mut coord = if args.has_flag("hlo") {
+        Coordinator::hlo_sumo(&rt, &model_id, &ocfg, tcfg.seed)?
+    } else {
+        Coordinator::native(&rt, &model_id, &ocfg, tcfg.seed, tcfg.dp_workers)?
+    };
+    let mut csv = match args.get("csv") {
+        Some(path) => Some(CsvWriter::create(path, &["step", "loss", "lr_mult", "seconds"])?),
+        None => None,
+    };
+    let report = Trainer::new(tcfg).pretrain(&mut coord, csv.as_mut())?;
+    println!(
+        "final_loss={:.4} val_loss={:.4} val_ppl={:.2} tokens={} optim_state={:.2}MB wall={:.1}s",
+        report.final_loss,
+        report.val_loss,
+        report.val_ppl,
+        report.tokens_seen,
+        report.optimizer_state_bytes as f64 / 1e6,
+        report.seconds
+    );
+    if let Some(path) = args.get("save") {
+        checkpoint::save(&coord.params, report.steps, path)?;
+        log_info!("checkpoint saved to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_finetune(args: &Args) -> Result<()> {
+    let rt = Runtime::new(args.get_or("artifacts", "artifacts"))?;
+    let preset = args.get_or("preset", "micro");
+    let task_name = args.get_or("task", "RTE");
+    let ocfg = optim_cfg_from(args)?;
+    let tcfg = train_cfg_from(args)?;
+    // Pick the artifact head matching the task.
+    let probe = GlueTask::by_name(&task_name, 8, 8)
+        .ok_or_else(|| anyhow::anyhow!("unknown task {task_name}"))?;
+    let head = match probe.metric {
+        crate::data::glue::GlueMetric::Pearson => "reg".to_string(),
+        _ => format!("cls{}", probe.n_classes),
+    };
+    let model_id = format!("{preset}_{head}");
+    let mut coord = Coordinator::native(&rt, &model_id, &ocfg, tcfg.seed, 1)?;
+    if let Some(path) = args.get("load") {
+        let (mut store, _) = checkpoint::load(path)?;
+        // Graft backbone weights into the task-headed config.
+        store.cfg = coord.params.cfg.clone();
+        for (name, t) in coord.params.tensors.clone() {
+            if store.get(&name).is_none() {
+                store.tensors.push((name, t));
+            }
+        }
+        coord.set_params(store);
+    }
+    let task = GlueTask::by_name(&task_name, coord.runner.cfg.vocab, coord.runner.seq_len())
+        .ok_or_else(|| anyhow::anyhow!("unknown task {task_name}"))?;
+    let report = Trainer::new(tcfg).finetune_glue(&mut coord, &task)?;
+    println!(
+        "[{}] {}={:.4} loss={:.4} optim_state={:.2}MB wall={:.1}s",
+        task.name,
+        report.metric_name,
+        report.metric,
+        report.final_loss,
+        report.optimizer_state_bytes as f64 / 1e6,
+        report.seconds
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let rt = Runtime::new(args.get_or("artifacts", "artifacts"))?;
+    let path = args
+        .get("load")
+        .ok_or_else(|| anyhow::anyhow!("--load PATH required"))?;
+    let (store, step) = checkpoint::load(path)?;
+    let model_id = format!("{}_lm", store.cfg.name);
+    let mut coord = Coordinator::native(
+        &rt,
+        &model_id,
+        &OptimCfg::new(OptimKind::Adam),
+        0,
+        1,
+    )?;
+    coord.set_params(store);
+    let tcfg = TrainCfg {
+        eval_batches: args.usize_or("batches", 16)?,
+        ..TrainCfg::default()
+    };
+    let vocab = coord.runner.cfg.vocab;
+    let seq = coord.runner.seq_len();
+    let corpus = crate::data::SyntheticCorpus::new(vocab, 0xEEE);
+    let mut batcher = crate::data::Batcher::new(corpus, coord.runner.batch, seq);
+    let mut sum = 0.0;
+    for _ in 0..tcfg.eval_batches {
+        sum += coord.runner.eval_loss(&coord.params, &batcher.next())?;
+    }
+    let loss = sum / tcfg.eval_batches as f32;
+    println!(
+        "checkpoint step={step} eval_loss={:.4} ppl={:.2}",
+        loss,
+        crate::train::perplexity(loss)
+    );
+    Ok(())
+}
+
+fn cmd_adapter(args: &Args) -> Result<()> {
+    let pre = args
+        .get("pre")
+        .ok_or_else(|| anyhow::anyhow!("--pre PATH required"))?;
+    let post = args
+        .get("post")
+        .ok_or_else(|| anyhow::anyhow!("--post PATH required"))?;
+    let max_rank = args.usize_or("max-rank", 16)?;
+    let (a, _) = checkpoint::load(pre)?;
+    let (b, _) = checkpoint::load(post)?;
+    anyhow::ensure!(a.cfg.name == b.cfg.name, "checkpoints from different presets");
+    let mut rng = Rng::new(args.u64_or("seed", 7)?);
+    println!("{:<16} {:>5} {:>10}", "layer", "rank", "rel_err");
+    for name in a.cfg.projected_layers() {
+        let (Some(wa), Some(wb)) = (a.get(&name), b.get(&name)) else {
+            continue;
+        };
+        let ad = adapter::extract_layer(&name, wa, wb, max_rank, 0.99, &mut rng);
+        println!("{:<16} {:>5} {:>10.4}", ad.name, ad.rank, ad.rel_err);
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let rt = Runtime::new(args.get_or("artifacts", "artifacts"))?;
+    println!("platform: {}", rt.platform());
+    println!("batch: {}", rt.batch());
+    if let Some(models) = rt.manifest.get("models").as_obj() {
+        println!("models ({}):", models.len());
+        for (id, entry) in models {
+            let n: usize = entry
+                .get("params")
+                .as_arr()
+                .map(|ps| {
+                    ps.iter()
+                        .map(|p| p.at(1).as_usize().unwrap_or(0) * p.at(2).as_usize().unwrap_or(0))
+                        .sum()
+                })
+                .unwrap_or(0);
+            println!("  {id:<16} {:>10} params", n);
+        }
+    }
+    if let Some(optim) = rt.manifest.get("optim").as_obj() {
+        println!("optim graphs ({}):", optim.len());
+        for id in optim.keys() {
+            println!("  {id}");
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_lrs_are_positive() {
+        for kind in [
+            OptimKind::Sumo,
+            OptimKind::GaLore,
+            OptimKind::Adam,
+            OptimKind::Muon,
+            OptimKind::Lora,
+        ] {
+            assert!(default_lr(kind) > 0.0);
+        }
+    }
+
+    #[test]
+    fn dispatch_rejects_unknown() {
+        let args = Args {
+            command: "frobnicate".into(),
+            ..Default::default()
+        };
+        assert!(dispatch(&args).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Hand-rolled CLI (clap is unavailable offline): `sumo <command> [--flag value]...`.
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;
+
+/// Entry used by main.rs.
+pub fn run() -> crate::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv)?;
+    commands::dispatch(&args)
+}

@@ -1,0 +1,14 @@
+//! Configuration system: model presets, optimizer configs, training configs.
+//!
+//! Configs are plain Rust structs with JSON (de)serialization through
+//! `util::json`, loadable from files (`--config run.json`) or built from CLI
+//! flags + named presets — the launcher pattern of Megatron/MaxText-style
+//! frameworks scaled to this repo.
+
+pub mod model_cfg;
+pub mod optim_cfg;
+pub mod train_cfg;
+
+pub use model_cfg::{ModelCfg, TaskHead};
+pub use optim_cfg::{OptimCfg, OptimKind};
+pub use train_cfg::{Schedule, TrainCfg};

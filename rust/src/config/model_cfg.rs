@@ -1,0 +1,219 @@
+//! Transformer model configuration and the named presets used across the
+//! examples and benchmark harness.
+//!
+//! The paper pretrains LLaMA 60M–1B on C4 (Table 3) on H200s. This testbed
+//! is a single CPU core, so the presets scale the *architecture family*
+//! down (same shape family: RMSNorm + RoPE attention + SwiGLU, tied
+//! embeddings) while keeping every layer a 2-D "reversible" matrix the
+//! optimizer theory applies to. DESIGN.md §3 logs the substitution.
+
+use crate::util::json::Json;
+
+/// Output head attached to the backbone.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskHead {
+    /// Tied-embedding language-model head (pretraining / perplexity).
+    Lm,
+    /// Mean-pooled linear classifier with `n_classes` (GLUE-style).
+    Classifier(usize),
+    /// Scalar regression head (STS-B-style Pearson tasks).
+    Regression,
+}
+
+impl TaskHead {
+    pub fn tag(&self) -> String {
+        match self {
+            TaskHead::Lm => "lm".into(),
+            TaskHead::Classifier(k) => format!("cls{k}"),
+            TaskHead::Regression => "reg".into(),
+        }
+    }
+}
+
+/// Transformer architecture hyperparameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelCfg {
+    /// Preset name (artifact file prefix).
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    /// SwiGLU hidden dim (typically (8/3)·d rounded).
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub head: TaskHead,
+}
+
+impl ModelCfg {
+    /// Named presets. Sizes scale the paper's 60M–1B family down to what a
+    /// single CPU core trains in seconds–minutes.
+    pub fn preset(name: &str) -> Option<ModelCfg> {
+        let (vocab, d_model, n_layers, n_heads, seq_len) = match name {
+            // ~0.21M params — unit/integration tests.
+            "nano" => (256, 64, 2, 4, 32),
+            // ~0.9M params — bench sweeps.
+            "micro" => (512, 128, 3, 4, 64),
+            // ~3.2M params — figure benches / finetune experiments.
+            "mini" => (1024, 192, 4, 6, 64),
+            // ~11M params — the e2e pretraining driver.
+            "small" => (2048, 256, 6, 8, 128),
+            _ => return None,
+        };
+        let d_ff = (8 * d_model / 3 + 15) / 16 * 16; // multiple of 16
+        Some(ModelCfg {
+            name: name.to_string(),
+            vocab,
+            d_model,
+            n_layers,
+            n_heads,
+            d_ff,
+            seq_len,
+            head: TaskHead::Lm,
+        })
+    }
+
+    pub fn with_head(mut self, head: TaskHead) -> ModelCfg {
+        self.head = head;
+        self
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Parameter tensors in registration order — must match the Python side
+    /// (`python/compile/model.py::param_specs`) exactly; integration tests
+    /// assert the manifest agrees.
+    pub fn param_specs(&self) -> Vec<(String, usize, usize)> {
+        let d = self.d_model;
+        let mut specs = vec![("embed".to_string(), self.vocab, d)];
+        for l in 0..self.n_layers {
+            specs.push((format!("l{l}.attn_norm"), 1, d));
+            specs.push((format!("l{l}.wq"), d, d));
+            specs.push((format!("l{l}.wk"), d, d));
+            specs.push((format!("l{l}.wv"), d, d));
+            specs.push((format!("l{l}.wo"), d, d));
+            specs.push((format!("l{l}.mlp_norm"), 1, d));
+            specs.push((format!("l{l}.w_gate"), d, self.d_ff));
+            specs.push((format!("l{l}.w_up"), d, self.d_ff));
+            specs.push((format!("l{l}.w_down"), self.d_ff, d));
+        }
+        specs.push(("final_norm".to_string(), 1, d));
+        match self.head {
+            TaskHead::Lm => {} // tied with embed
+            TaskHead::Classifier(k) => specs.push(("head".to_string(), d, k)),
+            TaskHead::Regression => specs.push(("head".to_string(), d, 1)),
+        }
+        specs
+    }
+
+    /// Total parameter count.
+    pub fn n_params(&self) -> usize {
+        self.param_specs().iter().map(|(_, m, n)| m * n).sum()
+    }
+
+    /// Names of the 2-D "reversible" layers low-rank optimizers project
+    /// (norm scales and tiny heads are updated densely, as in GaLore).
+    pub fn projected_layers(&self) -> Vec<String> {
+        self.param_specs()
+            .into_iter()
+            .filter(|(name, m, n)| *m > 1 && *n > 1 && !name.ends_with("norm") && name != "head")
+            .map(|(name, _, _)| name)
+            .collect()
+    }
+
+    /// Artifact id for this config+head (matches aot.py naming).
+    pub fn artifact_id(&self) -> String {
+        format!("{}_{}", self.name, self.head.tag())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("vocab", Json::num(self.vocab as f64)),
+            ("d_model", Json::num(self.d_model as f64)),
+            ("n_layers", Json::num(self.n_layers as f64)),
+            ("n_heads", Json::num(self.n_heads as f64)),
+            ("d_ff", Json::num(self.d_ff as f64)),
+            ("seq_len", Json::num(self.seq_len as f64)),
+            ("head", Json::str(&self.head.tag())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<ModelCfg> {
+        let head = match j.get("head").as_str()? {
+            "lm" => TaskHead::Lm,
+            "reg" => TaskHead::Regression,
+            s if s.starts_with("cls") => TaskHead::Classifier(s[3..].parse().ok()?),
+            _ => return None,
+        };
+        Some(ModelCfg {
+            name: j.get("name").as_str()?.to_string(),
+            vocab: j.get("vocab").as_usize()?,
+            d_model: j.get("d_model").as_usize()?,
+            n_layers: j.get("n_layers").as_usize()?,
+            n_heads: j.get("n_heads").as_usize()?,
+            d_ff: j.get("d_ff").as_usize()?,
+            seq_len: j.get("seq_len").as_usize()?,
+            head,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_exist() {
+        for name in ["nano", "micro", "mini", "small"] {
+            let cfg = ModelCfg::preset(name).unwrap();
+            assert_eq!(cfg.d_model % cfg.n_heads, 0, "{name}");
+            assert!(cfg.n_params() > 0);
+        }
+        assert!(ModelCfg::preset("llama-70b").is_none());
+    }
+
+    #[test]
+    fn param_count_scaling() {
+        let nano = ModelCfg::preset("nano").unwrap();
+        let small = ModelCfg::preset("small").unwrap();
+        assert!(small.n_params() > 10 * nano.n_params());
+        // The e2e preset should be in the ~10M range.
+        assert!(small.n_params() > 4_000_000 && small.n_params() < 20_000_000,
+            "small = {}", small.n_params());
+    }
+
+    #[test]
+    fn projected_layers_are_2d_matrices() {
+        let cfg = ModelCfg::preset("nano").unwrap();
+        let specs: std::collections::BTreeMap<String, (usize, usize)> = cfg
+            .param_specs()
+            .into_iter()
+            .map(|(n, m, k)| (n, (m, k)))
+            .collect();
+        for name in cfg.projected_layers() {
+            let (m, n) = specs[&name];
+            assert!(m > 1 && n > 1);
+        }
+        // Norm scales must not be projected.
+        assert!(!cfg.projected_layers().iter().any(|n| n.contains("norm")));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = ModelCfg::preset("mini")
+            .unwrap()
+            .with_head(TaskHead::Classifier(3));
+        let j = cfg.to_json();
+        assert_eq!(ModelCfg::from_json(&j).unwrap(), cfg);
+    }
+
+    #[test]
+    fn classifier_head_adds_param() {
+        let lm = ModelCfg::preset("nano").unwrap();
+        let cls = ModelCfg::preset("nano").unwrap().with_head(TaskHead::Classifier(2));
+        assert_eq!(cls.param_specs().len(), lm.param_specs().len() + 1);
+    }
+}

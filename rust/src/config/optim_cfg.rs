@@ -1,0 +1,245 @@
+//! Optimizer configuration: which method, rank, subspace refresh cadence,
+//! and the shared hyperparameters of Algorithm 1.
+
+use crate::util::json::Json;
+
+/// Which optimizer to run. Every method the paper's tables compare against
+/// has a native implementation in `optim/`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OptimKind {
+    /// Plain SGD with momentum.
+    Sgd,
+    /// Adam (Kingma & Ba) — the paper's "Full-Rank" baseline optimizer.
+    Adam,
+    /// AdamW (decoupled weight decay).
+    AdamW,
+    /// GaLore (Zhao et al. 2024): low-rank projected Adam.
+    GaLore,
+    /// Muon (Jordan et al. 2024): full-space NS5 moment orthogonalization.
+    Muon,
+    /// OSGDM (Tuddenham et al. 2022): per-step gradient orthogonalization.
+    Osgdm,
+    /// SUMO with exact SVD orthogonalization (the paper's method).
+    Sumo,
+    /// SUMO ablation: Newton-Schulz5 instead of exact SVD (Table 2 rows).
+    SumoNs5,
+    /// Low-rank-only baseline (train factorized weights; Table 3 "Low-Rank").
+    LowRank,
+    /// LoRA-style adapters (Table 2/3/6 baseline).
+    Lora,
+    /// ReLoRA: LoRA with periodic merge-and-restart (Table 3 baseline).
+    ReLora,
+}
+
+impl OptimKind {
+    pub fn parse(s: &str) -> Option<OptimKind> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "sgd" => OptimKind::Sgd,
+            "adam" => OptimKind::Adam,
+            "adamw" => OptimKind::AdamW,
+            "galore" => OptimKind::GaLore,
+            "muon" => OptimKind::Muon,
+            "osgdm" => OptimKind::Osgdm,
+            "sumo" | "sumo-svd" => OptimKind::Sumo,
+            "sumo-ns5" | "sumons5" => OptimKind::SumoNs5,
+            "lowrank" | "low-rank" => OptimKind::LowRank,
+            "lora" => OptimKind::Lora,
+            "relora" => OptimKind::ReLora,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OptimKind::Sgd => "sgd",
+            OptimKind::Adam => "adam",
+            OptimKind::AdamW => "adamw",
+            OptimKind::GaLore => "galore",
+            OptimKind::Muon => "muon",
+            OptimKind::Osgdm => "osgdm",
+            OptimKind::Sumo => "sumo",
+            OptimKind::SumoNs5 => "sumo-ns5",
+            OptimKind::LowRank => "lowrank",
+            OptimKind::Lora => "lora",
+            OptimKind::ReLora => "relora",
+        }
+    }
+
+    /// Display name matching the paper's tables.
+    pub fn paper_name(&self) -> &'static str {
+        match self {
+            OptimKind::Sgd => "SGD-M",
+            OptimKind::Adam => "Full-Rank (Adam)",
+            OptimKind::AdamW => "AdamW",
+            OptimKind::GaLore => "GaLore",
+            OptimKind::Muon => "Muon",
+            OptimKind::Osgdm => "OSGDM",
+            OptimKind::Sumo => "SUMO (SVD)",
+            OptimKind::SumoNs5 => "SUMO (Newton-Schulz5)",
+            OptimKind::LowRank => "Low-Rank",
+            OptimKind::Lora => "LoRA",
+            OptimKind::ReLora => "ReLoRA",
+        }
+    }
+}
+
+/// Hyperparameters shared across methods (each method reads the subset it
+/// needs; names follow Algorithm 1).
+#[derive(Clone, Debug, PartialEq)]
+pub struct OptimCfg {
+    pub kind: OptimKind,
+    /// Learning rate η.
+    pub lr: f32,
+    /// First-moment decay β₁ / μ.
+    pub beta1: f32,
+    /// Second-moment decay β₂ (Adam family).
+    pub beta2: f32,
+    /// Adam ε.
+    pub eps: f32,
+    /// Weight decay λ.
+    pub weight_decay: f32,
+    /// Projection rank r.
+    pub rank: usize,
+    /// Subspace refresh interval K.
+    pub update_freq: usize,
+    /// Projection back-scale α (GaLore/SUMO "scale factor").
+    pub scale: f32,
+    /// Norm-growth limiter threshold γ (Block 3); paper uses 1.1.
+    pub gamma: f32,
+    /// Enable Block 3 (norm-growth limiter).
+    pub use_limiter: bool,
+    /// Newton-Schulz iteration count for Muon / SUMO-NS5.
+    pub ns_iters: usize,
+    /// ReLoRA merge interval (steps).
+    pub relora_reset: usize,
+}
+
+impl OptimCfg {
+    /// Paper-faithful defaults for a given method.
+    pub fn new(kind: OptimKind) -> OptimCfg {
+        OptimCfg {
+            kind,
+            lr: 1e-3,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            rank: 8,
+            update_freq: 200,
+            scale: 1.0,
+            gamma: 1.1,
+            use_limiter: true,
+            ns_iters: 5,
+            relora_reset: 200,
+        }
+    }
+
+    pub fn with_lr(mut self, lr: f32) -> Self {
+        self.lr = lr;
+        self
+    }
+
+    pub fn with_rank(mut self, r: usize) -> Self {
+        self.rank = r;
+        self
+    }
+
+    pub fn with_update_freq(mut self, k: usize) -> Self {
+        self.update_freq = k;
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str(self.kind.name())),
+            ("lr", Json::num(self.lr as f64)),
+            ("beta1", Json::num(self.beta1 as f64)),
+            ("beta2", Json::num(self.beta2 as f64)),
+            ("eps", Json::num(self.eps as f64)),
+            ("weight_decay", Json::num(self.weight_decay as f64)),
+            ("rank", Json::num(self.rank as f64)),
+            ("update_freq", Json::num(self.update_freq as f64)),
+            ("scale", Json::num(self.scale as f64)),
+            ("gamma", Json::num(self.gamma as f64)),
+            ("use_limiter", Json::Bool(self.use_limiter)),
+            ("ns_iters", Json::num(self.ns_iters as f64)),
+            ("relora_reset", Json::num(self.relora_reset as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<OptimCfg> {
+        let kind = OptimKind::parse(j.get("kind").as_str()?)?;
+        let mut cfg = OptimCfg::new(kind);
+        if let Some(x) = j.get("lr").as_f64() {
+            cfg.lr = x as f32;
+        }
+        if let Some(x) = j.get("beta1").as_f64() {
+            cfg.beta1 = x as f32;
+        }
+        if let Some(x) = j.get("beta2").as_f64() {
+            cfg.beta2 = x as f32;
+        }
+        if let Some(x) = j.get("eps").as_f64() {
+            cfg.eps = x as f32;
+        }
+        if let Some(x) = j.get("weight_decay").as_f64() {
+            cfg.weight_decay = x as f32;
+        }
+        if let Some(x) = j.get("rank").as_usize() {
+            cfg.rank = x;
+        }
+        if let Some(x) = j.get("update_freq").as_usize() {
+            cfg.update_freq = x;
+        }
+        if let Some(x) = j.get("scale").as_f64() {
+            cfg.scale = x as f32;
+        }
+        if let Some(x) = j.get("gamma").as_f64() {
+            cfg.gamma = x as f32;
+        }
+        if let Some(x) = j.get("use_limiter").as_bool() {
+            cfg.use_limiter = x;
+        }
+        if let Some(x) = j.get("ns_iters").as_usize() {
+            cfg.ns_iters = x;
+        }
+        if let Some(x) = j.get("relora_reset").as_usize() {
+            cfg.relora_reset = x;
+        }
+        Some(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all_kinds() {
+        for s in [
+            "sgd", "adam", "adamw", "galore", "muon", "osgdm", "sumo", "sumo-ns5", "lowrank",
+            "lora", "relora",
+        ] {
+            let k = OptimKind::parse(s).unwrap();
+            assert_eq!(OptimKind::parse(k.name()), Some(k));
+        }
+        assert!(OptimKind::parse("shampoo-9000").is_none());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = OptimCfg::new(OptimKind::Sumo)
+            .with_lr(3e-4)
+            .with_rank(16)
+            .with_update_freq(50);
+        let j = cfg.to_json();
+        assert_eq!(OptimCfg::from_json(&j).unwrap(), cfg);
+    }
+
+    #[test]
+    fn defaults_match_paper() {
+        let cfg = OptimCfg::new(OptimKind::Sumo);
+        assert_eq!(cfg.gamma, 1.1); // Block 3 threshold from the paper
+        assert_eq!(cfg.ns_iters, 5); // "Newton-Schulz5"
+    }
+}

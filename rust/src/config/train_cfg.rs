@@ -1,0 +1,182 @@
+//! Training-run configuration: steps, batch, schedule, seed, data, outputs.
+
+use crate::util::json::Json;
+
+/// Learning-rate schedule.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Schedule {
+    Constant,
+    /// Linear warmup to peak then cosine decay to `min_ratio`·peak.
+    CosineWarmup { warmup: usize, min_ratio: f32 },
+}
+
+/// A full training-run configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainCfg {
+    pub steps: usize,
+    pub batch: usize,
+    pub seed: u64,
+    pub schedule: Schedule,
+    /// Gradient-norm clip (0 disables; SUMO uses the Block-3 limiter instead).
+    pub grad_clip: f32,
+    /// Evaluate every N steps (0 = only at end).
+    pub eval_every: usize,
+    /// Number of eval batches.
+    pub eval_batches: usize,
+    /// Log every N steps.
+    pub log_every: usize,
+    /// Data-parallel worker shards in the coordinator.
+    pub dp_workers: usize,
+    /// Output directory for CSV logs / checkpoints.
+    pub out_dir: String,
+}
+
+impl Default for TrainCfg {
+    fn default() -> Self {
+        TrainCfg {
+            steps: 100,
+            batch: 8,
+            seed: 42,
+            schedule: Schedule::CosineWarmup {
+                warmup: 10,
+                min_ratio: 0.1,
+            },
+            grad_clip: 0.0,
+            eval_every: 0,
+            eval_batches: 8,
+            log_every: 10,
+            dp_workers: 1,
+            out_dir: "bench_out".to_string(),
+        }
+    }
+}
+
+impl TrainCfg {
+    /// LR multiplier at `step` (0-indexed) for `steps` total.
+    pub fn lr_mult(&self, step: usize) -> f32 {
+        match self.schedule {
+            Schedule::Constant => 1.0,
+            Schedule::CosineWarmup { warmup, min_ratio } => {
+                if warmup > 0 && step < warmup {
+                    (step + 1) as f32 / warmup as f32
+                } else {
+                    let span = self.steps.saturating_sub(warmup).max(1) as f32;
+                    let t = (step.saturating_sub(warmup)) as f32 / span;
+                    let cos = 0.5 * (1.0 + (std::f32::consts::PI * t.min(1.0)).cos());
+                    min_ratio + (1.0 - min_ratio) * cos
+                }
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let sched = match self.schedule {
+            Schedule::Constant => Json::obj(vec![("kind", Json::str("constant"))]),
+            Schedule::CosineWarmup { warmup, min_ratio } => Json::obj(vec![
+                ("kind", Json::str("cosine")),
+                ("warmup", Json::num(warmup as f64)),
+                ("min_ratio", Json::num(min_ratio as f64)),
+            ]),
+        };
+        Json::obj(vec![
+            ("steps", Json::num(self.steps as f64)),
+            ("batch", Json::num(self.batch as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("schedule", sched),
+            ("grad_clip", Json::num(self.grad_clip as f64)),
+            ("eval_every", Json::num(self.eval_every as f64)),
+            ("eval_batches", Json::num(self.eval_batches as f64)),
+            ("log_every", Json::num(self.log_every as f64)),
+            ("dp_workers", Json::num(self.dp_workers as f64)),
+            ("out_dir", Json::str(&self.out_dir)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<TrainCfg> {
+        let mut cfg = TrainCfg::default();
+        if let Some(x) = j.get("steps").as_usize() {
+            cfg.steps = x;
+        }
+        if let Some(x) = j.get("batch").as_usize() {
+            cfg.batch = x;
+        }
+        if let Some(x) = j.get("seed").as_f64() {
+            cfg.seed = x as u64;
+        }
+        let s = j.get("schedule");
+        match s.get("kind").as_str() {
+            Some("constant") => cfg.schedule = Schedule::Constant,
+            Some("cosine") => {
+                cfg.schedule = Schedule::CosineWarmup {
+                    warmup: s.get("warmup").as_usize().unwrap_or(10),
+                    min_ratio: s.get("min_ratio").as_f64().unwrap_or(0.1) as f32,
+                }
+            }
+            _ => {}
+        }
+        if let Some(x) = j.get("grad_clip").as_f64() {
+            cfg.grad_clip = x as f32;
+        }
+        if let Some(x) = j.get("eval_every").as_usize() {
+            cfg.eval_every = x;
+        }
+        if let Some(x) = j.get("eval_batches").as_usize() {
+            cfg.eval_batches = x;
+        }
+        if let Some(x) = j.get("log_every").as_usize() {
+            cfg.log_every = x;
+        }
+        if let Some(x) = j.get("dp_workers").as_usize() {
+            cfg.dp_workers = x;
+        }
+        if let Some(x) = j.get("out_dir").as_str() {
+            cfg.out_dir = x.to_string();
+        }
+        Some(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cosine_schedule_shape() {
+        let cfg = TrainCfg {
+            steps: 100,
+            schedule: Schedule::CosineWarmup {
+                warmup: 10,
+                min_ratio: 0.1,
+            },
+            ..Default::default()
+        };
+        // Warmup ramps.
+        assert!(cfg.lr_mult(0) < cfg.lr_mult(5));
+        assert!((cfg.lr_mult(9) - 1.0).abs() < 1e-6);
+        // Decays after warmup.
+        assert!(cfg.lr_mult(50) < 1.0);
+        assert!(cfg.lr_mult(99) >= 0.1 - 1e-4);
+        assert!(cfg.lr_mult(99) < cfg.lr_mult(50));
+    }
+
+    #[test]
+    fn constant_schedule() {
+        let cfg = TrainCfg {
+            schedule: Schedule::Constant,
+            ..Default::default()
+        };
+        assert_eq!(cfg.lr_mult(0), 1.0);
+        assert_eq!(cfg.lr_mult(1000), 1.0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = TrainCfg {
+            steps: 77,
+            batch: 4,
+            dp_workers: 2,
+            ..Default::default()
+        };
+        assert_eq!(TrainCfg::from_json(&cfg.to_json()).unwrap(), cfg);
+    }
+}

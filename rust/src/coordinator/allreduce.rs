@@ -1,0 +1,81 @@
+//! Gradient all-reduce across data-parallel shards.
+//!
+//! On this single-process testbed shards are batch splits; the reduction
+//! tree is the same code a multi-host deployment would run per bucket.
+
+use crate::linalg::Mat;
+
+/// Average a set of per-shard gradients in place into the first one.
+/// Tree reduction: pairwise sums, then scale — O(log n) depth.
+pub fn allreduce_mean(shards: &mut Vec<Vec<Mat>>) -> Vec<Mat> {
+    assert!(!shards.is_empty());
+    let n = shards.len();
+    let mut stride = 1;
+    while stride < n {
+        let mut i = 0;
+        while i + stride < n {
+            // Split borrow: sum shard i+stride into shard i.
+            let (left, right) = shards.split_at_mut(i + stride);
+            let dst = &mut left[i];
+            let src = &right[0];
+            for (d, s) in dst.iter_mut().zip(src.iter()) {
+                d.axpy(1.0, s);
+            }
+            i += stride * 2;
+        }
+        stride *= 2;
+    }
+    let mut out = shards.swap_remove(0);
+    let scale = 1.0 / n as f32;
+    for g in out.iter_mut() {
+        g.scale(scale);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn mean_of_shards() {
+        let mut rng = Rng::new(1);
+        let make = |rng: &mut Rng| vec![Mat::randn(4, 3, 1.0, rng), Mat::randn(2, 2, 1.0, rng)];
+        let shards: Vec<Vec<Mat>> = (0..5).map(|_| make(&mut rng)).collect();
+        // Reference mean.
+        let mut want = vec![Mat::zeros(4, 3), Mat::zeros(2, 2)];
+        for s in &shards {
+            for (w, g) in want.iter_mut().zip(s.iter()) {
+                w.axpy(1.0 / 5.0, g);
+            }
+        }
+        let mut shards = shards;
+        let got = allreduce_mean(&mut shards);
+        for (g, w) in got.iter().zip(want.iter()) {
+            assert!(g.max_diff(w) < 1e-5);
+        }
+    }
+
+    #[test]
+    fn single_shard_is_identity() {
+        let mut rng = Rng::new(2);
+        let g = Mat::randn(3, 3, 1.0, &mut rng);
+        let mut shards = vec![vec![g.clone()]];
+        let got = allreduce_mean(&mut shards);
+        assert!(got[0].max_diff(&g) < 1e-6);
+    }
+
+    #[test]
+    fn order_invariance() {
+        // Associativity/commutativity up to float error: permuted shards
+        // give the same mean.
+        let mut rng = Rng::new(3);
+        let shards: Vec<Vec<Mat>> = (0..4).map(|_| vec![Mat::randn(8, 8, 1.0, &mut rng)]).collect();
+        let mut a = shards.clone();
+        let mut b: Vec<Vec<Mat>> = shards.into_iter().rev().collect();
+        let ga = allreduce_mean(&mut a);
+        let gb = allreduce_mean(&mut b);
+        assert!(ga[0].max_diff(&gb[0]) < 1e-4);
+    }
+}

@@ -1,0 +1,215 @@
+//! The training coordinator — Layer 3's orchestration core.
+//!
+//! Owns the parameter store and the optimizer engine, schedules gradient
+//! computation over data-parallel shards (batch splits + all-reduce),
+//! dispatches **per-layer** optimizer updates in backward order as each
+//! gradient is consumed (the AdaLomo-style memory pattern of §3.2: a
+//! gradient is dropped as soon as its layer is updated), and aggregates
+//! step metrics.
+
+pub mod allreduce;
+
+use crate::config::{OptimCfg, OptimKind};
+use crate::data::Batch;
+use crate::linalg::Mat;
+use crate::model::ParamStore;
+use crate::optim::{self, Optimizer};
+use crate::runtime::{HloSumo, ModelRunner, Runtime};
+
+pub use allreduce::allreduce_mean;
+
+/// Which implementation applies the updates.
+pub enum Engine<'rt> {
+    /// Native Rust optimizer (all methods).
+    Native(Box<dyn Optimizer>),
+    /// HLO/Pallas SUMO on the PJRT runtime (the paper's hot path).
+    Hlo(HloSumo<'rt>),
+}
+
+/// Per-step metrics returned to the trainer.
+#[derive(Clone, Copy, Debug)]
+pub struct StepMetrics {
+    pub loss: f32,
+    pub grad_norm: f32,
+    pub step_seconds: f64,
+}
+
+/// The coordinator for one training run.
+pub struct Coordinator<'rt> {
+    pub runner: ModelRunner<'rt>,
+    pub params: ParamStore,
+    engine: Engine<'rt>,
+    /// Data-parallel shards (batch splits, all-reduced).
+    pub dp_shards: usize,
+    step: usize,
+}
+
+impl<'rt> Coordinator<'rt> {
+    /// Build with a native optimizer engine.
+    pub fn native(
+        rt: &'rt Runtime,
+        model_id: &str,
+        optim_cfg: &OptimCfg,
+        seed: u64,
+        dp_shards: usize,
+    ) -> crate::Result<Coordinator<'rt>> {
+        let runner = ModelRunner::new(rt, model_id)?;
+        let params = ParamStore::init(&runner.cfg, seed);
+        let shapes = params.shapes();
+        let mask = params.projected_mask();
+        let engine = Engine::Native(optim::build(optim_cfg, &shapes, &mask, seed));
+        Ok(Coordinator {
+            runner,
+            params,
+            engine,
+            dp_shards: dp_shards.max(1),
+            step: 0,
+        })
+    }
+
+    /// Build with the HLO SUMO engine (requires matching artifacts).
+    pub fn hlo_sumo(
+        rt: &'rt Runtime,
+        model_id: &str,
+        optim_cfg: &OptimCfg,
+        seed: u64,
+    ) -> crate::Result<Coordinator<'rt>> {
+        anyhow::ensure!(
+            matches!(optim_cfg.kind, OptimKind::Sumo | OptimKind::SumoNs5),
+            "HLO engine implements SUMO"
+        );
+        let runner = ModelRunner::new(rt, model_id)?;
+        let params = ParamStore::init(&runner.cfg, seed);
+        let engine = Engine::Hlo(HloSumo::new(rt, &params, optim_cfg, seed)?);
+        Ok(Coordinator {
+            runner,
+            params,
+            engine,
+            dp_shards: 1,
+            step: 0,
+        })
+    }
+
+    /// Replace parameters (e.g. load a pretrained checkpoint before
+    /// fine-tuning).
+    pub fn set_params(&mut self, params: ParamStore) {
+        self.params = params;
+    }
+
+    pub fn step_count(&self) -> usize {
+        self.step
+    }
+
+    /// One full LM training iteration over `batch` (split into dp shards).
+    pub fn train_iteration(&mut self, batch: &Batch, lr_mult: f32) -> crate::Result<StepMetrics> {
+        let t = crate::util::Timer::start();
+        let (loss, grads) = self.compute_grads_lm(batch)?;
+        let mut metrics = self.apply_updates(grads, lr_mult, loss)?;
+        metrics.step_seconds = t.secs();
+        Ok(metrics)
+    }
+
+    /// One labeled (classification/regression) training iteration.
+    pub fn train_iteration_labeled(
+        &mut self,
+        tokens: &[u32],
+        labels: &[f32],
+        lr_mult: f32,
+    ) -> crate::Result<StepMetrics> {
+        let t = crate::util::Timer::start();
+        let out = self.runner.train_step_labeled(&self.params, tokens, labels)?;
+        let mut metrics = self.apply_updates(out.grads, lr_mult, out.loss)?;
+        metrics.step_seconds = t.secs();
+        Ok(metrics)
+    }
+
+    /// Gradient computation with data-parallel sharding + all-reduce.
+    fn compute_grads_lm(&self, batch: &Batch) -> crate::Result<(f32, Vec<Mat>)> {
+        if self.dp_shards == 1 || batch.batch % self.dp_shards != 0 {
+            let out = self.runner.train_step(&self.params, batch)?;
+            return Ok((out.loss, out.grads));
+        }
+        // The artifact batch size is fixed; DP here replays each shard's
+        // rows (tiled to the full batch width) through the same executable
+        // and all-reduces — the gradient semantics of a multi-worker setup
+        // exercised on one host.
+        let per = batch.batch / self.dp_shards;
+        let mut shard_grads = Vec::with_capacity(self.dp_shards);
+        let mut loss_sum = 0.0f32;
+        for s in 0..self.dp_shards {
+            let mut inputs = Vec::with_capacity(batch.inputs.len());
+            let mut targets = Vec::with_capacity(batch.targets.len());
+            for _rep in 0..self.dp_shards {
+                for row in 0..per {
+                    let src = (s * per + row) * batch.seq;
+                    inputs.extend_from_slice(&batch.inputs[src..src + batch.seq]);
+                    targets.extend_from_slice(&batch.targets[src..src + batch.seq]);
+                }
+            }
+            let shard = Batch {
+                batch: batch.batch,
+                seq: batch.seq,
+                inputs,
+                targets,
+            };
+            let out = self.runner.train_step(&self.params, &shard)?;
+            loss_sum += out.loss;
+            shard_grads.push(out.grads);
+        }
+        let grads = allreduce_mean(&mut shard_grads);
+        Ok((loss_sum / self.dp_shards as f32, grads))
+    }
+
+    /// Per-layer update dispatch, reverse (backprop) order; each gradient is
+    /// dropped as soon as its layer is updated.
+    fn apply_updates(
+        &mut self,
+        mut grads: Vec<Mat>,
+        lr_mult: f32,
+        loss: f32,
+    ) -> crate::Result<StepMetrics> {
+        let gn2: f64 = grads.iter().map(|g| g.sumsq()).sum();
+        for idx in (0..grads.len()).rev() {
+            let g = std::mem::replace(&mut grads[idx], Mat::zeros(0, 0));
+            let w = &mut self.params.tensors[idx].1;
+            match &mut self.engine {
+                Engine::Native(opt) => {
+                    opt.step(idx, w, &g, lr_mult);
+                    opt.finalize_weights(idx, w);
+                }
+                Engine::Hlo(opt) => opt.step(idx, w, &g, lr_mult)?,
+            }
+            // g dropped here — the per-layer memory pattern of §3.2.
+        }
+        match &mut self.engine {
+            Engine::Native(opt) => opt.end_step(),
+            Engine::Hlo(opt) => opt.end_step(),
+        }
+        self.step += 1;
+        Ok(StepMetrics {
+            loss,
+            grad_norm: (gn2 as f32).sqrt(),
+            step_seconds: 0.0,
+        })
+    }
+
+    /// Optimizer-state bytes of the active engine.
+    pub fn optimizer_state_bytes(&self) -> usize {
+        match &self.engine {
+            Engine::Native(opt) => opt.state_bytes(),
+            Engine::Hlo(opt) => opt.state_bytes(),
+        }
+    }
+
+    /// Borrow the engine (benches read optimizer diagnostics through it).
+    pub fn engine_ref(&self) -> &Engine<'rt> {
+        &self.engine
+    }
+
+    pub fn engine_name(&self) -> &'static str {
+        match &self.engine {
+            Engine::Native(opt) => opt.name(),
+            Engine::Hlo(_) => "sumo-hlo",
+        }
+    }
+}

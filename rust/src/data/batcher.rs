@@ -1,0 +1,118 @@
+//! Batch assembly for the PJRT train step: flat u32 token buffers shaped
+//! `[batch, seq]` for inputs and next-token targets.
+
+use super::corpus::SyntheticCorpus;
+
+/// One training batch (LM next-token form).
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub batch: usize,
+    pub seq: usize,
+    /// `[batch*seq]` input token ids.
+    pub inputs: Vec<u32>,
+    /// `[batch*seq]` next-token targets (input shifted by one).
+    pub targets: Vec<u32>,
+}
+
+impl Batch {
+    /// Build an LM batch from `batch` sequences of length `seq+1`.
+    pub fn from_sequences(seqs: &[Vec<u32>], seq: usize) -> Batch {
+        let b = seqs.len();
+        let mut inputs = Vec::with_capacity(b * seq);
+        let mut targets = Vec::with_capacity(b * seq);
+        for s in seqs {
+            assert!(s.len() >= seq + 1, "sequence too short: {} < {}", s.len(), seq + 1);
+            inputs.extend_from_slice(&s[..seq]);
+            targets.extend_from_slice(&s[1..seq + 1]);
+        }
+        Batch {
+            batch: b,
+            seq,
+            inputs,
+            targets,
+        }
+    }
+
+    /// Classification batch: targets hold one label per sequence (the
+    /// runtime passes labels separately; targets here are padded zeros).
+    pub fn from_tokens_labels(tokens: Vec<u32>, batch: usize, seq: usize) -> Batch {
+        assert_eq!(tokens.len(), batch * seq);
+        Batch {
+            batch,
+            seq,
+            inputs: tokens,
+            targets: vec![0; batch * seq],
+        }
+    }
+
+    /// Supervised LM pair (math fine-tuning): inputs from prompt+answer,
+    /// targets shifted.
+    pub fn from_pair(full: &[u32], batch: usize, seq: usize) -> Batch {
+        assert_eq!(full.len(), batch * (seq + 1));
+        let mut inputs = Vec::with_capacity(batch * seq);
+        let mut targets = Vec::with_capacity(batch * seq);
+        for b in 0..batch {
+            let row = &full[b * (seq + 1)..(b + 1) * (seq + 1)];
+            inputs.extend_from_slice(&row[..seq]);
+            targets.extend_from_slice(&row[1..]);
+        }
+        Batch {
+            batch,
+            seq,
+            inputs,
+            targets,
+        }
+    }
+}
+
+/// Streaming LM batcher over the synthetic corpus.
+pub struct Batcher {
+    corpus: SyntheticCorpus,
+    batch: usize,
+    seq: usize,
+}
+
+impl Batcher {
+    pub fn new(corpus: SyntheticCorpus, batch: usize, seq: usize) -> Batcher {
+        Batcher { corpus, batch, seq }
+    }
+
+    /// Next LM batch (never exhausts — the corpus is a stream).
+    pub fn next(&mut self) -> Batch {
+        let seqs = self.corpus.next_batch(self.batch, self.seq + 1);
+        Batch::from_sequences(&seqs, self.seq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lm_batch_shift_invariant() {
+        let seqs = vec![vec![1, 2, 3, 4, 5], vec![6, 7, 8, 9, 10]];
+        let b = Batch::from_sequences(&seqs, 4);
+        assert_eq!(b.inputs, vec![1, 2, 3, 4, 6, 7, 8, 9]);
+        assert_eq!(b.targets, vec![2, 3, 4, 5, 7, 8, 9, 10]);
+    }
+
+    #[test]
+    fn streaming_batcher_shapes() {
+        let corpus = SyntheticCorpus::new(256, 3);
+        let mut b = Batcher::new(corpus, 4, 16);
+        let batch = b.next();
+        assert_eq!(batch.inputs.len(), 64);
+        assert_eq!(batch.targets.len(), 64);
+        // Targets are the inputs shifted within each row.
+        let b2 = b.next();
+        assert_ne!(batch.inputs, b2.inputs);
+    }
+
+    #[test]
+    fn from_pair_shifts() {
+        let full = vec![1, 2, 3, 4, 5, 6]; // batch=2, seq=2 → rows of 3
+        let b = Batch::from_pair(&full, 2, 2);
+        assert_eq!(b.inputs, vec![1, 2, 4, 5]);
+        assert_eq!(b.targets, vec![2, 3, 5, 6]);
+    }
+}

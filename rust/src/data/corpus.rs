@@ -1,0 +1,168 @@
+//! Synthetic C4-like pretraining corpus.
+//!
+//! Generates an unbounded, non-repeating token stream whose statistics echo
+//! web text: Zipfian unigram frequencies, first-order Markov (bigram)
+//! structure with topic drift, sentence punctuation, and document
+//! boundaries. The optimizer experiments (Table 3, the e2e driver) only
+//! require that gradients look like language-model gradients — i.e. highly
+//! anisotropic, low-rank-trending (Lemma 3.1) — which this corpus induces;
+//! DESIGN.md §3 records the substitution for C4.
+
+use crate::util::Rng;
+
+/// Reserved token ids.
+pub const PAD: u32 = 0;
+pub const BOS: u32 = 1;
+pub const EOS: u32 = 2;
+/// First id available for "content" tokens.
+pub const FIRST_CONTENT: u32 = 3;
+
+/// Streaming synthetic corpus over a `vocab`-sized token space.
+pub struct SyntheticCorpus {
+    vocab: usize,
+    rng: Rng,
+    /// Current Markov state (previous token).
+    prev: u32,
+    /// Current topic center; content tokens are drawn near it.
+    topic: usize,
+    /// Tokens left in the current document.
+    doc_left: usize,
+    /// Zipf exponent.
+    zipf_s: f64,
+}
+
+impl SyntheticCorpus {
+    pub fn new(vocab: usize, seed: u64) -> SyntheticCorpus {
+        assert!(vocab > 16, "vocab too small: {vocab}");
+        let mut rng = Rng::new(seed);
+        let topic = rng.below_usize(vocab);
+        SyntheticCorpus {
+            vocab,
+            rng,
+            prev: BOS,
+            topic,
+            doc_left: 0,
+            zipf_s: 1.05,
+        }
+    }
+
+    /// Number of content tokens (vocab minus specials).
+    fn content(&self) -> usize {
+        self.vocab - FIRST_CONTENT as usize
+    }
+
+    /// Draw the next token.
+    pub fn next_token(&mut self) -> u32 {
+        if self.doc_left == 0 {
+            // Start a new document: topic shift + BOS.
+            self.doc_left = 64 + self.rng.below_usize(192);
+            self.topic = self.rng.below_usize(self.content());
+            self.prev = BOS;
+            return BOS;
+        }
+        self.doc_left -= 1;
+        if self.doc_left == 0 {
+            self.prev = EOS;
+            return EOS;
+        }
+        let c = self.content();
+        // Mixture: 55% bigram continuation (hash of prev), 35% topic-local
+        // Zipf draw, 10% global Zipf draw. This produces the banded
+        // co-occurrence structure that yields anisotropic LM gradients.
+        let u = self.rng.f64();
+        let tok = if u < 0.55 && self.prev >= FIRST_CONTENT {
+            // Deterministic "grammar": successor window derived from prev.
+            let base = ((self.prev as u64).wrapping_mul(2654435761) % c as u64) as usize;
+            let off = self.rng.zipf(32.min(c), 1.2);
+            ((base + off) % c) as u32 + FIRST_CONTENT
+        } else if u < 0.90 {
+            let off = self.rng.zipf(256.min(c), self.zipf_s);
+            ((self.topic + off) % c) as u32 + FIRST_CONTENT
+        } else {
+            self.rng.zipf(c, self.zipf_s) as u32 + FIRST_CONTENT
+        };
+        self.prev = tok;
+        tok
+    }
+
+    /// Fill a sequence of `len` tokens (continuing the stream).
+    pub fn next_sequence(&mut self, len: usize) -> Vec<u32> {
+        (0..len).map(|_| self.next_token()).collect()
+    }
+
+    /// A batch of `batch` sequences of length `len + 1` (inputs + shifted
+    /// targets are sliced by the caller).
+    pub fn next_batch(&mut self, batch: usize, len: usize) -> Vec<Vec<u32>> {
+        (0..batch).map(|_| self.next_sequence(len)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_in_range() {
+        let mut c = SyntheticCorpus::new(512, 1);
+        for _ in 0..10_000 {
+            let t = c.next_token();
+            assert!((t as usize) < 512);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = SyntheticCorpus::new(256, 7);
+        let mut b = SyntheticCorpus::new(256, 7);
+        assert_eq!(a.next_sequence(500), b.next_sequence(500));
+    }
+
+    #[test]
+    fn stream_does_not_repeat() {
+        let mut c = SyntheticCorpus::new(256, 9);
+        let s1 = c.next_sequence(200);
+        let s2 = c.next_sequence(200);
+        assert_ne!(s1, s2);
+    }
+
+    #[test]
+    fn has_document_structure() {
+        let mut c = SyntheticCorpus::new(256, 11);
+        let toks = c.next_sequence(5000);
+        let bos = toks.iter().filter(|&&t| t == BOS).count();
+        let eos = toks.iter().filter(|&&t| t == EOS).count();
+        assert!(bos >= 10, "expected multiple documents, bos={bos}");
+        assert!(eos >= 9);
+    }
+
+    #[test]
+    fn unigram_distribution_is_skewed() {
+        let mut c = SyntheticCorpus::new(512, 13);
+        let mut counts = vec![0usize; 512];
+        for _ in 0..50_000 {
+            counts[c.next_token() as usize] += 1;
+        }
+        let mut sorted: Vec<usize> = counts
+            .iter()
+            .skip(FIRST_CONTENT as usize)
+            .copied()
+            .collect();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        let top10: usize = sorted[..10].iter().sum();
+        let total: usize = sorted.iter().sum();
+        // Zipf-ish: top-10 of ~509 types should carry >8% of mass.
+        assert!(
+            top10 as f64 / total as f64 > 0.08,
+            "top10 share = {}",
+            top10 as f64 / total as f64
+        );
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let mut c = SyntheticCorpus::new(128, 17);
+        let b = c.next_batch(4, 33);
+        assert_eq!(b.len(), 4);
+        assert!(b.iter().all(|s| s.len() == 33));
+    }
+}

@@ -1,0 +1,273 @@
+//! Synthetic GLUE-style benchmark suite (8 tasks, Table 2 / Figures 1–2).
+//!
+//! Each task generates labeled token sequences from class-conditional
+//! "signatures": a class plants a handful of indicator tokens into
+//! Zipf-noise text at a task-specific signal rate. Difficulty is controlled
+//! per task (signal strength, label count, metric) so the *spread* of
+//! scores across tasks resembles GLUE's, and the optimizer comparison
+//! (what Table 2 is about) is meaningful. STS-B is a regression task with
+//! Pearson metric; CoLA uses Matthews correlation; MRPC uses F1 — matching
+//! the paper's metric choices.
+
+use crate::util::Rng;
+
+use super::corpus::FIRST_CONTENT;
+
+/// Metric a task reports (mirrors the paper's Table 2 footnote).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GlueMetric {
+    Accuracy,
+    F1,
+    Matthews,
+    Pearson,
+}
+
+/// A synthetic GLUE task.
+#[derive(Clone, Debug)]
+pub struct GlueTask {
+    pub name: &'static str,
+    pub n_classes: usize,
+    pub metric: GlueMetric,
+    /// Probability a position carries class signal (difficulty knob).
+    pub signal: f64,
+    /// Tokens per class signature.
+    pub sig_tokens: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub seed: u64,
+}
+
+impl GlueTask {
+    /// The 8 tasks of Table 2, difficulty-ordered roughly like GLUE.
+    pub fn suite(vocab: usize, seq_len: usize) -> Vec<GlueTask> {
+        let t = |name, n_classes, metric, signal, sig_tokens, seed| GlueTask {
+            name,
+            n_classes,
+            metric,
+            signal,
+            sig_tokens,
+            seq_len,
+            vocab,
+            seed,
+        };
+        vec![
+            t("CoLA", 2, GlueMetric::Matthews, 0.055, 6, 101),
+            t("STS-B", 1, GlueMetric::Pearson, 0.10, 8, 102),
+            t("MRPC", 2, GlueMetric::F1, 0.105, 8, 103),
+            t("RTE", 2, GlueMetric::Accuracy, 0.065, 6, 104),
+            t("SST2", 2, GlueMetric::Accuracy, 0.13, 8, 105),
+            t("MNLI", 3, GlueMetric::Accuracy, 0.09, 8, 106),
+            t("QNLI", 2, GlueMetric::Accuracy, 0.105, 8, 107),
+            t("QQP", 2, GlueMetric::Accuracy, 0.12, 8, 108),
+        ]
+    }
+
+    pub fn by_name(name: &str, vocab: usize, seq_len: usize) -> Option<GlueTask> {
+        GlueTask::suite(vocab, seq_len)
+            .into_iter()
+            .find(|t| t.name.eq_ignore_ascii_case(name))
+    }
+
+    /// Class signature tokens (deterministic in task seed + class).
+    fn signature(&self, class: usize) -> Vec<u32> {
+        let mut rng = Rng::new(self.seed ^ (class as u64).wrapping_mul(0x9E37));
+        let content = self.vocab - FIRST_CONTENT as usize;
+        (0..self.sig_tokens)
+            .map(|_| (rng.below_usize(content) as u32) + FIRST_CONTENT)
+            .collect()
+    }
+
+    /// Generate one example for `split` ("train"/"dev" get disjoint streams).
+    /// Returns (tokens, label). For the regression task (STS-B-like) the
+    /// label is a score in [0,1] encoded as f32; classification labels are
+    /// class indices as f32.
+    pub fn example(&self, split: &str, index: u64) -> (Vec<u32>, f32) {
+        let split_salt = match split {
+            "train" => 0xA1,
+            _ => 0xB7,
+        };
+        let mut rng = Rng::new(self.seed ^ split_salt ^ index.wrapping_mul(0x517C_C1B7_2722_0A95));
+        let content = self.vocab - FIRST_CONTENT as usize;
+        if self.metric == GlueMetric::Pearson {
+            // Regression: score = fraction of signature-A tokens planted.
+            let score = rng.f32();
+            let sig = self.signature(0);
+            let toks = self.fill(&mut rng, content, &sig, self.signal * score as f64);
+            return (toks, score);
+        }
+        let label = rng.below_usize(self.n_classes);
+        let sig = self.signature(label);
+        let toks = self.fill(&mut rng, content, &sig, self.signal);
+        (toks, label as f32)
+    }
+
+    fn fill(&self, rng: &mut Rng, content: usize, sig: &[u32], signal: f64) -> Vec<u32> {
+        (0..self.seq_len)
+            .map(|_| {
+                if rng.bool(signal) {
+                    sig[rng.below_usize(sig.len())]
+                } else {
+                    (rng.zipf(content, 1.05) as u32) + FIRST_CONTENT
+                }
+            })
+            .collect()
+    }
+
+    /// Generate a batch: (flat tokens batch×seq, labels).
+    pub fn batch(&self, split: &str, start: u64, n: usize) -> (Vec<u32>, Vec<f32>) {
+        let mut toks = Vec::with_capacity(n * self.seq_len);
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            let (t, l) = self.example(split, start + i as u64);
+            toks.extend(t);
+            labels.push(l);
+        }
+        (toks, labels)
+    }
+}
+
+/// Compute the task metric given predictions and gold labels.
+/// For Pearson, `preds`/`gold` are scores; otherwise class indices.
+pub fn score(metric: GlueMetric, preds: &[f32], gold: &[f32]) -> f64 {
+    assert_eq!(preds.len(), gold.len());
+    assert!(!preds.is_empty());
+    match metric {
+        GlueMetric::Accuracy => {
+            let hit = preds
+                .iter()
+                .zip(gold)
+                .filter(|(p, g)| (p.round() - g.round()).abs() < 0.5)
+                .count();
+            hit as f64 / preds.len() as f64
+        }
+        GlueMetric::F1 => {
+            let (mut tp, mut fp, mut fn_) = (0.0, 0.0, 0.0);
+            for (p, g) in preds.iter().zip(gold) {
+                let p = p.round() as i32;
+                let g = g.round() as i32;
+                match (p, g) {
+                    (1, 1) => tp += 1.0,
+                    (1, 0) => fp += 1.0,
+                    (0, 1) => fn_ += 1.0,
+                    _ => {}
+                }
+            }
+            if tp == 0.0 {
+                0.0
+            } else {
+                2.0 * tp / (2.0 * tp + fp + fn_)
+            }
+        }
+        GlueMetric::Matthews => {
+            let (mut tp, mut tn, mut fp, mut fn_) = (0.0f64, 0.0, 0.0, 0.0);
+            for (p, g) in preds.iter().zip(gold) {
+                match (p.round() as i32, g.round() as i32) {
+                    (1, 1) => tp += 1.0,
+                    (0, 0) => tn += 1.0,
+                    (1, 0) => fp += 1.0,
+                    _ => fn_ += 1.0,
+                }
+            }
+            let denom = ((tp + fp) * (tp + fn_) * (tn + fp) * (tn + fn_)).sqrt();
+            if denom == 0.0 {
+                0.0
+            } else {
+                (tp * tn - fp * fn_) / denom
+            }
+        }
+        GlueMetric::Pearson => {
+            let n = preds.len() as f64;
+            let mp = preds.iter().map(|&x| x as f64).sum::<f64>() / n;
+            let mg = gold.iter().map(|&x| x as f64).sum::<f64>() / n;
+            let (mut cov, mut vp, mut vg) = (0.0, 0.0, 0.0);
+            for (p, g) in preds.iter().zip(gold) {
+                let dp = *p as f64 - mp;
+                let dg = *g as f64 - mg;
+                cov += dp * dg;
+                vp += dp * dp;
+                vg += dg * dg;
+            }
+            if vp == 0.0 || vg == 0.0 {
+                0.0
+            } else {
+                cov / (vp * vg).sqrt()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_has_eight_tasks() {
+        let suite = GlueTask::suite(512, 32);
+        assert_eq!(suite.len(), 8);
+        let names: Vec<&str> = suite.iter().map(|t| t.name).collect();
+        assert!(names.contains(&"QNLI") && names.contains(&"RTE") && names.contains(&"STS-B"));
+    }
+
+    #[test]
+    fn examples_deterministic_and_split_disjoint() {
+        let t = GlueTask::by_name("RTE", 512, 32).unwrap();
+        assert_eq!(t.example("train", 5), t.example("train", 5));
+        assert_ne!(t.example("train", 5).0, t.example("dev", 5).0);
+    }
+
+    #[test]
+    fn labels_in_range() {
+        let t = GlueTask::by_name("MNLI", 512, 32).unwrap();
+        for i in 0..200 {
+            let (_, l) = t.example("train", i);
+            assert!(l >= 0.0 && l < 3.0);
+        }
+    }
+
+    #[test]
+    fn signal_tokens_present() {
+        let t = GlueTask::by_name("SST2", 512, 64).unwrap();
+        let sig = t.signature(1);
+        let mut found = 0;
+        for i in 0..50 {
+            let (toks, l) = t.example("train", i);
+            if l as usize == 1 && toks.iter().any(|tok| sig.contains(tok)) {
+                found += 1;
+            }
+        }
+        assert!(found > 5, "signal should be plantable, found={found}");
+    }
+
+    #[test]
+    fn metric_accuracy() {
+        let acc = score(GlueMetric::Accuracy, &[1.0, 0.0, 1.0, 1.0], &[1.0, 0.0, 0.0, 1.0]);
+        assert!((acc - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn metric_f1_perfect_and_zero() {
+        assert!((score(GlueMetric::F1, &[1.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-9);
+        assert_eq!(score(GlueMetric::F1, &[0.0, 0.0], &[1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn metric_matthews_sign() {
+        // Perfectly anti-correlated predictions → negative MCC.
+        let m = score(GlueMetric::Matthews, &[0.0, 1.0, 0.0, 1.0], &[1.0, 0.0, 1.0, 0.0]);
+        assert!(m < -0.9);
+    }
+
+    #[test]
+    fn metric_pearson_linear() {
+        let p = score(GlueMetric::Pearson, &[0.1, 0.2, 0.3, 0.4], &[0.2, 0.4, 0.6, 0.8]);
+        assert!((p - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let t = GlueTask::by_name("QQP", 256, 16).unwrap();
+        let (toks, labels) = t.batch("train", 0, 7);
+        assert_eq!(toks.len(), 7 * 16);
+        assert_eq!(labels.len(), 7);
+    }
+}

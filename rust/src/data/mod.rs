@@ -1,0 +1,20 @@
+//! Synthetic data substrates.
+//!
+//! The paper's datasets (C4, GLUE, GSM8K, MAWPS) are network/licensing-gated
+//! in this environment, so each is replaced by a generator that preserves
+//! what the *optimizer* experiments actually consume: token streams with
+//! natural-language-like statistics for pretraining (Zipf unigram + Markov
+//! bigram structure), and labeled sequence tasks with controllable
+//! difficulty for fine-tuning. DESIGN.md §3 logs each substitution.
+
+pub mod batcher;
+pub mod corpus;
+pub mod glue;
+pub mod math_tasks;
+pub mod stream;
+pub mod tokenizer;
+
+pub use batcher::{Batch, Batcher};
+pub use corpus::SyntheticCorpus;
+pub use glue::{GlueTask, GlueMetric};
+pub use tokenizer::BpeLiteTokenizer;

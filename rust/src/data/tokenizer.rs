@@ -1,0 +1,181 @@
+//! Byte-level tokenizer with a BPE-lite merge table.
+//!
+//! The framework needs a real text→tokens path (the examples accept raw
+//! text; the GSM8K/MAWPS-style generators emit strings). This tokenizer is
+//! byte-level with greedy longest-match merges learned from a sample — the
+//! same interface shape as a production BPE without the training-corpus
+//! dependency.
+
+use std::collections::BTreeMap;
+
+use super::corpus::{BOS, EOS, FIRST_CONTENT, PAD};
+
+/// Byte-level tokenizer with learned merges.
+pub struct BpeLiteTokenizer {
+    /// Merge table: pair of token ids -> merged id.
+    merges: BTreeMap<(u32, u32), u32>,
+    /// id -> byte string.
+    decode_table: Vec<Vec<u8>>,
+    vocab: usize,
+}
+
+impl BpeLiteTokenizer {
+    /// Byte-only tokenizer (no merges): vocab = 3 specials + 256 bytes.
+    pub fn bytes_only() -> BpeLiteTokenizer {
+        let mut decode_table = vec![vec![], vec![], vec![]]; // PAD/BOS/EOS
+        for b in 0..=255u8 {
+            decode_table.push(vec![b]);
+        }
+        BpeLiteTokenizer {
+            merges: BTreeMap::new(),
+            decode_table,
+            vocab: 3 + 256,
+        }
+    }
+
+    /// Learn up to `n_merges` BPE merges from `sample`, growing the vocab.
+    pub fn train(sample: &str, n_merges: usize) -> BpeLiteTokenizer {
+        let mut tok = BpeLiteTokenizer::bytes_only();
+        let mut ids = tok.encode_bytes(sample.as_bytes());
+        for _ in 0..n_merges {
+            // Count adjacent pairs.
+            let mut counts: BTreeMap<(u32, u32), usize> = BTreeMap::new();
+            for w in ids.windows(2) {
+                if w[0] >= FIRST_CONTENT && w[1] >= FIRST_CONTENT {
+                    *counts.entry((w[0], w[1])).or_insert(0) += 1;
+                }
+            }
+            let Some((&pair, &cnt)) = counts.iter().max_by_key(|(_, &c)| c) else {
+                break;
+            };
+            if cnt < 2 {
+                break;
+            }
+            let new_id = tok.vocab as u32;
+            tok.merges.insert(pair, new_id);
+            let mut merged = Vec::with_capacity(tok.decode_table[pair.0 as usize].len() + 1);
+            merged.extend_from_slice(&tok.decode_table[pair.0 as usize]);
+            merged.extend_from_slice(&tok.decode_table[pair.1 as usize]);
+            tok.decode_table.push(merged);
+            tok.vocab += 1;
+            ids = apply_merge(&ids, pair, new_id);
+        }
+        tok
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab
+    }
+
+    fn encode_bytes(&self, bytes: &[u8]) -> Vec<u32> {
+        bytes.iter().map(|&b| b as u32 + FIRST_CONTENT).collect()
+    }
+
+    /// Encode text, applying merges in learned order, with BOS/EOS framing.
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut ids = self.encode_bytes(text.as_bytes());
+        // Apply merges in id order (creation order == priority order).
+        let mut ordered: Vec<(&(u32, u32), &u32)> = self.merges.iter().collect();
+        ordered.sort_by_key(|(_, &id)| id);
+        for (&pair, &id) in ordered {
+            ids = apply_merge(&ids, pair, id);
+        }
+        let mut out = Vec::with_capacity(ids.len() + 2);
+        out.push(BOS);
+        out.extend(ids);
+        out.push(EOS);
+        out
+    }
+
+    /// Decode ids back to text (specials dropped; invalid UTF-8 lossy).
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let mut bytes = Vec::new();
+        for &id in ids {
+            if id == PAD || id == BOS || id == EOS {
+                continue;
+            }
+            if let Some(chunk) = self.decode_table.get(id as usize) {
+                bytes.extend_from_slice(chunk);
+            }
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// Encode then left-truncate / right-pad to exactly `len`.
+    pub fn encode_fixed(&self, text: &str, len: usize) -> Vec<u32> {
+        let mut ids = self.encode(text);
+        if ids.len() > len {
+            // Keep the tail (answer side) — matches LM fine-tune convention.
+            ids = ids[ids.len() - len..].to_vec();
+        }
+        while ids.len() < len {
+            ids.push(PAD);
+        }
+        ids
+    }
+}
+
+fn apply_merge(ids: &[u32], pair: (u32, u32), new_id: u32) -> Vec<u32> {
+    let mut out = Vec::with_capacity(ids.len());
+    let mut i = 0;
+    while i < ids.len() {
+        if i + 1 < ids.len() && ids[i] == pair.0 && ids[i + 1] == pair.1 {
+            out.push(new_id);
+            i += 2;
+        } else {
+            out.push(ids[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_roundtrip() {
+        let tok = BpeLiteTokenizer::bytes_only();
+        let text = "hello, SUMO! 123 κ=10";
+        assert_eq!(tok.decode(&tok.encode(text)), text);
+    }
+
+    #[test]
+    fn trained_tokenizer_roundtrips() {
+        let sample = "the quick brown fox jumps over the lazy dog. the the the quick quick";
+        let tok = BpeLiteTokenizer::train(sample, 20);
+        assert!(tok.vocab_size() > 259, "merges learned: {}", tok.vocab_size());
+        for text in [sample, "the fox", "unrelated text entirely"] {
+            assert_eq!(tok.decode(&tok.encode(text)), text);
+        }
+    }
+
+    #[test]
+    fn merges_shorten_encoding() {
+        let sample = "abab abab abab abab abab";
+        let plain = BpeLiteTokenizer::bytes_only();
+        let trained = BpeLiteTokenizer::train(sample, 10);
+        assert!(trained.encode(sample).len() < plain.encode(sample).len());
+    }
+
+    #[test]
+    fn encode_fixed_pads_and_truncates() {
+        let tok = BpeLiteTokenizer::bytes_only();
+        let short = tok.encode_fixed("ab", 10);
+        assert_eq!(short.len(), 10);
+        assert_eq!(*short.last().unwrap(), PAD);
+        let long = tok.encode_fixed("abcdefghijklmnop", 5);
+        assert_eq!(long.len(), 5);
+        // Tail-keeping: final token is EOS.
+        assert_eq!(*long.last().unwrap(), EOS);
+    }
+
+    #[test]
+    fn framing() {
+        let tok = BpeLiteTokenizer::bytes_only();
+        let ids = tok.encode("x");
+        assert_eq!(ids[0], BOS);
+        assert_eq!(*ids.last().unwrap(), EOS);
+    }
+}

@@ -1,0 +1,44 @@
+//! # SUMO — Subspace-Aware Moment-Orthogonalization
+//!
+//! Production-grade reproduction of *"SUMO: Subspace-Aware
+//! Moment-Orthogonalization for Accelerating Memory-Efficient LLM Training"*
+//! (NeurIPS 2025) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1 (Pallas, build-time)** — the moment-orthogonalization hot spot
+//!   (`python/compile/kernels/`): tiled projection, Gram, exact Jacobi-SVD
+//!   polar factor, Newton-Schulz5 baseline.
+//! * **Layer 2 (JAX, build-time)** — LLaMA-style transformer fwd/bwd and the
+//!   per-layer optimizer update graphs, AOT-lowered to HLO text.
+//! * **Layer 3 (this crate)** — the training framework: config system,
+//!   launcher CLI, synthetic data pipeline, PJRT runtime, the coordinator
+//!   that schedules per-layer SUMO updates during backprop, native
+//!   implementations of SUMO and every baseline the paper compares against,
+//!   and a benchmark harness regenerating every table and figure.
+//!
+//! Python never runs on the request path: after `make artifacts` the `sumo`
+//! binary is self-contained.
+//!
+//! ## Quickstart
+//!
+//! ```bash
+//! make artifacts && cargo build --release
+//! ./target/release/sumo train --preset nano --optimizer sumo --steps 50
+//! cargo run --release --example quickstart
+//! ```
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod model;
+pub mod optim;
+pub mod runtime;
+pub mod tensor;
+pub mod testing;
+pub mod train;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,236 @@
+//! Jacobi decompositions.
+//!
+//! * `eigh_jacobi` — cyclic Jacobi eigendecomposition of a symmetric matrix
+//!   (the r×r Gram of the low-rank moment; SUMO's Block 2 core). This is the
+//!   same algorithm the Layer-1 Pallas kernel runs in VMEM, so the Rust and
+//!   HLO paths agree to float tolerance.
+//! * `svd_jacobi` — one-sided Jacobi SVD for general matrices; used for
+//!   spectrum analysis (Figure 1b), condition numbers (Figure 1a) and the
+//!   exact Orthogonalization_SVD oracle in tests.
+
+use super::Mat;
+use super::matmul;
+
+/// Eigendecomposition of a symmetric matrix `A = V diag(w) Vᵀ`.
+/// Returns (eigenvalues descending, V with eigenvectors in columns).
+pub fn eigh_jacobi(a: &Mat) -> (Vec<f32>, Mat) {
+    let n = a.rows;
+    assert_eq!(a.rows, a.cols, "eigh needs square input");
+    let mut m: Vec<f64> = a.data.iter().map(|&x| x as f64).collect();
+    let mut v = vec![0.0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    let idx = |i: usize, j: usize| i * n + j;
+
+    let max_sweeps = 30;
+    for _sweep in 0..max_sweeps {
+        // Off-diagonal magnitude.
+        let mut off = 0.0f64;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[idx(i, j)] * m[idx(i, j)];
+            }
+        }
+        if off.sqrt() < 1e-12 * (1.0 + frob64(&m)) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[idx(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[idx(p, p)];
+                let aqq = m[idx(q, q)];
+                // Rotation angle.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = if tau >= 0.0 {
+                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                } else {
+                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // Apply rotation A <- JᵀAJ on rows/cols p,q.
+                for k in 0..n {
+                    let akp = m[idx(k, p)];
+                    let akq = m[idx(k, q)];
+                    m[idx(k, p)] = c * akp - s * akq;
+                    m[idx(k, q)] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = m[idx(p, k)];
+                    let aqk = m[idx(q, k)];
+                    m[idx(p, k)] = c * apk - s * aqk;
+                    m[idx(q, k)] = s * apk + c * aqk;
+                }
+                // Accumulate eigenvectors.
+                for k in 0..n {
+                    let vkp = v[idx(k, p)];
+                    let vkq = v[idx(k, q)];
+                    v[idx(k, p)] = c * vkp - s * vkq;
+                    v[idx(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    // Extract and sort descending.
+    let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m[idx(i, i)], i)).collect();
+    pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let w: Vec<f32> = pairs.iter().map(|&(lam, _)| lam as f32).collect();
+    let mut vs = Mat::zeros(n, n);
+    for (new_j, &(_, old_j)) in pairs.iter().enumerate() {
+        for i in 0..n {
+            vs[(i, new_j)] = v[idx(i, old_j)] as f32;
+        }
+    }
+    (w, vs)
+}
+
+fn frob64(m: &[f64]) -> f64 {
+    m.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+/// Singular value decomposition `A = U diag(s) Vᵀ` for `A` m×n.
+/// Computed via the eigendecomposition of the smaller Gram matrix, so it is
+/// efficient exactly in the regime the paper exploits (min(m,n) small).
+/// Returns (U m×k, s descending, V n×k) with k = min(m,n).
+pub fn svd_jacobi(a: &Mat) -> (Mat, Vec<f32>, Mat) {
+    let (m, n) = a.shape();
+    let k = m.min(n);
+    if m <= n {
+        // Gram = A Aᵀ (m×m) = U diag(s²) Uᵀ.
+        let gram = super::matmul_a_bt(a, a);
+        let (w, u) = eigh_jacobi(&gram);
+        let s: Vec<f32> = w.iter().map(|&x| x.max(0.0).sqrt()).collect();
+        // V = Aᵀ U diag(1/s)  (columns with s≈0 zeroed).
+        let atu = super::matmul_at_b(a, &u); // n x m
+        let mut v = Mat::zeros(n, k);
+        for j in 0..k {
+            let inv = if s[j] > 1e-12 { 1.0 / s[j] } else { 0.0 };
+            for i in 0..n {
+                v[(i, j)] = atu[(i, j)] * inv;
+            }
+        }
+        (u.left_cols(k), s[..k].to_vec(), v)
+    } else {
+        // Work on the transpose and swap factors.
+        let (v, s, u) = svd_jacobi(&a.t());
+        (u, s, v)
+    }
+}
+
+/// Condition number σ₁/σ_min of A (smallest *nonzero* σ when `nonzero_floor`
+/// is set; matches the paper's κ of the moment Gram in Figure 1a).
+pub fn cond_from_singular(s: &[f32], nonzero_floor: Option<f32>) -> f32 {
+    if s.is_empty() {
+        return 1.0;
+    }
+    let smax = s[0];
+    let smin = match nonzero_floor {
+        Some(floor) => s
+            .iter()
+            .rev()
+            .find(|&&x| x > floor)
+            .copied()
+            .unwrap_or(smax),
+        None => *s.last().unwrap(),
+    };
+    if smin <= 0.0 {
+        f32::INFINITY
+    } else {
+        smax / smin
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul_a_bt;
+    use crate::util::Rng;
+
+    #[test]
+    fn eigh_reconstructs_symmetric() {
+        let mut rng = Rng::new(31);
+        for &n in &[2usize, 5, 16, 32] {
+            let b = Mat::randn(n, n, 1.0, &mut rng);
+            let a = matmul_a_bt(&b, &b); // SPD-ish symmetric
+            let (w, v) = eigh_jacobi(&a);
+            // Reconstruct V diag(w) Vᵀ.
+            let mut vd = v.clone();
+            for j in 0..n {
+                for i in 0..n {
+                    vd[(i, j)] *= w[j];
+                }
+            }
+            let rec = matmul(&vd, &v.t());
+            assert!(
+                rec.max_diff(&a) < 1e-2 * (1.0 + a.max_abs()),
+                "n={n} diff={}",
+                rec.max_diff(&a)
+            );
+            // Eigenvalues of a Gram matrix are nonnegative, sorted descending.
+            for win in w.windows(2) {
+                assert!(win[0] >= win[1] - 1e-4);
+            }
+            assert!(w.iter().all(|&x| x > -1e-3));
+        }
+    }
+
+    #[test]
+    fn eigh_diagonal_matrix() {
+        let a = Mat::diag(&[3.0, 1.0, 2.0]);
+        let (w, _) = eigh_jacobi(&a);
+        assert!((w[0] - 3.0).abs() < 1e-5);
+        assert!((w[1] - 2.0).abs() < 1e-5);
+        assert!((w[2] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn svd_reconstructs() {
+        let mut rng = Rng::new(37);
+        for &(m, n) in &[(4, 9), (9, 4), (8, 8), (16, 64)] {
+            let a = Mat::randn(m, n, 1.0, &mut rng);
+            let (u, s, v) = svd_jacobi(&a);
+            // U diag(s) Vᵀ
+            let mut us = u.clone();
+            for j in 0..s.len() {
+                for i in 0..m {
+                    us[(i, j)] *= s[j];
+                }
+            }
+            let rec = matmul(&us, &v.t());
+            assert!(rec.max_diff(&a) < 5e-3, "({m},{n}) diff={}", rec.max_diff(&a));
+        }
+    }
+
+    #[test]
+    fn svd_known_singular_values() {
+        // A = diag(5, 3) embedded in 2x3.
+        let a = Mat::from_slice(2, 3, &[5.0, 0.0, 0.0, 0.0, 3.0, 0.0]);
+        let (_, s, _) = svd_jacobi(&a);
+        assert!((s[0] - 5.0).abs() < 1e-4);
+        assert!((s[1] - 3.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn cond_matches_construction() {
+        let mut rng = Rng::new(41);
+        // Build A = U diag(10,5,1) Vᵀ from random orthogonal factors.
+        let x = Mat::randn(8, 3, 1.0, &mut rng);
+        let (u, _) = crate::linalg::mgs_qr(&x);
+        let y = Mat::randn(6, 3, 1.0, &mut rng);
+        let (v, _) = crate::linalg::mgs_qr(&y);
+        let mut ud = u.clone();
+        let svals = [10.0f32, 5.0, 1.0];
+        for j in 0..3 {
+            for i in 0..8 {
+                ud[(i, j)] *= svals[j];
+            }
+        }
+        let a = matmul(&ud, &v.t());
+        let (_, s, _) = svd_jacobi(&a);
+        assert!((cond_from_singular(&s[..3], None) - 10.0).abs() < 0.1);
+    }
+}

@@ -1,0 +1,292 @@
+//! Row-major dense f32 matrix.
+
+use crate::util::Rng;
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+/// Dense row-major matrix of f32.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a row-major slice.
+    pub fn from_slice(rows: usize, cols: usize, data: &[f32]) -> Mat {
+        assert_eq!(data.len(), rows * cols);
+        Mat {
+            rows,
+            cols,
+            data: data.to_vec(),
+        }
+    }
+
+    /// Build from a row-major Vec without copying.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    /// i.i.d. N(0, std²) entries.
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Rng) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, std);
+        m
+    }
+
+    /// Diagonal matrix from values.
+    pub fn diag(values: &[f32]) -> Mat {
+        let n = values.len();
+        let mut m = Mat::zeros(n, n);
+        for (i, &v) in values.iter().enumerate() {
+            m[(i, i)] = v;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.cols;
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    /// Column as a fresh Vec (rows are contiguous, columns are strided).
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    /// Transposed copy.
+    pub fn t(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness.
+        const B: usize = 32;
+        for i0 in (0..self.rows).step_by(B) {
+            for j0 in (0..self.cols).step_by(B) {
+                for i in i0..(i0 + B).min(self.rows) {
+                    for j in j0..(j0 + B).min(self.cols) {
+                        out[(j, i)] = self[(i, j)];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Elementwise in-place: self += alpha * other.
+    pub fn axpy(&mut self, alpha: f32, other: &Mat) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Elementwise in-place scale: self *= alpha.
+    pub fn scale(&mut self, alpha: f32) {
+        for a in self.data.iter_mut() {
+            *a *= alpha;
+        }
+    }
+
+    /// self = beta*self + alpha*other (the EMA update used for moments).
+    pub fn ema(&mut self, beta: f32, alpha: f32, other: &Mat) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a = beta * *a + alpha * b;
+        }
+    }
+
+    /// Returns a new matrix alpha*self + beta*other.
+    pub fn lin_comb(&self, alpha: f32, beta: f32, other: &Mat) -> Mat {
+        assert_eq!(self.shape(), other.shape());
+        let data = self
+            .data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| alpha * a + beta * b)
+            .collect();
+        Mat::from_vec(self.rows, self.cols, data)
+    }
+
+    /// Frobenius norm with f64 accumulation.
+    pub fn fro(&self) -> f32 {
+        self.data
+            .iter()
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt() as f32
+    }
+
+    /// Sum of squares (f64).
+    pub fn sumsq(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    /// Max |x|.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Frobenius inner product <self, other>.
+    pub fn dot(&self, other: &Mat) -> f64 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(&a, &b)| a as f64 * b as f64)
+            .sum()
+    }
+
+    /// Copy the leading `r` rows into a new matrix.
+    pub fn top_rows(&self, r: usize) -> Mat {
+        assert!(r <= self.rows);
+        Mat::from_slice(r, self.cols, &self.data[..r * self.cols])
+    }
+
+    /// Copy the leading `r` columns into a new matrix.
+    pub fn left_cols(&self, r: usize) -> Mat {
+        assert!(r <= self.cols);
+        let mut out = Mat::zeros(self.rows, r);
+        for i in 0..self.rows {
+            out.row_mut(i).copy_from_slice(&self.row(i)[..r]);
+        }
+        out
+    }
+
+    /// Max elementwise |a-b|.
+    pub fn max_diff(&self, other: &Mat) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .fold(0.0f32, |m, (&a, &b)| m.max((a - b).abs()))
+    }
+
+    /// True when all entries are finite.
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+}
+
+impl Index<(usize, usize)> for Mat {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        let show_r = self.rows.min(6);
+        for i in 0..show_r {
+            let show_c = self.cols.min(8);
+            let row: Vec<String> = self.row(i)[..show_c]
+                .iter()
+                .map(|x| format!("{x:9.4}"))
+                .collect();
+            writeln!(
+                f,
+                "  [{}{}]",
+                row.join(", "),
+                if self.cols > show_c { ", …" } else { "" }
+            )?;
+        }
+        if self.rows > show_r {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let m = Mat::from_slice(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m[(0, 0)], 1.0);
+        assert_eq!(m[(1, 2)], 6.0);
+        assert_eq!(m.row(1), &[4., 5., 6.]);
+        assert_eq!(m.col(1), vec![2., 5.]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(1);
+        let m = Mat::randn(17, 33, 1.0, &mut rng);
+        assert_eq!(m.t().t(), m);
+        assert_eq!(m.t()[(5, 7)], m[(7, 5)]);
+    }
+
+    #[test]
+    fn ema_matches_formula() {
+        let a = Mat::from_slice(1, 2, &[1.0, 2.0]);
+        let mut m = Mat::from_slice(1, 2, &[10.0, 20.0]);
+        m.ema(0.9, 0.1, &a);
+        assert!((m[(0, 0)] - 9.1).abs() < 1e-6);
+        assert!((m[(0, 1)] - 18.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fro_norm() {
+        let m = Mat::from_slice(2, 2, &[3.0, 0.0, 0.0, 4.0]);
+        assert!((m.fro() - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn top_rows_left_cols() {
+        let m = Mat::from_slice(3, 3, &[1., 2., 3., 4., 5., 6., 7., 8., 9.]);
+        assert_eq!(m.top_rows(2).data, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.left_cols(2).data, vec![1., 2., 4., 5., 7., 8.]);
+    }
+
+    #[test]
+    fn eye_and_diag() {
+        let i = Mat::eye(3);
+        assert_eq!(i[(1, 1)], 1.0);
+        assert_eq!(i[(0, 1)], 0.0);
+        let d = Mat::diag(&[2.0, 3.0]);
+        assert_eq!(d[(1, 1)], 3.0);
+    }
+}

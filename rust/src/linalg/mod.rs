@@ -1,0 +1,26 @@
+//! Dense f32 linear algebra used by the native optimizer implementations,
+//! the analysis benches (Figure 1, Lemmas 3.1/3.2) and the tests.
+//!
+//! Everything is hand-written (no BLAS/LAPACK in the offline environment):
+//! blocked + multithreaded matmul, modified Gram-Schmidt QR, one-sided Jacobi
+//! SVD, randomized range finding (Halko et al., the paper's Block 1), the
+//! Newton-Schulz5 quintic (Muon's orthogonalization) and the exact SVD-based
+//! polar factor (SUMO's Block 2).
+
+pub mod jacobi;
+pub mod mat;
+pub mod matmul;
+pub mod newton_schulz;
+pub mod norms;
+pub mod orth;
+pub mod qr;
+pub mod rsvd;
+
+pub use jacobi::{eigh_jacobi, svd_jacobi};
+pub use mat::Mat;
+pub use matmul::{matmul, matmul_at_b, matmul_a_bt};
+pub use newton_schulz::newton_schulz5;
+pub use norms::{cond_gram, fro_norm, spectral_norm};
+pub use orth::orth_svd;
+pub use qr::mgs_qr;
+pub use rsvd::{randomized_range, rsvd, RsvdOpts};

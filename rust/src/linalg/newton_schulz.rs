@@ -1,0 +1,130 @@
+//! Newton-Schulz5 orthogonalization — Muon's quintic iteration
+//! (Jordan et al. 2024), the approximation SUMO replaces with exact SVD.
+//!
+//! X₀ = M / ‖M‖_F;  X ← a·X + b·(X Xᵀ)X + c·(X Xᵀ)²X  with the tuned
+//! coefficients (a, b, c) = (3.4445, −4.7750, 2.0315). Five iterations is
+//! the "Newton-Schulz5" the paper analyzes; Lemma 3.2 bounds its error by
+//! √r·(1−1/κ)^{2^i}, which `benches/lemma32_ns_error.rs` validates.
+
+use super::{matmul, matmul_a_bt, Mat};
+
+/// Muon's tuned quintic coefficients.
+pub const NS_COEFFS: (f32, f32, f32) = (3.4445, -4.7750, 2.0315);
+
+/// Run `iters` Newton-Schulz iterations on `m` (r×n with r ≤ n; the
+/// transpose convention is applied otherwise). Returns the approximate
+/// polar factor.
+pub fn newton_schulz5(m: &Mat, iters: usize) -> Mat {
+    let (r, n) = m.shape();
+    if r > n {
+        return newton_schulz5(&m.t(), iters).t();
+    }
+    let (a, b, c) = NS_COEFFS;
+    let norm = m.fro().max(1e-30);
+    let mut x = m.clone();
+    x.scale(1.0 / norm);
+    for _ in 0..iters {
+        // A = X Xᵀ (r×r), B' = b·A + c·A², X = a·X + B'X.
+        let g = matmul_a_bt(&x, &x);
+        let g2 = matmul(&g, &g);
+        let bmat = g.lin_comb(b, c, &g2);
+        let bx = matmul(&bmat, &x);
+        x = x.lin_comb(a, 1.0, &bx);
+    }
+    x
+}
+
+/// Classical (cubic) Newton-Schulz: X ← 1.5·X − 0.5·(X Xᵀ)X. Converges
+/// monotonically (used for the error-bound validation where the quadratic
+/// convergence rate of Lemma 3.2 is stated).
+pub fn newton_schulz_cubic(m: &Mat, iters: usize) -> Mat {
+    let (r, n) = m.shape();
+    if r > n {
+        return newton_schulz_cubic(&m.t(), iters).t();
+    }
+    // Scale by the spectral norm so all σ ∈ (0, 1] — the normalization the
+    // Lemma 3.2 convergence bound assumes (X₀ = B/σ₁).
+    let norm = super::spectral_norm(m, 30).max(1e-30);
+    let mut x = m.clone();
+    x.scale(1.0 / norm);
+    for _ in 0..iters {
+        let g = matmul_a_bt(&x, &x);
+        let gx = matmul(&g, &x);
+        x = x.lin_comb(1.5, -0.5, &gx);
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::orth::polar_defect;
+    use crate::linalg::orth_svd;
+    use crate::util::Rng;
+
+    #[test]
+    fn ns5_approaches_orthogonality_for_well_conditioned() {
+        let mut rng = Rng::new(67);
+        // Random Gaussian 8x64 is well conditioned w.h.p.
+        let m = Mat::randn(8, 64, 1.0, &mut rng);
+        let o = newton_schulz5(&m, 5);
+        assert!(polar_defect(&o) < 0.35, "defect={}", polar_defect(&o));
+        // The tuned quintic oscillates around σ=1 rather than converging
+        // monotonically; it must stay bounded near orthogonality.
+        let o10 = newton_schulz5(&m, 10);
+        assert!(polar_defect(&o10) < 0.5, "defect10={}", polar_defect(&o10));
+    }
+
+    #[test]
+    fn ns_error_grows_with_condition_number() {
+        // Construct M with controlled κ: diag singular values.
+        let mut rng = Rng::new(71);
+        let mut err = |kappa: f32| -> f32 {
+            let r = 8;
+            let n = 64;
+            let x = Mat::randn(n, r, 1.0, &mut rng);
+            let (v, _) = crate::linalg::mgs_qr(&x);
+            // M = diag(s) Vᵀ with s from 1 to 1/κ.
+            let mut m = Mat::zeros(r, n);
+            for i in 0..r {
+                let s = 1.0 - (1.0 - 1.0 / kappa) * (i as f32 / (r - 1) as f32);
+                for j in 0..n {
+                    m[(i, j)] = s * v[(j, i)];
+                }
+            }
+            let exact = orth_svd(&m);
+            let approx = newton_schulz5(&m, 5);
+            approx.max_diff(&exact)
+        };
+        let e_low = err(2.0);
+        let e_high = err(1000.0);
+        assert!(
+            e_high > e_low,
+            "ill-conditioned error {e_high} should exceed well-conditioned {e_low}"
+        );
+    }
+
+    #[test]
+    fn cubic_ns_monotone_convergence() {
+        let mut rng = Rng::new(73);
+        let m = Mat::randn(6, 48, 1.0, &mut rng);
+        let exact = orth_svd(&m);
+        let mut last = f32::INFINITY;
+        for iters in [2usize, 4, 8, 16, 32] {
+            let o = newton_schulz_cubic(&m, iters);
+            let e = o.max_diff(&exact);
+            assert!(e <= last + 1e-3, "iters={iters}: {e} > {last}");
+            last = e;
+        }
+        assert!(last < 1e-2, "cubic NS should converge, err={last}");
+    }
+
+    #[test]
+    fn transpose_convention() {
+        let mut rng = Rng::new(79);
+        let m = Mat::randn(64, 8, 1.0, &mut rng);
+        let o = newton_schulz5(&m, 5);
+        assert_eq!(o.shape(), (64, 8));
+        assert!(o.is_finite());
+    }
+}

@@ -1,0 +1,150 @@
+//! Matrix norms and conditioning measures.
+
+use super::{matmul_a_bt, svd_jacobi, Mat};
+
+/// Frobenius norm.
+pub fn fro_norm(m: &Mat) -> f32 {
+    m.fro()
+}
+
+/// Spectral norm σ₁ via power iteration on A Aᵀ applied implicitly.
+pub fn spectral_norm(a: &Mat, iters: usize) -> f32 {
+    let (m, n) = a.shape();
+    if m == 0 || n == 0 {
+        return 0.0;
+    }
+    // Deterministic start vector.
+    let mut v: Vec<f32> = (0..n).map(|i| 1.0 + (i as f32 * 0.37).sin()).collect();
+    normalize(&mut v);
+    let mut sigma = 0.0f32;
+    for _ in 0..iters.max(1) {
+        // u = A v
+        let mut u = vec![0.0f32; m];
+        for i in 0..m {
+            let row = a.row(i);
+            let mut acc = 0.0f64;
+            for (x, y) in row.iter().zip(v.iter()) {
+                acc += *x as f64 * *y as f64;
+            }
+            u[i] = acc as f32;
+        }
+        let un = norm(&u);
+        if un < 1e-30 {
+            return 0.0;
+        }
+        for x in u.iter_mut() {
+            *x /= un;
+        }
+        // v = Aᵀ u
+        let mut v2 = vec![0.0f32; n];
+        for i in 0..m {
+            let row = a.row(i);
+            let ui = u[i];
+            for (vj, &xj) in v2.iter_mut().zip(row.iter()) {
+                *vj += ui * xj;
+            }
+        }
+        sigma = norm(&v2);
+        if sigma < 1e-30 {
+            return 0.0;
+        }
+        for x in v2.iter_mut() {
+            *x /= sigma;
+        }
+        v = v2;
+    }
+    sigma
+}
+
+fn norm(v: &[f32]) -> f32 {
+    v.iter().map(|&x| x as f64 * x as f64).sum::<f64>().sqrt() as f32
+}
+
+fn normalize(v: &mut [f32]) {
+    let n = norm(v);
+    if n > 1e-30 {
+        for x in v.iter_mut() {
+            *x /= n;
+        }
+    }
+}
+
+/// Condition number of the Gram matrix M Mᵀ (what Figure 1a tracks):
+/// λ_max / λ_min over eigenvalues above `floor_rel·λ_max`.
+pub fn cond_gram(m: &Mat, floor_rel: f32) -> f32 {
+    let gram = if m.rows <= m.cols {
+        matmul_a_bt(m, m)
+    } else {
+        super::matmul_at_b(m, m)
+    };
+    let (w, _) = super::eigh_jacobi(&gram);
+    let lmax = w.first().copied().unwrap_or(0.0).max(0.0);
+    if lmax <= 0.0 {
+        return 1.0;
+    }
+    let floor = floor_rel * lmax;
+    let lmin = w
+        .iter()
+        .rev()
+        .find(|&&x| x > floor)
+        .copied()
+        .unwrap_or(lmax);
+    lmax / lmin.max(1e-30)
+}
+
+/// Relative energy outside the best rank-r approximation —
+/// κ_M(r, t) of Lemma 3.1: ‖M − P(r)M‖²_F / ‖M‖²_F.
+pub fn lowrank_residual(m: &Mat, r: usize) -> f32 {
+    let (_, s, _) = svd_jacobi(m);
+    let total: f64 = s.iter().map(|&x| x as f64 * x as f64).sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let tail: f64 = s.iter().skip(r).map(|&x| x as f64 * x as f64).sum();
+    (tail / total) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn spectral_norm_of_diag() {
+        let a = Mat::diag(&[1.0, 7.0, 3.0]);
+        assert!((spectral_norm(&a, 50) - 7.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn spectral_le_fro() {
+        let mut rng = Rng::new(83);
+        let a = Mat::randn(12, 20, 1.0, &mut rng);
+        assert!(spectral_norm(&a, 30) <= a.fro() + 1e-3);
+    }
+
+    #[test]
+    fn cond_of_orthogonal_rows_is_one() {
+        let mut rng = Rng::new(89);
+        let x = Mat::randn(40, 6, 1.0, &mut rng);
+        let (q, _) = crate::linalg::mgs_qr(&x);
+        let c = cond_gram(&q.t(), 0.0);
+        assert!((c - 1.0).abs() < 1e-2, "cond={c}");
+    }
+
+    #[test]
+    fn lowrank_residual_of_rank1() {
+        let mut rng = Rng::new(97);
+        let u = Mat::randn(8, 1, 1.0, &mut rng);
+        let v = Mat::randn(1, 30, 1.0, &mut rng);
+        let m = crate::linalg::matmul(&u, &v);
+        assert!(lowrank_residual(&m, 1) < 1e-5);
+        assert!(lowrank_residual(&m, 0) > 0.99);
+    }
+
+    #[test]
+    fn cond_tracks_spectrum_spread() {
+        let m1 = Mat::diag(&[1.0, 1.0, 1.0]);
+        let m2 = Mat::diag(&[10.0, 1.0, 0.1]);
+        assert!(cond_gram(&m2, 0.0) > cond_gram(&m1, 0.0) * 100.0);
+    }
+}

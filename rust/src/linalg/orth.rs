@@ -1,0 +1,132 @@
+//! Exact moment orthogonalization (the paper's Block 2).
+//!
+//! `orth_svd(M)` returns the closest (semi-)orthogonal matrix to `M` in
+//! Frobenius norm — the polar factor `U Vᵀ = (M Mᵀ)^{-1/2} M`. For the r×n
+//! low-rank moment (r ≪ n) this costs one r×r Gram, one r×r Jacobi
+//! eigendecomposition and two thin matmuls, which is the whole point of the
+//! paper: in the subspace, *exact* orthogonalization is cheaper than Muon's
+//! Newton-Schulz5 approximation in the full space and carries zero
+//! approximation error (Lemma 3.2 / Remark 3.7).
+
+use super::{eigh_jacobi, matmul, matmul_a_bt, Mat};
+
+/// Relative eigenvalue floor: components below `EPS_REL * λ_max` are treated
+/// as rank-deficient and mapped to zero (the Moore-Penrose convention).
+const EPS_REL: f64 = 1e-10;
+
+/// Exact polar factor via SVD of the Gram matrix.
+///
+/// For M (r×n, r ≤ n): returns `O = U Vᵀ` where `M = U Σ Vᵀ`, satisfying
+/// `O Oᵀ = I_r` (when M has full row rank). For r > n the transpose
+/// convention is applied so the smaller side is orthonormal.
+pub fn orth_svd(m: &Mat) -> Mat {
+    let (r, n) = m.shape();
+    if r > n {
+        return orth_svd(&m.t()).t();
+    }
+    // B = M Mᵀ (r×r), B = W diag(λ) Wᵀ  ⇒  (MMᵀ)^{-1/2} = W diag(λ^{-1/2}) Wᵀ.
+    let gram = matmul_a_bt(m, m);
+    let (w, v) = eigh_jacobi(&gram);
+    let lam_max = w.first().copied().unwrap_or(0.0).max(0.0) as f64;
+    let floor = (EPS_REL * lam_max) as f32;
+    // S = V diag(λ^{-1/2}) Vᵀ.
+    let mut vs = v.clone();
+    for j in 0..r {
+        let inv = if w[j] > floor && w[j] > 0.0 {
+            1.0 / w[j].sqrt()
+        } else {
+            0.0
+        };
+        for i in 0..r {
+            vs[(i, j)] *= inv;
+        }
+    }
+    let inv_sqrt = matmul(&vs, &v.t());
+    matmul(&inv_sqrt, m)
+}
+
+/// ‖O Oᵀ − I‖_max over the smaller side — how orthogonal `O` is.
+pub fn polar_defect(o: &Mat) -> f32 {
+    let (r, n) = o.shape();
+    let g = if r <= n {
+        matmul_a_bt(o, o)
+    } else {
+        super::matmul_at_b(o, o)
+    };
+    let k = g.rows;
+    let mut worst = 0.0f32;
+    for i in 0..k {
+        for j in 0..k {
+            let target = if i == j { 1.0 } else { 0.0 };
+            worst = worst.max((g[(i, j)] - target).abs());
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::svd_jacobi;
+    use crate::util::Rng;
+
+    #[test]
+    fn output_is_orthogonal() {
+        let mut rng = Rng::new(43);
+        for &(r, n) in &[(2, 8), (4, 32), (8, 64), (16, 128)] {
+            let m = Mat::randn(r, n, 1.0, &mut rng);
+            let o = orth_svd(&m);
+            assert_eq!(o.shape(), (r, n));
+            assert!(polar_defect(&o) < 1e-3, "({r},{n}) defect={}", polar_defect(&o));
+        }
+    }
+
+    #[test]
+    fn matches_uvt_from_svd() {
+        let mut rng = Rng::new(47);
+        let m = Mat::randn(6, 40, 1.0, &mut rng);
+        let o = orth_svd(&m);
+        let (u, _, v) = svd_jacobi(&m);
+        let uvt = matmul(&u, &v.t());
+        assert!(o.max_diff(&uvt) < 5e-3, "diff={}", o.max_diff(&uvt));
+    }
+
+    #[test]
+    fn orthogonal_input_is_fixed_point() {
+        let mut rng = Rng::new(53);
+        let x = Mat::randn(30, 5, 1.0, &mut rng);
+        let (q, _) = crate::linalg::mgs_qr(&x);
+        let qt = q.t(); // 5x30 row-orthonormal
+        let o = orth_svd(&qt);
+        assert!(o.max_diff(&qt) < 1e-3);
+    }
+
+    #[test]
+    fn tall_input_uses_transpose_convention() {
+        let mut rng = Rng::new(59);
+        let m = Mat::randn(40, 6, 1.0, &mut rng);
+        let o = orth_svd(&m);
+        assert_eq!(o.shape(), (40, 6));
+        assert!(polar_defect(&o) < 1e-3);
+    }
+
+    #[test]
+    fn handles_rank_deficient_moment() {
+        let mut rng = Rng::new(61);
+        // rank-2 moment in a 4x32 matrix.
+        let a = Mat::randn(2, 32, 1.0, &mut rng);
+        let mut m = Mat::zeros(4, 32);
+        for i in 0..2 {
+            m.row_mut(i).copy_from_slice(a.row(i));
+            let scaled: Vec<f32> = a.row(i).iter().map(|x| 0.5 * x).collect();
+            m.row_mut(i + 2).copy_from_slice(&scaled);
+        }
+        let o = orth_svd(&m);
+        assert!(o.is_finite());
+        // Singular values of O must be 0 or 1.
+        let (_, s, _) = svd_jacobi(&o);
+        for &x in &s {
+            assert!(x < 1.05 && (x < 0.05 || x > 0.95), "σ={x}");
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! Thin QR via modified Gram-Schmidt with one re-orthogonalization pass
+//! ("MGS2", numerically equivalent to Householder for well-scaled inputs and
+//! far simpler). Used by the randomized range finder (the paper's Block 1)
+//! and in the L2 JAX graphs' Python twin — both sides must agree.
+
+use super::{Mat, matmul_at_b};
+
+/// Thin QR of A (m×n, m ≥ n): returns (Q m×n with orthonormal columns,
+/// R n×n upper triangular) with A ≈ Q·R. Rank-deficient columns get a fresh
+/// random-free deterministic direction of zero weight in R (the column of Q
+/// is zeroed), which is the behaviour rSVD wants.
+pub fn mgs_qr(a: &Mat) -> (Mat, Mat) {
+    let (m, n) = a.shape();
+    assert!(m >= n, "mgs_qr expects tall matrix, got {m}x{n}");
+    // Work column-wise on a transposed copy so columns are contiguous.
+    let mut qt = a.t(); // n x m, row i = column i of A
+    let mut r = Mat::zeros(n, n);
+    for i in 0..n {
+        // Two orthogonalization passes against previous columns.
+        for _pass in 0..2 {
+            for j in 0..i {
+                let (qi, qj) = row_pair(&mut qt, i, j);
+                let mut dot = 0.0f64;
+                for (x, y) in qi.iter().zip(qj.iter()) {
+                    dot += *x as f64 * *y as f64;
+                }
+                let dot = dot as f32;
+                r[(j, i)] += dot;
+                for (x, y) in qi.iter_mut().zip(qj.iter()) {
+                    *x -= dot * y;
+                }
+            }
+        }
+        let norm = {
+            let qi = qt.row(i);
+            (qi.iter().map(|&x| x as f64 * x as f64).sum::<f64>()).sqrt() as f32
+        };
+        r[(i, i)] = norm;
+        if norm > 1e-20 {
+            let inv = 1.0 / norm;
+            for x in qt.row_mut(i) {
+                *x *= inv;
+            }
+        } else {
+            // Numerically zero column: leave Q column zero.
+            for x in qt.row_mut(i) {
+                *x = 0.0;
+            }
+        }
+    }
+    (qt.t(), r)
+}
+
+/// Borrow rows i (mut) and j (shared) of a matrix simultaneously.
+fn row_pair(m: &mut Mat, i: usize, j: usize) -> (&mut [f32], &[f32]) {
+    assert_ne!(i, j);
+    let cols = m.cols;
+    let (lo, hi, swapped) = if i < j { (i, j, false) } else { (j, i, true) };
+    let (head, tail) = m.data.split_at_mut(hi * cols);
+    let a = &mut head[lo * cols..(lo + 1) * cols];
+    let b = &mut tail[..cols];
+    if swapped {
+        (b, a)
+    } else {
+        // i == lo: a is row i (mutable), b is row j.
+        (a, b)
+    }
+}
+
+/// ‖QᵀQ − I‖_max — orthogonality defect, used in tests and property checks.
+pub fn orthogonality_defect(q: &Mat) -> f32 {
+    let g = matmul_at_b(q, q);
+    let n = g.rows;
+    let mut worst = 0.0f32;
+    for i in 0..n {
+        for j in 0..n {
+            let target = if i == j { 1.0 } else { 0.0 };
+            worst = worst.max((g[(i, j)] - target).abs());
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul;
+    use crate::util::Rng;
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Rng::new(21);
+        for &(m, n) in &[(8, 8), (50, 10), (128, 16), (33, 7)] {
+            let a = Mat::randn(m, n, 1.0, &mut rng);
+            let (q, r) = mgs_qr(&a);
+            let qr = matmul(&q, &r);
+            assert!(qr.max_diff(&a) < 1e-3, "({m},{n}): {}", qr.max_diff(&a));
+            assert!(orthogonality_defect(&q) < 1e-4, "defect {}", orthogonality_defect(&q));
+        }
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let mut rng = Rng::new(23);
+        let a = Mat::randn(20, 6, 1.0, &mut rng);
+        let (_, r) = mgs_qr(&a);
+        for i in 1..6 {
+            for j in 0..i {
+                assert_eq!(r[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn handles_rank_deficiency() {
+        let mut rng = Rng::new(25);
+        let mut a = Mat::randn(30, 5, 1.0, &mut rng);
+        // Make column 3 = 2 * column 0.
+        for i in 0..30 {
+            a[(i, 3)] = 2.0 * a[(i, 0)];
+        }
+        let (q, r) = mgs_qr(&a);
+        assert!(q.is_finite());
+        assert!(r[(3, 3)].abs() < 1e-3);
+    }
+}

@@ -1,0 +1,130 @@
+//! Randomized low-rank factorization (Halko, Martinsson & Tropp 2010) —
+//! the paper's Block 1: `Q ← Truncated_Randomized_SVD(G)`.
+//!
+//! The range finder sketches `Y = (G Gᵀ)^q G Ω` with a Gaussian test matrix
+//! Ω (n×(r+p)), orthonormalizes with MGS-QR and truncates to rank r. Cost
+//! O(mnr + mr²) versus O(min(mn², m²n)) for a full SVD — the asymmetry the
+//! paper's Table 1 "Computation" row prices.
+
+use super::{matmul, matmul_at_b, mgs_qr, svd_jacobi, Mat};
+use crate::util::Rng;
+
+/// Options for the randomized range finder.
+#[derive(Clone, Copy, Debug)]
+pub struct RsvdOpts {
+    /// Oversampling columns p (5–10 typical).
+    pub oversample: usize,
+    /// Subspace/power iterations q (1–2 sharpens spectra with slow decay).
+    pub power_iters: usize,
+}
+
+impl Default for RsvdOpts {
+    fn default() -> Self {
+        RsvdOpts {
+            oversample: 4,
+            power_iters: 1,
+        }
+    }
+}
+
+/// Orthonormal basis Q (m×r) approximating the dominant column space of
+/// `a` (m×n): argmin_Q ‖G − Q Qᵀ G‖_F over r-dim orthonormal Q.
+pub fn randomized_range(a: &Mat, r: usize, opts: RsvdOpts, rng: &mut Rng) -> Mat {
+    let (m, n) = a.shape();
+    let r = r.min(m).min(n).max(1);
+    let sketch = (r + opts.oversample).min(m).min(n);
+    let omega = Mat::randn(n, sketch, 1.0, rng);
+    let mut y = matmul(a, &omega); // m × sketch
+    for _ in 0..opts.power_iters {
+        // Orthonormalize between passes for numerical stability.
+        let (qy, _) = mgs_qr(&y);
+        let z = matmul_at_b(a, &qy); // n × sketch
+        let (qz, _) = mgs_qr(&z);
+        y = matmul(a, &qz);
+    }
+    let (q, _) = mgs_qr(&y);
+    q.left_cols(r)
+}
+
+/// Truncated randomized SVD: returns (U m×r, s, V n×r) with A ≈ U diag(s) Vᵀ.
+pub fn rsvd(a: &Mat, r: usize, opts: RsvdOpts, rng: &mut Rng) -> (Mat, Vec<f32>, Mat) {
+    let q = randomized_range(a, r, opts, rng);
+    // B = Qᵀ A (r×n): small, exact SVD via Jacobi.
+    let b = matmul_at_b(&q, a);
+    let (ub, s, v) = svd_jacobi(&b);
+    let u = matmul(&q, &ub);
+    let r = r.min(s.len());
+    (u.left_cols(r), s[..r].to_vec(), v.left_cols(r))
+}
+
+/// Projection residual ‖A − Q Qᵀ A‖_F / ‖A‖_F for a given basis Q.
+pub fn range_residual(a: &Mat, q: &Mat) -> f32 {
+    let qta = matmul_at_b(q, a);
+    let proj = matmul(q, &qta);
+    let mut diff = a.clone();
+    diff.axpy(-1.0, &proj);
+    diff.fro() / a.fro().max(1e-30)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr::orthogonality_defect;
+
+    fn lowrank_matrix(m: usize, n: usize, rank: usize, rng: &mut Rng) -> Mat {
+        let u = Mat::randn(m, rank, 1.0, rng);
+        let v = Mat::randn(rank, n, 1.0, rng);
+        matmul(&u, &v)
+    }
+
+    #[test]
+    fn recovers_exact_lowrank() {
+        let mut rng = Rng::new(101);
+        let a = lowrank_matrix(60, 90, 5, &mut rng);
+        let q = randomized_range(&a, 5, RsvdOpts::default(), &mut rng);
+        assert_eq!(q.shape(), (60, 5));
+        assert!(orthogonality_defect(&q) < 1e-3);
+        assert!(range_residual(&a, &q) < 1e-3, "res={}", range_residual(&a, &q));
+    }
+
+    #[test]
+    fn rsvd_reconstructs_lowrank() {
+        let mut rng = Rng::new(103);
+        let a = lowrank_matrix(40, 70, 4, &mut rng);
+        let (u, s, v) = rsvd(&a, 4, RsvdOpts::default(), &mut rng);
+        let mut us = u.clone();
+        for j in 0..4 {
+            for i in 0..40 {
+                us[(i, j)] *= s[j];
+            }
+        }
+        let rec = matmul(&us, &v.t());
+        assert!(rec.max_diff(&a) < 2e-2 * (1.0 + a.max_abs()));
+    }
+
+    #[test]
+    fn residual_decreases_with_rank() {
+        let mut rng = Rng::new(107);
+        // Full-rank matrix with decaying spectrum.
+        let mut a = Mat::randn(50, 50, 1.0, &mut rng);
+        for i in 0..50 {
+            let scale = 1.0 / (1.0 + i as f32);
+            for j in 0..50 {
+                a[(i, j)] *= scale;
+            }
+        }
+        let opts = RsvdOpts::default();
+        let r2 = range_residual(&a, &randomized_range(&a, 2, opts, &mut rng));
+        let r8 = range_residual(&a, &randomized_range(&a, 8, opts, &mut rng));
+        let r24 = range_residual(&a, &randomized_range(&a, 24, opts, &mut rng));
+        assert!(r2 > r8 && r8 > r24, "{r2} {r8} {r24}");
+    }
+
+    #[test]
+    fn rank_clamped_to_dims() {
+        let mut rng = Rng::new(109);
+        let a = Mat::randn(6, 10, 1.0, &mut rng);
+        let q = randomized_range(&a, 100, RsvdOpts::default(), &mut rng);
+        assert_eq!(q.shape(), (6, 6));
+    }
+}

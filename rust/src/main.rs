@@ -1,0 +1,8 @@
+//! `sumo` — the launcher binary. See `sumo help`.
+
+fn main() {
+    if let Err(e) = sumo::cli::run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

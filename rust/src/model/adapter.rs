@@ -1,0 +1,116 @@
+//! Post-hoc LoRA adapter extraction (Appendix B of the paper).
+//!
+//! Given pretrained and fine-tuned weights, Δ = W_ft − W_pre is factorized:
+//! the numerical rank of Δ is estimated from its singular spectrum, then
+//! Δ ≈ A·B is taken from the truncated SVD (the global optimum of
+//! min ‖Δ − AB‖_F, Eckart–Young — the paper cites the matrix-factorization
+//! landscape result of Kawaguchi 2016 for gradient-based alternatives).
+
+use crate::linalg::{rsvd, Mat, RsvdOpts};
+use crate::util::Rng;
+
+/// One extracted adapter.
+pub struct Adapter {
+    pub name: String,
+    /// A: m×r.
+    pub a: Mat,
+    /// B: r×n.
+    pub b: Mat,
+    pub rank: usize,
+    /// ‖Δ − AB‖_F / ‖Δ‖_F.
+    pub rel_err: f32,
+}
+
+/// Estimate numerical rank: smallest r capturing `energy` of the spectrum.
+pub fn numerical_rank(svals: &[f32], energy: f32) -> usize {
+    let total: f64 = svals.iter().map(|&x| (x as f64).powi(2)).sum();
+    if total <= 0.0 {
+        return 0;
+    }
+    let mut acc = 0.0f64;
+    for (i, &s) in svals.iter().enumerate() {
+        acc += (s as f64).powi(2);
+        if acc / total >= energy as f64 {
+            return i + 1;
+        }
+    }
+    svals.len()
+}
+
+/// Extract an adapter for one layer delta, with rank capped at `max_rank`.
+pub fn extract_layer(
+    name: &str,
+    w_pre: &Mat,
+    w_ft: &Mat,
+    max_rank: usize,
+    energy: f32,
+    rng: &mut Rng,
+) -> Adapter {
+    assert_eq!(w_pre.shape(), w_ft.shape());
+    let mut delta = w_ft.clone();
+    delta.axpy(-1.0, w_pre);
+    let delta_norm = delta.fro().max(1e-30);
+    let probe = max_rank.min(delta.rows).min(delta.cols).max(1);
+    let (u, s, v) = rsvd(&delta, probe, RsvdOpts { oversample: 6, power_iters: 2 }, rng);
+    let r = numerical_rank(&s, energy).clamp(1, probe);
+    // A = U_r diag(s_r), B = V_rᵀ.
+    let mut a = u.left_cols(r);
+    for j in 0..r {
+        for i in 0..a.rows {
+            a[(i, j)] *= s[j];
+        }
+    }
+    let b = v.left_cols(r).t();
+    let approx = crate::linalg::matmul(&a, &b);
+    let mut resid = delta.clone();
+    resid.axpy(-1.0, &approx);
+    Adapter {
+        name: name.to_string(),
+        rel_err: resid.fro() / delta_norm,
+        a,
+        b,
+        rank: r,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul;
+
+    #[test]
+    fn recovers_exact_lowrank_delta() {
+        let mut rng = Rng::new(91);
+        let w_pre = Mat::randn(48, 24, 1.0, &mut rng);
+        // Fine-tuned = pre + rank-3 delta.
+        let u = Mat::randn(48, 3, 1.0, &mut rng);
+        let v = Mat::randn(3, 24, 1.0, &mut rng);
+        let mut w_ft = w_pre.clone();
+        w_ft.axpy(1.0, &matmul(&u, &v));
+        let ad = extract_layer("l0.wq", &w_pre, &w_ft, 8, 0.999, &mut rng);
+        assert!(ad.rank <= 4, "rank={}", ad.rank);
+        assert!(ad.rel_err < 0.05, "rel_err={}", ad.rel_err);
+        // Reconstruction: W_pre + A·B ≈ W_ft.
+        let mut rec = w_pre.clone();
+        rec.axpy(1.0, &matmul(&ad.a, &ad.b));
+        assert!(rec.max_diff(&w_ft) < 0.1 * w_ft.max_abs());
+    }
+
+    #[test]
+    fn numerical_rank_thresholds() {
+        assert_eq!(numerical_rank(&[10.0, 0.0, 0.0], 0.99), 1);
+        assert_eq!(numerical_rank(&[3.0, 3.0, 0.0], 0.99), 2);
+        assert_eq!(numerical_rank(&[], 0.9), 0);
+    }
+
+    #[test]
+    fn zero_delta_yields_tiny_adapter() {
+        let mut rng = Rng::new(93);
+        let w = Mat::randn(16, 8, 1.0, &mut rng);
+        let ad = extract_layer("x", &w, &w.clone(), 4, 0.99, &mut rng);
+        assert_eq!(ad.rank, 1); // clamped minimum
+        // A·B must be ≈ 0.
+        let prod = matmul(&ad.a, &ad.b);
+        assert!(prod.max_abs() < 1e-4);
+    }
+}

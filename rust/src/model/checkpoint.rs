@@ -1,0 +1,113 @@
+//! Checkpoint I/O: a simple self-describing binary format
+//! (magic + JSON header + raw little-endian f32 payloads).
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::config::ModelCfg;
+use crate::linalg::Mat;
+use crate::util::json::Json;
+
+use super::ParamStore;
+
+const MAGIC: &[u8; 8] = b"SUMOCKP1";
+
+/// Save a parameter store (+ step metadata) to `path`.
+pub fn save<P: AsRef<Path>>(store: &ParamStore, step: usize, path: P) -> crate::Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(MAGIC)?;
+    let header = Json::obj(vec![
+        ("cfg", store.cfg.to_json()),
+        ("step", Json::num(step as f64)),
+        (
+            "tensors",
+            Json::arr(store.tensors.iter().map(|(name, t)| {
+                Json::obj(vec![
+                    ("name", Json::str(name)),
+                    ("rows", Json::num(t.rows as f64)),
+                    ("cols", Json::num(t.cols as f64)),
+                ])
+            })),
+        ),
+    ]);
+    let htext = header.dump();
+    w.write_all(&(htext.len() as u64).to_le_bytes())?;
+    w.write_all(htext.as_bytes())?;
+    for (_, t) in &store.tensors {
+        for &x in &t.data {
+            w.write_all(&x.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a checkpoint; returns (store, step).
+pub fn load<P: AsRef<Path>>(path: P) -> crate::Result<(ParamStore, usize)> {
+    let mut r = BufReader::new(File::open(path)?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "not a SUMO checkpoint");
+    let mut len8 = [0u8; 8];
+    r.read_exact(&mut len8)?;
+    let hlen = u64::from_le_bytes(len8) as usize;
+    anyhow::ensure!(hlen < 16 << 20, "header too large");
+    let mut hbytes = vec![0u8; hlen];
+    r.read_exact(&mut hbytes)?;
+    let header = Json::parse(std::str::from_utf8(&hbytes)?)
+        .map_err(|e| anyhow::anyhow!("bad header: {e}"))?;
+    let cfg = ModelCfg::from_json(header.get("cfg"))
+        .ok_or_else(|| anyhow::anyhow!("bad cfg in checkpoint"))?;
+    let step = header.get("step").as_usize().unwrap_or(0);
+    let specs = header
+        .get("tensors")
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("missing tensors"))?;
+    let mut tensors = Vec::with_capacity(specs.len());
+    for spec in specs {
+        let name = spec.get("name").as_str().unwrap_or("").to_string();
+        let rows = spec.get("rows").as_usize().unwrap_or(0);
+        let cols = spec.get("cols").as_usize().unwrap_or(0);
+        let mut data = vec![0f32; rows * cols];
+        let mut buf = vec![0u8; rows * cols * 4];
+        r.read_exact(&mut buf)?;
+        for (i, chunk) in buf.chunks_exact(4).enumerate() {
+            data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+        }
+        tensors.push((name, Mat::from_vec(rows, cols, data)));
+    }
+    Ok((ParamStore { cfg, tensors }, step))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let cfg = ModelCfg::preset("nano").unwrap();
+        let store = ParamStore::init(&cfg, 42);
+        let dir = std::env::temp_dir().join("sumo_ckpt_test");
+        let path = dir.join("test.ckpt");
+        save(&store, 123, &path).unwrap();
+        let (loaded, step) = load(&path).unwrap();
+        assert_eq!(step, 123);
+        assert_eq!(loaded.cfg, cfg);
+        assert_eq!(loaded.max_diff(&store), 0.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("sumo_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"definitely not a checkpoint").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,10 @@
+//! Model-side state owned by the Rust coordinator: the parameter store
+//! (host-resident f32 tensors in registration order), seeded init,
+//! checkpoint I/O, and the Appendix-B post-hoc LoRA adapter extraction.
+//! The *compute* lives in the AOT HLO artifacts (Layer 2).
+
+pub mod adapter;
+pub mod checkpoint;
+pub mod params;
+
+pub use params::ParamStore;

@@ -1,0 +1,152 @@
+//! Parameter store: named f32 tensors in registration order, with the
+//! seeded initialization scheme mirrored by the Python tests.
+
+use crate::config::ModelCfg;
+use crate::linalg::Mat;
+use crate::util::Rng;
+
+/// Host-resident model parameters.
+pub struct ParamStore {
+    pub cfg: ModelCfg,
+    /// (name, tensor) in registration order (= artifact argument order).
+    pub tensors: Vec<(String, Mat)>,
+}
+
+impl ParamStore {
+    /// Initialize parameters for `cfg` from a seed:
+    /// norm scales = 1, embeddings ~ N(0, 0.02²), matrices ~ N(0, 2/(m+n)).
+    pub fn init(cfg: &ModelCfg, seed: u64) -> ParamStore {
+        let mut rng = Rng::new(seed ^ 0x5041_5241_4D53);
+        let tensors = cfg
+            .param_specs()
+            .into_iter()
+            .map(|(name, m, n)| {
+                let t = if name.ends_with("norm") {
+                    Mat::from_vec(m, n, vec![1.0; m * n])
+                } else if name == "embed" {
+                    Mat::randn(m, n, 0.02, &mut rng)
+                } else {
+                    Mat::randn(m, n, (2.0 / (m + n) as f32).sqrt(), &mut rng)
+                };
+                (name, t)
+            })
+            .collect();
+        ParamStore {
+            cfg: cfg.clone(),
+            tensors,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.tensors.iter().map(|(_, t)| t.data.len()).sum()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Mat> {
+        self.tensors
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, t)| t)
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut Mat> {
+        self.tensors
+            .iter_mut()
+            .find(|(n, _)| n == name)
+            .map(|(_, t)| t)
+    }
+
+    /// Layer shapes in registration order (optimizer construction).
+    pub fn shapes(&self) -> Vec<(usize, usize)> {
+        self.tensors.iter().map(|(_, t)| t.shape()).collect()
+    }
+
+    /// Projection eligibility per layer (2-D non-norm non-head matrices).
+    pub fn projected_mask(&self) -> Vec<bool> {
+        let projected = self.cfg.projected_layers();
+        self.tensors
+            .iter()
+            .map(|(n, _)| projected.contains(n))
+            .collect()
+    }
+
+    /// Model weight bytes (f32).
+    pub fn weight_bytes(&self) -> usize {
+        self.n_params() * 4
+    }
+
+    /// Elementwise distance to another store (tests/checkpoint roundtrip).
+    pub fn max_diff(&self, other: &ParamStore) -> f32 {
+        assert_eq!(self.len(), other.len());
+        self.tensors
+            .iter()
+            .zip(other.tensors.iter())
+            .map(|((_, a), (_, b))| a.max_diff(b))
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TaskHead;
+
+    #[test]
+    fn init_is_deterministic() {
+        let cfg = ModelCfg::preset("nano").unwrap();
+        let a = ParamStore::init(&cfg, 7);
+        let b = ParamStore::init(&cfg, 7);
+        assert_eq!(a.max_diff(&b), 0.0);
+        let c = ParamStore::init(&cfg, 8);
+        assert!(a.max_diff(&c) > 0.0);
+    }
+
+    #[test]
+    fn norm_layers_init_to_one() {
+        let cfg = ModelCfg::preset("nano").unwrap();
+        let p = ParamStore::init(&cfg, 1);
+        let norm = p.get("l0.attn_norm").unwrap();
+        assert!(norm.data.iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn param_count_matches_cfg() {
+        let cfg = ModelCfg::preset("micro").unwrap().with_head(TaskHead::Classifier(3));
+        let p = ParamStore::init(&cfg, 2);
+        assert_eq!(p.n_params(), cfg.n_params());
+        assert_eq!(p.len(), cfg.param_specs().len());
+    }
+
+    #[test]
+    fn projected_mask_excludes_norms() {
+        let cfg = ModelCfg::preset("nano").unwrap();
+        let p = ParamStore::init(&cfg, 3);
+        let mask = p.projected_mask();
+        for ((name, t), &proj) in p.tensors.iter().zip(&mask) {
+            if name.ends_with("norm") {
+                assert!(!proj);
+            }
+            if proj {
+                assert!(t.rows > 1 && t.cols > 1);
+            }
+        }
+        assert!(mask.iter().any(|&x| x));
+    }
+
+    #[test]
+    fn embed_has_smaller_scale() {
+        let cfg = ModelCfg::preset("nano").unwrap();
+        let p = ParamStore::init(&cfg, 4);
+        let embed_std = (p.get("embed").unwrap().sumsq()
+            / p.get("embed").unwrap().data.len() as f64)
+            .sqrt();
+        assert!((embed_std - 0.02).abs() < 0.005, "std={embed_std}");
+    }
+}

@@ -1,0 +1,157 @@
+//! Adam / AdamW — the paper's "Full-Rank" baseline optimizer, and the dense
+//! fallback used by the low-rank methods for non-2D layers.
+
+use crate::config::{OptimCfg, OptimKind};
+use crate::linalg::Mat;
+
+use super::Optimizer;
+
+/// Dense Adam state for one tensor (shared by Adam and the fallbacks).
+pub struct DenseAdam {
+    m: Mat,
+    v: Mat,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    weight_decay: f32,
+    decoupled: bool,
+    t: usize,
+}
+
+impl DenseAdam {
+    pub fn new(rows: usize, cols: usize, cfg: &OptimCfg) -> DenseAdam {
+        DenseAdam {
+            m: Mat::zeros(rows, cols),
+            v: Mat::zeros(rows, cols),
+            beta1: cfg.beta1,
+            beta2: cfg.beta2,
+            eps: cfg.eps,
+            weight_decay: cfg.weight_decay,
+            decoupled: cfg.kind == OptimKind::AdamW,
+            t: 1,
+        }
+    }
+
+    pub fn step(&mut self, w: &mut Mat, g: &Mat, lr: f32) {
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..w.data.len() {
+            let gi = if self.decoupled || self.weight_decay == 0.0 {
+                g.data[i]
+            } else {
+                g.data[i] + self.weight_decay * w.data[i] // L2-coupled (Adam)
+            };
+            self.m.data[i] = self.beta1 * self.m.data[i] + (1.0 - self.beta1) * gi;
+            self.v.data[i] = self.beta2 * self.v.data[i] + (1.0 - self.beta2) * gi * gi;
+            let mhat = self.m.data[i] / bc1;
+            let vhat = self.v.data[i] / bc2;
+            let mut upd = mhat / (vhat.sqrt() + self.eps);
+            if self.decoupled {
+                upd += self.weight_decay * w.data[i];
+            }
+            w.data[i] -= lr * upd;
+        }
+    }
+
+    pub fn tick(&mut self) {
+        self.t += 1;
+    }
+
+    pub fn state_floats(&self) -> usize {
+        self.m.data.len() + self.v.data.len()
+    }
+}
+
+/// Full-model Adam(W): one dense state per layer.
+pub struct Adam {
+    cfg: OptimCfg,
+    layers: Vec<DenseAdam>,
+}
+
+impl Adam {
+    pub fn new(cfg: &OptimCfg, shapes: &[(usize, usize)]) -> Adam {
+        Adam {
+            cfg: cfg.clone(),
+            layers: shapes.iter().map(|&(m, n)| DenseAdam::new(m, n, cfg)).collect(),
+        }
+    }
+}
+
+impl Optimizer for Adam {
+    fn name(&self) -> &'static str {
+        if self.cfg.kind == OptimKind::AdamW {
+            "adamw"
+        } else {
+            "adam"
+        }
+    }
+
+    fn step(&mut self, idx: usize, w: &mut Mat, g: &Mat, lr_mult: f32) {
+        let lr = self.cfg.lr * lr_mult;
+        self.layers[idx].step(w, g, lr);
+    }
+
+    fn end_step(&mut self) {
+        for l in &mut self.layers {
+            l.tick();
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.state_floats()).sum::<usize>() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn adam_first_step_is_signed_lr() {
+        // With zero init and bias correction, the first Adam update is
+        // ≈ lr·sign(g).
+        let cfg = OptimCfg::new(OptimKind::Adam).with_lr(0.1);
+        let mut adam = Adam::new(&cfg, &[(1, 3)]);
+        let mut w = Mat::zeros(1, 3);
+        let g = Mat::from_slice(1, 3, &[0.5, -2.0, 0.0]);
+        adam.step(0, &mut w, &g, 1.0);
+        assert!((w.data[0] + 0.1).abs() < 1e-3);
+        assert!((w.data[1] - 0.1).abs() < 1e-3);
+        assert_eq!(w.data[2], 0.0);
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        let mut rng = Rng::new(21);
+        let target = Mat::randn(16, 8, 1.0, &mut rng);
+        let cfg = OptimCfg::new(OptimKind::Adam).with_lr(0.05);
+        let mut adam = Adam::new(&cfg, &[(16, 8)]);
+        let mut w = Mat::zeros(16, 8);
+        for _ in 0..300 {
+            let mut g = w.clone();
+            g.axpy(-1.0, &target);
+            adam.step(0, &mut w, &g, 1.0);
+            adam.end_step();
+        }
+        assert!(w.max_diff(&target) < 0.1);
+    }
+
+    #[test]
+    fn adamw_decay_shrinks_weights() {
+        let mut cfg = OptimCfg::new(OptimKind::AdamW).with_lr(0.1);
+        cfg.weight_decay = 0.5;
+        let mut adamw = Adam::new(&cfg, &[(1, 1)]);
+        let mut w = Mat::from_slice(1, 1, &[2.0]);
+        let g = Mat::zeros(1, 1);
+        adamw.step(0, &mut w, &g, 1.0);
+        assert!(w.data[0] < 2.0, "decay applied: {}", w.data[0]);
+    }
+
+    #[test]
+    fn state_bytes_is_2mn() {
+        let cfg = OptimCfg::new(OptimKind::Adam);
+        let adam = Adam::new(&cfg, &[(8, 4), (2, 2)]);
+        assert_eq!(adam.state_bytes(), (2 * 8 * 4 + 2 * 2 * 2) * 4);
+    }
+}

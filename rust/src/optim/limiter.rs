@@ -1,0 +1,92 @@
+//! Norm-growth Limiter (Block 3 of Algorithm 1, from Fira / Chen et al.).
+//!
+//! Instead of clipping against an absolute threshold, the NL caps the
+//! *growth ratio* of consecutive update norms: if ‖O_t‖/‖O_{t-1}‖ > γ, the
+//! update is rescaled to γ·‖O_{t-1}‖. The paper uses γ = 1.1.
+
+use crate::linalg::Mat;
+
+/// Per-layer norm-growth limiter state.
+#[derive(Clone, Debug)]
+pub struct NormGrowthLimiter {
+    gamma: f32,
+    prev_norm: f32,
+    enabled: bool,
+}
+
+impl NormGrowthLimiter {
+    pub fn new(gamma: f32, enabled: bool) -> NormGrowthLimiter {
+        NormGrowthLimiter {
+            gamma,
+            prev_norm: 0.0,
+            enabled,
+        }
+    }
+
+    /// Apply the limiter to `o` in place; returns the (pre-limit) norm that
+    /// becomes the next step's reference.
+    pub fn apply(&mut self, o: &mut Mat) -> f32 {
+        let norm = o.fro();
+        if self.enabled && self.prev_norm > 0.0 && norm > self.gamma * self.prev_norm {
+            let target = self.gamma * self.prev_norm;
+            o.scale(target / norm.max(1e-30));
+        }
+        self.prev_norm = norm;
+        norm
+    }
+
+    pub fn prev_norm(&self) -> f32 {
+        self.prev_norm
+    }
+
+    /// Overwrite the reference norm (used when the HLO path owns the state).
+    pub fn set_prev_norm(&mut self, x: f32) {
+        self.prev_norm = x;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_step_passes_through() {
+        let mut nl = NormGrowthLimiter::new(1.1, true);
+        let mut o = Mat::from_slice(1, 2, &[3.0, 4.0]);
+        nl.apply(&mut o);
+        assert_eq!(o.data, vec![3.0, 4.0]);
+        assert!((nl.prev_norm() - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn caps_growth_beyond_gamma() {
+        let mut nl = NormGrowthLimiter::new(1.1, true);
+        let mut o1 = Mat::from_slice(1, 2, &[3.0, 4.0]); // norm 5
+        nl.apply(&mut o1);
+        let mut o2 = Mat::from_slice(1, 2, &[30.0, 40.0]); // norm 50 > 5.5
+        nl.apply(&mut o2);
+        assert!((o2.fro() - 5.5).abs() < 1e-3, "capped to γ·prev: {}", o2.fro());
+        // Reference updates with the *pre-limit* norm (per Fira's NL).
+        assert!((nl.prev_norm() - 50.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn small_growth_untouched() {
+        let mut nl = NormGrowthLimiter::new(1.1, true);
+        let mut o1 = Mat::from_slice(1, 1, &[10.0]);
+        nl.apply(&mut o1);
+        let mut o2 = Mat::from_slice(1, 1, &[10.5]);
+        nl.apply(&mut o2);
+        assert_eq!(o2.data, vec![10.5]);
+    }
+
+    #[test]
+    fn disabled_is_identity() {
+        let mut nl = NormGrowthLimiter::new(1.1, false);
+        let mut o1 = Mat::from_slice(1, 1, &[1.0]);
+        nl.apply(&mut o1);
+        let mut o2 = Mat::from_slice(1, 1, &[100.0]);
+        nl.apply(&mut o2);
+        assert_eq!(o2.data, vec![100.0]);
+    }
+}

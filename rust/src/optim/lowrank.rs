@@ -1,0 +1,117 @@
+//! "Low-Rank" baseline (Table 3): gradient descent restricted to a *fixed*
+//! random rank-r subspace per layer — the classical low-rank-gradient
+//! method without adaptive refresh or orthogonalization. Its poor pretrain
+//! perplexity in Table 3 is what motivates the adaptive methods.
+
+use crate::config::OptimCfg;
+use crate::linalg::{matmul, matmul_at_b, mgs_qr, Mat};
+use crate::util::Rng;
+
+use super::adam::DenseAdam;
+use super::Optimizer;
+
+enum LayerState {
+    Projected { q: Mat, moment: Mat },
+    Dense(DenseAdam),
+}
+
+pub struct LowRank {
+    cfg: OptimCfg,
+    layers: Vec<LayerState>,
+}
+
+impl LowRank {
+    pub fn new(cfg: &OptimCfg, shapes: &[(usize, usize)], projected: &[bool], seed: u64) -> LowRank {
+        let mut rng = Rng::new(seed ^ 0x4C4F_5752);
+        let layers = shapes
+            .iter()
+            .zip(projected)
+            .map(|(&(m, n), &proj)| {
+                if proj && m > 1 && n > 1 {
+                    // Fixed random orthonormal basis on the taller side.
+                    let tall = m.max(n);
+                    let r = cfg.rank.min(m).min(n).max(1);
+                    let raw = Mat::randn(tall, r, 1.0, &mut rng);
+                    let (q, _) = mgs_qr(&raw);
+                    let mom = if m >= n {
+                        Mat::zeros(r, n)
+                    } else {
+                        Mat::zeros(m, r)
+                    };
+                    LayerState::Projected { q, moment: mom }
+                } else {
+                    LayerState::Dense(DenseAdam::new(m, n, cfg))
+                }
+            })
+            .collect();
+        LowRank {
+            cfg: cfg.clone(),
+            layers,
+        }
+    }
+}
+
+impl Optimizer for LowRank {
+    fn name(&self) -> &'static str {
+        "lowrank"
+    }
+
+    fn step(&mut self, idx: usize, w: &mut Mat, g: &Mat, lr_mult: f32) {
+        let lr = self.cfg.lr * lr_mult;
+        match &mut self.layers[idx] {
+            LayerState::Dense(a) => a.step(w, g, lr),
+            LayerState::Projected { q, moment } => {
+                let left = w.rows >= w.cols;
+                let ghat = if left { matmul_at_b(q, g) } else { matmul(g, q) };
+                moment.ema(self.cfg.beta1, 1.0 - self.cfg.beta1, &ghat);
+                let full = if left {
+                    matmul(q, moment)
+                } else {
+                    crate::linalg::matmul_a_bt(moment, q)
+                };
+                w.axpy(-lr, &full);
+            }
+        }
+    }
+
+    fn end_step(&mut self) {}
+
+    fn state_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| match l {
+                LayerState::Projected { q, moment } => q.data.len() + moment.data.len(),
+                LayerState::Dense(a) => a.state_floats(),
+            })
+            .sum::<usize>()
+            * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::OptimKind;
+
+    #[test]
+    fn converges_only_within_fixed_subspace() {
+        let mut rng = Rng::new(71);
+        let target = Mat::randn(32, 16, 1.0, &mut rng);
+        let cfg = OptimCfg::new(OptimKind::LowRank).with_lr(0.2).with_rank(4);
+        let mut opt = LowRank::new(&cfg, &[(32, 16)], &[true], 1);
+        let mut w = Mat::zeros(32, 16);
+        let l0 = target.sumsq();
+        for _ in 0..300 {
+            let mut g = w.clone();
+            g.axpy(-1.0, &target);
+            opt.step(0, &mut w, &g, 1.0);
+        }
+        let mut diff = w.clone();
+        diff.axpy(-1.0, &target);
+        let l1 = diff.sumsq();
+        // Progress happens but stalls at the full-rank residual: the target
+        // is full-rank, the subspace is rank-4/16.
+        assert!(l1 < 0.9 * l0, "some progress: {l0} -> {l1}");
+        assert!(l1 > 0.2 * l0, "cannot fully converge in a fixed rank-4 subspace");
+    }
+}

@@ -1,0 +1,78 @@
+//! Optimizers: SUMO (the paper's Algorithm 1) and every baseline its
+//! evaluation compares against, implemented natively over `linalg`.
+//!
+//! The native implementations power the large benchmark sweeps; the HLO
+//! (Pallas) SUMO path in `runtime::optim_exec` implements the *same
+//! semantics* and integration tests assert step-level equivalence, so the
+//! three implementations (numpy oracle, JAX graph, native Rust) agree.
+
+pub mod adam;
+pub mod galore;
+pub mod limiter;
+pub mod lora;
+pub mod lowrank;
+pub mod memory;
+pub mod muon;
+pub mod osgdm;
+pub mod sgd;
+pub mod subspace;
+pub mod sumo;
+
+use crate::config::{OptimCfg, OptimKind};
+use crate::linalg::Mat;
+
+pub use limiter::NormGrowthLimiter;
+pub use memory::{flops_per_step, state_memory_floats};
+pub use subspace::SubspaceState;
+
+/// A layer-wise optimizer. The coordinator calls `step` once per layer per
+/// iteration (per-layer updates during backprop, as in the paper §3.2),
+/// then `end_step` once per iteration.
+pub trait Optimizer: Send {
+    fn name(&self) -> &'static str;
+
+    /// Update layer `idx` in place given its gradient. `lr_mult` is the
+    /// schedule multiplier (peak LR lives in the config).
+    fn step(&mut self, idx: usize, w: &mut Mat, g: &Mat, lr_mult: f32);
+
+    /// Advance the global step counter (bias correction, refresh cadence).
+    fn end_step(&mut self);
+
+    /// Bytes of optimizer state actually allocated (Table 1's
+    /// "Optim. states memory" column, measured).
+    fn state_bytes(&self) -> usize;
+
+    /// Hook for weight construction from auxiliary parameters (LoRA-style
+    /// methods override to materialize W = W0 + AB after their update).
+    fn finalize_weights(&mut self, _idx: usize, _w: &mut Mat) {}
+
+    /// Downcast hooks for diagnostics benches (Figure 1 reads GaLore's
+    /// moment spectrum; Lemma 3.1 reads Muon's moment).
+    fn as_galore(&self) -> Option<&galore::GaLore> {
+        None
+    }
+
+    fn as_muon(&self) -> Option<&muon::Muon> {
+        None
+    }
+}
+
+/// Build the optimizer named by `cfg` for the given layer shapes.
+/// `projected` marks layers eligible for low-rank projection (2-D matrices);
+/// non-projected layers fall back to dense Adam-style updates, as GaLore and
+/// the paper do for norms/biases.
+pub fn build(cfg: &OptimCfg, shapes: &[(usize, usize)], projected: &[bool], seed: u64) -> Box<dyn Optimizer> {
+    assert_eq!(shapes.len(), projected.len());
+    match cfg.kind {
+        OptimKind::Sgd => Box::new(sgd::SgdM::new(cfg, shapes)),
+        OptimKind::Adam | OptimKind::AdamW => Box::new(adam::Adam::new(cfg, shapes)),
+        OptimKind::GaLore => Box::new(galore::GaLore::new(cfg, shapes, projected, seed)),
+        OptimKind::Muon => Box::new(muon::Muon::new(cfg, shapes)),
+        OptimKind::Osgdm => Box::new(osgdm::Osgdm::new(cfg, shapes)),
+        OptimKind::Sumo => Box::new(sumo::Sumo::new(cfg, shapes, projected, seed, false)),
+        OptimKind::SumoNs5 => Box::new(sumo::Sumo::new(cfg, shapes, projected, seed, true)),
+        OptimKind::LowRank => Box::new(lowrank::LowRank::new(cfg, shapes, projected, seed)),
+        OptimKind::Lora => Box::new(lora::Lora::new(cfg, shapes, projected, seed, false)),
+        OptimKind::ReLora => Box::new(lora::Lora::new(cfg, shapes, projected, seed, true)),
+    }
+}

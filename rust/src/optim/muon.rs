@@ -1,0 +1,107 @@
+//! Muon (Jordan et al. 2024): momentum + full-space Newton-Schulz5
+//! orthogonalization, with RMS-consistent scaling (Liu et al. 2025).
+//! The optimizer whose approximation error Lemma 3.2/3.3 analyzes.
+
+use crate::config::OptimCfg;
+use crate::linalg::{newton_schulz5, Mat};
+
+use super::sumo::rms_scale;
+use super::Optimizer;
+
+pub struct Muon {
+    cfg: OptimCfg,
+    moments: Vec<Mat>,
+    shapes: Vec<(usize, usize)>,
+}
+
+impl Muon {
+    pub fn new(cfg: &OptimCfg, shapes: &[(usize, usize)]) -> Muon {
+        Muon {
+            cfg: cfg.clone(),
+            moments: shapes.iter().map(|&(m, n)| Mat::zeros(m, n)).collect(),
+            shapes: shapes.to_vec(),
+        }
+    }
+
+    /// Current moment for a layer (Lemma 3.1 diagnostics).
+    pub fn moment(&self, idx: usize) -> &Mat {
+        &self.moments[idx]
+    }
+}
+
+impl Optimizer for Muon {
+    fn name(&self) -> &'static str {
+        "muon"
+    }
+
+    fn as_muon(&self) -> Option<&Muon> {
+        Some(self)
+    }
+
+    fn step(&mut self, idx: usize, w: &mut Mat, g: &Mat, lr_mult: f32) {
+        let (m, n) = self.shapes[idx];
+        let lr = self.cfg.lr * lr_mult;
+        let mom = &mut self.moments[idx];
+        mom.ema(self.cfg.beta1, 1.0 - self.cfg.beta1, g);
+        if m == 1 || n == 1 {
+            // 1-D params: Muon falls back to momentum SGD (as in the paper).
+            w.axpy(-lr, mom);
+            return;
+        }
+        let o = newton_schulz5(mom, self.cfg.ns_iters);
+        w.axpy(-lr * rms_scale(m, n), &o);
+        if self.cfg.weight_decay > 0.0 {
+            w.scale(1.0 - lr * self.cfg.weight_decay);
+        }
+    }
+
+    fn end_step(&mut self) {}
+
+    fn state_bytes(&self) -> usize {
+        self.moments.iter().map(|m| m.data.len()).sum::<usize>() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::OptimKind;
+    use crate::util::Rng;
+
+    #[test]
+    fn muon_reduces_quadratic_loss() {
+        let mut rng = Rng::new(41);
+        let target = Mat::randn(16, 16, 1.0, &mut rng);
+        let cfg = OptimCfg::new(OptimKind::Muon).with_lr(0.02);
+        let mut opt = Muon::new(&cfg, &[(16, 16)]);
+        let mut w = Mat::zeros(16, 16);
+        let l0 = target.sumsq();
+        for _ in 0..300 {
+            let mut g = w.clone();
+            g.axpy(-1.0, &target);
+            opt.step(0, &mut w, &g, 1.0);
+            opt.end_step();
+        }
+        let mut diff = w.clone();
+        diff.axpy(-1.0, &target);
+        assert!(diff.sumsq() < 0.2 * l0, "{} -> {}", l0, diff.sumsq());
+    }
+
+    #[test]
+    fn state_is_single_moment() {
+        let cfg = OptimCfg::new(OptimKind::Muon);
+        let opt = Muon::new(&cfg, &[(8, 4)]);
+        assert_eq!(opt.state_bytes(), 8 * 4 * 4);
+    }
+
+    #[test]
+    fn vector_layers_use_momentum_sgd() {
+        let cfg = OptimCfg::new(OptimKind::Muon).with_lr(1.0);
+        let mut opt = Muon::new(&cfg, &[(1, 4)]);
+        let mut w = Mat::zeros(1, 4);
+        let g = Mat::from_slice(1, 4, &[1.0, 1.0, 1.0, 1.0]);
+        opt.step(0, &mut w, &g, 1.0);
+        // First step: w = -lr (1-β) g.
+        assert!((w.data[0] + 0.1).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,65 @@
+//! SGD with momentum — the isotropic steepest-descent reference point the
+//! paper's introduction contrasts against.
+
+use crate::config::OptimCfg;
+use crate::linalg::Mat;
+
+use super::Optimizer;
+
+pub struct SgdM {
+    cfg: OptimCfg,
+    moments: Vec<Mat>,
+}
+
+impl SgdM {
+    pub fn new(cfg: &OptimCfg, shapes: &[(usize, usize)]) -> SgdM {
+        SgdM {
+            cfg: cfg.clone(),
+            moments: shapes.iter().map(|&(m, n)| Mat::zeros(m, n)).collect(),
+        }
+    }
+}
+
+impl Optimizer for SgdM {
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+
+    fn step(&mut self, idx: usize, w: &mut Mat, g: &Mat, lr_mult: f32) {
+        let lr = self.cfg.lr * lr_mult;
+        let mom = &mut self.moments[idx];
+        mom.ema(self.cfg.beta1, 1.0, g); // classical momentum accumulation
+        w.axpy(-lr, mom);
+        if self.cfg.weight_decay > 0.0 {
+            w.scale(1.0 - lr * self.cfg.weight_decay);
+        }
+    }
+
+    fn end_step(&mut self) {}
+
+    fn state_bytes(&self) -> usize {
+        self.moments.iter().map(|m| m.data.len()).sum::<usize>() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::OptimKind;
+    use crate::util::Rng;
+
+    #[test]
+    fn sgd_converges_on_quadratic() {
+        let mut rng = Rng::new(51);
+        let target = Mat::randn(8, 8, 1.0, &mut rng);
+        let cfg = OptimCfg::new(OptimKind::Sgd).with_lr(0.05);
+        let mut opt = SgdM::new(&cfg, &[(8, 8)]);
+        let mut w = Mat::zeros(8, 8);
+        for _ in 0..400 {
+            let mut g = w.clone();
+            g.axpy(-1.0, &target);
+            opt.step(0, &mut w, &g, 1.0);
+        }
+        assert!(w.max_diff(&target) < 0.05);
+    }
+}

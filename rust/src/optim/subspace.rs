@@ -1,0 +1,206 @@
+//! Subspace management for low-rank optimizers (Blocks 1 & 1.1).
+//!
+//! Owns the projection basis Q for one layer, refreshes it every K steps
+//! via the randomized range finder on the current gradient, and transports
+//! the first moment between the old and new subspaces with
+//! R = Q_newᵀ Q_old (the paper's Block 1.1).
+
+use crate::linalg::{matmul, matmul_at_b, randomized_range, Mat, RsvdOpts};
+use crate::util::Rng;
+
+/// Which side of the weight matrix the basis multiplies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Side {
+    /// m ≥ n: Q is m×r, projected grad is Qᵀ G (r×n).
+    Left,
+    /// m < n: Q is n×r, projected grad is G Q (m×r).
+    Right,
+}
+
+impl Side {
+    pub fn for_shape(m: usize, n: usize) -> Side {
+        if m >= n {
+            Side::Left
+        } else {
+            Side::Right
+        }
+    }
+}
+
+/// Per-layer subspace state (basis + refresh bookkeeping).
+pub struct SubspaceState {
+    pub side: Side,
+    pub rank: usize,
+    pub update_freq: usize,
+    pub q: Option<Mat>,
+    rng: Rng,
+    steps: usize,
+    refreshes: usize,
+}
+
+impl SubspaceState {
+    pub fn new(m: usize, n: usize, rank: usize, update_freq: usize, rng: Rng) -> SubspaceState {
+        let side = Side::for_shape(m, n);
+        let rank = rank.min(m).min(n).max(1);
+        SubspaceState {
+            side,
+            rank,
+            update_freq: update_freq.max(1),
+            q: None,
+            rng,
+            steps: 0,
+            refreshes: 0,
+        }
+    }
+
+    /// True when this call should refresh the basis (every K steps,
+    /// including the very first).
+    pub fn due(&self) -> bool {
+        self.q.is_none() || self.steps % self.update_freq == 0
+    }
+
+    /// Refresh the basis from gradient `g`; transports `moment` (if given)
+    /// into the new subspace and returns it.
+    pub fn refresh(&mut self, g: &Mat, moment: Option<Mat>) -> Option<Mat> {
+        let work = match self.side {
+            Side::Left => g.clone(),
+            Side::Right => g.t(),
+        };
+        let q_new = randomized_range(&work, self.rank, RsvdOpts::default(), &mut self.rng);
+        let transported = match (self.q.as_ref(), moment) {
+            (Some(q_old), Some(m)) => {
+                // R = Q_newᵀ Q_old (r×r).
+                let r = matmul_at_b(&q_new, q_old);
+                Some(match self.side {
+                    Side::Left => matmul(&r, &m),   // (r×r)(r×n)
+                    Side::Right => matmul(&m, &r.t()), // (m×r)(r×r)ᵀ
+                })
+            }
+            (_, m) => m,
+        };
+        self.q = Some(q_new);
+        self.refreshes += 1;
+        transported
+    }
+
+    /// Project a full-space gradient into the subspace.
+    pub fn project(&self, g: &Mat) -> Mat {
+        let q = self.q.as_ref().expect("basis not initialized");
+        match self.side {
+            Side::Left => matmul_at_b(q, g),
+            Side::Right => matmul(g, q),
+        }
+    }
+
+    /// Map a subspace update back to the full space.
+    pub fn back_project(&self, o: &Mat) -> Mat {
+        let q = self.q.as_ref().expect("basis not initialized");
+        match self.side {
+            Side::Left => matmul(q, o),
+            Side::Right => crate::linalg::matmul_a_bt(o, q),
+        }
+    }
+
+    /// Shape of the projected moment for a (m, n) layer.
+    pub fn moment_shape(&self, m: usize, n: usize) -> (usize, usize) {
+        match self.side {
+            Side::Left => (self.rank, n),
+            Side::Right => (m, self.rank),
+        }
+    }
+
+    pub fn tick(&mut self) {
+        self.steps += 1;
+    }
+
+    pub fn refreshes(&self) -> usize {
+        self.refreshes
+    }
+
+    pub fn state_floats(&self) -> usize {
+        self.q.as_ref().map(|q| q.data.len()).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr::orthogonality_defect;
+
+    fn lowrank(m: usize, n: usize, r: usize, rng: &mut Rng) -> Mat {
+        let u = Mat::randn(m, r, 1.0, rng);
+        let v = Mat::randn(r, n, 1.0, rng);
+        matmul(&u, &v)
+    }
+
+    #[test]
+    fn left_side_projection_shapes() {
+        let mut rng = Rng::new(1);
+        let g = lowrank(64, 32, 4, &mut rng);
+        let mut ss = SubspaceState::new(64, 32, 4, 10, Rng::new(2));
+        assert_eq!(ss.side, Side::Left);
+        ss.refresh(&g, None);
+        let ghat = ss.project(&g);
+        assert_eq!(ghat.shape(), (4, 32));
+        let back = ss.back_project(&ghat);
+        assert_eq!(back.shape(), (64, 32));
+        // Exact-rank recovery: back-projection ≈ original.
+        assert!(back.max_diff(&g) < 1e-2 * (1.0 + g.max_abs()));
+    }
+
+    #[test]
+    fn right_side_projection_shapes() {
+        let mut rng = Rng::new(3);
+        let g = lowrank(32, 64, 4, &mut rng);
+        let mut ss = SubspaceState::new(32, 64, 4, 10, Rng::new(4));
+        assert_eq!(ss.side, Side::Right);
+        ss.refresh(&g, None);
+        let ghat = ss.project(&g);
+        assert_eq!(ghat.shape(), (32, 4));
+        assert_eq!(ss.back_project(&ghat).shape(), (32, 64));
+    }
+
+    #[test]
+    fn basis_is_orthonormal() {
+        let mut rng = Rng::new(5);
+        let g = Mat::randn(48, 24, 1.0, &mut rng);
+        let mut ss = SubspaceState::new(48, 24, 6, 10, Rng::new(6));
+        ss.refresh(&g, None);
+        assert!(orthogonality_defect(ss.q.as_ref().unwrap()) < 1e-3);
+    }
+
+    #[test]
+    fn transport_preserves_moment_in_stable_subspace() {
+        // If the gradient subspace does not change, transport ≈ identity.
+        let mut rng = Rng::new(7);
+        let g = lowrank(64, 32, 4, &mut rng);
+        let mut ss = SubspaceState::new(64, 32, 4, 10, Rng::new(8));
+        ss.refresh(&g, None);
+        let m0 = ss.project(&g);
+        let m1 = ss.refresh(&g, Some(m0.clone())).unwrap();
+        // Norm preserved (R is orthogonal when subspaces coincide).
+        assert!((m1.fro() - m0.fro()).abs() / m0.fro() < 1e-2);
+        // Back-projected content identical.
+        let b0 = matmul(ss.q.as_ref().unwrap(), &m1);
+        assert!(b0.max_diff(&g) < 1e-2 * (1.0 + g.max_abs()));
+    }
+
+    #[test]
+    fn due_schedule() {
+        let mut ss = SubspaceState::new(8, 4, 2, 3, Rng::new(9));
+        assert!(ss.due()); // uninitialized
+        let g = Mat::eye(8).left_cols(4);
+        ss.refresh(&g, None);
+        ss.tick(); // steps=1
+        assert!(!ss.due());
+        ss.tick();
+        ss.tick(); // steps=3 → 3 % 3 == 0
+        assert!(ss.due());
+    }
+
+    #[test]
+    fn rank_clamped() {
+        let ss = SubspaceState::new(4, 3, 100, 5, Rng::new(10));
+        assert_eq!(ss.rank, 3);
+    }
+}

@@ -1,0 +1,281 @@
+//! SUMO — Subspace-Aware Moment-Orthogonalization (Algorithm 1), native.
+//!
+//! Per projected layer and step t:
+//!   Block 1   : every K steps, Q ← randomized range of G (+ Block 1.1
+//!               moment transport R = Q_newᵀ Q_old).
+//!   Block 2   : M ← β·M + (1−β)·Ĝ with Ĝ = Qᵀ G;  O ← Orth_SVD(M)
+//!               (exact polar factor; the `ns5` flag switches to the
+//!               Newton-Schulz5 ablation of Table 2).
+//!   Block 3   : norm-growth limiter with threshold γ.
+//!   Block 4   : W ← W − η·α·s·Q O − η·λ·W with the RMS-consistent scale
+//!               s = 0.2·√max(m,n) (layer-wise LR adaptation, §Method).
+//!
+//! Non-projected layers (norm scales, tiny heads) fall back to dense Adam,
+//! as GaLore does. Memory: only Q (m·r) and the first moment (r·n) per
+//! layer — the paper's Table 1 "nr + mr" row.
+
+use crate::config::OptimCfg;
+use crate::linalg::{newton_schulz5, orth_svd, Mat};
+use crate::util::Rng;
+
+use super::adam::DenseAdam;
+use super::limiter::NormGrowthLimiter;
+use super::subspace::SubspaceState;
+use super::Optimizer;
+
+/// RMS-consistent per-layer scale (mirrors python/compile/optim.py).
+pub fn rms_scale(m: usize, n: usize) -> f32 {
+    0.2 * (m.max(n) as f32).sqrt()
+}
+
+enum LayerState {
+    Projected {
+        subspace: SubspaceState,
+        moment: Option<Mat>,
+        limiter: NormGrowthLimiter,
+    },
+    Dense(DenseAdam),
+}
+
+/// Native SUMO optimizer.
+pub struct Sumo {
+    cfg: OptimCfg,
+    layers: Vec<LayerState>,
+    shapes: Vec<(usize, usize)>,
+    ns5: bool,
+    t: usize,
+}
+
+impl Sumo {
+    pub fn new(
+        cfg: &OptimCfg,
+        shapes: &[(usize, usize)],
+        projected: &[bool],
+        seed: u64,
+        ns5: bool,
+    ) -> Sumo {
+        let mut rng = Rng::new(seed ^ 0x53_55_4D_4F); // "SUMO"
+        let layers = shapes
+            .iter()
+            .zip(projected)
+            .map(|(&(m, n), &proj)| {
+                if proj && m > 1 && n > 1 {
+                    LayerState::Projected {
+                        subspace: SubspaceState::new(
+                            m,
+                            n,
+                            cfg.rank,
+                            cfg.update_freq,
+                            rng.fork(m as u64 * 31 + n as u64),
+                        ),
+                        moment: None,
+                        limiter: NormGrowthLimiter::new(cfg.gamma, cfg.use_limiter),
+                    }
+                } else {
+                    LayerState::Dense(DenseAdam::new(m, n, cfg))
+                }
+            })
+            .collect();
+        Sumo {
+            cfg: cfg.clone(),
+            layers,
+            shapes: shapes.to_vec(),
+            ns5,
+            t: 0,
+        }
+    }
+
+    /// Orthogonalization error proxy for diagnostics: ‖O Oᵀ − I‖_max.
+    pub fn ns5_mode(&self) -> bool {
+        self.ns5
+    }
+
+    /// Number of basis refreshes performed on layer `idx` (testing hook).
+    pub fn refreshes(&self, idx: usize) -> usize {
+        match &self.layers[idx] {
+            LayerState::Projected { subspace, .. } => subspace.refreshes(),
+            LayerState::Dense(_) => 0,
+        }
+    }
+}
+
+impl Optimizer for Sumo {
+    fn name(&self) -> &'static str {
+        if self.ns5 {
+            "sumo-ns5"
+        } else {
+            "sumo"
+        }
+    }
+
+    fn step(&mut self, idx: usize, w: &mut Mat, g: &Mat, lr_mult: f32) {
+        let (m, n) = self.shapes[idx];
+        let lr = self.cfg.lr * lr_mult;
+        match &mut self.layers[idx] {
+            LayerState::Dense(adam) => adam.step(w, g, lr),
+            LayerState::Projected {
+                subspace,
+                moment,
+                limiter,
+            } => {
+                // Block 1 (+1.1): refresh basis on schedule.
+                if subspace.due() {
+                    let transported = subspace.refresh(g, moment.take());
+                    *moment = transported;
+                }
+                // Block 2: EMA in the subspace, exact orthogonalization.
+                let ghat = subspace.project(g);
+                let mshape = subspace.moment_shape(m, n);
+                let mom = moment.get_or_insert_with(|| Mat::zeros(mshape.0, mshape.1));
+                mom.ema(self.cfg.beta1, 1.0 - self.cfg.beta1, &ghat);
+                let mut o = if self.ns5 {
+                    newton_schulz5(mom, self.cfg.ns_iters)
+                } else {
+                    orth_svd(mom)
+                };
+                // Block 3: norm-growth limiter.
+                limiter.apply(&mut o);
+                // Block 4: back-project, weight decay, RMS scaling.
+                let full = subspace.back_project(&o);
+                let step_scale = lr * self.cfg.scale * rms_scale(m, n);
+                w.axpy(-step_scale, &full);
+                if self.cfg.weight_decay > 0.0 {
+                    w.scale(1.0 - lr * self.cfg.weight_decay);
+                }
+            }
+        }
+    }
+
+    fn end_step(&mut self) {
+        self.t += 1;
+        for layer in &mut self.layers {
+            match layer {
+                LayerState::Projected { subspace, .. } => subspace.tick(),
+                LayerState::Dense(adam) => adam.tick(),
+            }
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        let floats: usize = self
+            .layers
+            .iter()
+            .map(|l| match l {
+                LayerState::Projected {
+                    subspace, moment, ..
+                } => subspace.state_floats() + moment.as_ref().map(|m| m.data.len()).unwrap_or(0),
+                LayerState::Dense(a) => a.state_floats(),
+            })
+            .sum();
+        floats * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{OptimCfg, OptimKind};
+
+    fn quadratic_loss_grad(w: &Mat, target: &Mat) -> (f32, Mat) {
+        // L = 0.5‖W − T‖²; G = W − T.
+        let mut g = w.clone();
+        g.axpy(-1.0, target);
+        (0.5 * g.sumsq() as f32, g)
+    }
+
+    #[test]
+    fn sumo_reduces_quadratic_loss() {
+        let mut rng = Rng::new(11);
+        let target = Mat::randn(32, 16, 1.0, &mut rng);
+        let mut w = Mat::zeros(32, 16);
+        let cfg = OptimCfg::new(OptimKind::Sumo).with_lr(0.05).with_rank(4).with_update_freq(5);
+        let mut opt = Sumo::new(&cfg, &[(32, 16)], &[true], 1, false);
+        let (l0, _) = quadratic_loss_grad(&w, &target);
+        for _ in 0..200 {
+            let (_, g) = quadratic_loss_grad(&w, &target);
+            opt.step(0, &mut w, &g, 1.0);
+            opt.end_step();
+        }
+        let (l1, _) = quadratic_loss_grad(&w, &target);
+        assert!(l1 < 0.35 * l0, "loss {l0} -> {l1}");
+    }
+
+    #[test]
+    fn svd_beats_ns5_on_illconditioned_quadratic() {
+        // Anisotropic quadratic: L = 0.5‖D(W−T)‖² with spread spectrum D.
+        // The exact orthogonalization should make at least as much progress.
+        let mut rng = Rng::new(13);
+        let target = Mat::randn(24, 12, 1.0, &mut rng);
+        let d: Vec<f32> = (0..24).map(|i| 1.0 / (1.0 + i as f32)).collect();
+        let run = |ns5: bool| -> f32 {
+            let mut w = Mat::zeros(24, 12);
+            let kind = if ns5 { OptimKind::SumoNs5 } else { OptimKind::Sumo };
+            let cfg = OptimCfg::new(kind).with_lr(0.03).with_rank(4).with_update_freq(10);
+            let mut opt = Sumo::new(&cfg, &[(24, 12)], &[true], 2, ns5);
+            for _ in 0..150 {
+                let mut g = w.clone();
+                g.axpy(-1.0, &target);
+                for i in 0..24 {
+                    let s = d[i] * d[i];
+                    for x in g.row_mut(i) {
+                        *x *= s;
+                    }
+                }
+                opt.step(0, &mut w, &g, 1.0);
+                opt.end_step();
+            }
+            let mut diff = w.clone();
+            diff.axpy(-1.0, &target);
+            (0..24).map(|i| {
+                let s = d[i];
+                diff.row(i).iter().map(|x| (s * x).powi(2)).sum::<f32>()
+            }).sum()
+        };
+        let l_svd = run(false);
+        let l_ns5 = run(true);
+        assert!(
+            l_svd <= l_ns5 * 1.3,
+            "svd {l_svd} should not lose badly to ns5 {l_ns5}"
+        );
+    }
+
+    #[test]
+    fn dense_fallback_for_norm_layers() {
+        let cfg = OptimCfg::new(OptimKind::Sumo).with_lr(0.1);
+        let mut opt = Sumo::new(&cfg, &[(1, 8)], &[false], 3, false);
+        let mut w = Mat::zeros(1, 8);
+        let g = Mat::from_slice(1, 8, &[1.0; 8]);
+        opt.step(0, &mut w, &g, 1.0);
+        opt.end_step();
+        assert!(w.data.iter().all(|&x| x < 0.0), "moved against gradient");
+    }
+
+    #[test]
+    fn refresh_happens_on_schedule() {
+        let cfg = OptimCfg::new(OptimKind::Sumo).with_rank(2).with_update_freq(4);
+        let mut opt = Sumo::new(&cfg, &[(16, 8)], &[true], 4, false);
+        let mut rng = Rng::new(5);
+        let mut w = Mat::randn(16, 8, 1.0, &mut rng);
+        for _ in 0..9 {
+            let g = Mat::randn(16, 8, 1.0, &mut rng);
+            opt.step(0, &mut w, &g, 1.0);
+            opt.end_step();
+        }
+        // Steps 0, 4, 8 → 3 refreshes.
+        assert_eq!(opt.refreshes(0), 3);
+    }
+
+    #[test]
+    fn state_memory_is_low_rank_sized() {
+        let cfg = OptimCfg::new(OptimKind::Sumo).with_rank(4).with_update_freq(1000);
+        let (m, n) = (256, 64);
+        let mut opt = Sumo::new(&cfg, &[(m, n)], &[true], 6, false);
+        let mut w = Mat::zeros(m, n);
+        let mut rng = Rng::new(7);
+        let g = Mat::randn(m, n, 1.0, &mut rng);
+        opt.step(0, &mut w, &g, 1.0);
+        let floats = opt.state_bytes() / 4;
+        // Q (m·r) + M (r·n) = 256·4 + 4·64 = 1280 ≪ 2·m·n (Adam = 32768).
+        assert_eq!(floats, m * 4 + 4 * n);
+    }
+}

@@ -1,0 +1,120 @@
+//! PJRT client wrapper + compiled-executable cache + manifest access.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use xla::{HloModuleProto, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::util::json::Json;
+
+/// The process-wide runtime: one PJRT CPU client, the artifact manifest,
+/// and a cache of compiled executables keyed by artifact file name.
+pub struct Runtime {
+    client: PjRtClient,
+    artifact_dir: PathBuf,
+    pub manifest: Json,
+    cache: Mutex<HashMap<String, &'static PjRtLoadedExecutable>>,
+}
+
+impl Runtime {
+    /// Create from an artifact directory (reads `manifest.json`).
+    pub fn new<P: AsRef<Path>>(artifact_dir: P) -> crate::Result<Runtime> {
+        let artifact_dir = artifact_dir.as_ref().to_path_buf();
+        let manifest_path = artifact_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                manifest_path.display()
+            )
+        })?;
+        let manifest = Json::parse(&text).map_err(|e| anyhow::anyhow!("bad manifest: {e}"))?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            artifact_dir,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Default artifact location relative to the repo root.
+    pub fn from_default_artifacts() -> crate::Result<Runtime> {
+        // Try ./artifacts then ../artifacts (tests run from target dirs).
+        for dir in ["artifacts", "../artifacts", "../../artifacts"] {
+            if Path::new(dir).join("manifest.json").exists() {
+                return Runtime::new(dir);
+            }
+        }
+        Runtime::new("artifacts")
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact by file name (e.g. "nano_lm_train.hlo.txt"),
+    /// returning a cached executable. Executables are intentionally leaked:
+    /// they live for the whole process (launcher pattern) and `xla`'s
+    /// executable type is not reference-counted.
+    pub fn executable(&self, file: &str) -> crate::Result<&'static PjRtLoadedExecutable> {
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(exe) = cache.get(file) {
+            return Ok(exe);
+        }
+        let path = self.artifact_dir.join(file);
+        let proto = HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("bad path {path:?}"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {file}: {e:?}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {file}: {e:?}"))?;
+        let leaked: &'static PjRtLoadedExecutable = Box::leak(Box::new(exe));
+        cache.insert(file.to_string(), leaked);
+        Ok(leaked)
+    }
+
+    /// Execute an artifact with literal inputs; returns the decomposed
+    /// output tuple (all artifacts are lowered with return_tuple=True).
+    pub fn run(&self, file: &str, inputs: &[xla::Literal]) -> crate::Result<Vec<xla::Literal>> {
+        let exe = self.executable(file)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute {file}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch {file}: {e:?}"))?;
+        lit.to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {file}: {e:?}"))
+    }
+
+    /// Manifest entry for a model id (e.g. "nano_lm").
+    pub fn model_entry(&self, model_id: &str) -> crate::Result<&Json> {
+        let entry = self.manifest.get("models").get(model_id);
+        anyhow::ensure!(
+            entry.as_obj().is_some(),
+            "model {model_id} not in manifest (have: {:?})",
+            self.manifest
+                .get("models")
+                .as_obj()
+                .map(|m| m.keys().cloned().collect::<Vec<_>>())
+        );
+        Ok(entry)
+    }
+
+    /// Manifest entry for an optimizer graph id.
+    pub fn optim_entry(&self, id: &str) -> crate::Result<&Json> {
+        let entry = self.manifest.get("optim").get(id);
+        anyhow::ensure!(entry.as_obj().is_some(), "optim graph {id} not in manifest");
+        Ok(entry)
+    }
+
+    /// The batch size baked into every model artifact.
+    pub fn batch(&self) -> usize {
+        self.manifest.get("batch").as_usize().unwrap_or(8)
+    }
+}

@@ -1,0 +1,54 @@
+//! Mat / token <-> xla::Literal marshalling.
+
+use crate::linalg::Mat;
+
+/// f32 matrix -> 2-D literal.
+pub fn mat_to_literal(m: &Mat) -> crate::Result<xla::Literal> {
+    xla::Literal::vec1(&m.data)
+        .reshape(&[m.rows as i64, m.cols as i64])
+        .map_err(|e| anyhow::anyhow!("reshape literal: {e:?}"))
+}
+
+/// 2-D literal -> f32 matrix.
+pub fn literal_to_mat(lit: &xla::Literal, rows: usize, cols: usize) -> crate::Result<Mat> {
+    let v = lit
+        .to_vec::<f32>()
+        .map_err(|e| anyhow::anyhow!("literal to_vec: {e:?}"))?;
+    anyhow::ensure!(
+        v.len() == rows * cols,
+        "literal size {} != {rows}x{cols}",
+        v.len()
+    );
+    Ok(Mat::from_vec(rows, cols, v))
+}
+
+/// Token ids -> (batch, seq) i32 literal.
+pub fn tokens_to_literal(tokens: &[u32], batch: usize, seq: usize) -> crate::Result<xla::Literal> {
+    anyhow::ensure!(tokens.len() == batch * seq, "token buffer shape");
+    let ints: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+    xla::Literal::vec1(&ints)
+        .reshape(&[batch as i64, seq as i64])
+        .map_err(|e| anyhow::anyhow!("reshape tokens: {e:?}"))
+}
+
+/// Class labels -> (batch,) i32 literal.
+pub fn labels_i32_literal(labels: &[f32]) -> xla::Literal {
+    let ints: Vec<i32> = labels.iter().map(|&l| l.round() as i32).collect();
+    xla::Literal::vec1(&ints)
+}
+
+/// Regression scores -> (batch,) f32 literal.
+pub fn labels_f32_literal(labels: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(labels)
+}
+
+/// Scalar f32 literal.
+pub fn scalar(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// Scalar f32 from a literal.
+pub fn literal_scalar_f32(lit: &xla::Literal) -> crate::Result<f32> {
+    lit.get_first_element::<f32>()
+        .map_err(|e| anyhow::anyhow!("scalar: {e:?}"))
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on the
+//! CPU PJRT client. This is the only module that touches the `xla` crate;
+//! everything above it works with host `Mat`s.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): HloModuleProto::from_text_file
+//! -> XlaComputation::from_proto -> client.compile -> execute. Artifacts are
+//! compiled once and cached for the life of the process.
+
+pub mod client;
+pub mod literal;
+pub mod optim_exec;
+pub mod step;
+
+pub use client::Runtime;
+pub use optim_exec::HloSumo;
+pub use step::ModelRunner;

@@ -1,0 +1,180 @@
+//! HLO-backed SUMO optimizer — the Layer-1/Layer-2 hot path on the Rust
+//! request path.
+//!
+//! For every projected layer this holds the subspace basis Q, the low-rank
+//! moment M and the limiter reference norm, and drives two artifacts:
+//!   sumo_update_<m>x<n>_r<r>  — Blocks 2–4 (Pallas orth_svd inside)
+//!   sumo_refresh_<m>x<n>_r<r> — Blocks 1 + 1.1 (rSVD + moment transport)
+//! Non-projected layers use native dense Adam (same as the native SUMO).
+//! Integration tests assert step-equivalence with `optim::sumo::Sumo`.
+
+use crate::config::OptimCfg;
+use crate::linalg::Mat;
+use crate::model::ParamStore;
+use crate::optim::adam::DenseAdam;
+use crate::util::Rng;
+
+use super::literal::{literal_scalar_f32, literal_to_mat, mat_to_literal, scalar};
+use super::Runtime;
+
+struct HloLayer {
+    m: usize,
+    n: usize,
+    left: bool,
+    update_file: String,
+    refresh_file: String,
+    q: Option<Mat>,
+    moment: Mat,
+    o_prev_norm: f32,
+    sketch: usize,
+    steps: usize,
+}
+
+enum LayerState {
+    Hlo(HloLayer),
+    Dense(DenseAdam),
+}
+
+/// HLO-executing SUMO over a whole model.
+pub struct HloSumo<'rt> {
+    rt: &'rt Runtime,
+    cfg: OptimCfg,
+    layers: Vec<LayerState>,
+    rng: Rng,
+    t: usize,
+}
+
+impl<'rt> HloSumo<'rt> {
+    /// Build for `params`, resolving artifacts at rank `cfg.rank`. Fails if
+    /// the manifest lacks a shape (run `make artifacts` with that preset).
+    pub fn new(rt: &'rt Runtime, params: &ParamStore, cfg: &OptimCfg, seed: u64) -> crate::Result<HloSumo<'rt>> {
+        let mask = params.projected_mask();
+        let mut layers = Vec::with_capacity(params.len());
+        for ((_, t), proj) in params.tensors.iter().zip(mask) {
+            let (m, n) = t.shape();
+            if proj && m > 1 && n > 1 {
+                let r = cfg.rank;
+                let uid = format!("sumo_update_{m}x{n}_r{r}");
+                let rid = format!("sumo_refresh_{m}x{n}_r{r}");
+                let uentry = rt.optim_entry(&uid)?;
+                let rentry = rt.optim_entry(&rid)?;
+                let left = uentry.get("left").as_bool().unwrap_or(m >= n);
+                let oversample = rentry.get("oversample").as_usize().unwrap_or(4);
+                let small = m.min(n);
+                let mom_shape = if left { (r, n) } else { (m, r) };
+                layers.push(LayerState::Hlo(HloLayer {
+                    m,
+                    n,
+                    left,
+                    update_file: uentry.get("file").as_str().unwrap_or("").to_string(),
+                    refresh_file: rentry.get("file").as_str().unwrap_or("").to_string(),
+                    q: None,
+                    moment: Mat::zeros(mom_shape.0, mom_shape.1),
+                    o_prev_norm: 0.0,
+                    sketch: (r + oversample).min(small),
+                    steps: 0,
+                }));
+            } else {
+                layers.push(LayerState::Dense(DenseAdam::new(m, n, cfg)));
+            }
+        }
+        Ok(HloSumo {
+            rt,
+            cfg: cfg.clone(),
+            layers,
+            rng: Rng::new(seed ^ 0x484C_4F53),
+            t: 0,
+        })
+    }
+
+    /// Apply the SUMO update for layer `idx` (HLO path).
+    pub fn step(&mut self, idx: usize, w: &mut Mat, g: &Mat, lr_mult: f32) -> crate::Result<()> {
+        let lr = self.cfg.lr * lr_mult;
+        let rt = self.rt;
+        let cfg = self.cfg.clone();
+        match &mut self.layers[idx] {
+            LayerState::Dense(adam) => {
+                adam.step(w, g, lr);
+                Ok(())
+            }
+            LayerState::Hlo(layer) => {
+                // Blocks 1 + 1.1: refresh on schedule via the rSVD artifact.
+                let due = layer.q.is_none() || layer.steps % cfg.update_freq.max(1) == 0;
+                if due {
+                    let big = if layer.left { layer.m } else { layer.n };
+                    let small = if layer.left { layer.n } else { layer.m };
+                    let q_prev = layer
+                        .q
+                        .take()
+                        .unwrap_or_else(|| Mat::zeros(big, layer.momrank(&cfg)));
+                    let omega = Mat::randn(small, layer.sketch, 1.0, &mut self.rng);
+                    let outs = rt.run(
+                        &layer.refresh_file,
+                        &[
+                            mat_to_literal(g)?,
+                            mat_to_literal(&q_prev)?,
+                            mat_to_literal(&layer.moment)?,
+                            mat_to_literal(&omega)?,
+                        ],
+                    )?;
+                    let r = layer.momrank(&cfg);
+                    layer.q = Some(literal_to_mat(&outs[0], big, r)?);
+                    let (mr, mc) = layer.moment.shape();
+                    layer.moment = literal_to_mat(&outs[1], mr, mc)?;
+                }
+                // Blocks 2–4 via the fused update artifact.
+                let q = layer.q.as_ref().unwrap();
+                let outs = rt.run(
+                    &layer.update_file,
+                    &[
+                        mat_to_literal(w)?,
+                        mat_to_literal(&layer.moment)?,
+                        mat_to_literal(q)?,
+                        mat_to_literal(g)?,
+                        scalar(layer.o_prev_norm),
+                        scalar(lr),
+                        scalar(cfg.beta1),
+                        scalar(cfg.weight_decay),
+                        scalar(if cfg.use_limiter { cfg.gamma } else { f32::INFINITY }),
+                        scalar(cfg.scale),
+                    ],
+                )?;
+                *w = literal_to_mat(&outs[0], layer.m, layer.n)?;
+                let (mr, mc) = layer.moment.shape();
+                layer.moment = literal_to_mat(&outs[1], mr, mc)?;
+                layer.o_prev_norm = literal_scalar_f32(&outs[2])?;
+                Ok(())
+            }
+        }
+    }
+
+    pub fn end_step(&mut self) {
+        self.t += 1;
+        for l in &mut self.layers {
+            match l {
+                LayerState::Hlo(h) => h.steps += 1,
+                LayerState::Dense(a) => a.tick(),
+            }
+        }
+    }
+
+    /// Optimizer-state bytes (Q + M per projected layer + dense fallbacks).
+    pub fn state_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| match l {
+                LayerState::Hlo(h) => {
+                    h.q.as_ref().map(|q| q.data.len()).unwrap_or(0) + h.moment.data.len()
+                }
+                LayerState::Dense(a) => a.state_floats(),
+            })
+            .sum::<usize>()
+            * 4
+    }
+}
+
+impl HloLayer {
+    fn momrank(&self, cfg: &OptimCfg) -> usize {
+        cfg.rank.min(self.m).min(self.n).max(1)
+    }
+}

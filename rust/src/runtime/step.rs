@@ -1,0 +1,215 @@
+//! Model-step bindings: typed wrappers over the train/eval/logits artifacts.
+
+use crate::config::ModelCfg;
+use crate::data::Batch;
+use crate::linalg::Mat;
+use crate::model::ParamStore;
+use crate::util::json::Json;
+
+use super::literal::{
+    labels_f32_literal, labels_i32_literal, literal_scalar_f32, literal_to_mat, mat_to_literal,
+    tokens_to_literal,
+};
+use super::Runtime;
+
+/// Output of one training step.
+pub struct StepOut {
+    pub loss: f32,
+    /// Per-layer gradients in registration order.
+    pub grads: Vec<Mat>,
+}
+
+/// Binds a model id ("nano_lm") to its artifacts and parameter layout.
+pub struct ModelRunner<'rt> {
+    rt: &'rt Runtime,
+    pub model_id: String,
+    pub cfg: ModelCfg,
+    pub batch: usize,
+    train_file: String,
+    eval_file: String,
+    logits_file: Option<String>,
+    label_dtype_f32: bool,
+    /// (name, rows, cols) from the manifest (must match cfg.param_specs()).
+    pub param_specs: Vec<(String, usize, usize)>,
+}
+
+impl<'rt> ModelRunner<'rt> {
+    pub fn new(rt: &'rt Runtime, model_id: &str) -> crate::Result<ModelRunner<'rt>> {
+        let entry = rt.model_entry(model_id)?.clone();
+        let cfg_json = entry.get("cfg");
+        let cfg = manifest_cfg_to_model_cfg(cfg_json)
+            .ok_or_else(|| anyhow::anyhow!("bad cfg for {model_id}"))?;
+        let param_specs = entry
+            .get("params")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("missing params"))?
+            .iter()
+            .map(|p| {
+                (
+                    p.at(0).as_str().unwrap_or("").to_string(),
+                    p.at(1).as_usize().unwrap_or(0),
+                    p.at(2).as_usize().unwrap_or(0),
+                )
+            })
+            .collect::<Vec<_>>();
+        // Cross-check the Rust preset arithmetic against the Python side.
+        let local: Vec<(String, usize, usize)> = cfg.param_specs();
+        anyhow::ensure!(
+            local == param_specs,
+            "param spec mismatch between manifest and ModelCfg for {model_id}"
+        );
+        Ok(ModelRunner {
+            rt,
+            model_id: model_id.to_string(),
+            batch: entry.get("batch").as_usize().unwrap_or(rt.batch()),
+            train_file: entry.get("train").as_str().unwrap_or("").to_string(),
+            eval_file: entry.get("eval").as_str().unwrap_or("").to_string(),
+            logits_file: entry.get("logits").as_str().map(|s| s.to_string()),
+            label_dtype_f32: entry.get("label_dtype").as_str() == Some("f32"),
+            cfg,
+            param_specs,
+        })
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.cfg.seq_len
+    }
+
+    fn inputs_for(
+        &self,
+        params: &ParamStore,
+        tokens: &[u32],
+        labels_tok: Option<&[u32]>,
+        labels_val: Option<&[f32]>,
+    ) -> crate::Result<Vec<xla::Literal>> {
+        let mut inputs = Vec::with_capacity(params.len() + 2);
+        for (_, t) in &params.tensors {
+            inputs.push(mat_to_literal(t)?);
+        }
+        inputs.push(tokens_to_literal(tokens, self.batch, self.cfg.seq_len)?);
+        match (labels_tok, labels_val) {
+            (Some(toks), None) => {
+                inputs.push(tokens_to_literal(toks, self.batch, self.cfg.seq_len)?)
+            }
+            (None, Some(vals)) => {
+                anyhow::ensure!(vals.len() == self.batch, "label batch");
+                if self.label_dtype_f32 {
+                    inputs.push(labels_f32_literal(vals));
+                } else {
+                    inputs.push(labels_i32_literal(vals));
+                }
+            }
+            _ => {}
+        }
+        Ok(inputs)
+    }
+
+    /// Run one train step: loss + per-layer grads.
+    pub fn train_step(&self, params: &ParamStore, batch: &Batch) -> crate::Result<StepOut> {
+        let outs = self.rt.run(
+            &self.train_file,
+            &self.inputs_for(params, &batch.inputs, Some(&batch.targets), None)?,
+        )?;
+        self.unpack_step(outs)
+    }
+
+    /// Train step for classification/regression (labels per sequence).
+    pub fn train_step_labeled(
+        &self,
+        params: &ParamStore,
+        tokens: &[u32],
+        labels: &[f32],
+    ) -> crate::Result<StepOut> {
+        let outs = self.rt.run(
+            &self.train_file,
+            &self.inputs_for(params, tokens, None, Some(labels))?,
+        )?;
+        self.unpack_step(outs)
+    }
+
+    fn unpack_step(&self, outs: Vec<xla::Literal>) -> crate::Result<StepOut> {
+        anyhow::ensure!(
+            outs.len() == 1 + self.param_specs.len(),
+            "expected loss + {} grads, got {}",
+            self.param_specs.len(),
+            outs.len()
+        );
+        let loss = literal_scalar_f32(&outs[0])?;
+        let grads = outs[1..]
+            .iter()
+            .zip(&self.param_specs)
+            .map(|(lit, (_, m, n))| literal_to_mat(lit, *m, *n))
+            .collect::<crate::Result<Vec<Mat>>>()?;
+        Ok(StepOut { loss, grads })
+    }
+
+    /// Eval loss on an LM batch.
+    pub fn eval_loss(&self, params: &ParamStore, batch: &Batch) -> crate::Result<f32> {
+        let outs = self.rt.run(
+            &self.eval_file,
+            &self.inputs_for(params, &batch.inputs, Some(&batch.targets), None)?,
+        )?;
+        literal_scalar_f32(&outs[0])
+    }
+
+    /// Eval for labeled tasks: (loss, logits rows).
+    pub fn eval_labeled(
+        &self,
+        params: &ParamStore,
+        tokens: &[u32],
+        labels: &[f32],
+    ) -> crate::Result<(f32, Vec<Vec<f32>>)> {
+        let outs = self.rt.run(
+            &self.eval_file,
+            &self.inputs_for(params, tokens, None, Some(labels))?,
+        )?;
+        let loss = literal_scalar_f32(&outs[0])?;
+        anyhow::ensure!(outs.len() == 2, "labeled eval returns (loss, logits)");
+        let flat = outs[1]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("logits: {e:?}"))?;
+        let k = flat.len() / self.batch;
+        let rows = flat.chunks(k).map(|c| c.to_vec()).collect();
+        Ok((loss, rows))
+    }
+
+    /// Last-position LM logits for greedy decoding.
+    pub fn lm_logits(&self, params: &ParamStore, tokens: &[u32]) -> crate::Result<Vec<Vec<f32>>> {
+        let file = self
+            .logits_file
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("{} has no logits artifact", self.model_id))?;
+        let mut inputs = Vec::with_capacity(params.len() + 1);
+        for (_, t) in &params.tensors {
+            inputs.push(mat_to_literal(t)?);
+        }
+        inputs.push(tokens_to_literal(tokens, self.batch, self.cfg.seq_len)?);
+        let outs = self.rt.run(file, &inputs)?;
+        let flat = outs[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("logits: {e:?}"))?;
+        let k = flat.len() / self.batch;
+        Ok(flat.chunks(k).map(|c| c.to_vec()).collect())
+    }
+}
+
+/// Manifest cfg dict -> Rust ModelCfg.
+pub fn manifest_cfg_to_model_cfg(j: &Json) -> Option<ModelCfg> {
+    use crate::config::TaskHead;
+    let head = match j.get("head").as_str()? {
+        "lm" => TaskHead::Lm,
+        "reg" => TaskHead::Regression,
+        s if s.starts_with("cls") => TaskHead::Classifier(s[3..].parse().ok()?),
+        _ => return None,
+    };
+    Some(ModelCfg {
+        name: j.get("name").as_str()?.to_string(),
+        vocab: j.get("vocab").as_usize()?,
+        d_model: j.get("d_model").as_usize()?,
+        n_layers: j.get("n_layers").as_usize()?,
+        n_heads: j.get("n_heads").as_usize()?,
+        d_ff: j.get("d_ff").as_usize()?,
+        seq_len: j.get("seq_len").as_usize()?,
+        head,
+    })
+}

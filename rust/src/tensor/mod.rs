@@ -1,0 +1,20 @@
+//! Host-tensor helpers shared by the runtime and data pipeline.
+
+/// Convert unsigned token ids to the i32 buffer the HLO graphs expect.
+pub fn tokens_to_i32(tokens: &[u32]) -> Vec<i32> {
+    tokens.iter().map(|&t| t as i32).collect()
+}
+
+/// Flatten labels (class indices) to i32.
+pub fn labels_to_i32(labels: &[f32]) -> Vec<i32> {
+    labels.iter().map(|&l| l.round() as i32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn token_conversion() {
+        assert_eq!(super::tokens_to_i32(&[0, 1, 255]), vec![0, 1, 255]);
+        assert_eq!(super::labels_to_i32(&[0.0, 1.9, 2.1]), vec![0, 2, 2]);
+    }
+}

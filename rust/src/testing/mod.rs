@@ -1,0 +1,121 @@
+//! proptest-lite: a small property-testing harness (the real proptest crate
+//! is not in the offline vendor set). Seeded generators + a runner that
+//! reports the failing case's seed for reproduction.
+
+use crate::util::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 64, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `prop` over `cases` generated inputs; panics with the case index and
+/// derived seed on the first failure so it can be replayed.
+pub fn check<G, T, P>(cfg: PropConfig, name: &str, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    T: std::fmt::Debug,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut root = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut rng = root.fork(case as u64);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {} fork {case}):\n  input: {input:?}\n  {msg}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use crate::linalg::Mat;
+    use crate::util::Rng;
+
+    /// Random matrix with dims drawn from the given ranges.
+    pub fn mat(rng: &mut Rng, rows: std::ops::Range<usize>, cols: std::ops::Range<usize>) -> Mat {
+        let m = rows.start + rng.below_usize(rows.end - rows.start);
+        let n = cols.start + rng.below_usize(cols.end - cols.start);
+        Mat::randn(m.max(1), n.max(1), 1.0, rng)
+    }
+
+    /// Random low-rank matrix.
+    pub fn lowrank_mat(rng: &mut Rng, m: usize, n: usize, r: usize) -> Mat {
+        let u = Mat::randn(m, r, 1.0, rng);
+        let v = Mat::randn(r, n, 1.0, rng);
+        crate::linalg::matmul(&u, &v)
+    }
+
+    /// Matrix with a prescribed condition number (diag spectrum).
+    pub fn conditioned_mat(rng: &mut Rng, r: usize, n: usize, kappa: f32) -> Mat {
+        let x = Mat::randn(n, r, 1.0, rng);
+        let (q, _) = crate::linalg::mgs_qr(&x);
+        let mut m = Mat::zeros(r, n);
+        for i in 0..r {
+            let s = if r == 1 {
+                1.0
+            } else {
+                1.0 - (1.0 - 1.0 / kappa) * (i as f32 / (r - 1) as f32)
+            };
+            for j in 0..n {
+                m[(i, j)] = s * q[(j, i)];
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_valid_property() {
+        check(
+            PropConfig { cases: 32, seed: 1 },
+            "addition-commutes",
+            |rng| (rng.f64(), rng.f64()),
+            |(a, b)| {
+                if (a + b - (b + a)).abs() < 1e-12 {
+                    Ok(())
+                } else {
+                    Err("not commutative".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn check_reports_failures() {
+        check(
+            PropConfig { cases: 4, seed: 2 },
+            "always-fails",
+            |rng| rng.f64(),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn generators_produce_valid_shapes() {
+        let mut rng = crate::util::Rng::new(3);
+        let m = gen::mat(&mut rng, 2..8, 3..9);
+        assert!(m.rows >= 2 && m.rows < 8 && m.cols >= 3 && m.cols < 9);
+        let lr = gen::lowrank_mat(&mut rng, 10, 12, 2);
+        assert_eq!(lr.shape(), (10, 12));
+        let c = gen::conditioned_mat(&mut rng, 4, 16, 100.0);
+        let (_, s, _) = crate::linalg::svd_jacobi(&c);
+        assert!((s[0] / s[3] - 100.0).abs() / 100.0 < 0.1, "{s:?}");
+    }
+}

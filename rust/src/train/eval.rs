@@ -1,0 +1,50 @@
+//! Evaluation helpers: perplexity for LM runs, prediction extraction for
+//! labeled tasks.
+
+/// Perplexity from a mean cross-entropy loss.
+pub fn perplexity(mean_ce: f32) -> f32 {
+    mean_ce.min(20.0).exp()
+}
+
+/// Argmax predictions (as f32 class ids) from logit rows.
+pub fn accuracy_from_logits(logits: &[Vec<f32>]) -> Vec<f32> {
+    logits
+        .iter()
+        .map(|row| {
+            let mut best = 0usize;
+            for (i, &x) in row.iter().enumerate() {
+                if x > row[best] {
+                    best = i;
+                }
+            }
+            best as f32
+        })
+        .collect()
+}
+
+/// Regression predictions: first logit per row.
+pub fn scores_from_logits(logits: &[Vec<f32>]) -> Vec<f32> {
+    logits.iter().map(|row| row[0]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ppl_of_zero_loss_is_one() {
+        assert!((perplexity(0.0) - 1.0).abs() < 1e-6);
+        assert!(perplexity(2.0) > 7.0 && perplexity(2.0) < 8.0);
+    }
+
+    #[test]
+    fn ppl_clamps_explosions() {
+        assert!(perplexity(1e9).is_finite());
+    }
+
+    #[test]
+    fn argmax_predictions() {
+        let preds = accuracy_from_logits(&[vec![0.1, 0.9], vec![2.0, -1.0]]);
+        assert_eq!(preds, vec![1.0, 0.0]);
+    }
+}

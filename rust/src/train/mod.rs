@@ -1,0 +1,9 @@
+//! Training loops: LM pretraining and labeled fine-tuning, with scheduling,
+//! logging and evaluation. These are what the CLI, examples and benches
+//! drive.
+
+pub mod eval;
+pub mod trainer;
+
+pub use eval::{accuracy_from_logits, perplexity};
+pub use trainer::{FinetuneReport, PretrainReport, Trainer};

@@ -1,0 +1,175 @@
+//! The Trainer: pretraining and fine-tuning loops over a Coordinator.
+
+use crate::config::TrainCfg;
+use crate::coordinator::Coordinator;
+use crate::data::glue::{score, GlueMetric, GlueTask};
+use crate::data::{Batcher, SyntheticCorpus};
+use crate::log_info;
+use crate::util::logging::CsvWriter;
+
+use super::eval::{accuracy_from_logits, perplexity, scores_from_logits};
+
+/// Result of a pretraining run.
+#[derive(Clone, Debug)]
+pub struct PretrainReport {
+    pub steps: usize,
+    pub final_loss: f32,
+    pub val_loss: f32,
+    pub val_ppl: f32,
+    pub tokens_seen: usize,
+    pub seconds: f64,
+    pub optimizer_state_bytes: usize,
+    pub loss_curve: Vec<(usize, f32)>,
+}
+
+/// Result of a fine-tuning run.
+#[derive(Clone, Debug)]
+pub struct FinetuneReport {
+    pub steps: usize,
+    pub final_loss: f32,
+    pub metric: f64,
+    pub metric_name: &'static str,
+    pub seconds: f64,
+    pub optimizer_state_bytes: usize,
+    pub curve: Vec<(usize, f64)>,
+}
+
+/// Drives a Coordinator through a training schedule.
+pub struct Trainer {
+    pub cfg: TrainCfg,
+}
+
+impl Trainer {
+    pub fn new(cfg: TrainCfg) -> Trainer {
+        Trainer { cfg }
+    }
+
+    /// LM pretraining on the synthetic corpus. `csv` optionally logs the
+    /// loss curve (step, loss, lr, seconds).
+    pub fn pretrain(
+        &self,
+        coord: &mut Coordinator,
+        mut csv: Option<&mut CsvWriter>,
+    ) -> crate::Result<PretrainReport> {
+        let t0 = crate::util::Timer::start();
+        let vocab = coord.runner.cfg.vocab;
+        let seq = coord.runner.seq_len();
+        let batch_size = coord.runner.batch;
+        let corpus = SyntheticCorpus::new(vocab, self.cfg.seed);
+        let mut batcher = Batcher::new(corpus, batch_size, seq);
+        let mut curve = Vec::new();
+        let mut last_loss = f32::NAN;
+        for step in 0..self.cfg.steps {
+            let batch = batcher.next();
+            let lr_mult = self.cfg.lr_mult(step);
+            let m = coord.train_iteration(&batch, lr_mult)?;
+            last_loss = m.loss;
+            if step % self.cfg.log_every.max(1) == 0 || step + 1 == self.cfg.steps {
+                curve.push((step, m.loss));
+                log_info!(
+                    "step {step:>5} loss {:.4} |g| {:.3} lr x{:.3} ({:.2}s)",
+                    m.loss,
+                    m.grad_norm,
+                    lr_mult,
+                    m.step_seconds
+                );
+                if let Some(w) = csv.as_deref_mut() {
+                    w.row(&[
+                        step as f64,
+                        m.loss as f64,
+                        lr_mult as f64,
+                        m.step_seconds,
+                    ])?;
+                    w.flush()?;
+                }
+            }
+        }
+        // Validation on held-out stream.
+        let val_corpus = SyntheticCorpus::new(vocab, self.cfg.seed ^ 0xEEE);
+        let mut val_batcher = Batcher::new(val_corpus, batch_size, seq);
+        let mut val_sum = 0.0f32;
+        for _ in 0..self.cfg.eval_batches.max(1) {
+            let b = val_batcher.next();
+            val_sum += coord.runner.eval_loss(&coord.params, &b)?;
+        }
+        let val_loss = val_sum / self.cfg.eval_batches.max(1) as f32;
+        Ok(PretrainReport {
+            steps: self.cfg.steps,
+            final_loss: last_loss,
+            val_loss,
+            val_ppl: perplexity(val_loss),
+            tokens_seen: self.cfg.steps * batch_size * seq,
+            seconds: t0.secs(),
+            optimizer_state_bytes: coord.optimizer_state_bytes(),
+            loss_curve: curve,
+        })
+    }
+
+    /// Fine-tune on a synthetic GLUE task; reports the task metric on the
+    /// dev split every `eval_every` steps and at the end.
+    pub fn finetune_glue(
+        &self,
+        coord: &mut Coordinator,
+        task: &GlueTask,
+    ) -> crate::Result<FinetuneReport> {
+        let t0 = crate::util::Timer::start();
+        let batch_size = coord.runner.batch;
+        let mut curve = Vec::new();
+        let mut last_loss = f32::NAN;
+        for step in 0..self.cfg.steps {
+            let (toks, labels) = task.batch("train", (step * batch_size) as u64, batch_size);
+            let lr_mult = self.cfg.lr_mult(step);
+            let m = coord.train_iteration_labeled(&toks, &labels, lr_mult)?;
+            last_loss = m.loss;
+            let due = self.cfg.eval_every > 0 && step % self.cfg.eval_every == 0;
+            if due || step + 1 == self.cfg.steps {
+                let metric = self.eval_glue(coord, task)?;
+                curve.push((step, metric));
+                log_info!(
+                    "[{}] step {step:>4} loss {:.4} {} {:.4}",
+                    task.name,
+                    m.loss,
+                    metric_name(task.metric),
+                    metric
+                );
+            }
+        }
+        let metric = self.eval_glue(coord, task)?;
+        Ok(FinetuneReport {
+            steps: self.cfg.steps,
+            final_loss: last_loss,
+            metric,
+            metric_name: metric_name(task.metric),
+            seconds: t0.secs(),
+            optimizer_state_bytes: coord.optimizer_state_bytes(),
+            curve,
+        })
+    }
+
+    /// Dev-split metric for a GLUE task.
+    pub fn eval_glue(&self, coord: &Coordinator, task: &GlueTask) -> crate::Result<f64> {
+        let batch_size = coord.runner.batch;
+        let mut preds = Vec::new();
+        let mut gold = Vec::new();
+        for b in 0..self.cfg.eval_batches.max(1) {
+            let (toks, labels) = task.batch("dev", (b * batch_size) as u64, batch_size);
+            let (_, logits) = coord.runner.eval_labeled(&coord.params, &toks, &labels)?;
+            if task.metric == GlueMetric::Pearson {
+                preds.extend(scores_from_logits(&logits));
+            } else {
+                preds.extend(accuracy_from_logits(&logits));
+            }
+            gold.extend(labels);
+        }
+        Ok(score(task.metric, &preds, &gold))
+    }
+}
+
+fn metric_name(m: GlueMetric) -> &'static str {
+    match m {
+        GlueMetric::Accuracy => "acc",
+        GlueMetric::F1 => "f1",
+        GlueMetric::Matthews => "mcc",
+        GlueMetric::Pearson => "pearson",
+    }
+}

@@ -1,0 +1,15 @@
+//! Small self-contained substrates: PRNG, JSON, logging, timing, threading,
+//! ASCII plotting. The build environment is fully offline with only the `xla`
+//! and `anyhow` crates vendored, so these replace the usual ecosystem crates
+//! (rand, serde_json, env_logger, rayon, criterion plots) with tested,
+//! purpose-built modules.
+
+pub mod json;
+pub mod logging;
+pub mod plot;
+pub mod rng;
+pub mod threadpool;
+pub mod timer;
+
+pub use rng::Rng;
+pub use timer::Timer;

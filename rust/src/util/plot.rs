@@ -1,0 +1,96 @@
+//! ASCII line plots for terminal output of loss curves / figure benches.
+//! The benchmark harness also writes full-resolution CSVs; these plots give
+//! an at-a-glance check that curve *shapes* match the paper's figures.
+
+/// Render `series` (name, points) as an ASCII chart of the given size.
+/// Points are (x, y); x is assumed roughly increasing.
+pub fn ascii_plot(series: &[(&str, &[(f64, f64)])], width: usize, height: usize) -> String {
+    let width = width.max(16);
+    let height = height.max(4);
+    let all: Vec<(f64, f64)> = series
+        .iter()
+        .flat_map(|(_, pts)| pts.iter().copied())
+        .filter(|(x, y)| x.is_finite() && y.is_finite())
+        .collect();
+    if all.is_empty() {
+        return String::from("(no data)\n");
+    }
+    let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &all {
+        xmin = xmin.min(x);
+        xmax = xmax.max(x);
+        ymin = ymin.min(y);
+        ymax = ymax.max(y);
+    }
+    if (xmax - xmin).abs() < 1e-300 {
+        xmax = xmin + 1.0;
+    }
+    if (ymax - ymin).abs() < 1e-300 {
+        ymax = ymin + 1.0;
+    }
+    let marks = ['*', '+', 'o', 'x', '#', '@'];
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, pts)) in series.iter().enumerate() {
+        let mark = marks[si % marks.len()];
+        for &(x, y) in pts.iter() {
+            if !x.is_finite() || !y.is_finite() {
+                continue;
+            }
+            let cx = ((x - xmin) / (xmax - xmin) * (width - 1) as f64).round() as usize;
+            let cy = ((y - ymin) / (ymax - ymin) * (height - 1) as f64).round() as usize;
+            let row = height - 1 - cy.min(height - 1);
+            grid[row][cx.min(width - 1)] = mark;
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("{ymax:>12.4} ┤"));
+    out.push_str(&grid[0].iter().collect::<String>());
+    out.push('\n');
+    for row in grid.iter().take(height - 1).skip(1) {
+        out.push_str("             │");
+        out.push_str(&row.iter().collect::<String>());
+        out.push('\n');
+    }
+    out.push_str(&format!("{ymin:>12.4} ┤"));
+    out.push_str(&grid[height - 1].iter().collect::<String>());
+    out.push('\n');
+    out.push_str(&format!(
+        "             └{}\n              x: [{:.3}, {:.3}]   ",
+        "─".repeat(width),
+        xmin,
+        xmax
+    ));
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("{}={}  ", marks[si % marks.len()], name));
+    }
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plots_without_panicking() {
+        let a: Vec<(f64, f64)> = (0..50).map(|i| (i as f64, (i as f64 * 0.2).sin())).collect();
+        let b: Vec<(f64, f64)> = (0..50).map(|i| (i as f64, 1.0 / (1.0 + i as f64))).collect();
+        let s = ascii_plot(&[("sin", &a), ("decay", &b)], 60, 12);
+        assert!(s.contains('*'));
+        assert!(s.contains('+'));
+        assert!(s.contains("sin"));
+    }
+
+    #[test]
+    fn empty_series() {
+        assert_eq!(ascii_plot(&[("e", &[])], 40, 8), "(no data)\n");
+    }
+
+    #[test]
+    fn constant_series_does_not_divide_by_zero() {
+        let pts = [(0.0, 5.0), (1.0, 5.0)];
+        let s = ascii_plot(&[("c", &pts)], 30, 6);
+        assert!(s.contains('*'));
+    }
+}

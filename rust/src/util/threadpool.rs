@@ -1,0 +1,176 @@
+//! A small fixed-size thread pool with scoped parallel-for.
+//!
+//! The coordinator uses this to dispatch per-layer optimizer updates while
+//! the rest of the backward pass is still being consumed, and `linalg` uses
+//! `par_for` to split blocked matmuls across cores. Implemented over std
+//! threads + channels (tokio/rayon are not in the offline vendor set).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// Fixed-size worker pool.
+pub struct ThreadPool {
+    tx: Sender<Msg>,
+    handles: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Create a pool with `size` workers (min 1).
+    pub fn new(size: usize) -> ThreadPool {
+        let size = size.max(1);
+        let (tx, rx) = channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::with_capacity(size);
+        for i in 0..size {
+            let rx = Arc::clone(&rx);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("sumo-worker-{i}"))
+                    .spawn(move || loop {
+                        let msg = { rx.lock().unwrap().recv() };
+                        match msg {
+                            Ok(Msg::Run(job)) => job(),
+                            Ok(Msg::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool { tx, handles, size }
+    }
+
+    /// Pool sized from available parallelism.
+    pub fn with_default_size() -> ThreadPool {
+        let n = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        ThreadPool::new(n)
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Submit a fire-and-forget job.
+    pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx.send(Msg::Run(Box::new(f))).expect("pool alive");
+    }
+
+    /// Submit a job and get a receiver for its result.
+    pub fn submit<T, F>(&self, f: F) -> Receiver<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let (tx, rx) = channel();
+        self.spawn(move || {
+            let _ = tx.send(f());
+        });
+        rx
+    }
+
+    /// Run `f(i)` for all `i in 0..n`, blocking until all complete. `f` only
+    /// needs to live for the duration of the call (scoped threads underneath
+    /// when the pool would not help, chunked jobs otherwise).
+    pub fn par_for<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Sync + Send,
+    {
+        if n == 0 {
+            return;
+        }
+        let workers = self.size.min(n);
+        if workers <= 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        // Scoped threads sidestep the 'static bound for borrowed closures.
+        std::thread::scope(|scope| {
+            let f = &f;
+            let chunk = n.div_ceil(workers);
+            for w in 0..workers {
+                let lo = w * chunk;
+                let hi = ((w + 1) * chunk).min(n);
+                if lo >= hi {
+                    break;
+                }
+                scope.spawn(move || {
+                    for i in lo..hi {
+                        f(i);
+                    }
+                });
+            }
+        });
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in 0..self.handles.len() {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let mut rxs = Vec::new();
+        for _ in 0..32 {
+            let c = Arc::clone(&counter);
+            rxs.push(pool.submit(move || c.fetch_add(1, Ordering::SeqCst)));
+        }
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    fn par_for_covers_all_indices() {
+        let pool = ThreadPool::new(3);
+        let hits: Vec<AtomicUsize> = (0..100).map(|_| AtomicUsize::new(0)).collect();
+        pool.par_for(100, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn par_for_empty_and_single() {
+        let pool = ThreadPool::new(2);
+        pool.par_for(0, |_| panic!("should not run"));
+        let ran = AtomicUsize::new(0);
+        pool.par_for(1, |_| {
+            ran.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(ran.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn submit_returns_value() {
+        let pool = ThreadPool::new(1);
+        let rx = pool.submit(|| 6 * 7);
+        assert_eq!(rx.recv().unwrap(), 42);
+    }
+}

@@ -1,0 +1,277 @@
+//! Property-based invariants (proptest-lite) over the coordinator's
+//! numerical substrates: orthogonality, projection geometry, transport,
+//! limiter behaviour, batching partitions, all-reduce algebra.
+
+use sumo::coordinator::allreduce_mean;
+use sumo::data::Batch;
+use sumo::linalg::{
+    matmul, matmul_at_b, mgs_qr, newton_schulz5, orth_svd, randomized_range, Mat, RsvdOpts,
+};
+use sumo::linalg::qr::orthogonality_defect;
+use sumo::optim::subspace::SubspaceState;
+use sumo::optim::NormGrowthLimiter;
+use sumo::testing::{check, gen, PropConfig};
+use sumo::util::Rng;
+
+fn cfg(cases: usize) -> PropConfig {
+    PropConfig {
+        cases,
+        seed: 0x5D0_7E57,
+    }
+}
+
+#[test]
+fn prop_orth_svd_is_semi_orthogonal() {
+    check(
+        cfg(40),
+        "orth_svd semi-orthogonal",
+        |rng| gen::mat(rng, 2..12, 12..80),
+        |m| {
+            let o = orth_svd(m);
+            let g = sumo::linalg::matmul_a_bt(&o, &o);
+            for i in 0..g.rows {
+                for j in 0..g.cols {
+                    let target = if i == j { 1.0 } else { 0.0 };
+                    if (g[(i, j)] - target).abs() > 5e-3 {
+                        return Err(format!("OOᵀ[{i},{j}] = {}", g[(i, j)]));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_orth_svd_idempotent() {
+    check(
+        cfg(30),
+        "orth(orth(M)) == orth(M)",
+        |rng| gen::mat(rng, 2..10, 10..60),
+        |m| {
+            let o1 = orth_svd(m);
+            let o2 = orth_svd(&o1);
+            if o1.max_diff(&o2) > 5e-3 {
+                return Err(format!("not idempotent: {}", o1.max_diff(&o2)));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_orth_never_worse_than_ns5_against_exact() {
+    // Lemma 3.2 consequence: exact orth error is 0, NS5's grows with κ.
+    check(
+        cfg(20),
+        "exact vs ns5 error ordering",
+        |rng| {
+            let kappa = 10.0f32.powf(1.0 + 2.0 * rng.f32());
+            gen::conditioned_mat(rng, 6, 48, kappa)
+        },
+        |m| {
+            let exact = orth_svd(m);
+            let ns = newton_schulz5(m, 5);
+            // Exact output orthogonality defect must beat NS5's.
+            let d_exact = sumo::linalg::orth::polar_defect(&exact);
+            let d_ns = sumo::linalg::orth::polar_defect(&ns);
+            if d_exact > d_ns + 1e-3 {
+                return Err(format!("exact defect {d_exact} > ns5 {d_ns}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_qr_projector_idempotent() {
+    check(
+        cfg(30),
+        "QQᵀ idempotent projector",
+        |rng| gen::mat(rng, 8..40, 2..8),
+        |a| {
+            let (q, _) = mgs_qr(a);
+            if orthogonality_defect(&q) > 1e-3 {
+                return Err("Q not orthonormal".into());
+            }
+            // P = QQᵀ; P² = P.
+            let p = sumo::linalg::matmul_a_bt(&q, &q);
+            let p2 = matmul(&p, &p);
+            if p2.max_diff(&p) > 1e-3 {
+                return Err(format!("P² != P: {}", p2.max_diff(&p)));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_range_finder_captures_lowrank() {
+    check(
+        cfg(20),
+        "rSVD exact on low-rank",
+        |rng| {
+            let r = 1 + rng.below_usize(5);
+            let m = 30 + rng.below_usize(30);
+            let n = 20 + rng.below_usize(30);
+            (gen::lowrank_mat(rng, m, n, r), r)
+        },
+        |(a, r)| {
+            let mut rng = Rng::new(a.data.len() as u64);
+            let q = randomized_range(a, *r, RsvdOpts::default(), &mut rng);
+            let qta = matmul_at_b(&q, a);
+            let proj = matmul(&q, &qta);
+            let mut resid = a.clone();
+            resid.axpy(-1.0, &proj);
+            let rel = resid.fro() / a.fro().max(1e-20);
+            if rel > 1e-2 {
+                return Err(format!("residual {rel}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_transport_is_norm_nonexpanding() {
+    // ‖R M‖ ≤ ‖M‖ since R = Q_newᵀ Q_old has spectral norm ≤ 1.
+    check(
+        cfg(25),
+        "moment transport non-expanding",
+        |rng| {
+            let g1 = gen::lowrank_mat(rng, 40, 24, 4);
+            let g2 = gen::lowrank_mat(rng, 40, 24, 4);
+            let seed = rng.next_u64();
+            (g1, g2, seed)
+        },
+        |(g1, g2, seed)| {
+            let mut ss = SubspaceState::new(40, 24, 4, 1000, Rng::new(*seed));
+            ss.refresh(g1, None);
+            let m0 = ss.project(g1);
+            let norm0 = m0.fro();
+            let m1 = ss.refresh(g2, Some(m0)).unwrap();
+            if m1.fro() > norm0 * (1.0 + 1e-3) {
+                return Err(format!("transport expanded {} -> {}", norm0, m1.fro()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_limiter_caps_ratio() {
+    check(
+        cfg(40),
+        "limiter growth ratio ≤ γ",
+        |rng| {
+            let n1 = 0.1 + 10.0 * rng.f32();
+            let n2 = 0.1 + 100.0 * rng.f32();
+            (n1, n2)
+        },
+        |(n1, n2)| {
+            let mut nl = NormGrowthLimiter::new(1.1, true);
+            let mut o1 = Mat::from_slice(1, 1, &[*n1]);
+            nl.apply(&mut o1);
+            let mut o2 = Mat::from_slice(1, 1, &[*n2]);
+            nl.apply(&mut o2);
+            if o2.fro() > 1.1 * n1 + 1e-4 && o2.fro() > *n2 + 1e-4 {
+                return Err(format!("o2 {} exceeds γ·{n1} and original {n2}", o2.fro()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_allreduce_equals_arithmetic_mean() {
+    check(
+        cfg(25),
+        "allreduce = mean",
+        |rng| {
+            let shards = 1 + rng.below_usize(7);
+            let mats: Vec<Vec<Mat>> = (0..shards)
+                .map(|_| vec![Mat::randn(6, 5, 1.0, rng)])
+                .collect();
+            mats
+        },
+        |shards| {
+            let mut want = Mat::zeros(6, 5);
+            for s in shards {
+                want.axpy(1.0 / shards.len() as f32, &s[0]);
+            }
+            let mut work = shards.clone();
+            let got = allreduce_mean(&mut work);
+            if got[0].max_diff(&want) > 1e-4 {
+                return Err(format!("diff {}", got[0].max_diff(&want)));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_batch_rows_partition_stream() {
+    check(
+        cfg(20),
+        "LM batch shift-partition",
+        |rng| {
+            let seq = 4 + rng.below_usize(12);
+            let b = 1 + rng.below_usize(5);
+            let seqs: Vec<Vec<u32>> = (0..b)
+                .map(|_| (0..seq + 1).map(|_| rng.below(1000) as u32).collect())
+                .collect();
+            (seqs, seq)
+        },
+        |(seqs, seq)| {
+            let batch = Batch::from_sequences(seqs, *seq);
+            for (i, s) in seqs.iter().enumerate() {
+                for t in 0..*seq {
+                    if batch.inputs[i * seq + t] != s[t] {
+                        return Err("input mismatch".into());
+                    }
+                    if batch.targets[i * seq + t] != s[t + 1] {
+                        return Err("target not shifted".into());
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    use sumo::util::json::Json;
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bool(0.5)),
+            2 => Json::Num((rng.f64() * 2000.0 - 1000.0).round() / 8.0),
+            3 => Json::Str(format!("s{}-\"q\"-\n", rng.below(100))),
+            4 => Json::arr((0..rng.below_usize(4)).map(|_| random_json(rng, depth - 1))),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..rng.below_usize(4) {
+                    m.insert(format!("k{i}"), random_json(rng, depth - 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+    check(
+        cfg(60),
+        "json parse(dump(x)) == x",
+        |rng| random_json(rng, 3),
+        |j| {
+            let re = Json::parse(&j.dump()).map_err(|e| e.to_string())?;
+            if &re != j {
+                return Err(format!("mismatch: {} vs {}", re.dump(), j.dump()));
+            }
+            let re2 = Json::parse(&j.pretty()).map_err(|e| e.to_string())?;
+            if &re2 != j {
+                return Err("pretty mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,203 @@
+//! Integration tests over the PJRT runtime: every artifact class loads,
+//! executes, and matches its native-Rust twin.
+//!
+//! Requires `make artifacts` (skipped gracefully if artifacts are absent).
+
+use sumo::config::{OptimCfg, OptimKind};
+use sumo::coordinator::Coordinator;
+use sumo::data::{Batcher, SyntheticCorpus};
+use sumo::linalg::{newton_schulz5, orth_svd, Mat};
+use sumo::model::ParamStore;
+use sumo::runtime::literal::{literal_to_mat, mat_to_literal};
+use sumo::runtime::{ModelRunner, Runtime};
+use sumo::util::Rng;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::from_default_artifacts() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping runtime tests: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn kernel_orth_svd_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(1);
+    let m = Mat::randn(8, 64, 1.0, &mut rng);
+    let outs = rt
+        .run("orth_svd_8x64.hlo.txt", &[mat_to_literal(&m).unwrap()])
+        .unwrap();
+    let hlo = literal_to_mat(&outs[0], 8, 64).unwrap();
+    let native = orth_svd(&m);
+    assert!(
+        hlo.max_diff(&native) < 2e-3,
+        "HLO vs native orth: {}",
+        hlo.max_diff(&native)
+    );
+}
+
+#[test]
+fn kernel_ns5_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(2);
+    let m = Mat::randn(8, 64, 1.0, &mut rng);
+    let outs = rt
+        .run("ns5_8x64.hlo.txt", &[mat_to_literal(&m).unwrap()])
+        .unwrap();
+    let hlo = literal_to_mat(&outs[0], 8, 64).unwrap();
+    let native = newton_schulz5(&m, 5);
+    assert!(
+        hlo.max_diff(&native) < 2e-3,
+        "HLO vs native ns5: {}",
+        hlo.max_diff(&native)
+    );
+}
+
+#[test]
+fn model_runner_param_specs_agree_with_manifest() {
+    let Some(rt) = runtime() else { return };
+    // Constructor itself asserts manifest == ModelCfg::param_specs.
+    for id in ["nano_lm", "nano_cls2", "micro_lm", "small_lm"] {
+        ModelRunner::new(&rt, id).unwrap();
+    }
+}
+
+#[test]
+fn train_step_runs_and_loss_is_sane() {
+    let Some(rt) = runtime() else { return };
+    let runner = ModelRunner::new(&rt, "nano_lm").unwrap();
+    let params = ParamStore::init(&runner.cfg, 3);
+    let corpus = SyntheticCorpus::new(runner.cfg.vocab, 4);
+    let mut batcher = Batcher::new(corpus, runner.batch, runner.seq_len());
+    let out = runner.train_step(&params, &batcher.next()).unwrap();
+    // Fresh model on a 256-vocab: CE ≈ ln 256 ≈ 5.55.
+    assert!((out.loss - (runner.cfg.vocab as f32).ln()).abs() < 1.0, "loss {}", out.loss);
+    assert_eq!(out.grads.len(), params.len());
+    for ((name, p), g) in params.tensors.iter().zip(&out.grads) {
+        assert_eq!(p.shape(), g.shape(), "{name}");
+        assert!(g.is_finite(), "{name} grad finite");
+    }
+    // Embedding gradient must be nonzero (tied head guarantees signal).
+    assert!(out.grads[0].fro() > 0.0);
+}
+
+#[test]
+fn eval_loss_matches_train_loss_at_same_params() {
+    let Some(rt) = runtime() else { return };
+    let runner = ModelRunner::new(&rt, "nano_lm").unwrap();
+    let params = ParamStore::init(&runner.cfg, 5);
+    let corpus = SyntheticCorpus::new(runner.cfg.vocab, 6);
+    let mut batcher = Batcher::new(corpus, runner.batch, runner.seq_len());
+    let batch = batcher.next();
+    let train = runner.train_step(&params, &batch).unwrap();
+    let eval = runner.eval_loss(&params, &batch).unwrap();
+    assert!((train.loss - eval).abs() < 1e-4, "{} vs {}", train.loss, eval);
+}
+
+#[test]
+fn hlo_sumo_engine_matches_native_sumo_one_step() {
+    let Some(rt) = runtime() else { return };
+    // Native and HLO coordinators from identical seeds and identical data:
+    // after one iteration the weights must agree closely. (The rSVD bases
+    // use independent Gaussian draws, so we compare through the *projector*
+    // Q Qᵀ-invariant weight update by running with update_freq=1 and the
+    // same seed: the Omega draws differ, so we assert loss-level agreement
+    // after a few steps instead of bitwise weights.)
+    let cfg = OptimCfg::new(OptimKind::Sumo).with_lr(0.02).with_rank(4).with_update_freq(2);
+    let make_batches = |seed| {
+        let corpus = SyntheticCorpus::new(256, seed);
+        let mut b = Batcher::new(corpus, 8, 32);
+        (0..6).map(|_| b.next()).collect::<Vec<_>>()
+    };
+    let mut native = Coordinator::native(&rt, "nano_lm", &cfg, 11, 1).unwrap();
+    let mut hlo = Coordinator::hlo_sumo(&rt, "nano_lm", &cfg, 11).unwrap();
+    let batches = make_batches(77);
+    let mut native_losses = Vec::new();
+    let mut hlo_losses = Vec::new();
+    for b in &batches {
+        native_losses.push(native.train_iteration(b, 1.0).unwrap().loss);
+        hlo_losses.push(hlo.train_iteration(b, 1.0).unwrap().loss);
+    }
+    // Same init, same data: first loss identical.
+    assert!((native_losses[0] - hlo_losses[0]).abs() < 1e-4);
+    // Trajectories stay close (both are exact SVD SUMO; only the random
+    // sketches differ).
+    for (a, b) in native_losses.iter().zip(&hlo_losses) {
+        assert!((a - b).abs() < 0.15, "native {native_losses:?} hlo {hlo_losses:?}");
+    }
+}
+
+#[test]
+fn cls_train_and_eval_roundtrip() {
+    let Some(rt) = runtime() else { return };
+    let runner = ModelRunner::new(&rt, "nano_cls2").unwrap();
+    let params = ParamStore::init(&runner.cfg, 9);
+    let task = sumo::data::glue::GlueTask::by_name("RTE", runner.cfg.vocab, runner.seq_len())
+        .unwrap();
+    let (toks, labels) = task.batch("train", 0, runner.batch);
+    let out = runner.train_step_labeled(&params, &toks, &labels).unwrap();
+    assert!(out.loss.is_finite() && out.loss > 0.0);
+    let (loss, logits) = runner.eval_labeled(&params, &toks, &labels).unwrap();
+    assert!(loss.is_finite());
+    assert_eq!(logits.len(), runner.batch);
+    assert_eq!(logits[0].len(), 2);
+}
+
+#[test]
+fn sumo_update_artifact_matches_native_blocks234() {
+    // Drive the sumo_update artifact directly with a *fixed* Q and compare
+    // against the native Block 2-4 math (removes rSVD randomness entirely).
+    let Some(rt) = runtime() else { return };
+    let (m, n, r) = (256usize, 64usize, 4usize);
+    let mut rng = Rng::new(13);
+    let w = Mat::randn(m, n, 0.1, &mut rng);
+    let g = Mat::randn(m, n, 1.0, &mut rng);
+    let raw = Mat::randn(m, r, 1.0, &mut rng);
+    let (q, _) = sumo::linalg::mgs_qr(&raw);
+    let mom = Mat::randn(r, n, 0.5, &mut rng);
+    let (lr, beta, wd, gamma, alpha, o_prev) = (0.01f32, 0.9f32, 0.05f32, 1.1f32, 1.0f32, 2.0f32);
+    let outs = rt
+        .run(
+            "sumo_update_256x64_r4.hlo.txt",
+            &[
+                mat_to_literal(&w).unwrap(),
+                mat_to_literal(&mom).unwrap(),
+                mat_to_literal(&q).unwrap(),
+                mat_to_literal(&g).unwrap(),
+                xla::Literal::scalar(o_prev),
+                xla::Literal::scalar(lr),
+                xla::Literal::scalar(beta),
+                xla::Literal::scalar(wd),
+                xla::Literal::scalar(gamma),
+                xla::Literal::scalar(alpha),
+            ],
+        )
+        .unwrap();
+    let w_hlo = literal_to_mat(&outs[0], m, n).unwrap();
+    // Native twin.
+    let ghat = sumo::linalg::matmul_at_b(&q, &g);
+    let mut mom_new = mom.clone();
+    mom_new.ema(beta, 1.0 - beta, &ghat);
+    let mut o = orth_svd(&mom_new);
+    let o_norm = o.fro();
+    if o_prev > 0.0 && o_norm / o_prev > gamma {
+        o.scale(gamma * o_prev / o_norm);
+    }
+    let full = sumo::linalg::matmul(&q, &o);
+    let scale = 0.2 * (m.max(n) as f32).sqrt();
+    let mut w_native = w.clone();
+    w_native.axpy(-lr * alpha * scale, &full);
+    let mut decay = w.clone();
+    decay.scale(lr * wd);
+    w_native.axpy(-1.0, &decay);
+    assert!(
+        w_hlo.max_diff(&w_native) < 2e-3,
+        "HLO vs native sumo update: {}",
+        w_hlo.max_diff(&w_native)
+    );
+    let mom_hlo = literal_to_mat(&outs[1], r, n).unwrap();
+    assert!(mom_hlo.max_diff(&mom_new) < 1e-4);
+}
