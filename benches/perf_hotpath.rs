@@ -1,20 +1,43 @@
 //! §Perf — hot-path microbenchmarks for the optimization pass:
 //! L3 native kernels (matmul shapes of the SUMO step, orth, rSVD refresh),
-//! the full native SUMO step, the HLO SUMO step, and end-to-end train
-//! iterations per preset. Run before/after each optimization and record
-//! deltas in EXPERIMENTS.md §Perf.
+//! the full native SUMO step (zero-alloc scratch engine), the threaded
+//! multi-layer step dispatch, and end-to-end train iterations per preset.
+//! Run before/after each optimization and record deltas in EXPERIMENTS.md
+//! §Perf.
+//!
+//! Quick mode: `SUMO_BENCH_ITERS=1 cargo bench --bench perf_hotpath` caps
+//! per-kernel timing iterations (CI's bench-smoke job uses this). Output:
+//! bench_out/perf_hotpath.{md,csv} plus `BENCH_perf_hotpath.json` in the
+//! working directory — the artifact CI uploads so the perf trajectory
+//! accumulates across PRs.
 
-use sumo::bench::{fmt_ms, TableWriter};
-use sumo::config::{OptimCfg, OptimKind, TrainCfg};
+use sumo::bench::{bench_iters, TableWriter};
+use sumo::config::{OptimCfg, OptimKind};
 use sumo::coordinator::Coordinator;
 use sumo::data::{Batcher, SyntheticCorpus};
 use sumo::linalg::{matmul, matmul_at_b, newton_schulz5, orth_svd, randomized_range, Mat, RsvdOpts};
 use sumo::runtime::Runtime;
-use sumo::util::timer::time_fn;
+use sumo::util::threadpool::ThreadPool;
+use sumo::util::timer::{time_fn, Stats};
 use sumo::util::Rng;
 
+/// Emit one timing row with *numeric* cells so the JSON artifact is
+/// machine-readable (mean/ci in ms as numbers, not "x ± y ms" strings).
+fn timing_row(t: &mut TableWriter, kernel: &str, shape: &str, s: &Stats) {
+    t.row(&[
+        kernel.to_string(),
+        shape.to_string(),
+        format!("{:.4}", s.mean() * 1e3),
+        format!("{:.4}", s.ci95() * 1e3),
+        format!("{}", s.n),
+    ]);
+}
+
 fn main() -> anyhow::Result<()> {
-    let mut t = TableWriter::new("perf_hotpath", &["kernel", "shape", "time"]);
+    let mut t = TableWriter::new(
+        "perf_hotpath",
+        &["kernel", "shape", "ms_mean", "ms_ci95", "n"],
+    );
     let mut rng = Rng::new(99);
 
     // L3 linalg kernels at the shapes the small-preset SUMO step uses.
@@ -26,51 +49,87 @@ fn main() -> anyhow::Result<()> {
     ] {
         let a = Mat::randn(m, k, 1.0, &mut rng);
         let b = Mat::randn(k, n, 1.0, &mut rng);
-        let s = time_fn(1, 5, || {
+        let s = time_fn(1, bench_iters(5), || {
             let _ = matmul(&a, &b);
         });
-        t.row(&[format!("matmul {label}"), format!("{m}x{k}x{n}"), fmt_ms(&s)]);
+        timing_row(&mut t, &format!("matmul {label}"), &format!("{m}x{k}x{n}"), &s);
     }
     {
         let a = Mat::randn(2048, 256, 1.0, &mut rng);
         let q = Mat::randn(2048, 16, 1.0, &mut rng);
-        let s = time_fn(1, 5, || {
+        let s = time_fn(1, bench_iters(5), || {
             let _ = matmul_at_b(&q, &a);
         });
-        t.row(&["matmul_at_b (QᵀG)".into(), "16x2048x256".into(), fmt_ms(&s)]);
+        timing_row(&mut t, "matmul_at_b (QᵀG)", "16x2048x256", &s);
     }
     for &r in &[4usize, 16, 64] {
         let m = Mat::randn(r, 2048, 1.0, &mut rng);
-        let s = time_fn(1, 8, || {
+        let s = time_fn(1, bench_iters(8), || {
             let _ = orth_svd(&m);
         });
-        t.row(&[format!("orth_svd"), format!("{r}x2048"), fmt_ms(&s)]);
-        let s = time_fn(1, 8, || {
+        timing_row(&mut t, "orth_svd", &format!("{r}x2048"), &s);
+        let s = time_fn(1, bench_iters(8), || {
             let _ = newton_schulz5(&m, 5);
         });
-        t.row(&[format!("ns5"), format!("{r}x2048"), fmt_ms(&s)]);
+        timing_row(&mut t, "ns5", &format!("{r}x2048"), &s);
     }
     {
         let g = Mat::randn(2048, 256, 1.0, &mut rng);
-        let s = time_fn(1, 3, || {
+        let s = time_fn(1, bench_iters(3), || {
             let mut r2 = Rng::new(5);
             let _ = randomized_range(&g, 16, RsvdOpts::default(), &mut r2);
         });
-        t.row(&["rsvd range (refresh)".into(), "2048x256 r16".into(), fmt_ms(&s)]);
+        timing_row(&mut t, "rsvd range (refresh)", "2048x256 r16", &s);
     }
 
-    // Native SUMO step on the biggest layer shape.
+    // Native SUMO step on the biggest layer shape (zero-alloc steady state).
     {
         let cfg = OptimCfg::new(OptimKind::Sumo).with_rank(16).with_update_freq(100);
         let mut opt = sumo::optim::build(&cfg, &[(2048, 256)], &[true], 1);
         let mut w = Mat::randn(2048, 256, 0.1, &mut rng);
         let g = Mat::randn(2048, 256, 1.0, &mut rng);
         opt.step(0, &mut w, &g, 1.0); // allocate states + first refresh
-        let s = time_fn(2, 10, || {
+        let s = time_fn(2, bench_iters(10), || {
             opt.step(0, &mut w, &g, 1.0);
             opt.end_step();
         });
-        t.row(&["native SUMO step".into(), "2048x256 r16".into(), fmt_ms(&s)]);
+        timing_row(&mut t, "native SUMO step", "2048x256 r16", &s);
+    }
+
+    // Multi-layer step engine: serial loop vs ThreadPool::par_for dispatch
+    // over 12 independent layers (the trainer's per-iteration shape).
+    {
+        let shapes: Vec<(usize, usize)> = (0..12).map(|_| (512usize, 256usize)).collect();
+        let projected = vec![true; shapes.len()];
+        let cfg = OptimCfg::new(OptimKind::Sumo).with_rank(16).with_update_freq(10_000);
+        let grads: Vec<Mat> = shapes.iter().map(|&(m, n)| Mat::randn(m, n, 1.0, &mut rng)).collect();
+        let mut weights: Vec<Mat> = shapes.iter().map(|&(m, n)| Mat::randn(m, n, 0.1, &mut rng)).collect();
+
+        let mut serial = sumo::optim::build(&cfg, &shapes, &projected, 7);
+        // Warm up states, then time the serial per-layer loop.
+        for (i, (w, g)) in weights.iter_mut().zip(&grads).enumerate() {
+            serial.step(i, w, g, 1.0);
+        }
+        let s = time_fn(1, bench_iters(6), || {
+            for (i, (w, g)) in weights.iter_mut().zip(&grads).enumerate() {
+                serial.step(i, w, g, 1.0);
+            }
+            serial.end_step();
+        });
+        timing_row(&mut t, "step engine (serial)", "12x 512x256 r16", &s);
+
+        let pool = ThreadPool::dispatch_only();
+        let mut par = sumo::optim::build(&cfg, &shapes, &projected, 7);
+        {
+            let mut refs: Vec<&mut Mat> = weights.iter_mut().collect();
+            par.step_parallel(&pool, &mut refs, &grads, 1.0); // warm up
+        }
+        let s = time_fn(1, bench_iters(6), || {
+            let mut refs: Vec<&mut Mat> = weights.iter_mut().collect();
+            par.step_parallel(&pool, &mut refs, &grads, 1.0);
+            par.end_step();
+        });
+        timing_row(&mut t, &format!("step engine (par x{})", pool.size()), "12x 512x256 r16", &s);
     }
 
     // End-to-end iterations (fwd/bwd via PJRT + optimizer).
@@ -86,30 +145,38 @@ fn main() -> anyhow::Result<()> {
             let mut batcher = Batcher::new(corpus, coord.runner.batch, coord.runner.seq_len());
             let warm = batcher.next();
             coord.train_iteration(&warm, 1.0)?; // compile
-            let mut batches: Vec<_> = (0..4).map(|_| batcher.next()).collect();
+            let batches: Vec<_> = (0..4).map(|_| batcher.next()).collect();
             let mut i = 0;
-            let s = time_fn(0, 4, || {
+            let s = time_fn(0, bench_iters(4), || {
                 let b = batches[i % batches.len()].clone();
                 coord.train_iteration(&b, 1.0).unwrap();
                 i += 1;
             });
-            let _ = &mut batches;
-            t.row(&[format!("e2e train step (native)"), model.clone(), fmt_ms(&s)]);
+            timing_row(&mut t, "e2e train step (native)", &model, &s);
             // HLO engine for presets with artifacts.
             if sumo::runtime::HloSumo::new(&rt, &coord.params, &cfg, 1).is_ok() {
                 let mut hcoord = Coordinator::hlo_sumo(&rt, &model, &cfg, 1)?;
                 hcoord.train_iteration(&warm, 1.0)?;
                 let mut j = 0;
                 let batches2: Vec<_> = (0..4).map(|_| batcher.next()).collect();
-                let s = time_fn(0, 4, || {
+                let s = time_fn(0, bench_iters(4), || {
                     let b = batches2[j % batches2.len()].clone();
                     hcoord.train_iteration(&b, 1.0).unwrap();
                     j += 1;
                 });
-                t.row(&["e2e train step (hlo sumo)".into(), model.clone(), fmt_ms(&s)]);
+                timing_row(&mut t, "e2e train step (hlo sumo)", &model, &s);
             }
         }
+    } else {
+        eprintln!("artifacts absent: skipping e2e rows (kernel rows above are complete)");
     }
     t.finish().unwrap();
+    // Machine-readable artifact for CI's perf-trajectory upload. Cargo runs
+    // bench binaries with CWD = the package root (rust/), so CI points
+    // SUMO_BENCH_JSON at the workspace root for a stable upload path.
+    let json_path = std::env::var("SUMO_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_perf_hotpath.json".to_string());
+    t.write_json(&json_path).unwrap();
+    println!("wrote {json_path}");
     Ok(())
 }

@@ -10,8 +10,15 @@ use sumo::util::timer::time_fn;
 use sumo::util::Rng;
 
 /// §3.1 FLOP models (m = rank of the subspace matrix, n = layer width).
+/// `svd_flops` models the crate's actual exact-orth implementation — f64
+/// one-sided (Hestenes) Jacobi: ~SWEEPS cyclic sweeps over k(k−1)/2 row
+/// pairs, each costing ≈12·l flops (three fused dot products plus a
+/// two-row rotation), plus the final Wᵀ·Â back-multiply (2k²l).
 fn svd_flops(m: u64, n: u64) -> u64 {
-    4 * m * n * n.min(m) + 8 * m.min(n).pow(3) + n * m * m + n * n.min(m) * m
+    const SWEEPS: u64 = 8;
+    let k = m.min(n);
+    let l = m.max(n);
+    SWEEPS * (k * k.saturating_sub(1) / 2) * 12 * l + 2 * k * k * l
 }
 
 fn ns5_flops(m: u64, n: u64) -> u64 {

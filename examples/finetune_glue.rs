@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
     let mut results = Vec::new();
     for kind in [OptimKind::GaLore, OptimKind::SumoNs5, OptimKind::Sumo] {
         let optim = OptimCfg::new(kind)
-            .with_lr(if kind == OptimKind::GaLore { 0.02 } else { 0.02 })
+            .with_lr(0.02)
             .with_rank(8)
             .with_update_freq(50);
         let train = TrainCfg {

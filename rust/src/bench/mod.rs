@@ -32,3 +32,17 @@ pub fn bench_scale() -> f64 {
 pub fn scaled(steps: usize) -> usize {
     ((steps as f64 * bench_scale()).round() as usize).max(4)
 }
+
+/// Per-kernel timing iterations, capped by `SUMO_BENCH_ITERS` when set.
+/// The CI bench-smoke job exports `SUMO_BENCH_ITERS=1` so `perf_hotpath`
+/// finishes in seconds while still producing a well-formed measurement
+/// artifact for the perf trajectory.
+pub fn bench_iters(default: usize) -> usize {
+    match std::env::var("SUMO_BENCH_ITERS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+    {
+        Some(cap) => default.min(cap.max(1)),
+        None => default,
+    }
+}

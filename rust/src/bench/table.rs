@@ -1,9 +1,13 @@
 //! Markdown table emitter for the bench harness: prints the paper-style
-//! rows to stdout and mirrors them to bench_out/<name>.md + .csv.
+//! rows to stdout and mirrors them to bench_out/<name>.md + .csv, with an
+//! optional JSON export (`Json` rows keyed by header) for machine-read
+//! artifacts like CI's `BENCH_perf_hotpath.json`.
 
 use std::fs::File;
 use std::io::Write;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
 
 /// Collects rows and renders an aligned markdown table.
 pub struct TableWriter {
@@ -61,6 +65,45 @@ impl TableWriter {
         out
     }
 
+    /// The table as JSON: `{"name": ..., "header": [...], "rows": [{col: cell}]}`.
+    /// Numeric-looking cells are emitted as numbers so downstream tooling
+    /// can chart the perf trajectory without re-parsing strings.
+    pub fn json(&self) -> Json {
+        let rows = self.rows.iter().map(|row| {
+            Json::Obj(
+                self.header
+                    .iter()
+                    .zip(row.iter())
+                    .map(|(k, v)| {
+                        let cell = match v.parse::<f64>() {
+                            Ok(x) if x.is_finite() => Json::Num(x),
+                            _ => Json::str(v),
+                        };
+                        (k.clone(), cell)
+                    })
+                    .collect(),
+            )
+        });
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            (
+                "header",
+                Json::arr(self.header.iter().map(|h| Json::str(h))),
+            ),
+            ("rows", Json::arr(rows)),
+        ])
+    }
+
+    /// Write the JSON form to an arbitrary path (CI artifact export).
+    pub fn write_json<P: AsRef<Path>>(&self, path: P) -> std::io::Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.json().pretty())
+    }
+
     /// Print to stdout and write .md + .csv under bench_out/.
     pub fn finish(&self) -> std::io::Result<()> {
         let md = self.markdown();
@@ -99,5 +142,18 @@ mod tests {
     fn arity_checked() {
         let mut t = TableWriter::new("x", &["a", "b"]);
         t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn json_export_types_cells() {
+        let mut t = TableWriter::new("j", &["kernel", "ms"]);
+        t.row(&["matmul".into(), "1.25".into()]);
+        let j = t.json();
+        assert_eq!(j.get("name").as_str(), Some("j"));
+        let row = j.get("rows").at(0);
+        assert_eq!(row.get("kernel").as_str(), Some("matmul"));
+        assert_eq!(row.get("ms").as_f64(), Some(1.25));
+        // Round-trips through the parser.
+        assert_eq!(crate::util::json::Json::parse(&j.pretty()).unwrap(), j);
     }
 }

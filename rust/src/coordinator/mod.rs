@@ -15,6 +15,7 @@ use crate::linalg::Mat;
 use crate::model::ParamStore;
 use crate::optim::{self, Optimizer};
 use crate::runtime::{HloSumo, ModelRunner, Runtime};
+use crate::util::threadpool::ThreadPool;
 
 pub use allreduce::allreduce_mean;
 
@@ -41,6 +42,9 @@ pub struct Coordinator<'rt> {
     engine: Engine<'rt>,
     /// Data-parallel shards (batch splits, all-reduced).
     pub dp_shards: usize,
+    /// Worker pool for per-layer optimizer dispatch: independent layers
+    /// step concurrently with results bitwise identical to the serial loop.
+    pool: ThreadPool,
     step: usize,
 }
 
@@ -63,6 +67,7 @@ impl<'rt> Coordinator<'rt> {
             params,
             engine,
             dp_shards: dp_shards.max(1),
+            pool: ThreadPool::dispatch_only(),
             step: 0,
         })
     }
@@ -86,6 +91,7 @@ impl<'rt> Coordinator<'rt> {
             params,
             engine,
             dp_shards: 1,
+            pool: ThreadPool::dispatch_only(),
             step: 0,
         })
     }
@@ -160,30 +166,37 @@ impl<'rt> Coordinator<'rt> {
         Ok((loss_sum / self.dp_shards as f32, grads))
     }
 
-    /// Per-layer update dispatch, reverse (backprop) order; each gradient is
-    /// dropped as soon as its layer is updated.
+    /// Per-layer update dispatch. Independent layers step concurrently
+    /// through the coordinator's worker pool (`ThreadPool::par_for`
+    /// underneath); per-layer arithmetic is serial, so the result is
+    /// bitwise identical to the sequential reverse-order loop this
+    /// replaces. The trade against §3.2's drop-as-consumed pattern: all
+    /// gradients of one iteration stay alive until the parallel dispatch
+    /// returns (one full gradient set, same as the backward pass itself
+    /// produced).
     fn apply_updates(
         &mut self,
-        mut grads: Vec<Mat>,
+        grads: Vec<Mat>,
         lr_mult: f32,
         loss: f32,
     ) -> crate::Result<StepMetrics> {
         let gn2: f64 = grads.iter().map(|g| g.sumsq()).sum();
-        for idx in (0..grads.len()).rev() {
-            let g = std::mem::replace(&mut grads[idx], Mat::zeros(0, 0));
-            let w = &mut self.params.tensors[idx].1;
-            match &mut self.engine {
-                Engine::Native(opt) => {
-                    opt.step(idx, w, &g, lr_mult);
+        match &mut self.engine {
+            Engine::Native(opt) => {
+                let mut weights: Vec<&mut Mat> =
+                    self.params.tensors.iter_mut().map(|(_, t)| t).collect();
+                opt.step_parallel(&self.pool, &mut weights, &grads, lr_mult);
+                for (idx, (_, w)) in self.params.tensors.iter_mut().enumerate() {
                     opt.finalize_weights(idx, w);
                 }
-                Engine::Hlo(opt) => opt.step(idx, w, &g, lr_mult)?,
+                opt.end_step();
             }
-            // g dropped here — the per-layer memory pattern of §3.2.
-        }
-        match &mut self.engine {
-            Engine::Native(opt) => opt.end_step(),
-            Engine::Hlo(opt) => opt.end_step(),
+            Engine::Hlo(opt) => {
+                let mut weights: Vec<&mut Mat> =
+                    self.params.tensors.iter_mut().map(|(_, t)| t).collect();
+                opt.step_parallel(&self.pool, &mut weights, &grads, lr_mult)?;
+                opt.end_step();
+            }
         }
         self.step += 1;
         Ok(StepMetrics {

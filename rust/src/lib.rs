@@ -26,6 +26,16 @@
 //! cargo run --release --example quickstart
 //! ```
 
+// Style allowances for hand-written numeric kernels: index-based loops over
+// matrix dimensions mirror the math and the Pallas twins; "fixing" them into
+// iterator chains obscures the indexing the comments reference.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::type_complexity,
+    clippy::many_single_char_names
+)]
+
 pub mod bench;
 pub mod cli;
 pub mod config;

@@ -26,28 +26,33 @@ pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
     assert_eq!((c.rows, c.cols), (a.rows, b.cols));
     c.data.iter_mut().for_each(|x| *x = 0.0);
     let work = a.rows * b.cols;
-    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    if work >= PAR_THRESHOLD && threads > 1 && a.rows >= threads {
-        let rows_per = a.rows.div_ceil(threads);
-        let cols = c.cols;
-        let chunks: Vec<(usize, &mut [f32])> = c
-            .data
-            .chunks_mut(rows_per * cols)
-            .enumerate()
-            .map(|(i, ch)| (i * rows_per, ch))
-            .collect();
-        std::thread::scope(|scope| {
-            for (row0, chunk) in chunks {
-                scope.spawn(move || {
-                    let nrows = chunk.len() / cols;
-                    mm_block(a, b, chunk, row0, nrows);
-                });
-            }
-        });
-    } else {
-        let nrows = a.rows;
-        mm_block(a, b, &mut c.data, 0, nrows);
+    // Only probe parallelism on large outputs: `available_parallelism` can
+    // read cgroup files on Linux (allocates), and the zero-alloc SUMO step
+    // path must stay allocation-free on its (small) steady-state shapes.
+    if work >= PAR_THRESHOLD {
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        if threads > 1 && a.rows >= threads {
+            let rows_per = a.rows.div_ceil(threads);
+            let cols = c.cols;
+            let chunks: Vec<(usize, &mut [f32])> = c
+                .data
+                .chunks_mut(rows_per * cols)
+                .enumerate()
+                .map(|(i, ch)| (i * rows_per, ch))
+                .collect();
+            std::thread::scope(|scope| {
+                for (row0, chunk) in chunks {
+                    scope.spawn(move || {
+                        let nrows = chunk.len() / cols;
+                        mm_block(a, b, chunk, row0, nrows);
+                    });
+                }
+            });
+            return;
+        }
     }
+    let nrows = a.rows;
+    mm_block(a, b, &mut c.data, 0, nrows);
 }
 
 /// Serial i-k-j kernel over rows [row0, row0+nrows) of the output.
@@ -85,8 +90,17 @@ fn mm_block(a: &Mat, b: &Mat, c: &mut [f32], row0: usize, nrows: usize) {
 
 /// C = Aᵀ · B without materializing Aᵀ (the Qᵀ·G projection shape).
 pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
-    assert_eq!(a.rows, b.rows, "at_b dims: {:?}ᵀ x {:?}", a.shape(), b.shape());
     let mut c = Mat::zeros(a.cols, b.cols);
+    matmul_at_b_into(a, b, &mut c);
+    c
+}
+
+/// C = Aᵀ · B written into a preallocated output (zeroed here). The
+/// zero-allocation twin of [`matmul_at_b`] used by the SUMO step scratch.
+pub fn matmul_at_b_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.rows, b.rows, "at_b dims: {:?}ᵀ x {:?}", a.shape(), b.shape());
+    assert_eq!((c.rows, c.cols), (a.cols, b.cols));
+    c.data.iter_mut().for_each(|x| *x = 0.0);
     // C[i,j] = Σ_k A[k,i] B[k,j]: accumulate rank-1 updates row-by-row of A/B;
     // inner loops stay unit-stride.
     for k in 0..a.rows {
@@ -102,14 +116,21 @@ pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
             }
         }
     }
-    c
 }
 
 /// C = A · Bᵀ without materializing Bᵀ (dot-product form; both operands
 /// walked along rows).
 pub fn matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
-    assert_eq!(a.cols, b.cols, "a_bt dims: {:?} x {:?}ᵀ", a.shape(), b.shape());
     let mut c = Mat::zeros(a.rows, b.rows);
+    matmul_a_bt_into(a, b, &mut c);
+    c
+}
+
+/// C = A · Bᵀ written into a preallocated output. The zero-allocation twin
+/// of [`matmul_a_bt`] used by the SUMO step scratch.
+pub fn matmul_a_bt_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.cols, b.cols, "a_bt dims: {:?} x {:?}ᵀ", a.shape(), b.shape());
+    assert_eq!((c.rows, c.cols), (a.rows, b.rows));
     for i in 0..a.rows {
         let arow = a.row(i);
         for j in 0..b.rows {
@@ -121,7 +142,6 @@ pub fn matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
             c[(i, j)] = acc as f32;
         }
     }
-    c
 }
 
 #[cfg(test)]
@@ -173,6 +193,21 @@ mod tests {
         let c = matmul_a_bt(&a, &b);
         let r = matmul(&a, &b.t());
         assert!(c.max_diff(&r) < 1e-4);
+    }
+
+    #[test]
+    fn into_variants_overwrite_stale_output() {
+        let mut rng = Rng::new(11);
+        let a = Mat::randn(9, 6, 1.0, &mut rng);
+        let b = Mat::randn(9, 4, 1.0, &mut rng);
+        let mut c = Mat::randn(6, 4, 1.0, &mut rng); // stale garbage
+        matmul_at_b_into(&a, &b, &mut c);
+        assert!(c.max_diff(&matmul(&a.t(), &b)) < 1e-4);
+        let x = Mat::randn(5, 7, 1.0, &mut rng);
+        let y = Mat::randn(3, 7, 1.0, &mut rng);
+        let mut z = Mat::randn(5, 3, 1.0, &mut rng);
+        matmul_a_bt_into(&x, &y, &mut z);
+        assert!(z.max_diff(&matmul(&x, &y.t())) < 1e-4);
     }
 
     #[test]

@@ -18,9 +18,11 @@ pub mod rsvd;
 
 pub use jacobi::{eigh_jacobi, svd_jacobi};
 pub use mat::Mat;
-pub use matmul::{matmul, matmul_at_b, matmul_a_bt};
-pub use newton_schulz::newton_schulz5;
+pub use matmul::{
+    matmul, matmul_a_bt, matmul_a_bt_into, matmul_at_b, matmul_at_b_into, matmul_into,
+};
+pub use newton_schulz::{newton_schulz5, newton_schulz5_into, Ns5Scratch};
 pub use norms::{cond_gram, fro_norm, spectral_norm};
-pub use orth::orth_svd;
+pub use orth::{orth_svd, orth_svd_fast, orth_svd_into, OrthScratch};
 pub use qr::mgs_qr;
 pub use rsvd::{randomized_range, rsvd, RsvdOpts};

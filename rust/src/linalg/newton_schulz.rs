@@ -6,32 +6,82 @@
 //! the "Newton-Schulz5" the paper analyzes; Lemma 3.2 bounds its error by
 //! √r·(1−1/κ)^{2^i}, which `benches/lemma32_ns_error.rs` validates.
 
+use super::matmul::{matmul_a_bt_into, matmul_at_b_into, matmul_into};
 use super::{matmul, matmul_a_bt, Mat};
 
 /// Muon's tuned quintic coefficients.
 pub const NS_COEFFS: (f32, f32, f32) = (3.4445, -4.7750, 2.0315);
 
+/// Preallocated workspace for [`newton_schulz5_into`], sized for one moment
+/// shape. Construct once per layer; reuse every step.
+pub struct Ns5Scratch {
+    /// k×k Gram (k = smaller side).
+    g: Mat,
+    /// k×k Gram square.
+    g2: Mat,
+    /// Same shape as the input: the B·X (or X·B) product.
+    bx: Mat,
+}
+
+impl Ns5Scratch {
+    pub fn new(rows: usize, cols: usize) -> Ns5Scratch {
+        let k = rows.min(cols).max(1);
+        Ns5Scratch {
+            g: Mat::zeros(k, k),
+            g2: Mat::zeros(k, k),
+            bx: Mat::zeros(rows, cols),
+        }
+    }
+}
+
 /// Run `iters` Newton-Schulz iterations on `m` (r×n with r ≤ n; the
 /// transpose convention is applied otherwise). Returns the approximate
-/// polar factor.
+/// polar factor. Allocating convenience wrapper over
+/// [`newton_schulz5_into`].
 pub fn newton_schulz5(m: &Mat, iters: usize) -> Mat {
-    let (r, n) = m.shape();
-    if r > n {
-        return newton_schulz5(&m.t(), iters).t();
-    }
+    let mut out = Mat::zeros(m.rows, m.cols);
+    let mut ws = Ns5Scratch::new(m.rows, m.cols);
+    newton_schulz5_into(m, iters, &mut out, &mut ws);
+    out
+}
+
+/// Newton-Schulz5 written into a preallocated output using scratch buffers.
+/// Performs no heap allocations — the SUMO-NS5 ablation's hot path.
+///
+/// The wide case (rows ≤ cols) iterates `X ← a·X + (b·A + c·A²)·X` with
+/// `A = X Xᵀ`; the tall case uses `A = XᵀX` and right-multiplies, which is
+/// algebraically the transpose-convention of the wide case (A is symmetric).
+pub fn newton_schulz5_into(m: &Mat, iters: usize, out: &mut Mat, ws: &mut Ns5Scratch) {
+    let (rows, cols) = m.shape();
+    assert_eq!((out.rows, out.cols), (rows, cols), "ns5 output shape");
+    let k = rows.min(cols).max(1);
+    assert_eq!(ws.g.rows, k, "scratch sized for a different shape");
+    assert_eq!((ws.bx.rows, ws.bx.cols), (rows, cols));
+    let wide = rows <= cols;
     let (a, b, c) = NS_COEFFS;
     let norm = m.fro().max(1e-30);
-    let mut x = m.clone();
-    x.scale(1.0 / norm);
+    out.data.copy_from_slice(&m.data);
+    out.scale(1.0 / norm);
     for _ in 0..iters {
-        // A = X Xᵀ (r×r), B' = b·A + c·A², X = a·X + B'X.
-        let g = matmul_a_bt(&x, &x);
-        let g2 = matmul(&g, &g);
-        let bmat = g.lin_comb(b, c, &g2);
-        let bx = matmul(&bmat, &x);
-        x = x.lin_comb(a, 1.0, &bx);
+        if wide {
+            matmul_a_bt_into(out, out, &mut ws.g); // A = X Xᵀ
+        } else {
+            matmul_at_b_into(out, out, &mut ws.g); // A = Xᵀ X
+        }
+        matmul_into(&ws.g, &ws.g, &mut ws.g2);
+        // B = b·A + c·A² in place (A is no longer needed this iteration).
+        for (gi, &g2i) in ws.g.data.iter_mut().zip(ws.g2.data.iter()) {
+            *gi = b * *gi + c * g2i;
+        }
+        if wide {
+            matmul_into(&ws.g, out, &mut ws.bx); // B·X
+        } else {
+            matmul_into(out, &ws.g, &mut ws.bx); // X·B (B symmetric)
+        }
+        for (xi, &bxi) in out.data.iter_mut().zip(ws.bx.data.iter()) {
+            *xi = a * *xi + bxi;
+        }
     }
-    x
 }
 
 /// Classical (cubic) Newton-Schulz: X ← 1.5·X − 0.5·(X Xᵀ)X. Converges
@@ -126,5 +176,20 @@ mod tests {
         let o = newton_schulz5(&m, 5);
         assert_eq!(o.shape(), (64, 8));
         assert!(o.is_finite());
+        // The tall path is the algebraic transpose of the wide path.
+        let o_t = newton_schulz5(&m.t(), 5).t();
+        assert!(o.max_diff(&o_t) < 1e-4, "diff={}", o.max_diff(&o_t));
+    }
+
+    #[test]
+    fn into_variant_reuses_scratch_and_matches() {
+        let mut rng = Rng::new(83);
+        let mut ws = Ns5Scratch::new(6, 40);
+        let mut out = Mat::zeros(6, 40);
+        for _ in 0..3 {
+            let m = Mat::randn(6, 40, 1.0, &mut rng);
+            newton_schulz5_into(&m, 5, &mut out, &mut ws);
+            assert_eq!(out.max_diff(&newton_schulz5(&m, 5)), 0.0);
+        }
     }
 }

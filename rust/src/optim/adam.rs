@@ -3,6 +3,7 @@
 
 use crate::config::{OptimCfg, OptimKind};
 use crate::linalg::Mat;
+use crate::util::threadpool::ThreadPool;
 
 use super::Optimizer;
 
@@ -89,6 +90,19 @@ impl Optimizer for Adam {
     fn step(&mut self, idx: usize, w: &mut Mat, g: &Mat, lr_mult: f32) {
         let lr = self.cfg.lr * lr_mult;
         self.layers[idx].step(w, g, lr);
+    }
+
+    fn step_parallel(
+        &mut self,
+        pool: &ThreadPool,
+        weights: &mut [&mut Mat],
+        grads: &[Mat],
+        lr_mult: f32,
+    ) {
+        let lr = self.cfg.lr * lr_mult;
+        super::par_step_layers(pool, &mut self.layers, weights, grads, |_idx, layer, w, g| {
+            layer.step(w, g, lr);
+        });
     }
 
     fn end_step(&mut self) {

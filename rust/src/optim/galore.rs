@@ -5,6 +5,7 @@
 
 use crate::config::OptimCfg;
 use crate::linalg::Mat;
+use crate::util::threadpool::ThreadPool;
 use crate::util::Rng;
 
 use super::adam::DenseAdam;
@@ -20,6 +21,46 @@ struct ProjState {
 enum LayerState {
     Projected(ProjState),
     Dense(DenseAdam),
+}
+
+/// One GaLore layer update; shared by the serial and threaded step paths.
+fn step_layer(
+    cfg: &OptimCfg,
+    t: usize,
+    (mr, nr): (usize, usize),
+    layer: &mut LayerState,
+    w: &mut Mat,
+    g: &Mat,
+    lr: f32,
+) {
+    match layer {
+        LayerState::Dense(adam) => adam.step(w, g, lr),
+        LayerState::Projected(p) => {
+            if p.subspace.due() {
+                p.m = p.subspace.refresh(g, p.m.take());
+                // Second moment is *not* rotation-equivariant; GaLore
+                // keeps it (officially) — we keep it too for parity.
+            }
+            let ghat = p.subspace.project(g);
+            let (sm, sn) = p.subspace.moment_shape(mr, nr);
+            let m = p.m.get_or_insert_with(|| Mat::zeros(sm, sn));
+            let v = p.v.get_or_insert_with(|| Mat::zeros(sm, sn));
+            let (b1, b2, eps) = (cfg.beta1, cfg.beta2, cfg.eps);
+            let bc1 = 1.0 - b1.powi(t as i32);
+            let bc2 = 1.0 - b2.powi(t as i32);
+            let mut upd = Mat::zeros(sm, sn);
+            for i in 0..ghat.data.len() {
+                m.data[i] = b1 * m.data[i] + (1.0 - b1) * ghat.data[i];
+                v.data[i] = b2 * v.data[i] + (1.0 - b2) * ghat.data[i] * ghat.data[i];
+                upd.data[i] = (m.data[i] / bc1) / ((v.data[i] / bc2).sqrt() + eps);
+            }
+            let full = p.subspace.back_project(&upd);
+            w.axpy(-lr * cfg.scale, &full);
+            if cfg.weight_decay > 0.0 {
+                w.scale(1.0 - lr * cfg.weight_decay);
+            }
+        }
+    }
 }
 
 pub struct GaLore {
@@ -96,35 +137,21 @@ impl Optimizer for GaLore {
 
     fn step(&mut self, idx: usize, w: &mut Mat, g: &Mat, lr_mult: f32) {
         let lr = self.cfg.lr * lr_mult;
-        let (mr, nr) = self.shapes[idx];
-        match &mut self.layers[idx] {
-            LayerState::Dense(adam) => adam.step(w, g, lr),
-            LayerState::Projected(p) => {
-                if p.subspace.due() {
-                    p.m = p.subspace.refresh(g, p.m.take());
-                    // Second moment is *not* rotation-equivariant; GaLore
-                    // keeps it (officially) — we keep it too for parity.
-                }
-                let ghat = p.subspace.project(g);
-                let (sm, sn) = p.subspace.moment_shape(mr, nr);
-                let m = p.m.get_or_insert_with(|| Mat::zeros(sm, sn));
-                let v = p.v.get_or_insert_with(|| Mat::zeros(sm, sn));
-                let (b1, b2, eps) = (self.cfg.beta1, self.cfg.beta2, self.cfg.eps);
-                let bc1 = 1.0 - b1.powi(self.t as i32);
-                let bc2 = 1.0 - b2.powi(self.t as i32);
-                let mut upd = Mat::zeros(sm, sn);
-                for i in 0..ghat.data.len() {
-                    m.data[i] = b1 * m.data[i] + (1.0 - b1) * ghat.data[i];
-                    v.data[i] = b2 * v.data[i] + (1.0 - b2) * ghat.data[i] * ghat.data[i];
-                    upd.data[i] = (m.data[i] / bc1) / ((v.data[i] / bc2).sqrt() + eps);
-                }
-                let full = p.subspace.back_project(&upd);
-                w.axpy(-lr * self.cfg.scale, &full);
-                if self.cfg.weight_decay > 0.0 {
-                    w.scale(1.0 - lr * self.cfg.weight_decay);
-                }
-            }
-        }
+        step_layer(&self.cfg, self.t, self.shapes[idx], &mut self.layers[idx], w, g, lr);
+    }
+
+    fn step_parallel(
+        &mut self,
+        pool: &ThreadPool,
+        weights: &mut [&mut Mat],
+        grads: &[Mat],
+        lr_mult: f32,
+    ) {
+        let lr = self.cfg.lr * lr_mult;
+        let (cfg, t, shapes) = (&self.cfg, self.t, &self.shapes);
+        super::par_step_layers(pool, &mut self.layers, weights, grads, |idx, layer, w, g| {
+            step_layer(cfg, t, shapes[idx], layer, w, g, lr);
+        });
     }
 
     fn end_step(&mut self) {

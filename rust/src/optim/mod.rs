@@ -20,6 +20,7 @@ pub mod sumo;
 
 use crate::config::{OptimCfg, OptimKind};
 use crate::linalg::Mat;
+use crate::util::threadpool::ThreadPool;
 
 pub use limiter::NormGrowthLimiter;
 pub use memory::{flops_per_step, state_memory_floats};
@@ -34,6 +35,29 @@ pub trait Optimizer: Send {
     /// Update layer `idx` in place given its gradient. `lr_mult` is the
     /// schedule multiplier (peak LR lives in the config).
     fn step(&mut self, idx: usize, w: &mut Mat, g: &Mat, lr_mult: f32);
+
+    /// Step every layer of one iteration, dispatching independent layers
+    /// across the pool via `ThreadPool::par_for`. Per-layer state is
+    /// independent for the optimizers that override this (SUMO, GaLore,
+    /// Adam — each layer owns its subspace RNG), so their threaded paths
+    /// are bitwise identical to calling [`Optimizer::step`] serially per
+    /// layer (`tests/parallel_step.rs` pins this down). The default
+    /// implementation is a serial loop in **reverse (backprop) order** —
+    /// exactly the coordinator loop it replaced — because LoRA-family
+    /// optimizers draw from a shared RNG inside `step` and must see the
+    /// same draw order as before for seeded reproducibility.
+    fn step_parallel(
+        &mut self,
+        _pool: &ThreadPool,
+        weights: &mut [&mut Mat],
+        grads: &[Mat],
+        lr_mult: f32,
+    ) {
+        assert_eq!(weights.len(), grads.len());
+        for idx in (0..weights.len()).rev() {
+            self.step(idx, &mut *weights[idx], &grads[idx], lr_mult);
+        }
+    }
 
     /// Advance the global step counter (bias correction, refresh cadence).
     fn end_step(&mut self);
@@ -55,6 +79,34 @@ pub trait Optimizer: Send {
     fn as_muon(&self) -> Option<&muon::Muon> {
         None
     }
+}
+
+/// Zip per-layer optimizer state with weights and gradients and dispatch
+/// the zipped tasks across the pool — the shared boilerplate behind every
+/// `step_parallel` override (SUMO, GaLore, Adam, and the HLO engine).
+/// `f(idx, layer, w, g)` runs exactly once per layer, concurrently.
+pub(crate) fn par_step_layers<S, F>(
+    pool: &ThreadPool,
+    layers: &mut [S],
+    weights: &mut [&mut Mat],
+    grads: &[Mat],
+    f: F,
+) where
+    S: Send,
+    F: Fn(usize, &mut S, &mut Mat, &Mat) + Sync + Send,
+{
+    assert_eq!(weights.len(), grads.len());
+    assert_eq!(weights.len(), layers.len());
+    let mut tasks: Vec<(usize, &mut S, &mut Mat, &Mat)> = layers
+        .iter_mut()
+        .zip(weights.iter_mut())
+        .zip(grads.iter())
+        .enumerate()
+        .map(|(i, ((layer, w), g))| (i, layer, &mut **w, g))
+        .collect();
+    pool.par_for_each_mut(&mut tasks, |_, (idx, layer, w, g)| {
+        f(*idx, &mut **layer, &mut **w, &**g);
+    });
 }
 
 /// Build the optimizer named by `cfg` for the given layer shapes.

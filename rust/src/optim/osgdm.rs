@@ -3,7 +3,7 @@
 //! builds on (orthogonalization before, rather than after, the moment EMA).
 
 use crate::config::OptimCfg;
-use crate::linalg::{orth_svd, Mat};
+use crate::linalg::{orth_svd_fast, Mat};
 
 use super::Optimizer;
 
@@ -33,10 +33,13 @@ impl Optimizer for Osgdm {
         let lr = self.cfg.lr * lr_mult;
         let mom = &mut self.moments[idx];
         // O = orth(G); M ← γM + ηO; W ← W − M   (paper's OSGDM recap).
+        // Gram-route polar factor: fresh gradients are well-conditioned, so
+        // the full-space f64 one-sided Jacobi's accuracy isn't needed and
+        // its ~10x cost at these (large-k) shapes would be pure overhead.
         let o = if m == 1 || n == 1 {
             g.clone()
         } else {
-            orth_svd(g)
+            orth_svd_fast(g)
         };
         mom.ema(self.cfg.beta1, lr, &o);
         w.axpy(-1.0, mom);

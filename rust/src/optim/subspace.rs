@@ -5,7 +5,10 @@
 //! the first moment between the old and new subspaces with
 //! R = Q_newᵀ Q_old (the paper's Block 1.1).
 
-use crate::linalg::{matmul, matmul_at_b, randomized_range, Mat, RsvdOpts};
+use crate::linalg::{
+    matmul, matmul_a_bt_into, matmul_at_b, matmul_at_b_into, matmul_into, randomized_range, Mat,
+    RsvdOpts,
+};
 use crate::util::Rng;
 
 /// Which side of the weight matrix the basis multiplies.
@@ -92,12 +95,31 @@ impl SubspaceState {
         }
     }
 
+    /// Project into a preallocated output (zero heap allocations — the hot
+    /// path of the SUMO step engine).
+    pub fn project_into(&self, g: &Mat, out: &mut Mat) {
+        let q = self.q.as_ref().expect("basis not initialized");
+        match self.side {
+            Side::Left => matmul_at_b_into(q, g, out),
+            Side::Right => matmul_into(g, q, out),
+        }
+    }
+
     /// Map a subspace update back to the full space.
     pub fn back_project(&self, o: &Mat) -> Mat {
         let q = self.q.as_ref().expect("basis not initialized");
         match self.side {
             Side::Left => matmul(q, o),
             Side::Right => crate::linalg::matmul_a_bt(o, q),
+        }
+    }
+
+    /// Back-project into a preallocated output (zero heap allocations).
+    pub fn back_project_into(&self, o: &Mat, out: &mut Mat) {
+        let q = self.q.as_ref().expect("basis not initialized");
+        match self.side {
+            Side::Left => matmul_into(q, o, out),
+            Side::Right => matmul_a_bt_into(o, q, out),
         }
     }
 
@@ -183,6 +205,24 @@ mod tests {
         // Back-projected content identical.
         let b0 = matmul(ss.q.as_ref().unwrap(), &m1);
         assert!(b0.max_diff(&g) < 1e-2 * (1.0 + g.max_abs()));
+    }
+
+    #[test]
+    fn into_variants_match_allocating_path() {
+        let mut rng = Rng::new(21);
+        for (m, n) in [(64usize, 32usize), (32, 64)] {
+            let g = Mat::randn(m, n, 1.0, &mut rng);
+            let mut ss = SubspaceState::new(m, n, 4, 10, Rng::new(22));
+            ss.refresh(&g, None);
+            let ghat = ss.project(&g);
+            let mut ghat2 = Mat::zeros(ghat.rows, ghat.cols);
+            ss.project_into(&g, &mut ghat2);
+            assert_eq!(ghat.max_diff(&ghat2), 0.0);
+            let back = ss.back_project(&ghat);
+            let mut back2 = Mat::zeros(m, n);
+            ss.back_project_into(&ghat, &mut back2);
+            assert_eq!(back.max_diff(&back2), 0.0);
+        }
     }
 
     #[test]

@@ -15,7 +15,8 @@
 //! layer — the paper's Table 1 "nr + mr" row.
 
 use crate::config::OptimCfg;
-use crate::linalg::{newton_schulz5, orth_svd, Mat};
+use crate::linalg::{newton_schulz5_into, orth_svd_into, Mat, Ns5Scratch, OrthScratch};
+use crate::util::threadpool::ThreadPool;
 use crate::util::Rng;
 
 use super::adam::DenseAdam;
@@ -28,13 +29,101 @@ pub fn rms_scale(m: usize, n: usize) -> f32 {
     0.2 * (m.max(n) as f32).sqrt()
 }
 
+/// Orthogonalization workspace — exact SVD or the NS5 ablation, matching
+/// the optimizer's mode so only one set of buffers is held per layer.
+enum OrthWs {
+    Svd(OrthScratch),
+    Ns5(Ns5Scratch),
+}
+
+/// Preallocated per-layer buffers for Blocks 2–4. Sized once at
+/// construction; after the first step (which also allocates the moment) the
+/// projected-layer update performs **zero heap allocations** — pinned down
+/// by the scratch-reuse test in `tests/alloc_free_step.rs`. Scratch is
+/// workspace, not optimizer state, so it is excluded from `state_bytes`
+/// (Table 1 counts persistent states: Q and the first moment).
+struct StepScratch {
+    /// Projected gradient Ĝ (moment shape).
+    ghat: Mat,
+    /// Orthogonalized update O (moment shape).
+    o: Mat,
+    /// Back-projected full-space update (layer shape).
+    full: Mat,
+    orth: OrthWs,
+}
+
+impl StepScratch {
+    fn new(m: usize, n: usize, subspace: &SubspaceState, ns5: bool) -> StepScratch {
+        let (mr, mc) = subspace.moment_shape(m, n);
+        StepScratch {
+            ghat: Mat::zeros(mr, mc),
+            o: Mat::zeros(mr, mc),
+            full: Mat::zeros(m, n),
+            orth: if ns5 {
+                OrthWs::Ns5(Ns5Scratch::new(mr, mc))
+            } else {
+                OrthWs::Svd(OrthScratch::new(mr, mc))
+            },
+        }
+    }
+}
+
 enum LayerState {
     Projected {
         subspace: SubspaceState,
         moment: Option<Mat>,
         limiter: NormGrowthLimiter,
+        scratch: StepScratch,
     },
     Dense(DenseAdam),
+}
+
+/// One SUMO layer update (Blocks 1–4). Free function so the serial
+/// [`Optimizer::step`] and the threaded [`Optimizer::step_parallel`] paths
+/// share byte-for-byte the same arithmetic.
+fn step_layer(
+    cfg: &OptimCfg,
+    (m, n): (usize, usize),
+    layer: &mut LayerState,
+    w: &mut Mat,
+    g: &Mat,
+    lr: f32,
+) {
+    match layer {
+        LayerState::Dense(adam) => adam.step(w, g, lr),
+        LayerState::Projected {
+            subspace,
+            moment,
+            limiter,
+            scratch,
+        } => {
+            // Block 1 (+1.1): refresh basis on schedule (amortized over K
+            // steps; the rSVD sketch allocates, steady-state steps do not).
+            if subspace.due() {
+                let transported = subspace.refresh(g, moment.take());
+                *moment = transported;
+            }
+            // Block 2: EMA in the subspace, orthogonalization — written
+            // into preallocated scratch.
+            subspace.project_into(g, &mut scratch.ghat);
+            let mshape = subspace.moment_shape(m, n);
+            let mom = moment.get_or_insert_with(|| Mat::zeros(mshape.0, mshape.1));
+            mom.ema(cfg.beta1, 1.0 - cfg.beta1, &scratch.ghat);
+            match &mut scratch.orth {
+                OrthWs::Svd(ws) => orth_svd_into(mom, &mut scratch.o, ws),
+                OrthWs::Ns5(ws) => newton_schulz5_into(mom, cfg.ns_iters, &mut scratch.o, ws),
+            }
+            // Block 3: norm-growth limiter.
+            limiter.apply(&mut scratch.o);
+            // Block 4: back-project, weight decay, RMS scaling.
+            subspace.back_project_into(&scratch.o, &mut scratch.full);
+            let step_scale = lr * cfg.scale * rms_scale(m, n);
+            w.axpy(-step_scale, &scratch.full);
+            if cfg.weight_decay > 0.0 {
+                w.scale(1.0 - lr * cfg.weight_decay);
+            }
+        }
+    }
 }
 
 /// Native SUMO optimizer.
@@ -60,16 +149,19 @@ impl Sumo {
             .zip(projected)
             .map(|(&(m, n), &proj)| {
                 if proj && m > 1 && n > 1 {
+                    let subspace = SubspaceState::new(
+                        m,
+                        n,
+                        cfg.rank,
+                        cfg.update_freq,
+                        rng.fork(m as u64 * 31 + n as u64),
+                    );
+                    let scratch = StepScratch::new(m, n, &subspace, ns5);
                     LayerState::Projected {
-                        subspace: SubspaceState::new(
-                            m,
-                            n,
-                            cfg.rank,
-                            cfg.update_freq,
-                            rng.fork(m as u64 * 31 + n as u64),
-                        ),
+                        subspace,
                         moment: None,
                         limiter: NormGrowthLimiter::new(cfg.gamma, cfg.use_limiter),
+                        scratch,
                     }
                 } else {
                     LayerState::Dense(DenseAdam::new(m, n, cfg))
@@ -109,41 +201,22 @@ impl Optimizer for Sumo {
     }
 
     fn step(&mut self, idx: usize, w: &mut Mat, g: &Mat, lr_mult: f32) {
-        let (m, n) = self.shapes[idx];
         let lr = self.cfg.lr * lr_mult;
-        match &mut self.layers[idx] {
-            LayerState::Dense(adam) => adam.step(w, g, lr),
-            LayerState::Projected {
-                subspace,
-                moment,
-                limiter,
-            } => {
-                // Block 1 (+1.1): refresh basis on schedule.
-                if subspace.due() {
-                    let transported = subspace.refresh(g, moment.take());
-                    *moment = transported;
-                }
-                // Block 2: EMA in the subspace, exact orthogonalization.
-                let ghat = subspace.project(g);
-                let mshape = subspace.moment_shape(m, n);
-                let mom = moment.get_or_insert_with(|| Mat::zeros(mshape.0, mshape.1));
-                mom.ema(self.cfg.beta1, 1.0 - self.cfg.beta1, &ghat);
-                let mut o = if self.ns5 {
-                    newton_schulz5(mom, self.cfg.ns_iters)
-                } else {
-                    orth_svd(mom)
-                };
-                // Block 3: norm-growth limiter.
-                limiter.apply(&mut o);
-                // Block 4: back-project, weight decay, RMS scaling.
-                let full = subspace.back_project(&o);
-                let step_scale = lr * self.cfg.scale * rms_scale(m, n);
-                w.axpy(-step_scale, &full);
-                if self.cfg.weight_decay > 0.0 {
-                    w.scale(1.0 - lr * self.cfg.weight_decay);
-                }
-            }
-        }
+        step_layer(&self.cfg, self.shapes[idx], &mut self.layers[idx], w, g, lr);
+    }
+
+    fn step_parallel(
+        &mut self,
+        pool: &ThreadPool,
+        weights: &mut [&mut Mat],
+        grads: &[Mat],
+        lr_mult: f32,
+    ) {
+        let lr = self.cfg.lr * lr_mult;
+        let (cfg, shapes) = (&self.cfg, &self.shapes);
+        super::par_step_layers(pool, &mut self.layers, weights, grads, |idx, layer, w, g| {
+            step_layer(cfg, shapes[idx], layer, w, g, lr);
+        });
     }
 
     fn end_step(&mut self) {

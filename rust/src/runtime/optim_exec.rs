@@ -12,6 +12,7 @@ use crate::config::OptimCfg;
 use crate::linalg::Mat;
 use crate::model::ParamStore;
 use crate::optim::adam::DenseAdam;
+use crate::util::threadpool::ThreadPool;
 use crate::util::Rng;
 
 use super::literal::{literal_scalar_f32, literal_to_mat, mat_to_literal, scalar};
@@ -146,6 +147,33 @@ impl<'rt> HloSumo<'rt> {
                 Ok(())
             }
         }
+    }
+
+    /// Threaded per-layer dispatch for one iteration. The dense
+    /// (Adam-fallback) layers are independent and step concurrently through
+    /// `ThreadPool::par_for`; HLO layers execute serially afterwards in
+    /// **reverse (backprop) order** — they share `self.rng` for the refresh
+    /// sketches, and reverse order reproduces exactly the draw sequence of
+    /// the per-layer loop this path replaces, so seeded runs are unchanged.
+    pub fn step_parallel(
+        &mut self,
+        pool: &ThreadPool,
+        weights: &mut [&mut Mat],
+        grads: &[Mat],
+        lr_mult: f32,
+    ) -> crate::Result<()> {
+        let lr = self.cfg.lr * lr_mult;
+        crate::optim::par_step_layers(pool, &mut self.layers, weights, grads, |_, layer, w, g| {
+            if let LayerState::Dense(a) = layer {
+                a.step(w, g, lr);
+            }
+        });
+        for idx in (0..self.layers.len()).rev() {
+            if matches!(self.layers[idx], LayerState::Hlo(_)) {
+                self.step(idx, &mut *weights[idx], &grads[idx], lr_mult)?;
+            }
+        }
+        Ok(())
     }
 
     pub fn end_step(&mut self) {

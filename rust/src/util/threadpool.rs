@@ -56,6 +56,24 @@ impl ThreadPool {
         ThreadPool::new(n)
     }
 
+    /// Dispatch-only pool: records the target parallelism for `par_for` /
+    /// `par_for_each_mut` (which run on scoped threads) without parking any
+    /// resident worker threads. This is what the coordinator's per-layer
+    /// step dispatch uses — it never calls `spawn`/`submit`, so paying for
+    /// idle workers would be pure overhead. Calling `spawn` or `submit` on
+    /// a dispatch-only pool panics (no worker is listening).
+    pub fn dispatch_only() -> ThreadPool {
+        let n = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let (tx, _rx) = channel::<Msg>();
+        ThreadPool {
+            tx,
+            handles: Vec::new(),
+            size: n.max(1),
+        }
+    }
+
     pub fn size(&self) -> usize {
         self.size
     }
@@ -113,6 +131,32 @@ impl ThreadPool {
             }
         });
     }
+
+    /// Run `f(i, &mut items[i])` for every element concurrently, blocking
+    /// until all complete. This is the per-layer dispatch primitive of the
+    /// parallel optimizer step engine: each layer's state is touched by
+    /// exactly one worker, and per-element work is serial, so results are
+    /// bitwise identical to a sequential loop regardless of pool size.
+    pub fn par_for_each_mut<T, F>(&self, items: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Sync + Send,
+    {
+        let len = items.len();
+        // Share the base pointer across workers. SAFETY: `par_for` invokes
+        // the closure exactly once per index in 0..len, so every `&mut T`
+        // handed out refers to a distinct element; no aliasing occurs, and
+        // the scoped threads inside `par_for` cannot outlive `items`.
+        struct SendPtr<T>(*mut T);
+        unsafe impl<T: Send> Sync for SendPtr<T> {}
+        let base = SendPtr(items.as_mut_ptr());
+        let base = &base;
+        self.par_for(len, |i| {
+            debug_assert!(i < len);
+            let item = unsafe { &mut *base.0.add(i) };
+            f(i, item);
+        });
+    }
 }
 
 impl Drop for ThreadPool {
@@ -165,6 +209,31 @@ mod tests {
             ran.fetch_add(1, Ordering::SeqCst);
         });
         assert_eq!(ran.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn dispatch_only_pool_runs_par_for_without_workers() {
+        let pool = ThreadPool::dispatch_only();
+        assert!(pool.size() >= 1);
+        let hits: Vec<AtomicUsize> = (0..40).map(|_| AtomicUsize::new(0)).collect();
+        pool.par_for(40, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn par_for_each_mut_touches_each_element_once() {
+        let pool = ThreadPool::new(4);
+        let mut items: Vec<u64> = (0..257).collect();
+        pool.par_for_each_mut(&mut items, |i, x| {
+            assert_eq!(*x, i as u64);
+            *x += 1000;
+        });
+        assert!(items.iter().enumerate().all(|(i, &x)| x == i as u64 + 1000));
+        // Empty slice is a no-op.
+        let mut empty: Vec<u64> = Vec::new();
+        pool.par_for_each_mut(&mut empty, |_, _| panic!("should not run"));
     }
 
     #[test]

@@ -1,0 +1,102 @@
+//! Scratch-reuse guarantee: after warm-up (first step allocates the moment
+//! and runs the first basis refresh), the steady-state SUMO projected-layer
+//! step performs **zero heap allocations** — Blocks 2–4 (project → ema →
+//! orth → back-project → apply) run entirely in preallocated scratch.
+//!
+//! Verified with a counting global allocator. This test lives alone in its
+//! own integration-test binary: other tests running concurrently would
+//! pollute the process-wide allocation counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use sumo::config::{OptimCfg, OptimKind};
+use sumo::linalg::Mat;
+use sumo::optim;
+use sumo::util::Rng;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+// Edition 2021: the bodies of `unsafe fn`s are implicitly unsafe blocks.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn alloc_count() -> u64 {
+    ALLOCS.load(Ordering::SeqCst)
+}
+
+fn assert_steady_state_alloc_free(kind: OptimKind) {
+    // Both projection orientations plus a square layer.
+    let shapes = vec![(96usize, 48usize), (32, 64), (40, 40)];
+    let projected = vec![true, true, true];
+    // Huge refresh interval: after the first (warm-up) refresh the basis
+    // stays fixed, which is exactly the steady-state regime measured here.
+    let cfg = OptimCfg::new(kind)
+        .with_lr(0.01)
+        .with_rank(8)
+        .with_update_freq(1_000_000);
+    let mut opt = optim::build(&cfg, &shapes, &projected, 3);
+
+    let mut rng = Rng::new(5);
+    let mut weights: Vec<Mat> = shapes
+        .iter()
+        .map(|&(m, n)| Mat::randn(m, n, 0.5, &mut rng))
+        .collect();
+    let grads: Vec<Mat> = shapes
+        .iter()
+        .map(|&(m, n)| Mat::randn(m, n, 1.0, &mut rng))
+        .collect();
+
+    // Warm-up: allocates the moments, runs the first (allocating) refresh.
+    for _ in 0..2 {
+        for (i, (w, g)) in weights.iter_mut().zip(&grads).enumerate() {
+            opt.step(i, w, g, 1.0);
+        }
+        opt.end_step();
+    }
+
+    let before = alloc_count();
+    for _ in 0..5 {
+        for (i, (w, g)) in weights.iter_mut().zip(&grads).enumerate() {
+            opt.step(i, w, g, 1.0);
+        }
+        opt.end_step();
+    }
+    let after = alloc_count();
+    assert_eq!(
+        after - before,
+        0,
+        "{kind:?}: steady-state step engine allocated {} time(s)",
+        after - before
+    );
+    assert!(weights.iter().all(|w| w.is_finite()));
+}
+
+#[test]
+fn sumo_steady_state_step_is_allocation_free() {
+    assert_steady_state_alloc_free(OptimKind::Sumo);
+    assert_steady_state_alloc_free(OptimKind::SumoNs5);
+}

@@ -1,0 +1,125 @@
+//! Coverage for the parallel per-layer step engine: the threaded dispatch
+//! (`Optimizer::step_parallel` over `ThreadPool::par_for`) must produce
+//! weights **bitwise identical** to the serial per-layer loop, for every
+//! optimizer that overrides the threaded path (sumo, sumo-ns5, galore,
+//! adam) and for the default serial fallback (muon).
+//!
+//! The companion zero-allocation scratch-reuse test lives in its own
+//! binary (`tests/alloc_free_step.rs`) so its global allocation counter is
+//! not polluted by concurrently running tests.
+
+use sumo::config::{OptimCfg, OptimKind};
+use sumo::linalg::Mat;
+use sumo::optim;
+use sumo::util::threadpool::ThreadPool;
+use sumo::util::Rng;
+
+/// A mixed model: a dense 1-D norm layer plus projected 2-D layers in both
+/// orientations (left/right projection sides) and a square one.
+fn layer_shapes() -> (Vec<(usize, usize)>, Vec<bool>) {
+    (
+        vec![(1, 32), (64, 32), (32, 64), (48, 48), (16, 8)],
+        vec![false, true, true, true, true],
+    )
+}
+
+fn run_pair(kind: OptimKind, workers: usize, steps: usize) {
+    let pool = ThreadPool::new(workers);
+    let (shapes, projected) = layer_shapes();
+    let cfg = OptimCfg::new(kind)
+        .with_lr(0.02)
+        .with_rank(4)
+        .with_update_freq(3);
+    let mut serial = optim::build(&cfg, &shapes, &projected, 42);
+    let mut par = optim::build(&cfg, &shapes, &projected, 42);
+
+    let mut wrng = Rng::new(7);
+    let mut w_serial: Vec<Mat> = shapes
+        .iter()
+        .map(|&(m, n)| Mat::randn(m, n, 0.5, &mut wrng))
+        .collect();
+    let mut w_par = w_serial.clone();
+
+    let mut grng = Rng::new(8);
+    for _step in 0..steps {
+        let grads: Vec<Mat> = shapes
+            .iter()
+            .map(|&(m, n)| Mat::randn(m, n, 1.0, &mut grng))
+            .collect();
+        for (i, (w, g)) in w_serial.iter_mut().zip(&grads).enumerate() {
+            serial.step(i, w, g, 1.0);
+        }
+        serial.end_step();
+        let mut refs: Vec<&mut Mat> = w_par.iter_mut().collect();
+        par.step_parallel(&pool, &mut refs, &grads, 1.0);
+        par.end_step();
+    }
+
+    for (i, (a, b)) in w_serial.iter().zip(&w_par).enumerate() {
+        assert!(a.is_finite(), "{kind:?} layer {i} not finite");
+        assert_eq!(
+            a.max_diff(b),
+            0.0,
+            "{kind:?} layer {i}: threaded step diverged from serial"
+        );
+    }
+}
+
+#[test]
+fn sumo_threaded_matches_serial_bitwise() {
+    run_pair(OptimKind::Sumo, 4, 10);
+}
+
+#[test]
+fn sumo_ns5_threaded_matches_serial_bitwise() {
+    run_pair(OptimKind::SumoNs5, 4, 10);
+}
+
+#[test]
+fn galore_threaded_matches_serial_bitwise() {
+    run_pair(OptimKind::GaLore, 4, 10);
+}
+
+#[test]
+fn adam_threaded_matches_serial_bitwise() {
+    run_pair(OptimKind::Adam, 4, 10);
+}
+
+#[test]
+fn default_serial_fallback_matches_too() {
+    // Muon has no threaded override; the trait's default must still agree.
+    run_pair(OptimKind::Muon, 4, 6);
+}
+
+#[test]
+fn single_worker_pool_degenerates_to_serial() {
+    run_pair(OptimKind::Sumo, 1, 6);
+}
+
+#[test]
+fn threaded_path_converges_on_quadratic() {
+    // End-to-end sanity: the threaded engine actually optimizes.
+    let pool = ThreadPool::new(3);
+    let shapes = vec![(32usize, 16usize)];
+    let projected = vec![true];
+    let cfg = OptimCfg::new(OptimKind::Sumo)
+        .with_lr(0.05)
+        .with_rank(4)
+        .with_update_freq(5);
+    let mut opt = optim::build(&cfg, &shapes, &projected, 1);
+    let mut rng = Rng::new(11);
+    let target = Mat::randn(32, 16, 1.0, &mut rng);
+    let mut w = vec![Mat::zeros(32, 16)];
+    let l0 = target.sumsq();
+    for _ in 0..200 {
+        let mut g = w[0].clone();
+        g.axpy(-1.0, &target);
+        let grads = vec![g];
+        let mut refs: Vec<&mut Mat> = w.iter_mut().collect();
+        opt.step_parallel(&pool, &mut refs, &grads, 1.0);
+        opt.end_step();
+    }
+    let mut diff = w[0].clone();
+    diff.axpy(-1.0, &target);
+    assert!(diff.sumsq() < 0.35 * l0, "loss {l0} -> {}", diff.sumsq());
+}

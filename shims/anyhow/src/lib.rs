@@ -1,0 +1,144 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this path dependency
+//! provides exactly the surface the `sumo` crate uses: an erased error type
+//! with a blanket `From<E: std::error::Error>` (so `?` works on io/utf8/...
+//! errors), and the `anyhow!` / `bail!` / `ensure!` macros. Like the real
+//! crate, `Error` deliberately does **not** implement `std::error::Error`
+//! so the blanket `From` impl does not conflict with itself.
+
+use std::fmt;
+
+/// Erased, boxed error.
+pub struct Error(Box<dyn std::error::Error + Send + Sync + 'static>);
+
+impl Error {
+    /// Build an error from a printable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error(Box::new(MessageError(message.to_string())))
+    }
+
+    /// Borrow the underlying error.
+    pub fn as_dyn(&self) -> &(dyn std::error::Error + Send + Sync + 'static) {
+        &*self.0
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error(Box::new(e))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{:#}` on the real anyhow prints the cause chain; mirror that.
+        write!(f, "{}", self.0)?;
+        if f.alternate() {
+            let mut src = self.0.source();
+            while let Some(cause) = src {
+                write!(f, ": {cause}")?;
+                src = cause.source();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)?;
+        let mut src = self.0.source();
+        while let Some(cause) = src {
+            write!(f, "\n\nCaused by:\n    {cause}")?;
+            src = cause.source();
+        }
+        Ok(())
+    }
+}
+
+/// `Result` alias with the erased error as default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Plain-string error payload used by the macros.
+#[derive(Debug)]
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for MessageError {}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        let r: std::result::Result<(), std::io::Error> =
+            Err(std::io::Error::other("disk on fire"));
+        r?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(e.to_string().contains("disk on fire"));
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad value {}", 42);
+        assert_eq!(e.to_string(), "bad value 42");
+        fn f() -> Result<()> {
+            ensure!(1 + 1 == 3, "math broke: {}", 1 + 1);
+            Ok(())
+        }
+        assert!(f().unwrap_err().to_string().contains("math broke: 2"));
+        fn g() -> Result<()> {
+            bail!("nope");
+        }
+        assert!(g().is_err());
+    }
+
+    #[test]
+    fn alternate_display_is_usable() {
+        let e = anyhow!("top level");
+        assert_eq!(format!("{e:#}"), "top level");
+        assert!(format!("{e:?}").contains("top level"));
+    }
+}

@@ -1,0 +1,272 @@
+//! Minimal offline stand-in for the `xla` (PJRT) bindings.
+//!
+//! The real crate wraps libxla's PJRT C API. This container has neither the
+//! shared library nor crates.io access, so this path dependency provides the
+//! API surface `sumo::runtime` compiles against:
+//!
+//! * [`Literal`] — host tensors (f32 / i32) with shape metadata. Fully
+//!   implemented: the marshalling layer (`runtime::literal`) is pure data
+//!   movement and is exercised by tests.
+//! * [`PjRtClient`] / [`HloModuleProto`] / [`XlaComputation`] /
+//!   [`PjRtLoadedExecutable`] — construction succeeds, but loading or
+//!   compiling an HLO artifact returns [`XlaError::Unavailable`]. Every
+//!   caller in the repo already treats a failed `Runtime` bring-up as
+//!   "artifacts absent, skip" so tests and benches degrade gracefully.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Error type mirroring the real crate's debug-printable error.
+#[derive(Debug, Clone)]
+pub enum XlaError {
+    /// The PJRT backend is not present in this build.
+    Unavailable(String),
+    /// Host-side misuse (shape mismatch, wrong element type).
+    Invalid(String),
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            XlaError::Unavailable(m) => write!(f, "xla backend unavailable: {m}"),
+            XlaError::Invalid(m) => write!(f, "invalid literal use: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+fn unavailable<T>(what: &str) -> Result<T, XlaError> {
+    Err(XlaError::Unavailable(format!(
+        "{what}: this is the offline stub (no PJRT runtime in the container); \
+         run on a host with the real xla crate to execute HLO artifacts"
+    )))
+}
+
+// ---------------------------------------------------------------------------
+// Literals (fully functional host tensors)
+// ---------------------------------------------------------------------------
+
+/// Element storage for a [`Literal`]. Public only because the sealed-ish
+/// [`NativeType`] trait mentions it in its hidden methods.
+#[doc(hidden)]
+#[derive(Clone, Debug)]
+pub enum Store {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Store {
+    fn len(&self) -> usize {
+        match self {
+            Store::F32(v) => v.len(),
+            Store::I32(v) => v.len(),
+        }
+    }
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy + Sized {
+    #[doc(hidden)]
+    fn wrap(v: Vec<Self>) -> Store;
+    #[doc(hidden)]
+    fn unwrap(s: &Store) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<f32>) -> Store {
+        Store::F32(v)
+    }
+    fn unwrap(s: &Store) -> Option<Vec<f32>> {
+        match s {
+            Store::F32(v) => Some(v.clone()),
+            Store::I32(_) => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<i32>) -> Store {
+        Store::I32(v)
+    }
+    fn unwrap(s: &Store) -> Option<Vec<i32>> {
+        match s {
+            Store::I32(v) => Some(v.clone()),
+            Store::F32(_) => None,
+        }
+    }
+}
+
+/// Host tensor (shape + typed buffer).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    dims: Vec<i64>,
+    store: Store,
+}
+
+impl Literal {
+    /// 1-D literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal {
+            dims: vec![v.len() as i64],
+            store: T::wrap(v.to_vec()),
+        }
+    }
+
+    /// Scalar f32 literal.
+    pub fn scalar(x: f32) -> Literal {
+        Literal {
+            dims: Vec::new(),
+            store: Store::F32(vec![x]),
+        }
+    }
+
+    /// Reshape (element count must be preserved).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, XlaError> {
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != self.store.len() {
+            return Err(XlaError::Invalid(format!(
+                "reshape {:?} -> {dims:?} changes element count {}",
+                self.dims,
+                self.store.len()
+            )));
+        }
+        Ok(Literal {
+            dims: dims.to_vec(),
+            store: self.store.clone(),
+        })
+    }
+
+    /// Shape of the literal.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Flat element buffer (typed).
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, XlaError> {
+        T::unwrap(&self.store)
+            .ok_or_else(|| XlaError::Invalid("literal element type mismatch".to_string()))
+    }
+
+    /// First element (typed).
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T, XlaError> {
+        self.to_vec::<T>()?
+            .first()
+            .copied()
+            .ok_or_else(|| XlaError::Invalid("empty literal".to_string()))
+    }
+
+    /// Device->host copy (identity here: literals already live on the host).
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        Ok(self.clone())
+    }
+
+    /// Decompose a tuple literal. The stub never produces tuples because
+    /// execution is unavailable, so this only ever reports that fact.
+    pub fn to_tuple(self) -> Result<Vec<Literal>, XlaError> {
+        unavailable("Literal::to_tuple")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT surface (stubbed: construction ok, compilation/execution unavailable)
+// ---------------------------------------------------------------------------
+
+/// Parsed HLO module (opaque; parsing requires the real backend).
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    /// Parse an `.hlo.txt` artifact. Always unavailable in the stub — the
+    /// caller (`Runtime::executable`) surfaces this as a skippable error.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto, XlaError> {
+        unavailable(&format!("HloModuleProto::from_text_file({path})"))
+    }
+}
+
+/// Computation handle built from a parsed module.
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    /// Execute with literal inputs. Unreachable in the stub (compilation
+    /// already fails), kept for API parity.
+    pub fn execute<L: Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<Literal>>, XlaError> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient {
+    platform: &'static str,
+}
+
+impl PjRtClient {
+    /// CPU client. Succeeds so that `Runtime` construction can proceed far
+    /// enough to read the manifest; actual compilation reports unavailable.
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        Ok(PjRtClient {
+            platform: "stub-cpu (offline)",
+        })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.platform.to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert_eq!(r.get_first_element::<f32>().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let l = Literal::vec1(&[7i32, 8, 9]);
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![7, 8, 9]);
+        assert!(l.reshape(&[2, 2]).is_err());
+    }
+
+    #[test]
+    fn scalar_shape() {
+        let s = Literal::scalar(2.5);
+        assert!(s.dims().is_empty());
+        assert_eq!(s.get_first_element::<f32>().unwrap(), 2.5);
+    }
+
+    #[test]
+    fn backend_reports_unavailable() {
+        let client = PjRtClient::cpu().unwrap();
+        assert!(client.platform_name().contains("stub"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let comp = XlaComputation::from_proto(&HloModuleProto(()));
+        assert!(client.compile(&comp).is_err());
+    }
+}
