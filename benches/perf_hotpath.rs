@@ -12,10 +12,14 @@
 //! accumulates across PRs.
 
 use sumo::bench::{bench_iters, TableWriter};
-use sumo::config::{OptimCfg, OptimKind};
+use sumo::config::{ModelCfg, OptimCfg, OptimKind};
 use sumo::coordinator::Coordinator;
 use sumo::data::{Batcher, SyntheticCorpus};
-use sumo::linalg::{matmul, matmul_at_b, newton_schulz5, orth_svd, randomized_range, Mat, RsvdOpts};
+use sumo::linalg::{
+    matmul, matmul_at_b, newton_schulz5, orth_svd, orth_svd_batched_into, orth_svd_into,
+    randomized_range, BatchOrthScratch, Mat, OrthScratch, RsvdOpts,
+};
+use sumo::model::ParamStore;
 use sumo::runtime::Runtime;
 use sumo::util::threadpool::ThreadPool;
 use sumo::util::timer::{time_fn, Stats};
@@ -82,6 +86,38 @@ fn main() -> anyhow::Result<()> {
         timing_row(&mut t, "rsvd range (refresh)", "2048x256 r16", &s);
     }
 
+    // Batched orthogonalization: N stacked moments of one shape class
+    // through one masked Jacobi sweep schedule (pool-chunked batch axis) vs
+    // the per-layer loop — the grouped-step (phase 2) kernel. Acceptance:
+    // ≥1.5x throughput for ≥16 stacked rank-4/8 moments.
+    {
+        let pool = ThreadPool::dispatch_only();
+        for &(r, nlayers) in &[(4usize, 16usize), (8, 16), (16, 12)] {
+            let ms: Vec<Mat> = (0..nlayers)
+                .map(|_| Mat::randn(r, 2048, 1.0, &mut rng))
+                .collect();
+            let mut outs: Vec<Mat> = ms.iter().map(|_| Mat::zeros(r, 2048)).collect();
+            let mut per_ws: Vec<OrthScratch> =
+                (0..nlayers).map(|_| OrthScratch::new(r, 2048)).collect();
+            let shape = format!("{nlayers}x {r}x2048");
+            let s = time_fn(1, bench_iters(8), || {
+                for ((m, o), ws) in ms.iter().zip(outs.iter_mut()).zip(per_ws.iter_mut()) {
+                    orth_svd_into(m, o, ws);
+                }
+            });
+            timing_row(&mut t, "orth_svd loop", &shape, &s);
+            let mut bws = BatchOrthScratch::new(nlayers, r, 2048);
+            let s = time_fn(1, bench_iters(8), || {
+                let ins: Vec<&Mat> = ms.iter().collect();
+                let mut out_refs: Vec<&mut Mat> = outs.iter_mut().collect();
+                orth_svd_batched_into(&ins, &mut out_refs, &mut bws, Some(&pool));
+            });
+            // Row names stay core-count-free so the perf-diff gate keys
+            // (kernel, shape) match across runners with different pools.
+            timing_row(&mut t, "orth_svd_batched", &shape, &s);
+        }
+    }
+
     // Native SUMO step on the biggest layer shape (zero-alloc steady state).
     {
         let cfg = OptimCfg::new(OptimKind::Sumo).with_rank(16).with_update_freq(100);
@@ -129,7 +165,54 @@ fn main() -> anyhow::Result<()> {
             par.step_parallel(&pool, &mut refs, &grads, 1.0);
             par.end_step();
         });
-        timing_row(&mut t, &format!("step engine (par x{})", pool.size()), "12x 512x256 r16", &s);
+        timing_row(&mut t, "step engine (par)", "12x 512x256 r16", &s);
+    }
+
+    // Grouped three-phase step per model preset: real layer-shape mixes
+    // (many layers per moment shape class), serial per-layer loop vs the
+    // batched-orthogonalization dispatch.
+    for preset in ["nano", "micro", "small"] {
+        let Some(mcfg) = ModelCfg::preset(preset) else {
+            continue;
+        };
+        let params = ParamStore::init(&mcfg, 1);
+        let shapes = params.shapes();
+        let projected = params.projected_mask();
+        let rank = if preset == "small" { 16 } else { 4 };
+        let cfg = OptimCfg::new(OptimKind::Sumo).with_rank(rank).with_update_freq(10_000);
+        let grads: Vec<Mat> = shapes.iter().map(|&(m, n)| Mat::randn(m, n, 1.0, &mut rng)).collect();
+        let mut weights: Vec<Mat> = shapes.iter().map(|&(m, n)| Mat::randn(m, n, 0.1, &mut rng)).collect();
+        let nlayers = shapes.len();
+
+        let mut serial = sumo::optim::build(&cfg, &shapes, &projected, 9);
+        for (i, (w, g)) in weights.iter_mut().zip(&grads).enumerate() {
+            serial.step(i, w, g, 1.0);
+        }
+        let s = time_fn(1, bench_iters(5), || {
+            for (i, (w, g)) in weights.iter_mut().zip(&grads).enumerate() {
+                serial.step(i, w, g, 1.0);
+            }
+            serial.end_step();
+        });
+        timing_row(&mut t, "grouped step (serial)", &format!("{preset} {nlayers}L r{rank}"), &s);
+
+        let pool = ThreadPool::dispatch_only();
+        let mut par = sumo::optim::build(&cfg, &shapes, &projected, 9);
+        {
+            let mut refs: Vec<&mut Mat> = weights.iter_mut().collect();
+            par.step_parallel(&pool, &mut refs, &grads, 1.0);
+        }
+        let s = time_fn(1, bench_iters(5), || {
+            let mut refs: Vec<&mut Mat> = weights.iter_mut().collect();
+            par.step_parallel(&pool, &mut refs, &grads, 1.0);
+            par.end_step();
+        });
+        timing_row(
+            &mut t,
+            "grouped step (3-phase)",
+            &format!("{preset} {nlayers}L r{rank}"),
+            &s,
+        );
     }
 
     // End-to-end iterations (fwd/bwd via PJRT + optimizer).

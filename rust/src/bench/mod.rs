@@ -2,6 +2,7 @@
 //! `util::timer`, result tables as aligned markdown mirroring the paper's
 //! rows, and CSV dumps under `bench_out/`.
 
+pub mod perfdiff;
 pub mod table;
 
 pub use table::TableWriter;

@@ -1,0 +1,344 @@
+//! Perf-trajectory diff: compare two `BENCH_perf_hotpath.json` artifacts
+//! (base branch vs PR) row by row and flag mean-time regressions.
+//!
+//! Rows are keyed by (kernel, shape) and compared on `ms_mean`. A noise
+//! floor (`min_ms`) keeps single-run quick-mode jitter from gating: a
+//! regression must land *above* the floor to flag (so a sub-floor row that
+//! blows past it still gates), and an improvement must start above it. The
+//! `sumo perf-diff` CLI command wraps this for the CI perf-trajectory job.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// One matched row's before/after timing (means plus 95% confidence
+/// half-widths, 0.0 when the artifact lacks an `ms_ci95` column).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RowDelta {
+    pub kernel: String,
+    pub shape: String,
+    pub base_ms: f64,
+    pub new_ms: f64,
+    pub base_ci: f64,
+    pub new_ci: f64,
+}
+
+impl RowDelta {
+    /// new/base mean-time ratio (>1 = slower). A zero base with a nonzero
+    /// new mean is an infinite regression, not a wash — quick-mode means
+    /// serialize with 4 decimals, so a sub-50ns row parses back as 0.0 and
+    /// must still gate if it blows up.
+    pub fn ratio(&self) -> f64 {
+        if self.base_ms > 0.0 {
+            self.new_ms / self.base_ms
+        } else if self.new_ms > 0.0 {
+            f64::INFINITY
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Outcome of diffing two bench artifacts.
+#[derive(Clone, Debug, Default)]
+pub struct PerfDiff {
+    /// Rows slower than the threshold (and above the noise floor).
+    pub regressions: Vec<RowDelta>,
+    /// Rows faster than the threshold (above the noise floor).
+    pub improvements: Vec<RowDelta>,
+    /// Matched rows within the threshold, or below the noise floor.
+    pub unchanged: Vec<RowDelta>,
+    /// (kernel, shape) present only in the base artifact.
+    pub removed: Vec<(String, String)>,
+    /// (kernel, shape) present only in the new artifact.
+    pub added: Vec<(String, String)>,
+}
+
+impl PerfDiff {
+    pub fn has_regressions(&self) -> bool {
+        !self.regressions.is_empty()
+    }
+}
+
+fn index_rows(table: &Json) -> BTreeMap<(String, String), (f64, f64)> {
+    let mut map = BTreeMap::new();
+    if let Some(rows) = table.get("rows").as_arr() {
+        for row in rows {
+            let (Some(kernel), Some(shape), Some(ms)) = (
+                row.get("kernel").as_str(),
+                row.get("shape").as_str(),
+                row.get("ms_mean").as_f64(),
+            ) else {
+                continue;
+            };
+            let ci = row.get("ms_ci95").as_f64().unwrap_or(0.0);
+            map.insert((kernel.to_string(), shape.to_string()), (ms, ci));
+        }
+    }
+    map
+}
+
+/// Diff two `TableWriter::json()` artifacts. A matched row regresses when
+/// `new/base > 1 + threshold_pct/100`, the movement exceeds the two rows'
+/// combined `ms_ci95` half-widths (statistical significance — absent CI
+/// columns count as 0), and the floor rules hold; symmetric for
+/// improvements.
+pub fn diff(base: &Json, new: &Json, threshold_pct: f64, min_ms: f64) -> PerfDiff {
+    let base_rows = index_rows(base);
+    let new_rows = index_rows(new);
+    let mut out = PerfDiff::default();
+    for ((kernel, shape), &(base_ms, base_ci)) in &base_rows {
+        let Some(&(new_ms, new_ci)) = new_rows.get(&(kernel.clone(), shape.clone())) else {
+            out.removed.push((kernel.clone(), shape.clone()));
+            continue;
+        };
+        let delta = RowDelta {
+            kernel: kernel.clone(),
+            shape: shape.clone(),
+            base_ms,
+            new_ms,
+            base_ci,
+            new_ci,
+        };
+        let hi = 1.0 + threshold_pct / 100.0;
+        let lo = 1.0 - threshold_pct / 100.0;
+        // A regression gates when the new mean is material (≥ min_ms) AND
+        // the movement is not floor-straddling jitter: with a sub-floor
+        // base, the new mean must clear the floor decisively (2×) — a
+        // 0.045→0.051 ms wobble stays unchanged, a 0.04→5.0 ms blowup
+        // gates. Improvements symmetrically require a material base.
+        let material_regression =
+            new_ms >= min_ms && (base_ms >= min_ms || new_ms >= 2.0 * min_ms);
+        // Movements inside the overlap of the two runs' 95% confidence
+        // intervals are noise, not signal — never flag them either way.
+        let significant = (new_ms - base_ms).abs() > base_ci + new_ci;
+        if material_regression && significant && delta.ratio() > hi {
+            out.regressions.push(delta);
+        } else if base_ms >= min_ms && significant && delta.ratio() < lo {
+            out.improvements.push(delta);
+        } else {
+            out.unchanged.push(delta);
+        }
+    }
+    for key in new_rows.keys() {
+        if !base_rows.contains_key(key) {
+            out.added.push(key.clone());
+        }
+    }
+    // Worst regressions first.
+    out.regressions
+        .sort_by(|a, b| b.ratio().total_cmp(&a.ratio()));
+    out.improvements
+        .sort_by(|a, b| a.ratio().total_cmp(&b.ratio()));
+    out
+}
+
+fn delta_table(rows: &[RowDelta]) -> String {
+    let mut s = String::from("| kernel | shape | base ms | new ms | Δ |\n");
+    s.push_str("|---|---|---|---|---|\n");
+    for d in rows {
+        s.push_str(&format!(
+            "| {} | {} | {:.4} | {:.4} | {:+.1}% |\n",
+            d.kernel,
+            d.shape,
+            d.base_ms,
+            d.new_ms,
+            (d.ratio() - 1.0) * 100.0
+        ));
+    }
+    s
+}
+
+/// Render the diff as the markdown body the CI job posts on the PR.
+pub fn report_markdown(d: &PerfDiff, threshold_pct: f64, min_ms: f64) -> String {
+    let mut s = String::from("## Perf trajectory: `perf_hotpath` vs base\n\n");
+    if d.has_regressions() {
+        s.push_str(&format!(
+            "**{} row(s) regressed >{threshold_pct:.0}%** \
+             (noise floor {min_ms} ms):\n\n{}\n",
+            d.regressions.len(),
+            delta_table(&d.regressions)
+        ));
+    } else {
+        s.push_str(&format!(
+            "No regressions >{threshold_pct:.0}% (noise floor {min_ms} ms).\n\n"
+        ));
+    }
+    if !d.improvements.is_empty() {
+        s.push_str(&format!(
+            "{} row(s) improved >{threshold_pct:.0}%:\n\n{}\n",
+            d.improvements.len(),
+            delta_table(&d.improvements)
+        ));
+    }
+    if !d.added.is_empty() || !d.removed.is_empty() {
+        s.push_str(&format!(
+            "Rows added: {}; removed: {}.\n",
+            d.added.len(),
+            d.removed.len()
+        ));
+    }
+    s.push_str(&format!("({} matched row(s) unchanged.)\n", d.unchanged.len()));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table(rows: &[(&str, &str, f64)]) -> Json {
+        Json::obj(vec![
+            ("name", Json::str("perf_hotpath")),
+            (
+                "rows",
+                Json::arr(rows.iter().map(|(k, s, ms)| {
+                    Json::obj(vec![
+                        ("kernel", Json::str(k)),
+                        ("shape", Json::str(s)),
+                        ("ms_mean", Json::num(*ms)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    #[test]
+    fn flags_regressions_over_threshold() {
+        let base = table(&[("matmul", "a", 1.0), ("orth", "b", 2.0)]);
+        let new = table(&[("matmul", "a", 1.25), ("orth", "b", 2.05)]);
+        let d = diff(&base, &new, 10.0, 0.0);
+        assert_eq!(d.regressions.len(), 1);
+        assert_eq!(d.regressions[0].kernel, "matmul");
+        assert!(d.has_regressions());
+        assert_eq!(d.unchanged.len(), 1);
+    }
+
+    #[test]
+    fn noise_floor_suppresses_tiny_rows() {
+        let base = table(&[("tiny", "a", 0.001), ("big", "b", 5.0)]);
+        let new = table(&[("tiny", "a", 0.01), ("big", "b", 4.0)]);
+        let d = diff(&base, &new, 10.0, 0.05);
+        assert!(!d.has_regressions(), "sub-floor 10x jitter must not flag");
+        assert_eq!(d.improvements.len(), 1);
+        assert_eq!(d.improvements[0].kernel, "big");
+    }
+
+    #[test]
+    fn sub_floor_row_blowing_past_the_floor_still_gates() {
+        // base under the noise floor, new far above it: that is a real
+        // regression, not jitter — it must not hide in `unchanged`.
+        let base = table(&[("tiny", "a", 0.04)]);
+        let new = table(&[("tiny", "a", 5.0)]);
+        let d = diff(&base, &new, 10.0, 0.05);
+        assert!(d.has_regressions());
+        assert_eq!(d.regressions[0].kernel, "tiny");
+        // The mirror case (above-floor collapses to sub-floor) counts as an
+        // improvement, since the base was material.
+        let d = diff(&new, &base, 10.0, 0.05);
+        assert!(!d.has_regressions());
+        assert_eq!(d.improvements.len(), 1);
+    }
+
+    fn table_ci(rows: &[(&str, &str, f64, f64)]) -> Json {
+        Json::obj(vec![
+            ("name", Json::str("perf_hotpath")),
+            (
+                "rows",
+                Json::arr(rows.iter().map(|(k, s, ms, ci)| {
+                    Json::obj(vec![
+                        ("kernel", Json::str(k)),
+                        ("shape", Json::str(s)),
+                        ("ms_mean", Json::num(*ms)),
+                        ("ms_ci95", Json::num(*ci)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    #[test]
+    fn wide_confidence_intervals_suppress_insignificant_deltas() {
+        // +15% movement, but the two runs' 95% CIs overlap: noise, not a
+        // regression.
+        let base = table_ci(&[("e2e", "nano", 10.0, 1.2)]);
+        let new = table_ci(&[("e2e", "nano", 11.5, 0.9)]);
+        let d = diff(&base, &new, 10.0, 0.05);
+        assert!(!d.has_regressions(), "CI-overlapping delta gated");
+        assert_eq!(d.unchanged.len(), 1);
+        // Same movement with tight CIs is a real regression.
+        let base = table_ci(&[("e2e", "nano", 10.0, 0.2)]);
+        let new = table_ci(&[("e2e", "nano", 11.5, 0.2)]);
+        let d = diff(&base, &new, 10.0, 0.05);
+        assert!(d.has_regressions());
+        assert_eq!(d.regressions[0].new_ci, 0.2);
+    }
+
+    #[test]
+    fn floor_straddling_jitter_does_not_gate() {
+        // 6 µs of scheduling wobble across the floor (0.045 -> 0.051) is a
+        // +13% ratio but not a material regression; it must stay unchanged.
+        let base = table(&[("wobble", "a", 0.045)]);
+        let new = table(&[("wobble", "a", 0.051)]);
+        let d = diff(&base, &new, 10.0, 0.05);
+        assert!(!d.has_regressions(), "floor-straddling jitter gated");
+        assert_eq!(d.unchanged.len(), 1);
+        // But a decisive jump from sub-floor past 2x the floor does gate.
+        let new = table(&[("wobble", "a", 0.12)]);
+        let d = diff(&base, &new, 10.0, 0.05);
+        assert!(d.has_regressions());
+    }
+
+    #[test]
+    fn zero_base_row_regressing_still_gates() {
+        // ms_mean serializes with 4 decimals, so a sub-50ns kernel round-trips
+        // as 0.0; if it later costs 5 ms that is an infinite-ratio regression.
+        let base = table(&[("fast", "a", 0.0)]);
+        let new = table(&[("fast", "a", 5.0)]);
+        let d = diff(&base, &new, 10.0, 0.05);
+        assert!(d.has_regressions());
+        // Both zero = unchanged, no division blowup.
+        let d = diff(&base, &base, 10.0, 0.05);
+        assert!(!d.has_regressions());
+        assert_eq!(d.unchanged.len(), 1);
+    }
+
+    #[test]
+    fn tracks_added_and_removed_rows() {
+        let base = table(&[("old", "a", 1.0), ("kept", "b", 1.0)]);
+        let new = table(&[("kept", "b", 1.0), ("fresh", "c", 1.0)]);
+        let d = diff(&base, &new, 10.0, 0.0);
+        assert_eq!(d.removed, vec![("old".to_string(), "a".to_string())]);
+        assert_eq!(d.added, vec![("fresh".to_string(), "c".to_string())]);
+    }
+
+    #[test]
+    fn regressions_sorted_worst_first_and_reported() {
+        let base = table(&[("x", "a", 1.0), ("y", "b", 1.0)]);
+        let new = table(&[("x", "a", 1.5), ("y", "b", 2.0)]);
+        let d = diff(&base, &new, 10.0, 0.0);
+        assert_eq!(d.regressions[0].kernel, "y");
+        let md = report_markdown(&d, 10.0, 0.05);
+        assert!(md.contains("2 row(s) regressed"));
+        assert!(md.contains("| y | b |"));
+        assert!(md.contains("+100.0%"));
+    }
+
+    #[test]
+    fn round_trips_through_table_writer_json() {
+        let mut t = crate::bench::TableWriter::new(
+            "perf_hotpath",
+            &["kernel", "shape", "ms_mean", "ms_ci95", "n"],
+        );
+        t.row(&[
+            "orth_svd".into(),
+            "4x2048".into(),
+            "1.5".into(),
+            "0.1".into(),
+            "8".into(),
+        ]);
+        let j = t.json();
+        let d = diff(&j, &j, 10.0, 0.0);
+        assert!(!d.has_regressions());
+        assert_eq!(d.unchanged.len(), 1);
+    }
+}

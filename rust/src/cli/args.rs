@@ -60,6 +60,18 @@ impl Args {
         }
     }
 
+    /// Full-precision variant of [`Args::f32_or`]: values that are echoed
+    /// back to the user (e.g. perf-diff thresholds) must not pick up
+    /// f32→f64 widening noise (0.05f32 as f64 = 0.05000000074…).
+    pub fn f64_or(&self, key: &str, default: f64) -> crate::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
     pub fn u64_or(&self, key: &str, default: u64) -> crate::Result<u64> {
         match self.get(key) {
             None => Ok(default),
@@ -90,6 +102,14 @@ mod tests {
         assert_eq!(a.usize_or("steps", 0).unwrap(), 50);
         assert!(a.has_flag("verbose"));
         assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn f64_parses_at_full_precision() {
+        let a = parse(&["x", "--min-ms", "0.05"]);
+        assert_eq!(a.f64_or("min-ms", 1.0).unwrap(), 0.05);
+        assert_eq!(a.f64_or("absent", 0.05).unwrap(), 0.05);
+        assert!(parse(&["x", "--min-ms", "abc"]).f64_or("min-ms", 0.0).is_err());
     }
 
     #[test]

@@ -30,6 +30,9 @@ COMMANDS:
   adapter     extract a post-hoc LoRA adapter between two checkpoints
               --pre PATH --post PATH --max-rank R
   inspect     print the artifact manifest summary
+  perf-diff   diff two BENCH_perf_hotpath.json artifacts (CI perf trajectory)
+              --base PATH --new PATH [--threshold PCT=10] [--min-ms MS=0.05]
+              [--out PATH (markdown report)] — exits nonzero on regressions
   help        this text
 
 Benchmarks live under `cargo bench` (one target per paper table/figure).";
@@ -41,6 +44,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
         "eval" => cmd_eval(args),
         "adapter" => cmd_adapter(args),
         "inspect" => cmd_inspect(args),
+        "perf-diff" => cmd_perf_diff(args),
         "" | "help" | "--help" => {
             println!("{USAGE}");
             Ok(())
@@ -233,6 +237,38 @@ fn cmd_adapter(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Diff two `BENCH_perf_hotpath.json` artifacts (base branch vs PR) and
+/// fail on mean-time regressions — the CI perf-trajectory gate.
+fn cmd_perf_diff(args: &Args) -> Result<()> {
+    let base_path = args
+        .get("base")
+        .ok_or_else(|| anyhow::anyhow!("--base PATH required"))?;
+    let new_path = args
+        .get("new")
+        .ok_or_else(|| anyhow::anyhow!("--new PATH required"))?;
+    let threshold = args.f64_or("threshold", 10.0)?;
+    let min_ms = args.f64_or("min-ms", 0.05)?;
+    let load = |p: &str| -> Result<crate::util::json::Json> {
+        let text = std::fs::read_to_string(p)
+            .map_err(|e| anyhow::anyhow!("cannot read bench artifact {p}: {e}"))?;
+        crate::util::json::Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("bad JSON in {p}: {e}"))
+    };
+    let d = crate::bench::perfdiff::diff(&load(base_path)?, &load(new_path)?, threshold, min_ms);
+    let report = crate::bench::perfdiff::report_markdown(&d, threshold, min_ms);
+    print!("{report}");
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, &report)?;
+        log_info!("perf diff written to {out}");
+    }
+    anyhow::ensure!(
+        !d.has_regressions(),
+        "{} bench row(s) regressed more than {threshold}% vs {base_path}",
+        d.regressions.len()
+    );
+    Ok(())
+}
+
 fn cmd_inspect(args: &Args) -> Result<()> {
     let rt = Runtime::new(args.get_or("artifacts", "artifacts"))?;
     println!("platform: {}", rt.platform());
@@ -276,6 +312,60 @@ mod tests {
         ] {
             assert!(default_lr(kind) > 0.0);
         }
+    }
+
+    #[test]
+    fn perf_diff_cli_gates_on_regressions() {
+        use crate::util::json::Json;
+        let table = |ms: f64| {
+            Json::obj(vec![
+                ("name", Json::str("perf_hotpath")),
+                (
+                    "rows",
+                    Json::arr(vec![Json::obj(vec![
+                        ("kernel", Json::str("orth_svd")),
+                        ("shape", Json::str("4x2048")),
+                        ("ms_mean", Json::num(ms)),
+                    ])]),
+                ),
+            ])
+            .pretty()
+        };
+        let dir = std::env::temp_dir().join("sumo_perfdiff_cli");
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = dir.join("base.json");
+        let fast = dir.join("fast.json");
+        let slow = dir.join("slow.json");
+        std::fs::write(&base, table(1.0)).unwrap();
+        std::fs::write(&fast, table(1.05)).unwrap();
+        std::fs::write(&slow, table(1.5)).unwrap();
+        let run = |new: &std::path::Path, out: &str| {
+            let argv: Vec<String> = [
+                "perf-diff",
+                "--base",
+                base.to_str().unwrap(),
+                "--new",
+                new.to_str().unwrap(),
+                "--threshold",
+                "10",
+                "--out",
+                out,
+            ]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+            dispatch(&Args::parse(&argv).unwrap())
+        };
+        let report = dir.join("report.md");
+        assert!(run(&fast, report.to_str().unwrap()).is_ok());
+        let err = run(&slow, report.to_str().unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("regressed"), "got: {err}");
+        // The markdown report is written even when the gate fails.
+        let md = std::fs::read_to_string(&report).unwrap();
+        assert!(md.contains("orth_svd"));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

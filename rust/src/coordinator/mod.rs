@@ -9,6 +9,8 @@
 
 pub mod allreduce;
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+
 use crate::config::{OptimCfg, OptimKind};
 use crate::data::Batch;
 use crate::linalg::Mat;
@@ -18,6 +20,41 @@ use crate::runtime::{HloSumo, ModelRunner, Runtime};
 use crate::util::threadpool::ThreadPool;
 
 pub use allreduce::allreduce_mean;
+
+/// How one iteration's gradients are computed for a requested data-parallel
+/// sharding — the (previously implicit) dispatch decision of
+/// [`Coordinator::compute_grads_lm`], factored out so both outcomes are
+/// explicit and testable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DpPlan {
+    /// Single full-batch pass (no sharding requested).
+    Single,
+    /// `shards` shards of `per` batch rows each, all-reduced.
+    Sharded { shards: usize, per: usize },
+    /// Requested sharding is **dropped** because the batch does not divide
+    /// evenly; the iteration falls back to a single full-batch pass. The
+    /// coordinator logs a warning and counts these
+    /// ([`Coordinator::dp_fallback_count`]) so silent degradation of a
+    /// multi-shard run is visible.
+    FallbackIndivisible { batch: usize, shards: usize },
+}
+
+/// Decide how a batch of `batch` rows is computed under `dp_shards`.
+pub fn dp_plan(batch: usize, dp_shards: usize) -> DpPlan {
+    if dp_shards <= 1 {
+        DpPlan::Single
+    } else if batch % dp_shards != 0 {
+        DpPlan::FallbackIndivisible {
+            batch,
+            shards: dp_shards,
+        }
+    } else {
+        DpPlan::Sharded {
+            shards: dp_shards,
+            per: batch / dp_shards,
+        }
+    }
+}
 
 /// Which implementation applies the updates.
 pub enum Engine<'rt> {
@@ -46,6 +83,9 @@ pub struct Coordinator<'rt> {
     /// step concurrently with results bitwise identical to the serial loop.
     pool: ThreadPool,
     step: usize,
+    /// Iterations where requested data-parallel sharding was dropped
+    /// (batch not divisible by `dp_shards`).
+    dp_fallbacks: AtomicUsize,
 }
 
 impl<'rt> Coordinator<'rt> {
@@ -69,6 +109,7 @@ impl<'rt> Coordinator<'rt> {
             dp_shards: dp_shards.max(1),
             pool: ThreadPool::dispatch_only(),
             step: 0,
+            dp_fallbacks: AtomicUsize::new(0),
         })
     }
 
@@ -93,6 +134,7 @@ impl<'rt> Coordinator<'rt> {
             dp_shards: 1,
             pool: ThreadPool::dispatch_only(),
             step: 0,
+            dp_fallbacks: AtomicUsize::new(0),
         })
     }
 
@@ -129,23 +171,46 @@ impl<'rt> Coordinator<'rt> {
         Ok(metrics)
     }
 
+    /// Iterations where requested data-parallel sharding was silently
+    /// impossible and the coordinator fell back to a single full-batch pass.
+    /// Zero in a healthy multi-shard run.
+    pub fn dp_fallback_count(&self) -> usize {
+        self.dp_fallbacks.load(Ordering::Relaxed)
+    }
+
     /// Gradient computation with data-parallel sharding + all-reduce.
     fn compute_grads_lm(&self, batch: &Batch) -> crate::Result<(f32, Vec<Mat>)> {
-        if self.dp_shards == 1 || batch.batch % self.dp_shards != 0 {
-            let out = self.runner.train_step(&self.params, batch)?;
-            return Ok((out.loss, out.grads));
-        }
+        let (shards, per) = match dp_plan(batch.batch, self.dp_shards) {
+            DpPlan::Single => {
+                let out = self.runner.train_step(&self.params, batch)?;
+                return Ok((out.loss, out.grads));
+            }
+            DpPlan::FallbackIndivisible { batch: b, shards } => {
+                // The gradient is still correct (one full-batch pass), but
+                // the requested sharding is dropped — surface it instead of
+                // silently degrading the run.
+                if self.dp_fallbacks.fetch_add(1, Ordering::Relaxed) == 0 {
+                    crate::log_warn!(
+                        "data-parallel sharding dropped: batch {b} not divisible by \
+                         dp_shards {shards}; falling back to a single full-batch pass \
+                         (counted in Coordinator::dp_fallback_count, warned once)"
+                    );
+                }
+                let out = self.runner.train_step(&self.params, batch)?;
+                return Ok((out.loss, out.grads));
+            }
+            DpPlan::Sharded { shards, per } => (shards, per),
+        };
         // The artifact batch size is fixed; DP here replays each shard's
         // rows (tiled to the full batch width) through the same executable
         // and all-reduces — the gradient semantics of a multi-worker setup
         // exercised on one host.
-        let per = batch.batch / self.dp_shards;
-        let mut shard_grads = Vec::with_capacity(self.dp_shards);
+        let mut shard_grads = Vec::with_capacity(shards);
         let mut loss_sum = 0.0f32;
-        for s in 0..self.dp_shards {
+        for s in 0..shards {
             let mut inputs = Vec::with_capacity(batch.inputs.len());
             let mut targets = Vec::with_capacity(batch.targets.len());
-            for _rep in 0..self.dp_shards {
+            for _rep in 0..shards {
                 for row in 0..per {
                     let src = (s * per + row) * batch.seq;
                     inputs.extend_from_slice(&batch.inputs[src..src + batch.seq]);
@@ -163,7 +228,7 @@ impl<'rt> Coordinator<'rt> {
             shard_grads.push(out.grads);
         }
         let grads = allreduce_mean(&mut shard_grads);
-        Ok((loss_sum / self.dp_shards as f32, grads))
+        Ok((loss_sum / shards as f32, grads))
     }
 
     /// Per-layer update dispatch. Independent layers step concurrently
@@ -223,6 +288,38 @@ impl<'rt> Coordinator<'rt> {
         match &self.engine {
             Engine::Native(opt) => opt.name(),
             Engine::Hlo(_) => "sumo-hlo",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dp_plan_shards_when_divisible() {
+        assert_eq!(dp_plan(8, 2), DpPlan::Sharded { shards: 2, per: 4 });
+        assert_eq!(dp_plan(12, 3), DpPlan::Sharded { shards: 3, per: 4 });
+        assert_eq!(dp_plan(4, 4), DpPlan::Sharded { shards: 4, per: 1 });
+    }
+
+    #[test]
+    fn dp_plan_single_without_sharding() {
+        assert_eq!(dp_plan(8, 1), DpPlan::Single);
+        assert_eq!(dp_plan(8, 0), DpPlan::Single);
+    }
+
+    #[test]
+    fn dp_plan_falls_back_explicitly_when_indivisible() {
+        // The old code silently collapsed this case into the single-pass
+        // branch; the plan now names it so the coordinator can warn + count.
+        for (b, s) in [(7usize, 2usize), (8, 3), (2, 4)] {
+            match dp_plan(b, s) {
+                DpPlan::FallbackIndivisible { batch, shards } => {
+                    assert_eq!((batch, shards), (b, s));
+                }
+                other => panic!("dp_plan({b}, {s}) should fall back, got {other:?}"),
+            }
         }
     }
 }

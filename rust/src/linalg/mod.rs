@@ -23,6 +23,9 @@ pub use matmul::{
 };
 pub use newton_schulz::{newton_schulz5, newton_schulz5_into, Ns5Scratch};
 pub use norms::{cond_gram, fro_norm, spectral_norm};
-pub use orth::{orth_svd, orth_svd_fast, orth_svd_into, OrthScratch};
+pub use orth::{
+    orth_svd, orth_svd_batched_into, orth_svd_batched_multi_into, orth_svd_fast, orth_svd_into,
+    BatchOrthScratch, BatchOrthTask, OrthScratch,
+};
 pub use qr::mgs_qr;
 pub use rsvd::{randomized_range, rsvd, RsvdOpts};

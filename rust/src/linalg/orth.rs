@@ -18,8 +18,15 @@
 //! The hot-path entry point is [`orth_svd_into`]: it writes into a
 //! preallocated output using an [`OrthScratch`] workspace, performing zero
 //! heap allocations — the SUMO step engine calls it every iteration.
+//!
+//! [`orth_svd_batched_into`] runs the same algorithm over N stacked problems
+//! of one shape class (one cyclic sweep schedule, per-problem convergence
+//! masks, batch axis chunked across a [`ThreadPool`]): outputs are bitwise
+//! identical to N independent [`orth_svd_into`] calls, which the grouped
+//! SUMO step dispatch and the Pallas Layer-1 grid axis both rely on.
 
 use super::Mat;
+use crate::util::threadpool::ThreadPool;
 
 /// Rows with σ ≤ `SIGMA_REL`·σ_max are treated as rank-deficient and mapped
 /// to zero (Moore-Penrose convention). 1e-7 ≈ f32 machine epsilon: inputs
@@ -85,52 +92,18 @@ pub fn orth_svd_into(m: &Mat, out: &mut Mat, ws: &mut OrthScratch) {
     let (k, l) = (rows.min(cols), rows.max(cols));
     assert_eq!((ws.k, ws.l), (k, l), "scratch sized for a different shape");
 
-    // 1. Load the small side as rows of the f64 working copy.
-    if transposed {
-        for i in 0..k {
-            for j in 0..l {
-                ws.a[i * l + j] = m[(j, i)] as f64;
-            }
-        }
-    } else {
-        for (dst, &src) in ws.a.iter_mut().zip(m.data.iter()) {
-            *dst = src as f64;
-        }
-    }
-    // 2. W ← I.
-    ws.w.iter_mut().for_each(|x| *x = 0.0);
-    for i in 0..k {
-        ws.w[i * k + i] = 1.0;
-    }
+    // 1-2. Load the small side as rows of the f64 working copy; W ← I.
+    load_small_rows(m, transposed, k, l, &mut ws.a);
+    init_identity(&mut ws.w, k);
 
     // 3. Cyclic one-sided Jacobi: rotate row pairs until mutually orthogonal.
     for _sweep in 0..MAX_SWEEPS {
         let mut rotated = false;
         for p in 0..k {
             for q in (p + 1)..k {
-                let (mut app, mut aqq, mut apq) = (0.0f64, 0.0, 0.0);
-                {
-                    let (rp, rq) = row_pair64(&ws.a, l, p, q);
-                    for (x, y) in rp.iter().zip(rq.iter()) {
-                        app += x * x;
-                        aqq += y * y;
-                        apq += x * y;
-                    }
+                if jacobi_pair(&mut ws.a, &mut ws.w, k, l, p, q) {
+                    rotated = true;
                 }
-                if apq.abs() <= ROT_TOL * (app * aqq).sqrt() {
-                    continue;
-                }
-                let tau = (aqq - app) / (2.0 * apq);
-                let t = if tau >= 0.0 {
-                    1.0 / (tau + (1.0 + tau * tau).sqrt())
-                } else {
-                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
-                };
-                let c = 1.0 / (1.0 + t * t).sqrt();
-                let s = t * c;
-                rotate_rows(&mut ws.a, l, p, q, c, s);
-                rotate_rows(&mut ws.w, k, p, q, c, s);
-                rotated = true;
             }
         }
         if !rotated {
@@ -138,15 +111,86 @@ pub fn orth_svd_into(m: &Mat, out: &mut Mat, ws: &mut OrthScratch) {
         }
     }
 
-    // 4-5. Row norms are the singular values; normalize (or zero) rows.
+    // 4-7. Normalize rows, compose O = Wᵀ·Â, write back in the caller's
+    // orientation.
+    normalize_rows(&mut ws.a, k, l);
+    compose_polar(&ws.a, &ws.w, &mut ws.p, k, l);
+    write_out(&ws.p, out, transposed, k, l);
+}
+
+// ---- shared per-problem stages ------------------------------------------
+//
+// The single-matrix path above and the batched path below call exactly these
+// helpers in the same per-problem order, so their outputs are **bitwise
+// identical** — pinned by `tests/batched_orth.rs`.
+
+/// Stage 1: copy the small side of `m` as rows of the k×l f64 working buffer.
+#[inline]
+fn load_small_rows(m: &Mat, transposed: bool, k: usize, l: usize, a: &mut [f64]) {
+    if transposed {
+        for i in 0..k {
+            for j in 0..l {
+                a[i * l + j] = m[(j, i)] as f64;
+            }
+        }
+    } else {
+        for (dst, &src) in a.iter_mut().zip(m.data.iter()) {
+            *dst = src as f64;
+        }
+    }
+}
+
+/// Stage 2: W ← I_k.
+#[inline]
+fn init_identity(w: &mut [f64], k: usize) {
+    w.iter_mut().for_each(|x| *x = 0.0);
+    for i in 0..k {
+        w[i * k + i] = 1.0;
+    }
+}
+
+/// Stage 3, one (p, q) step of the cyclic schedule: orthogonalize rows `p`
+/// and `q` of the k×l working buffer (accumulating the rotation into `w`).
+/// Returns whether a rotation was applied.
+#[inline]
+fn jacobi_pair(a: &mut [f64], w: &mut [f64], k: usize, l: usize, p: usize, q: usize) -> bool {
+    let (mut app, mut aqq, mut apq) = (0.0f64, 0.0, 0.0);
+    {
+        let (rp, rq) = row_pair64(a, l, p, q);
+        for (x, y) in rp.iter().zip(rq.iter()) {
+            app += x * x;
+            aqq += y * y;
+            apq += x * y;
+        }
+    }
+    if apq.abs() <= ROT_TOL * (app * aqq).sqrt() {
+        return false;
+    }
+    let tau = (aqq - app) / (2.0 * apq);
+    let t = if tau >= 0.0 {
+        1.0 / (tau + (1.0 + tau * tau).sqrt())
+    } else {
+        -1.0 / (-tau + (1.0 + tau * tau).sqrt())
+    };
+    let c = 1.0 / (1.0 + t * t).sqrt();
+    let s = t * c;
+    rotate_rows(a, l, p, q, c, s);
+    rotate_rows(w, k, p, q, c, s);
+    true
+}
+
+/// Stages 4-5: row norms are the singular values; normalize rows, zeroing
+/// rank-deficient ones (σ ≤ SIGMA_REL·σ_max, Moore-Penrose convention).
+#[inline]
+fn normalize_rows(a: &mut [f64], k: usize, l: usize) {
     let mut sigma_max = 0.0f64;
     for i in 0..k {
-        let row = &ws.a[i * l..(i + 1) * l];
+        let row = &a[i * l..(i + 1) * l];
         let norm = row.iter().map(|x| x * x).sum::<f64>().sqrt();
         sigma_max = sigma_max.max(norm);
     }
     for i in 0..k {
-        let row = &mut ws.a[i * l..(i + 1) * l];
+        let row = &mut a[i * l..(i + 1) * l];
         let norm = row.iter().map(|x| x * x).sum::<f64>().sqrt();
         let inv = if norm > SIGMA_REL * sigma_max && norm > 0.0 {
             1.0 / norm
@@ -155,35 +199,267 @@ pub fn orth_svd_into(m: &Mat, out: &mut Mat, ws: &mut OrthScratch) {
         };
         row.iter_mut().for_each(|x| *x *= inv);
     }
+}
 
-    // 6. O_small = Wᵀ · Â  (Wᵀ row i = W column i; i-t-j order, unit stride).
-    ws.p.iter_mut().for_each(|x| *x = 0.0);
+/// Stage 6: O_small = Wᵀ · Â  (Wᵀ row i = W column i; i-t-j order keeps
+/// unit stride on the long axis).
+#[inline]
+fn compose_polar(a: &[f64], w: &[f64], p_out: &mut [f64], k: usize, l: usize) {
+    p_out.iter_mut().for_each(|x| *x = 0.0);
     for t in 0..k {
-        let arow = &ws.a[t * l..(t + 1) * l];
+        let arow = &a[t * l..(t + 1) * l];
         for i in 0..k {
-            let wti = ws.w[t * k + i];
+            let wti = w[t * k + i];
             if wti == 0.0 {
                 continue;
             }
-            let prow = &mut ws.p[i * l..(i + 1) * l];
+            let prow = &mut p_out[i * l..(i + 1) * l];
             for (pj, &aj) in prow.iter_mut().zip(arow.iter()) {
                 *pj += wti * aj;
             }
         }
     }
+}
 
-    // 7. Write back in the caller's orientation.
+/// Stage 7: write the composed polar factor back in the caller's orientation.
+#[inline]
+fn write_out(p: &[f64], out: &mut Mat, transposed: bool, k: usize, l: usize) {
     if transposed {
         for i in 0..k {
             for j in 0..l {
-                out[(j, i)] = ws.p[i * l + j] as f32;
+                out[(j, i)] = p[i * l + j] as f32;
             }
         }
     } else {
-        for (dst, &src) in out.data.iter_mut().zip(ws.p.iter()) {
+        for (dst, &src) in out.data.iter_mut().zip(p.iter()) {
             *dst = src as f32;
         }
     }
+}
+
+// ---- batched kernel ------------------------------------------------------
+
+/// Preallocated f64 workspace for [`orth_svd_batched_into`], sized once per
+/// **shape class**: up to `batch` problems whose small/large sides are
+/// `(k, l) = (min(rows, cols), max(rows, cols))`. Both orientations of one
+/// class share the scratch (the orientation is a per-problem property), so
+/// left-projected `r×n` and right-projected `m×r` moments with matching
+/// dimensions stack into one batch.
+pub struct BatchOrthScratch {
+    k: usize,
+    l: usize,
+    cap: usize,
+    /// cap × k×l stacked working copies.
+    a: Vec<f64>,
+    /// cap × k×k accumulated rotations.
+    w: Vec<f64>,
+    /// cap × k×l product buffers for O = Wᵀ·Â.
+    p: Vec<f64>,
+}
+
+impl BatchOrthScratch {
+    /// Workspace for up to `batch` problems of shape `rows`×`cols` (either
+    /// orientation).
+    pub fn new(batch: usize, rows: usize, cols: usize) -> BatchOrthScratch {
+        let k = rows.min(cols).max(1);
+        let l = rows.max(cols).max(1);
+        let cap = batch.max(1);
+        BatchOrthScratch {
+            k,
+            l,
+            cap,
+            a: vec![0.0; cap * k * l],
+            w: vec![0.0; cap * k * k],
+            p: vec![0.0; cap * k * l],
+        }
+    }
+
+    /// Maximum number of stacked problems.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// The `(small, large)` side lengths this scratch serves.
+    pub fn shape_class(&self) -> (usize, usize) {
+        (self.k, self.l)
+    }
+}
+
+/// One stacked problem: disjoint slices of a batch scratch plus its input,
+/// output, shape class, and convergence bookkeeping. `Send` so contiguous
+/// sub-batches can move to pool workers.
+struct OrthProblem<'a> {
+    k: usize,
+    l: usize,
+    a: &'a mut [f64],
+    w: &'a mut [f64],
+    p: &'a mut [f64],
+    src: &'a Mat,
+    out: &'a mut Mat,
+    transposed: bool,
+    /// Still sweeping (cleared after the first rotation-free sweep).
+    active: bool,
+    /// Scratch flag: did the current sweep rotate this problem?
+    sweep_rot: bool,
+}
+
+/// Process one contiguous sub-batch that may span shape classes (a
+/// multi-class dispatch flattens all classes into one task list): split it
+/// into maximal same-`(k, l)` runs and run the masked sweep schedule on
+/// each run.
+fn batch_chunk(problems: &mut [OrthProblem<'_>]) {
+    let mut i = 0;
+    while i < problems.len() {
+        let (k, l) = (problems[i].k, problems[i].l);
+        let mut j = i + 1;
+        while j < problems.len() && (problems[j].k, problems[j].l) == (k, l) {
+            j += 1;
+        }
+        batch_run(&mut problems[i..j], k, l);
+        i = j;
+    }
+}
+
+/// Run the full batched schedule on one same-class sub-batch: load all
+/// problems, then one cyclic Jacobi sweep schedule across the sub-batch with
+/// per-problem convergence masks, then normalize/compose/write each problem.
+///
+/// The per-problem arithmetic is exactly the [`orth_svd_into`] stage
+/// sequence; only the loop interleaving across problems differs, and no
+/// state is shared between problems, so outputs are bitwise identical.
+fn batch_run(problems: &mut [OrthProblem<'_>], k: usize, l: usize) {
+    for pr in problems.iter_mut() {
+        load_small_rows(pr.src, pr.transposed, k, l, pr.a);
+        init_identity(pr.w, k);
+        pr.active = true;
+    }
+    for _sweep in 0..MAX_SWEEPS {
+        for pr in problems.iter_mut() {
+            pr.sweep_rot = false;
+        }
+        // One (p, q) pass over every still-active problem: the pair-loop
+        // control flow is amortized across the whole sub-batch.
+        for p in 0..k {
+            for q in (p + 1)..k {
+                for pr in problems.iter_mut() {
+                    if pr.active && jacobi_pair(pr.a, pr.w, k, l, p, q) {
+                        pr.sweep_rot = true;
+                    }
+                }
+            }
+        }
+        let mut any = false;
+        for pr in problems.iter_mut() {
+            if pr.active {
+                // Same stop rule as the single path: a problem completes its
+                // first rotation-free sweep (which modifies nothing) and then
+                // stops sweeping.
+                pr.active = pr.sweep_rot;
+                any |= pr.sweep_rot;
+            }
+        }
+        if !any {
+            break;
+        }
+    }
+    for pr in problems.iter_mut() {
+        normalize_rows(pr.a, k, l);
+        compose_polar(pr.a, pr.w, pr.p, k, l);
+        write_out(pr.p, pr.out, pr.transposed, k, l);
+    }
+}
+
+/// One shape-class batch of a multi-class dispatch: the stacked inputs and
+/// outputs plus the class's [`BatchOrthScratch`].
+pub struct BatchOrthTask<'a> {
+    pub inputs: Vec<&'a Mat>,
+    pub outs: Vec<&'a mut Mat>,
+    pub ws: &'a mut BatchOrthScratch,
+}
+
+/// Validate one task and append its problems (carved from its scratch) to
+/// the flattened dispatch list.
+fn push_task_problems<'a>(task: &'a mut BatchOrthTask<'_>, dst: &mut Vec<OrthProblem<'a>>) {
+    let n = task.inputs.len();
+    assert_eq!(n, task.outs.len(), "batched orth arity");
+    assert!(
+        n <= task.ws.cap,
+        "batch of {n} exceeds scratch capacity {}",
+        task.ws.cap
+    );
+    let (k, l) = (task.ws.k, task.ws.l);
+    let iter = task
+        .ws
+        .a
+        .chunks_exact_mut(k * l)
+        .zip(task.ws.w.chunks_exact_mut(k * k))
+        .zip(task.ws.p.chunks_exact_mut(k * l))
+        .zip(task.inputs.iter().zip(task.outs.iter_mut()));
+    for (((a, w), p), (src, out)) in iter {
+        let (rows, cols) = src.shape();
+        assert_eq!(
+            (rows.min(cols), rows.max(cols)),
+            (k, l),
+            "input outside the scratch's shape class"
+        );
+        assert_eq!((out.rows, out.cols), (rows, cols), "orth output shape");
+        dst.push(OrthProblem {
+            k,
+            l,
+            a,
+            w,
+            p,
+            src: *src,
+            out: &mut **out,
+            transposed: rows > cols,
+            active: true,
+            sweep_rot: false,
+        });
+    }
+}
+
+/// Multi-class batched exact polar factor: every task holds one shape
+/// class's stacked problems, and ALL tasks' problems are flattened into one
+/// list chunked across the pool — so a dispatch of many small (even
+/// singleton) classes still runs concurrently instead of serializing per
+/// class. Within a chunk, maximal same-class runs share one masked sweep
+/// schedule. Outputs are **bitwise identical** to per-problem
+/// [`orth_svd_into`] calls in every configuration.
+pub fn orth_svd_batched_multi_into(mut batches: Vec<BatchOrthTask<'_>>, pool: Option<&ThreadPool>) {
+    let total: usize = batches.iter().map(|t| t.inputs.len()).sum();
+    let mut problems: Vec<OrthProblem<'_>> = Vec::with_capacity(total);
+    for task in batches.iter_mut() {
+        push_task_problems(task, &mut problems);
+    }
+    if problems.is_empty() {
+        return;
+    }
+    match pool {
+        Some(pool) => pool.par_for_each_chunk_mut(&mut problems, |_, chunk| {
+            batch_chunk(chunk);
+        }),
+        None => batch_chunk(&mut problems),
+    }
+}
+
+/// Batched exact polar factor over one shape class `(k, l)` (mixed
+/// orientations allowed): one cyclic one-sided Jacobi sweep schedule runs
+/// across the whole batch with per-problem convergence masks; with a `pool`
+/// the batch axis is chunked over [`ThreadPool::par_for_each_chunk_mut`]
+/// (one contiguous sub-batch per worker). Outputs are **bitwise identical**
+/// to N independent [`orth_svd_into`] calls in every configuration.
+pub fn orth_svd_batched_into(
+    inputs: &[&Mat],
+    outs: &mut [&mut Mat],
+    ws: &mut BatchOrthScratch,
+    pool: Option<&ThreadPool>,
+) {
+    let task = BatchOrthTask {
+        inputs: inputs.to_vec(),
+        outs: outs.iter_mut().map(|o| &mut **o).collect(),
+        ws,
+    };
+    orth_svd_batched_multi_into(vec![task], pool);
 }
 
 /// Shared borrows of rows `p` and `q` of a row-major k×`l` buffer.
@@ -339,6 +615,66 @@ mod tests {
         let m = Mat::randn(24, 5, 1.0, &mut rng);
         orth_svd_into(&m, &mut out_t, &mut ws_t);
         assert!(polar_defect(&out_t) < 1e-4);
+    }
+
+    #[test]
+    fn batched_matches_singles_bitwise() {
+        let mut rng = Rng::new(79);
+        for &(batch, k, l) in &[(1usize, 4usize, 24usize), (3, 4, 24), (7, 8, 8), (5, 1, 16)] {
+            let ms: Vec<Mat> = (0..batch).map(|_| Mat::randn(k, l, 1.0, &mut rng)).collect();
+            let mut singles = Vec::new();
+            for m in &ms {
+                let mut out = Mat::zeros(k, l);
+                let mut ws = OrthScratch::new(k, l);
+                orth_svd_into(m, &mut out, &mut ws);
+                singles.push(out);
+            }
+            let mut ws = BatchOrthScratch::new(batch, k, l);
+            let mut outs: Vec<Mat> = ms.iter().map(|_| Mat::zeros(k, l)).collect();
+            let ins: Vec<&Mat> = ms.iter().collect();
+            let mut out_refs: Vec<&mut Mat> = outs.iter_mut().collect();
+            orth_svd_batched_into(&ins, &mut out_refs, &mut ws, None);
+            for (i, (got, want)) in outs.iter().zip(&singles).enumerate() {
+                assert_eq!(
+                    got.max_diff(want),
+                    0.0,
+                    "({batch},{k},{l}) problem {i} diverged from single path"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batched_mixed_orientations_with_pool() {
+        // (4, 24) and (24, 4) problems share the (4, 24) shape class; pooled
+        // chunking must stay bitwise identical to the single path.
+        let mut rng = Rng::new(83);
+        let pool = crate::util::threadpool::ThreadPool::new(3);
+        let ms: Vec<Mat> = (0..6)
+            .map(|i| {
+                if i % 2 == 0 {
+                    Mat::randn(4, 24, 1.0, &mut rng)
+                } else {
+                    Mat::randn(24, 4, 1.0, &mut rng)
+                }
+            })
+            .collect();
+        let mut ws = BatchOrthScratch::new(ms.len(), 4, 24);
+        assert_eq!(ws.shape_class(), (4, 24));
+        assert_eq!(ws.capacity(), 6);
+        let mut outs: Vec<Mat> = ms.iter().map(|m| Mat::zeros(m.rows, m.cols)).collect();
+        // Reuse the scratch across calls: pooled and serial must agree.
+        for use_pool in [true, false] {
+            let ins: Vec<&Mat> = ms.iter().collect();
+            let mut out_refs: Vec<&mut Mat> = outs.iter_mut().collect();
+            orth_svd_batched_into(&ins, &mut out_refs, &mut ws, use_pool.then_some(&pool));
+            for (m, o) in ms.iter().zip(&outs) {
+                let mut want = Mat::zeros(m.rows, m.cols);
+                let mut sws = OrthScratch::new(m.rows, m.cols);
+                orth_svd_into(m, &mut want, &mut sws);
+                assert_eq!(o.max_diff(&want), 0.0);
+            }
+        }
     }
 
     #[test]

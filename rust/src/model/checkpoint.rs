@@ -47,8 +47,15 @@ pub fn save<P: AsRef<Path>>(store: &ParamStore, step: usize, path: P) -> crate::
 }
 
 /// Load a checkpoint; returns (store, step).
+///
+/// Tensor sizes claimed by the header are validated against the bytes
+/// actually present in the file *before* any payload buffer is allocated: a
+/// corrupt (or hostile) header would otherwise trigger multi-GB allocations
+/// that only fail later at `read_exact`.
 pub fn load<P: AsRef<Path>>(path: P) -> crate::Result<(ParamStore, usize)> {
-    let mut r = BufReader::new(File::open(path)?);
+    let file = File::open(path)?;
+    let file_len = file.metadata()?.len();
+    let mut r = BufReader::new(file);
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
     anyhow::ensure!(&magic == MAGIC, "not a SUMO checkpoint");
@@ -68,10 +75,23 @@ pub fn load<P: AsRef<Path>>(path: P) -> crate::Result<(ParamStore, usize)> {
         .as_arr()
         .ok_or_else(|| anyhow::anyhow!("missing tensors"))?;
     let mut tensors = Vec::with_capacity(specs.len());
+    // Bytes consumed so far: magic + header length prefix + header text.
+    let mut payload_off = (8 + 8 + hlen) as u64;
     for spec in specs {
         let name = spec.get("name").as_str().unwrap_or("").to_string();
         let rows = spec.get("rows").as_usize().unwrap_or(0);
         let cols = spec.get("cols").as_usize().unwrap_or(0);
+        let bytes = (rows as u64)
+            .checked_mul(cols as u64)
+            .and_then(|e| e.checked_mul(4))
+            .ok_or_else(|| anyhow::anyhow!("tensor {name:?}: {rows}x{cols} size overflows"))?;
+        let remaining = file_len.saturating_sub(payload_off);
+        anyhow::ensure!(
+            bytes <= remaining,
+            "tensor {name:?} claims {rows}x{cols} ({bytes} bytes) but only {remaining} bytes \
+             remain in the file — truncated or corrupt checkpoint header"
+        );
+        payload_off += bytes;
         let mut data = vec![0f32; rows * cols];
         let mut buf = vec![0u8; rows * cols * 4];
         r.read_exact(&mut buf)?;
@@ -98,6 +118,58 @@ mod tests {
         assert_eq!(step, 123);
         assert_eq!(loaded.cfg, cfg);
         assert_eq!(loaded.max_diff(&store), 0.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_oversized_tensor_header_before_allocating() {
+        // Hand-craft a checkpoint whose (otherwise well-formed) header
+        // claims a ~4 TB tensor backed by a 16-byte payload. Load must fail
+        // with a clean size error, not attempt the allocation and die inside
+        // read_exact.
+        let cfg = ModelCfg::preset("nano").unwrap();
+        let header = Json::obj(vec![
+            ("cfg", cfg.to_json()),
+            ("step", Json::num(0.0)),
+            (
+                "tensors",
+                Json::arr(vec![Json::obj(vec![
+                    ("name", Json::str("w")),
+                    ("rows", Json::num(1_000_000.0)),
+                    ("cols", Json::num(1_000_000.0)),
+                ])]),
+            ),
+        ])
+        .dump();
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        bytes.extend_from_slice(&[0u8; 16]);
+        let dir = std::env::temp_dir().join("sumo_ckpt_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("hostile.ckpt");
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(
+            err.contains("remain in the file"),
+            "expected a size-validation error, got: {err}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_truncated_payload() {
+        // A valid store whose payload is cut short mid-tensor must also be
+        // caught by the size check (the last tensor no longer fits).
+        let cfg = ModelCfg::preset("nano").unwrap();
+        let store = ParamStore::init(&cfg, 7);
+        let dir = std::env::temp_dir().join("sumo_ckpt_test4");
+        let path = dir.join("trunc.ckpt");
+        save(&store, 5, &path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 32]).unwrap();
+        assert!(load(&path).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -55,10 +55,14 @@ fn step_layer(
                 upd.data[i] = (m.data[i] / bc1) / ((v.data[i] / bc2).sqrt() + eps);
             }
             let full = p.subspace.back_project(&upd);
-            w.axpy(-lr * cfg.scale, &full);
+            // Decoupled weight decay on the *pre-update* weights (AdamW
+            // convention, matching the paper's Block 4 and the HLO twin):
+            // decaying after the axpy would attenuate the fresh update by
+            // (1−ηλ) as well.
             if cfg.weight_decay > 0.0 {
                 w.scale(1.0 - lr * cfg.weight_decay);
             }
+            w.axpy(-lr * cfg.scale, &full);
         }
     }
 }
@@ -205,6 +209,32 @@ mod tests {
             w.max_diff(&target) < 0.2 * target.max_abs(),
             "diff={}",
             w.max_diff(&target)
+        );
+    }
+
+    #[test]
+    fn decay_applies_to_pre_update_weights_only() {
+        // Same regression as optim::sumo: with W₀ = 0 the decoupled decay
+        // term vanishes, so the post-step weights must be bitwise identical
+        // for any λ; the old decay-after-axpy ordering scaled the projected
+        // Adam update by (1−ηλ) and failed this.
+        let mut rng = Rng::new(23);
+        let g = Mat::randn(32, 16, 1.0, &mut rng);
+        let run = |wd: f32| -> Mat {
+            let mut cfg = OptimCfg::new(OptimKind::GaLore).with_lr(0.1).with_rank(4);
+            cfg.weight_decay = wd;
+            let mut opt = GaLore::new(&cfg, &[(32, 16)], &[true], 9);
+            let mut w = Mat::zeros(32, 16);
+            opt.step(0, &mut w, &g, 1.0);
+            w
+        };
+        let w_plain = run(0.0);
+        let w_decay = run(0.5);
+        assert!(w_plain.fro() > 0.0, "update term must be nonzero");
+        assert_eq!(
+            w_plain.max_diff(&w_decay),
+            0.0,
+            "weight decay attenuated the projected Adam update term"
         );
     }
 

@@ -49,10 +49,12 @@ impl Optimizer for Muon {
             return;
         }
         let o = newton_schulz5(mom, self.cfg.ns_iters);
-        w.axpy(-lr * rms_scale(m, n), &o);
+        // Decoupled decay on the *pre-update* weights (same Block-4 ordering
+        // fix as SUMO/GaLore; the HLO muon twin decays w, not w − η·O).
         if self.cfg.weight_decay > 0.0 {
             w.scale(1.0 - lr * self.cfg.weight_decay);
         }
+        w.axpy(-lr * rms_scale(m, n), &o);
     }
 
     fn end_step(&mut self) {}

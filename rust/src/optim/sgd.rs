@@ -29,10 +29,11 @@ impl Optimizer for SgdM {
         let lr = self.cfg.lr * lr_mult;
         let mom = &mut self.moments[idx];
         mom.ema(self.cfg.beta1, 1.0, g); // classical momentum accumulation
-        w.axpy(-lr, mom);
+        // Decoupled decay on the *pre-update* weights (Block-4 ordering).
         if self.cfg.weight_decay > 0.0 {
             w.scale(1.0 - lr * self.cfg.weight_decay);
         }
+        w.axpy(-lr, mom);
     }
 
     fn end_step(&mut self) {}

@@ -15,9 +15,14 @@
 //! layer — the paper's Table 1 "nr + mr" row.
 
 use crate::config::OptimCfg;
-use crate::linalg::{newton_schulz5_into, orth_svd_into, Mat, Ns5Scratch, OrthScratch};
+use crate::linalg::{
+    newton_schulz5_into, orth_svd_batched_multi_into, orth_svd_into, BatchOrthScratch,
+    BatchOrthTask, Mat, Ns5Scratch, OrthScratch,
+};
 use crate::util::threadpool::ThreadPool;
 use crate::util::Rng;
+
+use std::collections::BTreeMap;
 
 use super::adam::DenseAdam;
 use super::limiter::NormGrowthLimiter;
@@ -37,7 +42,8 @@ enum OrthWs {
 }
 
 /// Preallocated per-layer buffers for Blocks 2–4. Sized once at
-/// construction; after the first step (which also allocates the moment) the
+/// construction; after the first step (which also allocates the moment and,
+/// on the serial path, the per-layer orthogonalization workspace) the
 /// projected-layer update performs **zero heap allocations** — pinned down
 /// by the scratch-reuse test in `tests/alloc_free_step.rs`. Scratch is
 /// workspace, not optimizer state, so it is excluded from `state_bytes`
@@ -49,7 +55,12 @@ struct StepScratch {
     o: Mat,
     /// Back-projected full-space update (layer shape).
     full: Mat,
-    orth: OrthWs,
+    ns5: bool,
+    /// Per-layer orthogonalization workspace, built lazily on the first
+    /// *serial* [`step_layer`] call: the grouped parallel path runs Block 2b
+    /// through the per-class [`BatchOrthScratch`] instead, so a training run
+    /// driven via `step_parallel` never pays for per-layer f64 workspaces.
+    orth: Option<OrthWs>,
 }
 
 impl StepScratch {
@@ -59,11 +70,8 @@ impl StepScratch {
             ghat: Mat::zeros(mr, mc),
             o: Mat::zeros(mr, mc),
             full: Mat::zeros(m, n),
-            orth: if ns5 {
-                OrthWs::Ns5(Ns5Scratch::new(mr, mc))
-            } else {
-                OrthWs::Svd(OrthScratch::new(mr, mc))
-            },
+            ns5,
+            orth: None,
         }
     }
 }
@@ -78,9 +86,62 @@ enum LayerState {
     Dense(DenseAdam),
 }
 
+/// Blocks 1–2a for one projected layer: basis refresh on schedule, gradient
+/// projection, first-moment EMA. Phase 1 of the grouped parallel dispatch
+/// and the first half of the serial [`step_layer`].
+fn project_and_ema(
+    cfg: &OptimCfg,
+    (m, n): (usize, usize),
+    subspace: &mut SubspaceState,
+    moment: &mut Option<Mat>,
+    scratch: &mut StepScratch,
+    g: &Mat,
+) {
+    // Block 1 (+1.1): refresh basis on schedule (amortized over K steps; the
+    // rSVD sketch allocates, steady-state steps do not).
+    if subspace.due() {
+        let transported = subspace.refresh(g, moment.take());
+        *moment = transported;
+    }
+    // Block 2a: EMA in the subspace, written into preallocated scratch.
+    subspace.project_into(g, &mut scratch.ghat);
+    let mshape = subspace.moment_shape(m, n);
+    let mom = moment.get_or_insert_with(|| Mat::zeros(mshape.0, mshape.1));
+    mom.ema(cfg.beta1, 1.0 - cfg.beta1, &scratch.ghat);
+}
+
+/// Blocks 3–4 for one projected layer: norm-growth limiter, back-projection,
+/// decoupled weight decay, update application. Phase 3 of the grouped
+/// parallel dispatch and the last part of the serial [`step_layer`].
+fn apply_update(
+    cfg: &OptimCfg,
+    (m, n): (usize, usize),
+    subspace: &SubspaceState,
+    limiter: &mut NormGrowthLimiter,
+    scratch: &mut StepScratch,
+    w: &mut Mat,
+    lr: f32,
+) {
+    // Block 3: norm-growth limiter.
+    limiter.apply(&mut scratch.o);
+    // Block 4: W ← W − η·α·s·QO − η·λ·W. Decay acts on the *pre-update*
+    // weights, so it is folded into W before the update lands — applying it
+    // after the axpy would shrink the freshly applied orthogonalized update
+    // by (1−ηλ) too (the ordering bug this replaces; pinned by
+    // `decay_applies_to_pre_update_weights_only`).
+    subspace.back_project_into(&scratch.o, &mut scratch.full);
+    if cfg.weight_decay > 0.0 {
+        w.scale(1.0 - lr * cfg.weight_decay);
+    }
+    let step_scale = lr * cfg.scale * rms_scale(m, n);
+    w.axpy(-step_scale, &scratch.full);
+}
+
 /// One SUMO layer update (Blocks 1–4). Free function so the serial
 /// [`Optimizer::step`] and the threaded [`Optimizer::step_parallel`] paths
-/// share byte-for-byte the same arithmetic.
+/// share byte-for-byte the same arithmetic — the three-phase parallel
+/// dispatch calls exactly [`project_and_ema`] / orthogonalization /
+/// [`apply_update`] in this per-layer order.
 fn step_layer(
     cfg: &OptimCfg,
     (m, n): (usize, usize),
@@ -97,33 +158,37 @@ fn step_layer(
             limiter,
             scratch,
         } => {
-            // Block 1 (+1.1): refresh basis on schedule (amortized over K
-            // steps; the rSVD sketch allocates, steady-state steps do not).
-            if subspace.due() {
-                let transported = subspace.refresh(g, moment.take());
-                *moment = transported;
-            }
-            // Block 2: EMA in the subspace, orthogonalization — written
-            // into preallocated scratch.
-            subspace.project_into(g, &mut scratch.ghat);
-            let mshape = subspace.moment_shape(m, n);
-            let mom = moment.get_or_insert_with(|| Mat::zeros(mshape.0, mshape.1));
-            mom.ema(cfg.beta1, 1.0 - cfg.beta1, &scratch.ghat);
-            match &mut scratch.orth {
+            project_and_ema(cfg, (m, n), subspace, moment, scratch, g);
+            // Block 2b: orthogonalization (per-layer workspace, built on
+            // first use — the parallel engine uses the group scratch).
+            let mom = moment.as_ref().expect("moment initialized above");
+            let (orows, ocols, ns5) = (scratch.ghat.rows, scratch.ghat.cols, scratch.ns5);
+            let orth = scratch.orth.get_or_insert_with(|| {
+                if ns5 {
+                    OrthWs::Ns5(Ns5Scratch::new(orows, ocols))
+                } else {
+                    OrthWs::Svd(OrthScratch::new(orows, ocols))
+                }
+            });
+            match orth {
                 OrthWs::Svd(ws) => orth_svd_into(mom, &mut scratch.o, ws),
                 OrthWs::Ns5(ws) => newton_schulz5_into(mom, cfg.ns_iters, &mut scratch.o, ws),
             }
-            // Block 3: norm-growth limiter.
-            limiter.apply(&mut scratch.o);
-            // Block 4: back-project, weight decay, RMS scaling.
-            subspace.back_project_into(&scratch.o, &mut scratch.full);
-            let step_scale = lr * cfg.scale * rms_scale(m, n);
-            w.axpy(-step_scale, &scratch.full);
-            if cfg.weight_decay > 0.0 {
-                w.scale(1.0 - lr * cfg.weight_decay);
-            }
+            apply_update(cfg, (m, n), subspace, limiter, scratch, w, lr);
         }
     }
+}
+
+/// One moment shape class of the grouped parallel step: the projected layers
+/// whose moments share `(k, l) = (min, max)` of the moment shape, plus the
+/// batch orthogonalization scratch for them — built on the first
+/// `step_parallel` call (mirroring the lazy per-layer workspace of the
+/// serial path), so each path only ever pays for its own workspace.
+struct ShapeGroup {
+    k: usize,
+    l: usize,
+    members: Vec<usize>,
+    scratch: Option<BatchOrthScratch>,
 }
 
 /// Native SUMO optimizer.
@@ -131,6 +196,9 @@ pub struct Sumo {
     cfg: OptimCfg,
     layers: Vec<LayerState>,
     shapes: Vec<(usize, usize)>,
+    /// Moment shape classes for the grouped (phase-2) batched
+    /// orthogonalization; empty in NS5 mode, which has no batched kernel.
+    groups: Vec<ShapeGroup>,
     ns5: bool,
     t: usize,
 }
@@ -144,7 +212,7 @@ impl Sumo {
         ns5: bool,
     ) -> Sumo {
         let mut rng = Rng::new(seed ^ 0x53_55_4D_4F); // "SUMO"
-        let layers = shapes
+        let layers: Vec<LayerState> = shapes
             .iter()
             .zip(projected)
             .map(|(&(m, n), &proj)| {
@@ -168,13 +236,45 @@ impl Sumo {
                 }
             })
             .collect();
+        let groups = if ns5 {
+            Vec::new()
+        } else {
+            Self::shape_groups(&layers, shapes)
+        };
         Sumo {
             cfg: cfg.clone(),
             layers,
             shapes: shapes.to_vec(),
+            groups,
             ns5,
             t: 0,
         }
+    }
+
+    /// Group projected layers by moment shape class `(min, max)`. Moment
+    /// shapes are fixed at construction, so the grouping never changes; the
+    /// per-class batch scratch is built on the first `step_parallel` call
+    /// and reused every iteration after.
+    fn shape_groups(layers: &[LayerState], shapes: &[(usize, usize)]) -> Vec<ShapeGroup> {
+        let mut by_class: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
+        for (idx, layer) in layers.iter().enumerate() {
+            if let LayerState::Projected { subspace, .. } = layer {
+                let (mr, mc) = subspace.moment_shape(shapes[idx].0, shapes[idx].1);
+                by_class
+                    .entry((mr.min(mc), mr.max(mc)))
+                    .or_default()
+                    .push(idx);
+            }
+        }
+        by_class
+            .into_iter()
+            .map(|((k, l), members)| ShapeGroup {
+                k,
+                l,
+                members,
+                scratch: None,
+            })
+            .collect()
     }
 
     /// Orthogonalization error proxy for diagnostics: ‖O Oᵀ − I‖_max.
@@ -205,6 +305,15 @@ impl Optimizer for Sumo {
         step_layer(&self.cfg, self.shapes[idx], &mut self.layers[idx], w, g, lr);
     }
 
+    /// Three-phase grouped dispatch (SVD mode): parallel per-layer
+    /// project+EMA (Blocks 1–2a), batched orthogonalization per moment shape
+    /// class (Block 2b, one Jacobi sweep schedule over each class's stacked
+    /// moments), parallel per-layer limiter+back-project+apply (Blocks 3–4).
+    /// Per-layer arithmetic runs in exactly the serial [`step_layer`] order
+    /// and the batched kernel is bitwise identical to the per-layer one, so
+    /// results match the serial path bitwise (`tests/parallel_step.rs`).
+    /// The NS5 ablation has no batched kernel and keeps the single-phase
+    /// per-layer dispatch.
     fn step_parallel(
         &mut self,
         pool: &ThreadPool,
@@ -214,8 +323,69 @@ impl Optimizer for Sumo {
     ) {
         let lr = self.cfg.lr * lr_mult;
         let (cfg, shapes) = (&self.cfg, &self.shapes);
+        if self.ns5 {
+            super::par_step_layers(pool, &mut self.layers, weights, grads, |idx, layer, w, g| {
+                step_layer(cfg, shapes[idx], layer, w, g, lr);
+            });
+            return;
+        }
+        // Phase 1 — Blocks 1–2a per projected layer; dense (Adam-fallback)
+        // layers complete their whole update here.
         super::par_step_layers(pool, &mut self.layers, weights, grads, |idx, layer, w, g| {
-            step_layer(cfg, shapes[idx], layer, w, g, lr);
+            match layer {
+                LayerState::Dense(adam) => adam.step(w, g, lr),
+                LayerState::Projected {
+                    subspace,
+                    moment,
+                    scratch,
+                    ..
+                } => project_and_ema(cfg, shapes[idx], subspace, moment, scratch, g),
+            }
+        });
+        // Phase 2 — Block 2b: batched orthogonalization. Every shape class
+        // contributes one task and ALL tasks' problems flatten into a single
+        // pool dispatch, so models with many small (even singleton) classes
+        // still orthogonalize concurrently.
+        let mut io: Vec<Option<(&Mat, &mut Mat)>> = self
+            .layers
+            .iter_mut()
+            .map(|layer| match layer {
+                LayerState::Projected {
+                    moment, scratch, ..
+                } => Some((
+                    moment.as_ref().expect("moment initialized in phase 1"),
+                    &mut scratch.o,
+                )),
+                LayerState::Dense(_) => None,
+            })
+            .collect();
+        let mut tasks: Vec<BatchOrthTask<'_>> = Vec::with_capacity(self.groups.len());
+        for group in self.groups.iter_mut() {
+            let mut inputs: Vec<&Mat> = Vec::with_capacity(group.members.len());
+            let mut outs: Vec<&mut Mat> = Vec::with_capacity(group.members.len());
+            for &idx in &group.members {
+                let (m, o) = io[idx].take().expect("grouped layer is projected");
+                inputs.push(m);
+                outs.push(o);
+            }
+            let (cap, k, l) = (group.members.len(), group.k, group.l);
+            let ws = group
+                .scratch
+                .get_or_insert_with(|| BatchOrthScratch::new(cap, k, l));
+            tasks.push(BatchOrthTask { inputs, outs, ws });
+        }
+        orth_svd_batched_multi_into(tasks, Some(pool));
+        // Phase 3 — Blocks 3–4 per projected layer.
+        super::par_step_layers(pool, &mut self.layers, weights, grads, |idx, layer, w, _g| {
+            if let LayerState::Projected {
+                subspace,
+                limiter,
+                scratch,
+                ..
+            } = layer
+            {
+                apply_update(cfg, shapes[idx], subspace, limiter, scratch, w, lr);
+            }
         });
     }
 
@@ -309,6 +479,55 @@ mod tests {
         assert!(
             l_svd <= l_ns5 * 1.3,
             "svd {l_svd} should not lose badly to ns5 {l_ns5}"
+        );
+    }
+
+    #[test]
+    fn decay_applies_to_pre_update_weights_only() {
+        // Block 4 is W ← W − η·α·s·QO − η·λ·W: decay acts on the
+        // *pre-update* weights. With W₀ = 0 the decay term vanishes, so the
+        // post-step weights must be bitwise independent of λ. The old
+        // decay-after-axpy ordering computed (W − η·α·s·QO)·(1−ηλ) instead,
+        // attenuating the fresh update by (1−ηλ) and failing this test.
+        let mut rng = Rng::new(17);
+        let g = Mat::randn(32, 16, 1.0, &mut rng);
+        let run = |wd: f32| -> Mat {
+            let mut cfg = OptimCfg::new(OptimKind::Sumo).with_lr(0.1).with_rank(4);
+            cfg.weight_decay = wd;
+            let mut opt = Sumo::new(&cfg, &[(32, 16)], &[true], 9, false);
+            let mut w = Mat::zeros(32, 16);
+            opt.step(0, &mut w, &g, 1.0);
+            w
+        };
+        let w_plain = run(0.0);
+        let w_decay = run(0.5);
+        assert!(w_plain.fro() > 0.0, "update term must be nonzero");
+        assert_eq!(
+            w_plain.max_diff(&w_decay),
+            0.0,
+            "weight decay attenuated the orthogonalized update term"
+        );
+        // And on nonzero weights the decay shrinks exactly the pre-update W:
+        // W₁ = (1−ηλ)·W₀ − η·α·s·QO, i.e. W₁(λ) − W₁(0) = −ηλ·W₀.
+        let run_from = |wd: f32, w0: &Mat| -> Mat {
+            let mut cfg = OptimCfg::new(OptimKind::Sumo).with_lr(0.1).with_rank(4);
+            cfg.weight_decay = wd;
+            let mut opt = Sumo::new(&cfg, &[(32, 16)], &[true], 9, false);
+            let mut w = w0.clone();
+            opt.step(0, &mut w, &g, 1.0);
+            w
+        };
+        let w0 = Mat::randn(32, 16, 1.0, &mut rng);
+        let with_decay = run_from(0.5, &w0);
+        let without = run_from(0.0, &w0);
+        let mut diff = with_decay.clone();
+        diff.axpy(-1.0, &without);
+        let mut expect = w0.clone();
+        expect.scale(-0.1 * 0.5);
+        assert!(
+            diff.max_diff(&expect) < 1e-5 * (1.0 + w0.max_abs()),
+            "decay term should be −ηλ·W₀, got diff {}",
+            diff.max_diff(&expect)
         );
     }
 

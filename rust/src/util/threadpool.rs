@@ -132,6 +132,44 @@ impl ThreadPool {
         });
     }
 
+    /// Split `items` into at most `size` contiguous chunks and run
+    /// `f(chunk_start, chunk)` on each concurrently, blocking until all
+    /// complete. This is the batch-axis primitive of the grouped
+    /// orthogonalization kernel: each worker owns a contiguous sub-batch of
+    /// stacked problems and runs the full (serial) sweep schedule on it, so
+    /// results are bitwise identical to a sequential loop over the items
+    /// regardless of pool size. Safe (no pointer sharing): chunks are carved
+    /// with `split_at_mut`.
+    pub fn par_for_each_chunk_mut<T, F>(&self, items: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync + Send,
+    {
+        let n = items.len();
+        if n == 0 {
+            return;
+        }
+        let workers = self.size.min(n);
+        if workers <= 1 {
+            f(0, items);
+            return;
+        }
+        let chunk = n.div_ceil(workers);
+        std::thread::scope(|scope| {
+            let f = &f;
+            let mut rest = items;
+            let mut start = 0;
+            while !rest.is_empty() {
+                let take = chunk.min(rest.len());
+                let (head, tail) = rest.split_at_mut(take);
+                rest = tail;
+                let s = start;
+                start += take;
+                scope.spawn(move || f(s, head));
+            }
+        });
+    }
+
     /// Run `f(i, &mut items[i])` for every element concurrently, blocking
     /// until all complete. This is the per-layer dispatch primitive of the
     /// parallel optimizer step engine: each layer's state is touched by
@@ -234,6 +272,28 @@ mod tests {
         // Empty slice is a no-op.
         let mut empty: Vec<u64> = Vec::new();
         pool.par_for_each_mut(&mut empty, |_, _| panic!("should not run"));
+    }
+
+    #[test]
+    fn par_for_each_chunk_mut_covers_all_disjointly() {
+        let pool = ThreadPool::new(4);
+        let mut items: Vec<u64> = (0..103).collect();
+        pool.par_for_each_chunk_mut(&mut items, |start, chunk| {
+            for (off, x) in chunk.iter_mut().enumerate() {
+                assert_eq!(*x, (start + off) as u64, "chunk start offset wrong");
+                *x += 1000;
+            }
+        });
+        assert!(items.iter().enumerate().all(|(i, &x)| x == i as u64 + 1000));
+        // Empty slice is a no-op; single element runs inline.
+        let mut empty: Vec<u64> = Vec::new();
+        pool.par_for_each_chunk_mut(&mut empty, |_, _| panic!("should not run"));
+        let mut one = vec![7u64];
+        pool.par_for_each_chunk_mut(&mut one, |start, chunk| {
+            assert_eq!((start, chunk.len()), (0, 1));
+            chunk[0] = 8;
+        });
+        assert_eq!(one[0], 8);
     }
 
     #[test]

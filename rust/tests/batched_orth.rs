@@ -1,0 +1,215 @@
+//! Batched orthogonalization equivalence: `orth_svd_batched_into` must be
+//! **bitwise identical** to N independent `orth_svd_into` calls across shape
+//! classes, batch sizes, orientations, condition numbers up to 1e6, and
+//! serial vs pool-chunked dispatch. This is the contract the three-phase
+//! SUMO step dispatch (and the future Pallas grid-axis kernel) stands on —
+//! the batched path may only change loop interleaving, never arithmetic.
+
+use sumo::linalg::orth::polar_defect;
+use sumo::linalg::{
+    orth_svd_batched_into, orth_svd_batched_multi_into, orth_svd_into, BatchOrthScratch,
+    BatchOrthTask, Mat, OrthScratch,
+};
+use sumo::testing::{check, gen, PropConfig};
+use sumo::util::threadpool::ThreadPool;
+use sumo::util::Rng;
+
+/// Reference: run each problem through the single-matrix kernel.
+fn singles(ms: &[Mat]) -> Vec<Mat> {
+    ms.iter()
+        .map(|m| {
+            let mut out = Mat::zeros(m.rows, m.cols);
+            let mut ws = OrthScratch::new(m.rows, m.cols);
+            orth_svd_into(m, &mut out, &mut ws);
+            out
+        })
+        .collect()
+}
+
+/// Run the batched kernel over `ms` (which must share one shape class) and
+/// assert bitwise agreement with the single-matrix path.
+fn assert_batched_bitwise(ms: &[Mat], pool: Option<&ThreadPool>, label: &str) -> Vec<Mat> {
+    let (r0, c0) = ms[0].shape();
+    let (k, l) = (r0.min(c0), r0.max(c0));
+    let want = singles(ms);
+    let mut ws = BatchOrthScratch::new(ms.len(), k, l);
+    let mut outs: Vec<Mat> = ms.iter().map(|m| Mat::zeros(m.rows, m.cols)).collect();
+    let ins: Vec<&Mat> = ms.iter().collect();
+    let mut out_refs: Vec<&mut Mat> = outs.iter_mut().collect();
+    orth_svd_batched_into(&ins, &mut out_refs, &mut ws, pool);
+    for (i, (got, want)) in outs.iter().zip(&want).enumerate() {
+        assert!(got.is_finite(), "{label}: problem {i} not finite");
+        assert_eq!(
+            got.max_diff(want),
+            0.0,
+            "{label}: problem {i} of {} diverged from the single-matrix path",
+            ms.len()
+        );
+    }
+    outs
+}
+
+#[test]
+fn prop_batched_matches_singles_across_shapes_and_batches() {
+    let pool = ThreadPool::new(4);
+    check(
+        PropConfig {
+            cases: 48,
+            seed: 0xBA7C,
+        },
+        "orth_svd_batched_into ≡ N× orth_svd_into (bitwise)",
+        |rng| {
+            let k = 1 + rng.below_usize(8); // small side 1..=8
+            let l = k + rng.below_usize(48); // large side k..k+48
+            let batch = 1 + rng.below_usize(17); // 1..=17 problems
+            let ms: Vec<Mat> = (0..batch)
+                .map(|i| {
+                    // Mix orientations within one shape class.
+                    if i % 2 == 0 {
+                        Mat::randn(k, l, 1.0, rng)
+                    } else {
+                        Mat::randn(l, k, 1.0, rng)
+                    }
+                })
+                .collect();
+            (k, l, ms)
+        },
+        |(k, l, ms)| {
+            let want = singles(ms);
+            for pool_opt in [None, Some(&pool)] {
+                let mut ws = BatchOrthScratch::new(ms.len(), *k, *l);
+                let mut outs: Vec<Mat> = ms.iter().map(|m| Mat::zeros(m.rows, m.cols)).collect();
+                let ins: Vec<&Mat> = ms.iter().collect();
+                let mut out_refs: Vec<&mut Mat> = outs.iter_mut().collect();
+                orth_svd_batched_into(&ins, &mut out_refs, &mut ws, pool_opt);
+                for (i, (got, w)) in outs.iter().zip(&want).enumerate() {
+                    if got.max_diff(w) != 0.0 {
+                        return Err(format!(
+                            "({k},{l}) batch {} problem {i} pooled={}: diff {}",
+                            ms.len(),
+                            pool_opt.is_some(),
+                            got.max_diff(w)
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn batched_bitwise_on_ill_conditioned_moments() {
+    // κ up to 1e6 — where the f64 one-sided Jacobi accuracy matters most —
+    // stacked with well-conditioned neighbors in the same batch, so masked
+    // convergence (problems finishing at different sweeps) is exercised.
+    let mut rng = Rng::new(0x1CE6);
+    let pool = ThreadPool::new(3);
+    for &kappa in &[1e2f32, 1e4, 1e6] {
+        let mut ms = Vec::new();
+        for i in 0..9 {
+            let k = if i % 3 == 2 { kappa } else { 1.0 + i as f32 };
+            ms.push(gen::conditioned_mat(&mut rng, 6, 48, k));
+        }
+        let outs = assert_batched_bitwise(&ms, Some(&pool), &format!("kappa={kappa}"));
+        for o in &outs {
+            assert!(
+                polar_defect(o) < 1e-4,
+                "κ={kappa}: batched defect {}",
+                polar_defect(o)
+            );
+        }
+    }
+}
+
+#[test]
+fn batched_handles_rank_deficient_problems_in_the_mix() {
+    let mut rng = Rng::new(0xDEF1);
+    let mut ms = Vec::new();
+    for i in 0..8 {
+        if i % 2 == 0 {
+            // Rank-2 content in a 4×32 moment (duplicated, scaled rows).
+            let a = Mat::randn(2, 32, 1.0, &mut rng);
+            let mut m = Mat::zeros(4, 32);
+            for r in 0..2 {
+                m.row_mut(r).copy_from_slice(a.row(r));
+                let scaled: Vec<f32> = a.row(r).iter().map(|x| 0.5 * x).collect();
+                m.row_mut(r + 2).copy_from_slice(&scaled);
+            }
+            ms.push(m);
+        } else {
+            ms.push(Mat::randn(4, 32, 1.0, &mut rng));
+        }
+    }
+    assert_batched_bitwise(&ms, None, "rank-deficient mix");
+}
+
+#[test]
+fn multi_class_dispatch_matches_singles_bitwise() {
+    // The grouped SUMO step's phase-2 shape: several classes at once, some
+    // singleton — all flattened into one pool dispatch. Every problem must
+    // still match its single-matrix result bitwise, serial and pooled.
+    let mut rng = Rng::new(0x3C1A);
+    let pool = ThreadPool::new(3);
+    // (class shape, batch size): includes two singleton classes.
+    let classes = [(4usize, 32usize, 6usize), (4, 48, 1), (8, 16, 3), (2, 64, 1)];
+    let ms_per_class: Vec<Vec<Mat>> = classes
+        .iter()
+        .map(|&(k, l, n)| (0..n).map(|_| Mat::randn(k, l, 1.0, &mut rng)).collect())
+        .collect();
+    let want: Vec<Vec<Mat>> = ms_per_class.iter().map(|ms| singles(ms)).collect();
+    for use_pool in [false, true] {
+        let mut scratches: Vec<BatchOrthScratch> = classes
+            .iter()
+            .map(|&(k, l, n)| BatchOrthScratch::new(n, k, l))
+            .collect();
+        let mut outs_per_class: Vec<Vec<Mat>> = ms_per_class
+            .iter()
+            .map(|ms| ms.iter().map(|m| Mat::zeros(m.rows, m.cols)).collect())
+            .collect();
+        let mut tasks: Vec<BatchOrthTask<'_>> = Vec::new();
+        for ((ms, outs), ws) in ms_per_class
+            .iter()
+            .zip(outs_per_class.iter_mut())
+            .zip(scratches.iter_mut())
+        {
+            tasks.push(BatchOrthTask {
+                inputs: ms.iter().collect(),
+                outs: outs.iter_mut().collect(),
+                ws,
+            });
+        }
+        orth_svd_batched_multi_into(tasks, use_pool.then_some(&pool));
+        for (c, (outs, want)) in outs_per_class.iter().zip(&want).enumerate() {
+            for (i, (got, w)) in outs.iter().zip(want).enumerate() {
+                assert_eq!(
+                    got.max_diff(w),
+                    0.0,
+                    "class {c} problem {i} pooled={use_pool} diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn scratch_reuse_across_calls_stays_bitwise() {
+    // One scratch, several rounds with fresh data (the steady-state pattern
+    // of the grouped SUMO step): no state may leak between rounds. Also runs
+    // a partial batch (fewer problems than capacity).
+    let mut rng = Rng::new(0x5EED);
+    let pool = ThreadPool::new(2);
+    let mut ws = BatchOrthScratch::new(12, 4, 64);
+    for round in 0..4 {
+        let n = if round == 2 { 5 } else { 12 };
+        let ms: Vec<Mat> = (0..n).map(|_| Mat::randn(4, 64, 1.0, &mut rng)).collect();
+        let want = singles(&ms);
+        let mut outs: Vec<Mat> = ms.iter().map(|_| Mat::zeros(4, 64)).collect();
+        let ins: Vec<&Mat> = ms.iter().collect();
+        let mut out_refs: Vec<&mut Mat> = outs.iter_mut().collect();
+        orth_svd_batched_into(&ins, &mut out_refs, &mut ws, Some(&pool));
+        for (got, w) in outs.iter().zip(&want) {
+            assert_eq!(got.max_diff(w), 0.0, "round {round} leaked scratch state");
+        }
+    }
+}

@@ -24,14 +24,25 @@ fn layer_shapes() -> (Vec<(usize, usize)>, Vec<bool>) {
 }
 
 fn run_pair(kind: OptimKind, workers: usize, steps: usize) {
-    let pool = ThreadPool::new(workers);
     let (shapes, projected) = layer_shapes();
     let cfg = OptimCfg::new(kind)
         .with_lr(0.02)
         .with_rank(4)
         .with_update_freq(3);
-    let mut serial = optim::build(&cfg, &shapes, &projected, 42);
-    let mut par = optim::build(&cfg, &shapes, &projected, 42);
+    run_pair_with(&cfg, &shapes, &projected, workers, steps);
+}
+
+fn run_pair_with(
+    cfg: &OptimCfg,
+    shapes: &[(usize, usize)],
+    projected: &[bool],
+    workers: usize,
+    steps: usize,
+) {
+    let kind = cfg.kind;
+    let pool = ThreadPool::new(workers);
+    let mut serial = optim::build(cfg, shapes, projected, 42);
+    let mut par = optim::build(cfg, shapes, projected, 42);
 
     let mut wrng = Rng::new(7);
     let mut w_serial: Vec<Mat> = shapes
@@ -94,6 +105,47 @@ fn default_serial_fallback_matches_too() {
 #[test]
 fn single_worker_pool_degenerates_to_serial() {
     run_pair(OptimKind::Sumo, 1, 6);
+}
+
+#[test]
+fn sumo_three_phase_grouped_dispatch_matches_serial_with_shape_classes() {
+    // Many layers sharing moment shape classes — six (64,32) left-projected
+    // and five (32,64) right-projected layers all land in the (4,32) class,
+    // so phase 2 runs a genuinely multi-problem batched orthogonalization
+    // with mixed orientations; (48,48) gets its own class and a dense norm
+    // layer rides along. Weight decay on, so the Block-4 pre-update decay
+    // ordering is also pinned across both paths.
+    let mut shapes: Vec<(usize, usize)> = vec![(1, 32)];
+    let mut projected = vec![false];
+    for _ in 0..6 {
+        shapes.push((64, 32));
+        projected.push(true);
+    }
+    for _ in 0..5 {
+        shapes.push((32, 64));
+        projected.push(true);
+    }
+    shapes.push((48, 48));
+    projected.push(true);
+    let mut cfg = OptimCfg::new(OptimKind::Sumo)
+        .with_lr(0.02)
+        .with_rank(4)
+        .with_update_freq(3);
+    cfg.weight_decay = 0.05;
+    run_pair_with(&cfg, &shapes, &projected, 4, 10);
+    // Single worker exercises the inline (non-chunked) batched path.
+    run_pair_with(&cfg, &shapes, &projected, 1, 6);
+}
+
+#[test]
+fn galore_threaded_matches_serial_with_decay() {
+    let (shapes, projected) = layer_shapes();
+    let mut cfg = OptimCfg::new(OptimKind::GaLore)
+        .with_lr(0.02)
+        .with_rank(4)
+        .with_update_freq(3);
+    cfg.weight_decay = 0.05;
+    run_pair_with(&cfg, &shapes, &projected, 4, 8);
 }
 
 #[test]

@@ -131,6 +131,27 @@ fn hlo_sumo_engine_matches_native_sumo_one_step() {
 }
 
 #[test]
+fn dp_fallback_is_counted_and_sharded_path_is_not() {
+    let Some(rt) = runtime() else { return };
+    let cfg = OptimCfg::new(OptimKind::Sumo).with_lr(0.02).with_rank(4).with_update_freq(2);
+    // dp=2 with the (even) artifact batch: shards, no fallback counted.
+    let mut coord = Coordinator::native(&rt, "nano_lm", &cfg, 11, 2).unwrap();
+    let corpus = SyntheticCorpus::new(coord.runner.cfg.vocab, 3);
+    let mut batcher = Batcher::new(corpus, coord.runner.batch, coord.runner.seq_len());
+    assert_eq!(coord.runner.batch % 2, 0, "artifact batch assumed even");
+    coord.train_iteration(&batcher.next(), 1.0).unwrap();
+    assert_eq!(coord.dp_fallback_count(), 0);
+    // dp = batch+1 can never divide: every iteration counts a fallback.
+    let dp = coord.runner.batch + 1;
+    let mut coord = Coordinator::native(&rt, "nano_lm", &cfg, 11, dp).unwrap();
+    let corpus = SyntheticCorpus::new(coord.runner.cfg.vocab, 3);
+    let mut batcher = Batcher::new(corpus, coord.runner.batch, coord.runner.seq_len());
+    coord.train_iteration(&batcher.next(), 1.0).unwrap();
+    coord.train_iteration(&batcher.next(), 1.0).unwrap();
+    assert_eq!(coord.dp_fallback_count(), 2);
+}
+
+#[test]
 fn cls_train_and_eval_roundtrip() {
     let Some(rt) = runtime() else { return };
     let runner = ModelRunner::new(&rt, "nano_cls2").unwrap();
