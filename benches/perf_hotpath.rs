@@ -21,9 +21,11 @@ use sumo::linalg::{
 };
 use sumo::model::ParamStore;
 use sumo::runtime::Runtime;
-use sumo::util::threadpool::ThreadPool;
+use sumo::util::threadpool;
 use sumo::util::timer::{time_fn, Stats};
 use sumo::util::Rng;
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Emit one timing row with *numeric* cells so the JSON artifact is
 /// machine-readable (mean/ci in ms as numbers, not "x ± y ms" strings).
@@ -86,12 +88,50 @@ fn main() -> anyhow::Result<()> {
         timing_row(&mut t, "rsvd range (refresh)", "2048x256 r16", &s);
     }
 
+    // Dispatch overhead: the same worker-count parallel-for over trivial
+    // tasks through (a) per-call scoped spawn/join — what every pool
+    // dispatch paid before resident workers — and (b) the resident-worker
+    // barrier. Tiny per-task work isolates the fixed cost the three-phase
+    // grouped step pays at every phase boundary; the perf-diff gate tracks
+    // the win across PRs.
+    {
+        let pool = threadpool::global();
+        let n_tasks = 16usize;
+        let cells: Vec<AtomicU64> = (0..n_tasks).map(|_| AtomicU64::new(0)).collect();
+        let workers = pool.size().min(n_tasks);
+        let chunk = n_tasks.div_ceil(workers);
+        let s = time_fn(2, bench_iters(30), || {
+            std::thread::scope(|scope| {
+                for w in 0..workers {
+                    let lo = w * chunk;
+                    let hi = ((w + 1) * chunk).min(n_tasks);
+                    if lo >= hi {
+                        break;
+                    }
+                    let cells = &cells;
+                    scope.spawn(move || {
+                        for cell in &cells[lo..hi] {
+                            cell.fetch_add(1, Ordering::Relaxed);
+                        }
+                    });
+                }
+            });
+        });
+        timing_row(&mut t, "pool dispatch (scoped)", &format!("{n_tasks} tasks"), &s);
+        let s = time_fn(2, bench_iters(30), || {
+            pool.par_for(n_tasks, |i| {
+                cells[i].fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        timing_row(&mut t, "pool dispatch (resident)", &format!("{n_tasks} tasks"), &s);
+    }
+
     // Batched orthogonalization: N stacked moments of one shape class
     // through one masked Jacobi sweep schedule (pool-chunked batch axis) vs
     // the per-layer loop — the grouped-step (phase 2) kernel. Acceptance:
     // ≥1.5x throughput for ≥16 stacked rank-4/8 moments.
     {
-        let pool = ThreadPool::dispatch_only();
+        let pool = threadpool::global();
         for &(r, nlayers) in &[(4usize, 16usize), (8, 16), (16, 12)] {
             let ms: Vec<Mat> = (0..nlayers)
                 .map(|_| Mat::randn(r, 2048, 1.0, &mut rng))
@@ -110,7 +150,7 @@ fn main() -> anyhow::Result<()> {
             let s = time_fn(1, bench_iters(8), || {
                 let ins: Vec<&Mat> = ms.iter().collect();
                 let mut out_refs: Vec<&mut Mat> = outs.iter_mut().collect();
-                orth_svd_batched_into(&ins, &mut out_refs, &mut bws, Some(&pool));
+                orth_svd_batched_into(&ins, &mut out_refs, &mut bws, Some(pool));
             });
             // Row names stay core-count-free so the perf-diff gate keys
             // (kernel, shape) match across runners with different pools.
@@ -154,15 +194,15 @@ fn main() -> anyhow::Result<()> {
         });
         timing_row(&mut t, "step engine (serial)", "12x 512x256 r16", &s);
 
-        let pool = ThreadPool::dispatch_only();
+        let pool = threadpool::global();
         let mut par = sumo::optim::build(&cfg, &shapes, &projected, 7);
         {
             let mut refs: Vec<&mut Mat> = weights.iter_mut().collect();
-            par.step_parallel(&pool, &mut refs, &grads, 1.0); // warm up
+            par.step_parallel(pool, &mut refs, &grads, 1.0); // warm up
         }
         let s = time_fn(1, bench_iters(6), || {
             let mut refs: Vec<&mut Mat> = weights.iter_mut().collect();
-            par.step_parallel(&pool, &mut refs, &grads, 1.0);
+            par.step_parallel(pool, &mut refs, &grads, 1.0);
             par.end_step();
         });
         timing_row(&mut t, "step engine (par)", "12x 512x256 r16", &s);
@@ -196,15 +236,15 @@ fn main() -> anyhow::Result<()> {
         });
         timing_row(&mut t, "grouped step (serial)", &format!("{preset} {nlayers}L r{rank}"), &s);
 
-        let pool = ThreadPool::dispatch_only();
+        let pool = threadpool::global();
         let mut par = sumo::optim::build(&cfg, &shapes, &projected, 9);
         {
             let mut refs: Vec<&mut Mat> = weights.iter_mut().collect();
-            par.step_parallel(&pool, &mut refs, &grads, 1.0);
+            par.step_parallel(pool, &mut refs, &grads, 1.0);
         }
         let s = time_fn(1, bench_iters(5), || {
             let mut refs: Vec<&mut Mat> = weights.iter_mut().collect();
-            par.step_parallel(&pool, &mut refs, &grads, 1.0);
+            par.step_parallel(pool, &mut refs, &grads, 1.0);
             par.end_step();
         });
         timing_row(

@@ -17,7 +17,7 @@ use crate::linalg::Mat;
 use crate::model::ParamStore;
 use crate::optim::{self, Optimizer};
 use crate::runtime::{HloSumo, ModelRunner, Runtime};
-use crate::util::threadpool::ThreadPool;
+use crate::util::threadpool::{self, ThreadPool};
 
 pub use allreduce::allreduce_mean;
 
@@ -81,7 +81,10 @@ pub struct Coordinator<'rt> {
     pub dp_shards: usize,
     /// Worker pool for per-layer optimizer dispatch: independent layers
     /// step concurrently with results bitwise identical to the serial loop.
-    pool: ThreadPool,
+    /// This is the process-wide resident pool (`threadpool::global()`), so
+    /// building a coordinator spawns no threads and a full three-phase step
+    /// synchronizes on in-pool barriers instead of spawn/join.
+    pool: &'static ThreadPool,
     step: usize,
     /// Iterations where requested data-parallel sharding was dropped
     /// (batch not divisible by `dp_shards`).
@@ -107,7 +110,7 @@ impl<'rt> Coordinator<'rt> {
             params,
             engine,
             dp_shards: dp_shards.max(1),
-            pool: ThreadPool::dispatch_only(),
+            pool: threadpool::global(),
             step: 0,
             dp_fallbacks: AtomicUsize::new(0),
         })
@@ -132,7 +135,7 @@ impl<'rt> Coordinator<'rt> {
             params,
             engine,
             dp_shards: 1,
-            pool: ThreadPool::dispatch_only(),
+            pool: threadpool::global(),
             step: 0,
             dp_fallbacks: AtomicUsize::new(0),
         })
@@ -250,7 +253,7 @@ impl<'rt> Coordinator<'rt> {
             Engine::Native(opt) => {
                 let mut weights: Vec<&mut Mat> =
                     self.params.tensors.iter_mut().map(|(_, t)| t).collect();
-                opt.step_parallel(&self.pool, &mut weights, &grads, lr_mult);
+                opt.step_parallel(self.pool, &mut weights, &grads, lr_mult);
                 for (idx, (_, w)) in self.params.tensors.iter_mut().enumerate() {
                     opt.finalize_weights(idx, w);
                 }
@@ -259,7 +262,7 @@ impl<'rt> Coordinator<'rt> {
             Engine::Hlo(opt) => {
                 let mut weights: Vec<&mut Mat> =
                     self.params.tensors.iter_mut().map(|(_, t)| t).collect();
-                opt.step_parallel(&self.pool, &mut weights, &grads, lr_mult)?;
+                opt.step_parallel(self.pool, &mut weights, &grads, lr_mult)?;
                 opt.end_step();
             }
         }

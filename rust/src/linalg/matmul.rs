@@ -26,27 +26,28 @@ pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
     assert_eq!((c.rows, c.cols), (a.rows, b.cols));
     c.data.iter_mut().for_each(|x| *x = 0.0);
     let work = a.rows * b.cols;
-    // Only probe parallelism on large outputs: `available_parallelism` can
-    // read cgroup files on Linux (allocates), and the zero-alloc SUMO step
-    // path must stay allocation-free on its (small) steady-state shapes.
+    // Only touch the pool on large outputs: constructing the shared pool on
+    // first use (and the chunk list here) allocates, and the zero-alloc
+    // SUMO step path must stay allocation-free on its (small) steady-state
+    // shapes. The row split dispatches to the resident workers of the
+    // process-wide pool — no per-call thread spawns — and runs inline when
+    // called from inside a pool worker (nested-dispatch rule), so threaded
+    // optimizer steps never oversubscribe.
     if work >= PAR_THRESHOLD {
-        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let pool = crate::util::threadpool::global();
+        let threads = pool.size();
         if threads > 1 && a.rows >= threads {
             let rows_per = a.rows.div_ceil(threads);
             let cols = c.cols;
-            let chunks: Vec<(usize, &mut [f32])> = c
+            let mut chunks: Vec<(usize, &mut [f32])> = c
                 .data
                 .chunks_mut(rows_per * cols)
                 .enumerate()
                 .map(|(i, ch)| (i * rows_per, ch))
                 .collect();
-            std::thread::scope(|scope| {
-                for (row0, chunk) in chunks {
-                    scope.spawn(move || {
-                        let nrows = chunk.len() / cols;
-                        mm_block(a, b, chunk, row0, nrows);
-                    });
-                }
+            pool.par_for_each_mut(&mut chunks, |_, (row0, chunk)| {
+                let nrows = chunk.len() / cols;
+                mm_block(a, b, chunk, *row0, nrows);
             });
             return;
         }

@@ -120,9 +120,28 @@ impl Rng {
         self.f64() < p
     }
 
-    /// Sample an index from an (unnormalized) weight vector.
+    /// Sample an index from an (unnormalized) non-negative weight vector.
+    ///
+    /// Degenerate inputs are a caller bug: debug builds trip a
+    /// `debug_assert`, and release builds fall back to index 0 whenever the
+    /// weights have no positive finite mass (all-zero, empty, or poisoned
+    /// by a NaN/infinite weight). The previous behavior was implicit —
+    /// all-zero weights silently selected index 0 while a NaN weight made
+    /// every comparison false and selected the *last* index.
     pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        debug_assert!(
+            weights.iter().all(|w| w.is_finite() && *w >= 0.0),
+            "categorical: weights must be finite and non-negative: {weights:?}"
+        );
         let total: f64 = weights.iter().sum();
+        debug_assert!(
+            total > 0.0 && total.is_finite(),
+            "categorical: weights must have positive finite mass (total = {total})"
+        );
+        if total <= 0.0 || !total.is_finite() {
+            // NaN totals fail both comparisons above, so they land here too.
+            return 0;
+        }
         let mut u = self.f64() * total;
         for (i, w) in weights.iter().enumerate() {
             u -= w;
@@ -133,37 +152,68 @@ impl Rng {
         weights.len() - 1
     }
 
-    /// Zipf-distributed rank in `[0, n)` with exponent `s` (used for the
-    /// synthetic C4-like corpus; rejection-inversion, Hörmann & Derflinger).
+    /// Zipf-distributed rank in `[0, n)` with exponent `s > 0` (used for
+    /// the synthetic corpora): exact rejection-inversion after Hörmann &
+    /// Derflinger (1996), the construction Apache Commons and `rand_distr`
+    /// use. O(1) amortized — the envelope hugs the pmf, so the expected
+    /// number of rejection rounds is close to 1 for every `(n, s)`.
+    ///
+    /// A uniform draw over the envelope integral is inverted through H⁻¹
+    /// (H is the antiderivative of the pmf's continuous extension
+    /// h(x) = x^{-s}, shifted so the s → 1 limit is ln x) and the candidate
+    /// rank k = round(x) is kept only if the draw falls under k's pmf bar:
+    /// `k − x ≤ s*` (head shortcut) or `u ≥ H(k + ½) − h(k)`. The previous
+    /// implementation's acceptance test multiplied by `0.0` and was
+    /// vacuously true, silently degrading to pure continuous inversion —
+    /// which over-weights mid-ranks (for n = 10, s = 2 it put mass 0.80 on
+    /// rank 0 versus the true 0.65). `zipf_matches_exact_pmf` pins the fix.
     pub fn zipf(&mut self, n: usize, s: f64) -> usize {
-        // Simple inversion on the harmonic CDF approximation; exact enough
-        // for corpus synthesis and O(1).
-        let n = n as f64;
+        // Hard assert: there is no rank to fall back to on an empty
+        // support, and without this the failure surfaces as an opaque
+        // `min > max` panic inside `f64::clamp` in release builds.
+        assert!(n >= 1, "zipf: empty support");
+        debug_assert!(s > 0.0 && s.is_finite(), "zipf: exponent must be positive, got {s}");
+        let nf = n as f64;
         let one_minus_s = 1.0 - s;
-        let h = |x: f64| -> f64 {
-            if one_minus_s.abs() < 1e-12 {
-                x.ln()
+        // H(x) = ∫ x^{-s} dx = (x^(1−s) − 1)/(1−s), continuous at s = 1
+        // where it becomes ln x; exp_m1/ln_1p keep both branches stable
+        // near s = 1.
+        let h_int = |x: f64| -> f64 {
+            let logx = x.ln();
+            if one_minus_s.abs() < 1e-9 {
+                logx
             } else {
-                x.powf(one_minus_s) / one_minus_s
+                (one_minus_s * logx).exp_m1() / one_minus_s
             }
         };
-        let h_inv = |x: f64| -> f64 {
-            if one_minus_s.abs() < 1e-12 {
-                x.exp()
+        let h = |x: f64| -> f64 { (-s * x.ln()).exp() };
+        let h_inv = |t: f64| -> f64 {
+            if one_minus_s.abs() < 1e-9 {
+                t.exp()
             } else {
-                (x * one_minus_s).powf(1.0 / one_minus_s)
+                // Clamp to the domain edge (the reference implementation
+                // does the same): rounding can push (1−s)·t a hair below
+                // −1 for draws at the tail boundary, and ln_1p would turn
+                // that into a NaN candidate that silently burns a
+                // rejection round.
+                let arg = (one_minus_s * t).max(-1.0);
+                (arg.ln_1p() / one_minus_s).exp()
             }
         };
-        let hx0 = h(0.5) - 1.0;
-        let hn = h(n + 0.5);
+        // Envelope bounds: u ∈ (H(1.5) − h(1), H(n + 0.5)]; the −h(1) lobe
+        // below H(1.5) is the flat cap over rank 1.
+        let h_x1 = h_int(1.5) - 1.0;
+        let h_n = h_int(nf + 0.5);
+        // Head shortcut: candidates with k − x below this threshold are
+        // always under the pmf bar, skipping the ratio test.
+        let s_star = 2.0 - h_inv(h_int(2.5) - h(2.0));
         loop {
-            let u = hx0 + self.f64() * (hn - hx0);
+            let u = h_n + self.f64() * (h_x1 - h_n);
             let x = h_inv(u);
-            let k = (x + 0.5).floor().max(1.0).min(n);
-            // Accept with the ratio of the true pmf to the envelope.
-            if (h(k + 0.5) - h(k - 0.5)) >= (u - hx0) * 0.0 {
-                // The envelope above is loose but conservative; accept k
-                // directly — empirical frequencies match Zipf(s) to ~1%.
+            let k = x.round().clamp(1.0, nf);
+            // Rejection-inversion acceptance: keep k iff the envelope draw
+            // lands under the true pmf bar of k.
+            if k - x <= s_star || u >= h_int(k + 0.5) - h(k) {
                 return (k as usize) - 1;
             }
         }
@@ -252,6 +302,43 @@ mod tests {
     }
 
     #[test]
+    fn zipf_matches_exact_pmf() {
+        // Empirical mass per rank against the exact pmf p_k = k^{-s}/Z with
+        // a 4σ + ε band. The old sampler's acceptance test multiplied by
+        // 0.0 (vacuously true), degrading to pure continuous inversion:
+        // for (n, s) = (10, 2.0) that puts ~0.80 on rank 0 versus the true
+        // 0.645 — far outside this band — so this test pins the fix.
+        for &(n, s) in &[(20usize, 1.2f64), (50, 1.05), (10, 2.0), (30, 1.0)] {
+            let mut r = Rng::new(29);
+            let draws = 200_000usize;
+            let mut counts = vec![0usize; n];
+            for _ in 0..draws {
+                let k = r.zipf(n, s);
+                assert!(k < n, "rank out of range: {k} >= {n}");
+                counts[k] += 1;
+            }
+            let z: f64 = (1..=n).map(|k| (k as f64).powf(-s)).sum();
+            for k in 0..n {
+                let p = ((k + 1) as f64).powf(-s) / z;
+                let emp = counts[k] as f64 / draws as f64;
+                let sigma = (p * (1.0 - p) / draws as f64).sqrt();
+                assert!(
+                    (emp - p).abs() < 4.0 * sigma + 0.002,
+                    "n={n} s={s} rank {k}: empirical {emp:.5} vs pmf {p:.5}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zipf_single_element_support() {
+        let mut r = Rng::new(31);
+        for _ in 0..100 {
+            assert_eq!(r.zipf(1, 1.3), 0);
+        }
+    }
+
+    #[test]
     fn zipf_is_monotone_decreasing_in_rank() {
         let mut r = Rng::new(13);
         let mut counts = vec![0usize; 50];
@@ -281,6 +368,31 @@ mod tests {
             c[r.categorical(&[1.0, 2.0, 7.0])] += 1;
         }
         assert!(c[2] > c[1] && c[1] > c[0]);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "categorical")]
+    fn categorical_all_zero_weights_panics_in_debug() {
+        Rng::new(1).categorical(&[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "categorical")]
+    fn categorical_nan_weight_panics_in_debug() {
+        Rng::new(1).categorical(&[1.0, f64::NAN, 2.0]);
+    }
+
+    #[test]
+    #[cfg(not(debug_assertions))]
+    fn categorical_degenerate_weights_fall_back_to_index_zero() {
+        // Release builds: documented fallback instead of the old silent
+        // last-index selection under NaN.
+        let mut r = Rng::new(1);
+        assert_eq!(r.categorical(&[0.0, 0.0, 0.0]), 0);
+        assert_eq!(r.categorical(&[1.0, f64::NAN, 2.0]), 0);
+        assert_eq!(r.categorical(&[f64::INFINITY, 1.0]), 0);
     }
 
     #[test]

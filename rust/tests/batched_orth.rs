@@ -193,6 +193,27 @@ fn multi_class_dispatch_matches_singles_bitwise() {
 }
 
 #[test]
+fn batched_bitwise_across_resident_pool_sizes() {
+    // The acceptance sweep: one mixed-orientation batch through resident
+    // pools of size 1 (inline), 2, and 8 (more workers than chunks) must
+    // stay bitwise identical to the single-matrix path.
+    let mut rng = Rng::new(0x9001);
+    let ms: Vec<Mat> = (0..11)
+        .map(|i| {
+            if i % 2 == 0 {
+                Mat::randn(4, 40, 1.0, &mut rng)
+            } else {
+                Mat::randn(40, 4, 1.0, &mut rng)
+            }
+        })
+        .collect();
+    for workers in [1usize, 2, 8] {
+        let pool = ThreadPool::new(workers);
+        assert_batched_bitwise(&ms, Some(&pool), &format!("pool size {workers}"));
+    }
+}
+
+#[test]
 fn scratch_reuse_across_calls_stays_bitwise() {
     // One scratch, several rounds with fresh data (the steady-state pattern
     // of the grouped SUMO step): no state may leak between rounds. Also runs

@@ -108,6 +108,60 @@ fn single_worker_pool_degenerates_to_serial() {
 }
 
 #[test]
+fn sumo_matches_serial_across_resident_pool_sizes() {
+    for workers in [1usize, 2, 8] {
+        run_pair(OptimKind::Sumo, workers, 6);
+    }
+}
+
+#[test]
+fn galore_matches_serial_across_resident_pool_sizes() {
+    for workers in [1usize, 2, 8] {
+        run_pair(OptimKind::GaLore, workers, 6);
+    }
+}
+
+#[test]
+fn adam_matches_serial_across_resident_pool_sizes() {
+    for workers in [1usize, 2, 8] {
+        run_pair(OptimKind::Adam, workers, 6);
+    }
+}
+
+#[test]
+fn nested_par_for_from_worker_does_not_deadlock() {
+    // A dispatch issued from inside a resident worker must run inline —
+    // re-entering the in-pool barrier would deadlock. Hammer it across
+    // rounds so a racy epoch handshake (lost wakeup, double participation)
+    // would be caught as a hang or a miscount.
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let pool = ThreadPool::new(4);
+    let hits: Vec<AtomicUsize> = (0..48 * 16).map(|_| AtomicUsize::new(0)).collect();
+    let rounds = 25;
+    for _ in 0..rounds {
+        pool.par_for(48, |i| {
+            pool.par_for(16, |j| {
+                hits[i * 16 + j].fetch_add(1, Ordering::SeqCst);
+            });
+        });
+    }
+    assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == rounds));
+    // Nested mutable-dispatch variants route through par_for and must also
+    // run inline from a worker.
+    let mut grid: Vec<Vec<u64>> = (0..32).map(|_| vec![0u64; 8]).collect();
+    pool.par_for_each_mut(&mut grid, |_, row| {
+        pool.par_for_each_chunk_mut(row, |start, chunk| {
+            for (off, x) in chunk.iter_mut().enumerate() {
+                *x = (start + off) as u64 + 1;
+            }
+        });
+    });
+    assert!(grid
+        .iter()
+        .all(|row| row.iter().enumerate().all(|(j, &x)| x == j as u64 + 1)));
+}
+
+#[test]
 fn sumo_three_phase_grouped_dispatch_matches_serial_with_shape_classes() {
     // Many layers sharing moment shape classes — six (64,32) left-projected
     // and five (32,64) right-projected layers all land in the (4,32) class,

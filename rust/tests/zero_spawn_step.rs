@@ -1,0 +1,86 @@
+//! Zero-thread-spawn pinning for the resident-worker step engine: a full
+//! three-phase SUMO `step_parallel` (project+EMA → batched orth →
+//! limiter+apply) must synchronize on in-pool barriers only — no scoped or
+//! ad-hoc thread creation per dispatch.
+//!
+//! Lives in its own test binary with a single `#[test]` so no concurrently
+//! running test can construct pools and disturb either census — the same
+//! isolation trick as `alloc_free_step.rs` uses for its allocation counter.
+
+use sumo::config::{OptimCfg, OptimKind};
+use sumo::linalg::Mat;
+use sumo::optim;
+use sumo::util::threadpool::{self, ThreadPool};
+use sumo::util::Rng;
+
+/// Kernel-level thread census (Linux); `None` elsewhere, where the
+/// `threads_spawned` counter still covers pool-created threads.
+fn os_thread_count() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("Threads:"))?;
+    line.split_whitespace().nth(1)?.parse().ok()
+}
+
+#[test]
+fn three_phase_sumo_step_spawns_no_threads() {
+    // Repeated moment shape classes so phase 2 runs a genuinely batched
+    // orthogonalization, plus a dense norm layer for the Adam fallback.
+    let mut shapes: Vec<(usize, usize)> = vec![(1, 32)];
+    let mut projected = vec![false];
+    for _ in 0..4 {
+        shapes.push((64, 32));
+        projected.push(true);
+    }
+    for _ in 0..3 {
+        shapes.push((32, 64));
+        projected.push(true);
+    }
+    shapes.push((48, 48));
+    projected.push(true);
+    let cfg = OptimCfg::new(OptimKind::Sumo)
+        .with_lr(0.02)
+        .with_rank(4)
+        .with_update_freq(3);
+
+    let _ = threadpool::global(); // settle the shared pool before the census
+    let pool = ThreadPool::new(4);
+    let mut opt = optim::build(&cfg, &shapes, &projected, 42);
+    let mut wrng = Rng::new(7);
+    let mut weights: Vec<Mat> = shapes
+        .iter()
+        .map(|&(m, n)| Mat::randn(m, n, 0.5, &mut wrng))
+        .collect();
+    let mut grng = Rng::new(8);
+    let grads: Vec<Mat> = shapes
+        .iter()
+        .map(|&(m, n)| Mat::randn(m, n, 1.0, &mut grng))
+        .collect();
+    {
+        // Warm-up: allocate moments and the per-class batch orth scratch.
+        let mut refs: Vec<&mut Mat> = weights.iter_mut().collect();
+        opt.step_parallel(&pool, &mut refs, &grads, 1.0);
+        opt.end_step();
+    }
+
+    let spawned_before = threadpool::threads_spawned();
+    let os_before = os_thread_count();
+    for _ in 0..10 {
+        let mut refs: Vec<&mut Mat> = weights.iter_mut().collect();
+        opt.step_parallel(&pool, &mut refs, &grads, 1.0);
+        opt.end_step();
+    }
+    assert_eq!(
+        threadpool::threads_spawned(),
+        spawned_before,
+        "resident dispatch must not construct worker threads per step"
+    );
+    if let (Some(before), Some(after)) = (os_before, os_thread_count()) {
+        assert_eq!(
+            before, after,
+            "OS thread count changed across three-phase steps: {before} -> {after}"
+        );
+    }
+    for w in &weights {
+        assert!(w.is_finite());
+    }
+}
