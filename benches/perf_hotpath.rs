@@ -16,8 +16,9 @@ use sumo::config::{ModelCfg, OptimCfg, OptimKind};
 use sumo::coordinator::Coordinator;
 use sumo::data::{Batcher, SyntheticCorpus};
 use sumo::linalg::{
-    matmul, matmul_at_b, newton_schulz5, orth_svd, orth_svd_batched_into, orth_svd_into,
-    randomized_range, BatchOrthScratch, Mat, OrthScratch, RsvdOpts,
+    gemm_into, matmul, matmul_a_bt, matmul_at_b, newton_schulz5, orth_svd, orth_svd_batched_into,
+    orth_svd_into, randomized_range, BatchOrthScratch, GemmOp, GemmScratch, Mat, OrthScratch,
+    RsvdOpts,
 };
 use sumo::model::ParamStore;
 use sumo::runtime::Runtime;
@@ -67,6 +68,36 @@ fn main() -> anyhow::Result<()> {
             let _ = matmul_at_b(&q, &a);
         });
         timing_row(&mut t, "matmul_at_b (QᵀG)", "16x2048x256", &s);
+    }
+    // Third orientation at the step shapes: the right-side back-projection
+    // O·Qᵀ (2048×16 · (256×16)ᵀ), previously an unbenched serial f64 loop.
+    {
+        let o = Mat::randn(2048, 16, 1.0, &mut rng);
+        let q = Mat::randn(256, 16, 1.0, &mut rng);
+        let s = time_fn(1, bench_iters(5), || {
+            let _ = matmul_a_bt(&o, &q);
+        });
+        timing_row(&mut t, "matmul_a_bt (OQᵀ back-proj)", "2048x16x256", &s);
+    }
+    // Fused Block-4 epilogue: W ← β·W + α·(Q·O) in one GEMM pass vs the
+    // unfused materialize-then-scale-then-axpy sequence it replaced.
+    {
+        let q = Mat::randn(2048, 16, 1.0, &mut rng);
+        let o = Mat::randn(16, 256, 1.0, &mut rng);
+        let mut w = Mat::randn(2048, 256, 0.1, &mut rng);
+        let mut full = Mat::zeros(2048, 256);
+        let mut ws = GemmScratch::new();
+        let (alpha, beta) = (-0.02f32, 0.999f32);
+        let s = time_fn(1, bench_iters(5), || {
+            sumo::linalg::matmul_into(&q, &o, &mut full);
+            w.scale(beta);
+            w.axpy(alpha, &full);
+        });
+        timing_row(&mut t, "block4 apply (unfused)", "2048x256 r16", &s);
+        let s = time_fn(1, bench_iters(5), || {
+            gemm_into(GemmOp::Nn, alpha, &q, &o, beta, &mut w, &mut ws);
+        });
+        timing_row(&mut t, "fused block4 epilogue", "2048x256 r16", &s);
     }
     for &r in &[4usize, 16, 64] {
         let m = Mat::randn(r, 2048, 1.0, &mut rng);

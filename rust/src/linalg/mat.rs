@@ -119,6 +119,16 @@ impl Mat {
 
     /// self = beta*self + alpha*other (the EMA update used for moments).
     pub fn ema(&mut self, beta: f32, alpha: f32, other: &Mat) {
+        self.scale_axpy(beta, alpha, other);
+    }
+
+    /// Single-pass `self ← β·self + α·other` — the decay+update fusion of
+    /// Block 4 for paths the fused GEMM epilogue doesn't cover (GaLore /
+    /// Muon / SGD apply a precomputed full-space update). Bitwise identical
+    /// to the two-pass `scale(β)` + `axpy(α, other)` form (each term rounds
+    /// once either way; Rust never contracts to FMA), with half the memory
+    /// traffic; β = 1 is exact, so the no-decay case needs no branch.
+    pub fn scale_axpy(&mut self, beta: f32, alpha: f32, other: &Mat) {
         assert_eq!(self.shape(), other.shape());
         for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
             *a = beta * *a + alpha * b;
@@ -182,13 +192,23 @@ impl Mat {
         out
     }
 
-    /// Max elementwise |a-b|.
+    /// Max elementwise |a-b|. **NaN-propagating**: any NaN difference makes
+    /// the result NaN (so `max_diff(..) < tol` fails). The old
+    /// `fold(0.0, m.max(d))` swallowed NaN (`m.max(NaN) == m`), letting a
+    /// kernel that emits NaN sail through every accuracy test silently.
     pub fn max_diff(&self, other: &Mat) -> f32 {
         assert_eq!(self.shape(), other.shape());
         self.data
             .iter()
             .zip(other.data.iter())
-            .fold(0.0f32, |m, (&a, &b)| m.max((a - b).abs()))
+            .fold(0.0f32, |m, (&a, &b)| {
+                let d = (a - b).abs();
+                if d.is_nan() || m.is_nan() {
+                    f32::NAN
+                } else {
+                    m.max(d)
+                }
+            })
     }
 
     /// True when all entries are finite.
@@ -279,6 +299,42 @@ mod tests {
         let m = Mat::from_slice(3, 3, &[1., 2., 3., 4., 5., 6., 7., 8., 9.]);
         assert_eq!(m.top_rows(2).data, vec![1., 2., 3., 4., 5., 6.]);
         assert_eq!(m.left_cols(2).data, vec![1., 2., 4., 5., 7., 8.]);
+    }
+
+    #[test]
+    fn max_diff_propagates_nan() {
+        // Regression: a NaN difference must poison the reduction — the old
+        // fold dropped it (`m.max(NaN) == m`) so `max_diff < tol` passed.
+        let a = Mat::from_slice(1, 3, &[1.0, f32::NAN, 2.0]);
+        let b = Mat::from_slice(1, 3, &[1.0, 0.0, 2.0]);
+        assert!(a.max_diff(&b).is_nan());
+        assert!(b.max_diff(&a).is_nan(), "NaN on either side must poison");
+        // NaN in an *early* slot must survive later finite maxima.
+        let c = Mat::from_slice(1, 3, &[f32::NAN, 0.0, 2.0]);
+        let d = Mat::from_slice(1, 3, &[0.0, 0.0, 99.0]);
+        assert!(c.max_diff(&d).is_nan());
+        // Finite inputs unchanged.
+        let e = Mat::from_slice(1, 2, &[1.0, -3.0]);
+        let f = Mat::from_slice(1, 2, &[0.5, 1.0]);
+        assert_eq!(e.max_diff(&f), 4.0);
+    }
+
+    #[test]
+    fn scale_axpy_is_bitwise_the_two_pass_form() {
+        let mut rng = Rng::new(77);
+        for &(beta, alpha) in &[(0.95f32, -0.3f32), (1.0, -0.02), (0.0, 1.7), (-1.25, 0.6)] {
+            let base = Mat::randn(13, 9, 1.5, &mut rng);
+            let other = Mat::randn(13, 9, 2.0, &mut rng);
+            let mut fused = base.clone();
+            fused.scale_axpy(beta, alpha, &other);
+            let mut two_pass = base.clone();
+            two_pass.scale(beta);
+            two_pass.axpy(alpha, &other);
+            assert_eq!(
+                fused.data, two_pass.data,
+                "(β={beta}, α={alpha}) fused form diverged bitwise"
+            );
+        }
     }
 
     #[test]

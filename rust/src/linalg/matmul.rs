@@ -1,92 +1,437 @@
-//! Blocked matrix multiplication kernels.
+//! Packed, cache-blocked GEMM engine with a fused α/β + per-element
+//! epilogue.
 //!
-//! Written for the L3 hot path: the SUMO step multiplies tall-skinny /
-//! short-fat shapes (m×n · n×r, r×m · m×n, …). The kernels below use an
-//! i-k-j loop order (unit-stride inner loop on both B and C), 8-wide manual
-//! unrolling that the compiler auto-vectorizes, and row-range threading for
-//! large outputs. See EXPERIMENTS.md §Perf for before/after numbers.
+//! Every block of the SUMO step (PAPER.md Alg. 1) is a GEMM at a tall-skinny
+//! or short-fat shape — the Qᵀ·G projection (Block 1), the Q·O
+//! back-projection (Block 4), the Gram route in `orth_svd_fast`, the rSVD
+//! refresh sketch, and the Newton-Schulz5 iteration. All of them run through
+//! **one** register-tiled core here; the three public orientations
+//! ([`matmul_into`] C = A·B, [`matmul_at_b_into`] C = Aᵀ·B,
+//! [`matmul_a_bt_into`] C = A·Bᵀ) differ only in how their operands are
+//! *packed* — the transpose is folded into panel packing, never
+//! materialized.
+//!
+//! Structure (BLIS-style):
+//! * an MR×NR **microkernel** keeps an `[[f32; NR]; MR]` accumulator block
+//!   that the compiler holds in SIMD registers across the whole Kc range
+//!   (each packed A value is reused NR times, each packed B value MR times);
+//! * **Kc/Mc/Nc panel blocking** around it: A is packed into MR-row panels
+//!   laid out k-major, B into NR-column panels, both zero-padded to the
+//!   register-tile geometry so edge tiles take no special path;
+//! * a fused **epilogue**: `C ← α·(A·B) + β·C` plus an optional per-element
+//!   closure applied after the full k-accumulation. β = 0 *writes* the
+//!   output directly (stale values — even NaN — are never read and the old
+//!   pre-zeroing pass is gone); Block 4 of the SUMO step becomes the single
+//!   pass `W ← (1−ηλ)·W − η·α·s·(Q·O)` with no intermediate full-space
+//!   buffer.
+//!
+//! Packing buffers live in a reusable [`GemmScratch`] (threaded through the
+//! optimizer step scratch) so the steady-state step performs **zero heap
+//! allocations** (`tests/alloc_free_step.rs`); the legacy entry points fall
+//! back to a thread-local scratch that grows once and is reused.
+//!
+//! **Precision note:** every orientation accumulates in f32 register tiles.
+//! For `matmul_a_bt` this replaces a serial f64 dot-product loop: Gram
+//! consumers (`orth_svd_fast`, `polar_defect`, `svd_jacobi`, NS5's X·Xᵀ)
+//! now see ~√k·ε_f32 ≈ 5e-6 relative accumulation noise at the step shapes
+//! (k ≤ 2048) — far inside their tolerances, and the f64 one-sided-Jacobi
+//! orthogonalization paths that own the κ ≤ 1e6 accuracy guarantee
+//! (`tests/lemma32_property.rs`) are untouched. See EXPERIMENTS.md §Perf.
+//!
+//! **Determinism rule:** tile geometry (MC×NC output tiles, Kc blocks, the
+//! per-element k-accumulation order) depends only on the problem shape —
+//! never on the pool size. Tiles partition the output disjointly and the
+//! pool only decides *which worker* runs a tile, so results are **bitwise
+//! identical** across pool sizes {1, 2, 8, …} and the serial path
+//! (`tests/gemm_engine.rs` sweeps this; `tests/parallel_step.rs` relies on
+//! it for the full optimizer step).
 
 use super::Mat;
+use crate::util::threadpool::{self, ThreadPool};
+use std::cell::RefCell;
 
-/// Row-parallel threshold: below this many output elements threading is
-/// counterproductive on the 1-core testbed; kept for multi-core hosts.
-const PAR_THRESHOLD: usize = 1 << 22;
+/// Microkernel rows: the register tile is MR×NR f32 accumulators.
+pub const MR: usize = 4;
+/// Microkernel columns (one to two SIMD vectors wide on x86-64 baselines).
+pub const NR: usize = 8;
+/// Output-tile rows per parallel work item (multiple of MR).
+const MC: usize = 128;
+/// Output-tile columns per parallel work item (multiple of NR).
+const NC: usize = 64;
+/// k-panel depth: one A micro-panel (MR·KC) and one B micro-panel (NR·KC)
+/// stay cache-resident across a register tile.
+const KC: usize = 256;
+/// Auto-threading threshold in multiply-adds (m·n·k): below this the tile
+/// loop runs inline, where dispatch overhead would dominate. Above it the
+/// tiles go to the resident global pool — that includes the production
+/// SUMO step shapes (the 2048×256·r projection is ~8M madds), which is the
+/// point of the engine; the pool is constructed once per process (lazily,
+/// on the first large GEMM) and dispatch spawns nothing after that
+/// (`tests/zero_spawn_step.rs` settles it before its census). The small
+/// shapes of the zero-alloc tests sit under the threshold, so the serial
+/// steady-state path touches neither the pool nor the allocator.
+const PAR_MADDS: usize = 1 << 20;
+
+/// GEMM orientation: which operand the packing stage transposes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GemmOp {
+    /// C = A·B.
+    Nn,
+    /// C = Aᵀ·B (the projection shape — A is read column-major by packing).
+    Tn,
+    /// C = A·Bᵀ (the back-projection shape — B is read column-major).
+    Nt,
+}
+
+/// Reusable packing buffers for the GEMM engine. Construct once (allocates
+/// nothing), thread through per-layer scratch; the buffers grow to the
+/// largest problem seen and are reused allocation-free afterwards.
+#[derive(Default)]
+pub struct GemmScratch {
+    pack_a: Vec<f32>,
+    pack_b: Vec<f32>,
+}
+
+impl GemmScratch {
+    pub fn new() -> GemmScratch {
+        GemmScratch::default()
+    }
+
+    fn ensure(&mut self, a_need: usize, b_need: usize) {
+        if self.pack_a.len() < a_need {
+            self.pack_a.resize(a_need, 0.0);
+        }
+        if self.pack_b.len() < b_need {
+            self.pack_b.resize(b_need, 0.0);
+        }
+    }
+}
+
+thread_local! {
+    /// Fallback scratch for the legacy entry points ([`matmul_into`] & co.)
+    /// that predate explicit scratch threading. Grows on first use per
+    /// thread; hot paths that must be provably allocation-free pass their
+    /// own [`GemmScratch`] instead.
+    static TL_GEMM: RefCell<GemmScratch> = RefCell::new(GemmScratch::new());
+}
+
+/// Logical (m, k, n) of `op(A, B)` with the inner-dimension assert.
+fn dims(op: GemmOp, a: &Mat, b: &Mat) -> (usize, usize, usize) {
+    match op {
+        GemmOp::Nn => {
+            assert_eq!(a.cols, b.rows, "matmul inner dims: {:?} x {:?}", a.shape(), b.shape());
+            (a.rows, a.cols, b.cols)
+        }
+        GemmOp::Tn => {
+            assert_eq!(a.rows, b.rows, "at_b dims: {:?}ᵀ x {:?}", a.shape(), b.shape());
+            (a.cols, a.rows, b.cols)
+        }
+        GemmOp::Nt => {
+            assert_eq!(a.cols, b.cols, "a_bt dims: {:?} x {:?}ᵀ", a.shape(), b.shape());
+            (a.rows, a.cols, b.rows)
+        }
+    }
+}
+
+/// Pack logical-A (m×k after orientation folding) into MR-row panels,
+/// k-major within each panel, zero-padded to MR. Layout: Kc blocks
+/// consecutively; block starting at `k0` sits at offset `k0·m_pad`, its
+/// panel `ip` at `+ ip·MR·kb`, element `(kk, r)` at `+ kk·MR + r`.
+fn pack_a(op: GemmOp, a: &Mat, m: usize, k: usize, dst: &mut [f32]) {
+    let mut off = 0;
+    let mut k0 = 0;
+    while k0 < k {
+        let kb = KC.min(k - k0);
+        let mut i0 = 0;
+        while i0 < m {
+            let mr = MR.min(m - i0);
+            for kk in 0..kb {
+                let panel = &mut dst[off + kk * MR..off + kk * MR + MR];
+                for (r, slot) in panel.iter_mut().enumerate() {
+                    *slot = if r < mr {
+                        match op {
+                            // Nn/Nt: logical A is `a` itself.
+                            GemmOp::Nn | GemmOp::Nt => a[(i0 + r, k0 + kk)],
+                            // Tn: logical A(i, k) = a(k, i) — the transpose
+                            // folds into this gather.
+                            GemmOp::Tn => a[(k0 + kk, i0 + r)],
+                        }
+                    } else {
+                        0.0
+                    };
+                }
+            }
+            off += kb * MR;
+            i0 += MR;
+        }
+        k0 += KC;
+    }
+}
+
+/// Pack logical-B (k×n after orientation folding) into NR-column panels,
+/// k-major, zero-padded to NR. Layout mirrors [`pack_a`]: block at `k0` at
+/// offset `k0·n_pad`, panel `jp` at `+ jp·NR·kb`, element `(kk, c)` at
+/// `+ kk·NR + c`.
+fn pack_b(op: GemmOp, b: &Mat, k: usize, n: usize, dst: &mut [f32]) {
+    let mut off = 0;
+    let mut k0 = 0;
+    while k0 < k {
+        let kb = KC.min(k - k0);
+        let mut j0 = 0;
+        while j0 < n {
+            let nr = NR.min(n - j0);
+            for kk in 0..kb {
+                let panel = &mut dst[off + kk * NR..off + kk * NR + NR];
+                for (c, slot) in panel.iter_mut().enumerate() {
+                    *slot = if c < nr {
+                        match op {
+                            // Nn/Tn: logical B is `b` itself.
+                            GemmOp::Nn | GemmOp::Tn => b[(k0 + kk, j0 + c)],
+                            // Nt: logical B(k, j) = b(j, k).
+                            GemmOp::Nt => b[(j0 + c, k0 + kk)],
+                        }
+                    } else {
+                        0.0
+                    };
+                }
+            }
+            off += kb * NR;
+            j0 += NR;
+        }
+        k0 += KC;
+    }
+}
+
+/// Register-tiled inner kernel: `acc += Apanel · Bpanel` over one Kc block.
+/// `apanel` is `kb`×MR (k-major), `bpanel` is `kb`×NR; the accumulator block
+/// stays in registers for the whole loop. The k order here (ascending within
+/// the block, blocks ascending in the caller) is the *only* accumulation
+/// order any output element ever sees — the determinism contract.
+#[inline(always)]
+fn microkernel(apanel: &[f32], bpanel: &[f32], acc: &mut [[f32; NR]; MR]) {
+    for (ak, bk) in apanel.chunks_exact(MR).zip(bpanel.chunks_exact(NR)) {
+        for (acc_row, &ar) in acc.iter_mut().zip(ak.iter()) {
+            for (slot, &bv) in acc_row.iter_mut().zip(bk.iter()) {
+                *slot += ar * bv;
+            }
+        }
+    }
+}
+
+/// Shares the output base pointer with pool workers. SAFETY contract:
+/// tiles write pairwise-disjoint regions of C and the dispatching thread
+/// blocks on the pool barrier until every tile completes.
+struct OutPtr(*mut f32);
+unsafe impl Send for OutPtr {}
+unsafe impl Sync for OutPtr {}
+
+/// One (bi, bj) output tile: MC×NC region of C, full k accumulation, α/β
+/// merge, then the optional per-element epilogue.
+///
+/// # Safety
+/// `cp` must point at an m×n row-major buffer; distinct (bi, bj) pairs touch
+/// disjoint regions, and the caller must keep the buffer alive and unaliased
+/// (no concurrent access outside this tile's region) for the whole call.
+#[allow(clippy::too_many_arguments)]
+unsafe fn run_tile<E: Fn(usize, f32) -> f32>(
+    cp: *mut f32,
+    (m, n, k): (usize, usize, usize),
+    pa: &[f32],
+    pb: &[f32],
+    (m_pad, n_pad): (usize, usize),
+    (bi, bj): (usize, usize),
+    alpha: f32,
+    beta: f32,
+    epi: Option<&E>,
+) {
+    let i_lo = bi * MC;
+    let i_hi = (i_lo + MC).min(m);
+    let j_lo = bj * NC;
+    let j_hi = (j_lo + NC).min(n);
+    let mut k0 = 0;
+    let mut first = true;
+    while k0 < k {
+        let kb = KC.min(k - k0);
+        let a_base = k0 * m_pad;
+        let b_base = k0 * n_pad;
+        let mut j0 = j_lo;
+        while j0 < j_hi {
+            let nr_eff = NR.min(j_hi - j0);
+            let b_off = b_base + (j0 / NR) * NR * kb;
+            let bpanel = &pb[b_off..b_off + kb * NR];
+            let mut i0 = i_lo;
+            while i0 < i_hi {
+                let mr_eff = MR.min(i_hi - i0);
+                let a_off = a_base + (i0 / MR) * MR * kb;
+                let apanel = &pa[a_off..a_off + kb * MR];
+                let mut acc = [[0.0f32; NR]; MR];
+                microkernel(apanel, bpanel, &mut acc);
+                // Merge the register block into C. First Kc block applies
+                // β (or writes directly when β = 0 — stale C is never
+                // read); later blocks accumulate.
+                for (r, acc_row) in acc.iter().enumerate().take(mr_eff) {
+                    let row = cp.add((i0 + r) * n + j0);
+                    for (c, &av) in acc_row.iter().enumerate().take(nr_eff) {
+                        let v = alpha * av;
+                        let dst = row.add(c);
+                        if first {
+                            *dst = if beta == 0.0 { v } else { beta * *dst + v };
+                        } else {
+                            *dst += v;
+                        }
+                    }
+                }
+                i0 += MR;
+            }
+            j0 += NR;
+        }
+        first = false;
+        k0 += KC;
+    }
+    if let Some(f) = epi {
+        for i in i_lo..i_hi {
+            for j in j_lo..j_hi {
+                let idx = i * n + j;
+                let dst = cp.add(idx);
+                *dst = f(idx, *dst);
+            }
+        }
+    }
+}
+
+/// No-epilogue marker type for the plain α/β entry points.
+type NoEpi = fn(usize, f32) -> f32;
+const NO_EPI: Option<&NoEpi> = None;
+
+/// The shared core: pack both operands (orientation folded in), then run
+/// the (MC, NC) output tiles — on `pool` when given and the problem has
+/// more than one tile, inline otherwise. Per-element arithmetic is
+/// identical on every path.
+#[allow(clippy::too_many_arguments)]
+fn gemm_core<E: Fn(usize, f32) -> f32 + Sync>(
+    op: GemmOp,
+    alpha: f32,
+    a: &Mat,
+    b: &Mat,
+    beta: f32,
+    c: &mut Mat,
+    ws: &mut GemmScratch,
+    epi: Option<&E>,
+    pool: Option<&ThreadPool>,
+) {
+    let (m, k, n) = dims(op, a, b);
+    assert_eq!((c.rows, c.cols), (m, n), "gemm output shape: want {m}x{n}, got {:?}", c.shape());
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        // Degenerate contraction: C ← β·C (+ epilogue). β = 0 still writes.
+        for (idx, x) in c.data.iter_mut().enumerate() {
+            let v = if beta == 0.0 { 0.0 } else { beta * *x };
+            *x = match epi {
+                Some(f) => f(idx, v),
+                None => v,
+            };
+        }
+        return;
+    }
+    let m_pad = m.div_ceil(MR) * MR;
+    let n_pad = n.div_ceil(NR) * NR;
+    ws.ensure(m_pad * k, n_pad * k);
+    pack_a(op, a, m, k, &mut ws.pack_a);
+    pack_b(op, b, k, n, &mut ws.pack_b);
+    let pa = &ws.pack_a[..m_pad * k];
+    let pb = &ws.pack_b[..n_pad * k];
+    let n_bj = n.div_ceil(NC);
+    let tiles = m.div_ceil(MC) * n_bj;
+    let out = OutPtr(c.data.as_mut_ptr());
+    let out = &out;
+    let run = |t: usize| {
+        let tile = (t / n_bj, t % n_bj);
+        // SAFETY: tile regions partition C disjointly; the barrier below
+        // (or the serial loop) completes before `c` can be used again.
+        unsafe { run_tile(out.0, (m, n, k), pa, pb, (m_pad, n_pad), tile, alpha, beta, epi) };
+    };
+    match pool {
+        Some(p) if tiles > 1 => p.par_for(tiles, run),
+        _ => (0..tiles).for_each(run),
+    }
+}
+
+/// Pool policy for the implicit entry points: thread the tile loop through
+/// the resident global pool only above [`PAR_MADDS`] multiply-adds. The
+/// choice depends only on the shape, and threading never changes results
+/// (see the determinism rule in the module docs).
+fn auto_pool(m: usize, k: usize, n: usize) -> Option<&'static ThreadPool> {
+    if m.saturating_mul(k).saturating_mul(n) >= PAR_MADDS {
+        Some(threadpool::global())
+    } else {
+        None
+    }
+}
+
+/// `C ← α·op(A, B) + β·C` with explicit packing scratch — the zero-alloc
+/// hot-path entry point. β = 0 writes C without reading it.
+pub fn gemm_into(
+    op: GemmOp,
+    alpha: f32,
+    a: &Mat,
+    b: &Mat,
+    beta: f32,
+    c: &mut Mat,
+    ws: &mut GemmScratch,
+) {
+    let (m, k, n) = dims(op, a, b);
+    gemm_core(op, alpha, a, b, beta, c, ws, NO_EPI, auto_pool(m, k, n));
+}
+
+/// [`gemm_into`] with an explicit pool override: `Some(pool)` always tiles
+/// across it (bitwise identical to `None`, which runs inline) — the
+/// pool-size invariance sweeps in `tests/gemm_engine.rs` use this.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_pooled_into(
+    op: GemmOp,
+    alpha: f32,
+    a: &Mat,
+    b: &Mat,
+    beta: f32,
+    c: &mut Mat,
+    ws: &mut GemmScratch,
+    pool: Option<&ThreadPool>,
+) {
+    gemm_core(op, alpha, a, b, beta, c, ws, NO_EPI, pool);
+}
+
+/// `C[i] ← f(i, α·op(A, B)[i] + β·C[i])` — the fused-epilogue entry point.
+/// The closure sees the fully accumulated value of its element exactly once
+/// (after the whole k reduction) and its return value is stored; `i` is the
+/// row-major flat index into C.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_epilogue_into(
+    op: GemmOp,
+    alpha: f32,
+    a: &Mat,
+    b: &Mat,
+    beta: f32,
+    c: &mut Mat,
+    ws: &mut GemmScratch,
+    epi: impl Fn(usize, f32) -> f32 + Sync,
+) {
+    let (m, k, n) = dims(op, a, b);
+    gemm_core(op, alpha, a, b, beta, c, ws, Some(&epi), auto_pool(m, k, n));
+}
 
 /// C = A · B.
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
-    assert_eq!(a.cols, b.rows, "matmul inner dims: {:?} x {:?}", a.shape(), b.shape());
     let mut c = Mat::zeros(a.rows, b.cols);
     matmul_into(a, b, &mut c);
     c
 }
 
-/// C = A · B written into a preallocated output (zeroed here).
+/// C = A · B written into a preallocated output (overwritten, never read —
+/// the engine's β = 0 path replaced the old pre-zeroing pass).
 pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
-    assert_eq!(a.cols, b.rows);
-    assert_eq!((c.rows, c.cols), (a.rows, b.cols));
-    c.data.iter_mut().for_each(|x| *x = 0.0);
-    let work = a.rows * b.cols;
-    // Only touch the pool on large outputs: constructing the shared pool on
-    // first use (and the chunk list here) allocates, and the zero-alloc
-    // SUMO step path must stay allocation-free on its (small) steady-state
-    // shapes. The row split dispatches to the resident workers of the
-    // process-wide pool — no per-call thread spawns — and runs inline when
-    // called from inside a pool worker (nested-dispatch rule), so threaded
-    // optimizer steps never oversubscribe.
-    if work >= PAR_THRESHOLD {
-        let pool = crate::util::threadpool::global();
-        let threads = pool.size();
-        if threads > 1 && a.rows >= threads {
-            let rows_per = a.rows.div_ceil(threads);
-            let cols = c.cols;
-            let mut chunks: Vec<(usize, &mut [f32])> = c
-                .data
-                .chunks_mut(rows_per * cols)
-                .enumerate()
-                .map(|(i, ch)| (i * rows_per, ch))
-                .collect();
-            pool.par_for_each_mut(&mut chunks, |_, (row0, chunk)| {
-                let nrows = chunk.len() / cols;
-                mm_block(a, b, chunk, *row0, nrows);
-            });
-            return;
-        }
-    }
-    let nrows = a.rows;
-    mm_block(a, b, &mut c.data, 0, nrows);
-}
-
-/// Serial i-k-j kernel over rows [row0, row0+nrows) of the output.
-fn mm_block(a: &Mat, b: &Mat, c: &mut [f32], row0: usize, nrows: usize) {
-    let n = b.cols;
-    let k_dim = a.cols;
-    for i in 0..nrows {
-        let arow = a.row(row0 + i);
-        let crow = &mut c[i * n..(i + 1) * n];
-        for (k, &aik) in arow.iter().enumerate().take(k_dim) {
-            if aik == 0.0 {
-                continue;
-            }
-            let brow = b.row(k);
-            // 8-wide unroll; LLVM vectorizes this to SIMD FMA.
-            let mut j = 0;
-            while j + 8 <= n {
-                crow[j] += aik * brow[j];
-                crow[j + 1] += aik * brow[j + 1];
-                crow[j + 2] += aik * brow[j + 2];
-                crow[j + 3] += aik * brow[j + 3];
-                crow[j + 4] += aik * brow[j + 4];
-                crow[j + 5] += aik * brow[j + 5];
-                crow[j + 6] += aik * brow[j + 6];
-                crow[j + 7] += aik * brow[j + 7];
-                j += 8;
-            }
-            while j < n {
-                crow[j] += aik * brow[j];
-                j += 1;
-            }
-        }
-    }
+    TL_GEMM.with(|ws| gemm_into(GemmOp::Nn, 1.0, a, b, 0.0, c, &mut ws.borrow_mut()));
 }
 
 /// C = Aᵀ · B without materializing Aᵀ (the Qᵀ·G projection shape).
@@ -96,53 +441,23 @@ pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
     c
 }
 
-/// C = Aᵀ · B written into a preallocated output (zeroed here). The
-/// zero-allocation twin of [`matmul_at_b`] used by the SUMO step scratch.
+/// C = Aᵀ · B written into a preallocated output. The transpose folds into
+/// A-panel packing (same core as [`matmul_into`]).
 pub fn matmul_at_b_into(a: &Mat, b: &Mat, c: &mut Mat) {
-    assert_eq!(a.rows, b.rows, "at_b dims: {:?}ᵀ x {:?}", a.shape(), b.shape());
-    assert_eq!((c.rows, c.cols), (a.cols, b.cols));
-    c.data.iter_mut().for_each(|x| *x = 0.0);
-    // C[i,j] = Σ_k A[k,i] B[k,j]: accumulate rank-1 updates row-by-row of A/B;
-    // inner loops stay unit-stride.
-    for k in 0..a.rows {
-        let arow = a.row(k);
-        let brow = b.row(k);
-        for (i, &aki) in arow.iter().enumerate() {
-            if aki == 0.0 {
-                continue;
-            }
-            let crow = c.row_mut(i);
-            for (cj, &bkj) in crow.iter_mut().zip(brow.iter()) {
-                *cj += aki * bkj;
-            }
-        }
-    }
+    TL_GEMM.with(|ws| gemm_into(GemmOp::Tn, 1.0, a, b, 0.0, c, &mut ws.borrow_mut()));
 }
 
-/// C = A · Bᵀ without materializing Bᵀ (dot-product form; both operands
-/// walked along rows).
+/// C = A · Bᵀ without materializing Bᵀ (the O·Qᵀ back-projection shape).
 pub fn matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
     let mut c = Mat::zeros(a.rows, b.rows);
     matmul_a_bt_into(a, b, &mut c);
     c
 }
 
-/// C = A · Bᵀ written into a preallocated output. The zero-allocation twin
-/// of [`matmul_a_bt`] used by the SUMO step scratch.
+/// C = A · Bᵀ written into a preallocated output. The transpose folds into
+/// B-panel packing (same core as [`matmul_into`]).
 pub fn matmul_a_bt_into(a: &Mat, b: &Mat, c: &mut Mat) {
-    assert_eq!(a.cols, b.cols, "a_bt dims: {:?} x {:?}ᵀ", a.shape(), b.shape());
-    assert_eq!((c.rows, c.cols), (a.rows, b.rows));
-    for i in 0..a.rows {
-        let arow = a.row(i);
-        for j in 0..b.rows {
-            let brow = b.row(j);
-            let mut acc = 0.0f64;
-            for (x, y) in arow.iter().zip(brow.iter()) {
-                acc += *x as f64 * *y as f64;
-            }
-            c[(i, j)] = acc as f32;
-        }
-    }
+    TL_GEMM.with(|ws| gemm_into(GemmOp::Nt, 1.0, a, b, 0.0, c, &mut ws.borrow_mut()));
 }
 
 #[cfg(test)]
@@ -167,7 +482,7 @@ mod tests {
     #[test]
     fn matches_naive() {
         let mut rng = Rng::new(3);
-        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (17, 9, 23), (64, 32, 48)] {
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (17, 9, 23), (64, 32, 48), (130, 70, 33)] {
             let a = Mat::randn(m, k, 1.0, &mut rng);
             let b = Mat::randn(k, n, 1.0, &mut rng);
             let c = matmul(&a, &b);
@@ -212,10 +527,101 @@ mod tests {
     }
 
     #[test]
+    fn beta_zero_never_reads_stale_nan() {
+        // The β = 0 path must *write* C, not accumulate into it: stale NaN
+        // (or any garbage) in the output buffer cannot leak through.
+        let mut rng = Rng::new(13);
+        let a = Mat::randn(10, 6, 1.0, &mut rng);
+        let b = Mat::randn(6, 9, 1.0, &mut rng);
+        let mut c = Mat::zeros(10, 9);
+        c.data.iter_mut().for_each(|x| *x = f32::NAN);
+        matmul_into(&a, &b, &mut c);
+        assert!(c.is_finite(), "β=0 read stale NaN output");
+        assert!(c.max_diff(&naive(&a, &b)) < 1e-3);
+    }
+
+    #[test]
+    fn alpha_beta_merge_matches_reference() {
+        let mut rng = Rng::new(17);
+        let a = Mat::randn(33, 20, 1.0, &mut rng);
+        let b = Mat::randn(20, 11, 1.0, &mut rng);
+        let c0 = Mat::randn(33, 11, 1.0, &mut rng);
+        let (alpha, beta) = (-0.7f32, 0.35f32);
+        let mut c = c0.clone();
+        let mut ws = GemmScratch::new();
+        gemm_into(GemmOp::Nn, alpha, &a, &b, beta, &mut c, &mut ws);
+        let prod = naive(&a, &b);
+        for i in 0..33 {
+            for j in 0..11 {
+                let want = beta * c0[(i, j)] + alpha * prod[(i, j)];
+                assert!((c[(i, j)] - want).abs() < 1e-3, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn epilogue_sees_fully_accumulated_value_once() {
+        // k > KC forces multiple Kc blocks: the closure must still run once
+        // per element, after the whole reduction.
+        let mut rng = Rng::new(19);
+        let k = KC + 37;
+        let a = Mat::randn(6, k, 0.2, &mut rng);
+        let b = Mat::randn(k, 10, 0.2, &mut rng);
+        let mut c = Mat::randn(6, 10, 1.0, &mut rng);
+        let c0 = c.clone();
+        let mut ws = GemmScratch::new();
+        gemm_epilogue_into(GemmOp::Nn, 2.0, &a, &b, 0.5, &mut c, &mut ws, |idx, v| {
+            v + idx as f32
+        });
+        let prod = naive(&a, &b);
+        for i in 0..6 {
+            for j in 0..10 {
+                let want = 2.0 * prod[(i, j)] + 0.5 * c0[(i, j)] + (i * 10 + j) as f32;
+                assert!(
+                    (c[(i, j)] - want).abs() < 2e-2 * (1.0 + want.abs()),
+                    "({i},{j}): got {} want {want}",
+                    c[(i, j)]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn k_zero_applies_beta_and_epilogue() {
+        let a = Mat::zeros(4, 0);
+        let b = Mat::zeros(0, 3);
+        let mut c = Mat::from_slice(4, 3, &[2.0; 12]);
+        let mut ws = GemmScratch::new();
+        gemm_into(GemmOp::Nn, 1.0, &a, &b, 0.5, &mut c, &mut ws);
+        assert!(c.data.iter().all(|&x| x == 1.0));
+        // β = 0 with k = 0 zeroes the output even from NaN.
+        c.data.iter_mut().for_each(|x| *x = f32::NAN);
+        gemm_into(GemmOp::Nn, 1.0, &a, &b, 0.0, &mut c, &mut ws);
+        assert!(c.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
     fn identity_is_noop() {
         let mut rng = Rng::new(9);
         let a = Mat::randn(8, 8, 1.0, &mut rng);
         let c = matmul(&a, &Mat::eye(8));
         assert!(c.max_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    fn scratch_reuse_across_shapes_is_clean() {
+        // A big problem then a small one: leftover packed data beyond the
+        // small problem's panels must not leak into its result.
+        let mut rng = Rng::new(23);
+        let mut ws = GemmScratch::new();
+        let a1 = Mat::randn(40, 70, 1.0, &mut rng);
+        let b1 = Mat::randn(70, 30, 1.0, &mut rng);
+        let mut c1 = Mat::zeros(40, 30);
+        gemm_into(GemmOp::Nn, 1.0, &a1, &b1, 0.0, &mut c1, &mut ws);
+        let a2 = Mat::randn(3, 5, 1.0, &mut rng);
+        let b2 = Mat::randn(5, 2, 1.0, &mut rng);
+        let mut c2 = Mat::zeros(3, 2);
+        gemm_into(GemmOp::Nn, 1.0, &a2, &b2, 0.0, &mut c2, &mut ws);
+        assert!(c2.max_diff(&naive(&a2, &b2)) < 1e-4);
     }
 }

@@ -2,10 +2,11 @@
 //! the analysis benches (Figure 1, Lemmas 3.1/3.2) and the tests.
 //!
 //! Everything is hand-written (no BLAS/LAPACK in the offline environment):
-//! blocked + multithreaded matmul, modified Gram-Schmidt QR, one-sided Jacobi
-//! SVD, randomized range finding (Halko et al., the paper's Block 1), the
-//! Newton-Schulz5 quintic (Muon's orthogonalization) and the exact SVD-based
-//! polar factor (SUMO's Block 2).
+//! a packed, register-tiled GEMM engine with a fused α/β + per-element
+//! epilogue (all three orientations share one core — see `matmul`),
+//! modified Gram-Schmidt QR, one-sided Jacobi SVD, randomized range finding
+//! (Halko et al., the paper's Block 1), the Newton-Schulz5 quintic (Muon's
+//! orthogonalization) and the exact SVD-based polar factor (SUMO's Block 2).
 
 pub mod jacobi;
 pub mod mat;
@@ -19,7 +20,8 @@ pub mod rsvd;
 pub use jacobi::{eigh_jacobi, svd_jacobi};
 pub use mat::Mat;
 pub use matmul::{
-    matmul, matmul_a_bt, matmul_a_bt_into, matmul_at_b, matmul_at_b_into, matmul_into,
+    gemm_epilogue_into, gemm_into, gemm_pooled_into, matmul, matmul_a_bt, matmul_a_bt_into,
+    matmul_at_b, matmul_at_b_into, matmul_into, GemmOp, GemmScratch,
 };
 pub use newton_schulz::{newton_schulz5, newton_schulz5_into, Ns5Scratch};
 pub use norms::{cond_gram, fro_norm, spectral_norm};

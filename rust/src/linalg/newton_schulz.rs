@@ -6,7 +6,7 @@
 //! the "Newton-Schulz5" the paper analyzes; Lemma 3.2 bounds its error by
 //! √r·(1−1/κ)^{2^i}, which `benches/lemma32_ns_error.rs` validates.
 
-use super::matmul::{matmul_a_bt_into, matmul_at_b_into, matmul_into};
+use super::matmul::{gemm_into, GemmOp, GemmScratch};
 use super::{matmul, matmul_a_bt, Mat};
 
 /// Muon's tuned quintic coefficients.
@@ -21,6 +21,9 @@ pub struct Ns5Scratch {
     g2: Mat,
     /// Same shape as the input: the B·X (or X·B) product.
     bx: Mat,
+    /// Packed-GEMM panel buffers shared by every matmul of the iteration
+    /// (grown on the first call, reused allocation-free afterwards).
+    gemm: GemmScratch,
 }
 
 impl Ns5Scratch {
@@ -30,6 +33,7 @@ impl Ns5Scratch {
             g: Mat::zeros(k, k),
             g2: Mat::zeros(k, k),
             bx: Mat::zeros(rows, cols),
+            gemm: GemmScratch::new(),
         }
     }
 }
@@ -62,23 +66,24 @@ pub fn newton_schulz5_into(m: &Mat, iters: usize, out: &mut Mat, ws: &mut Ns5Scr
     let norm = m.fro().max(1e-30);
     out.data.copy_from_slice(&m.data);
     out.scale(1.0 / norm);
+    let Ns5Scratch { g, g2, bx, gemm } = ws;
     for _ in 0..iters {
         if wide {
-            matmul_a_bt_into(out, out, &mut ws.g); // A = X Xᵀ
+            gemm_into(GemmOp::Nt, 1.0, out, out, 0.0, g, gemm); // A = X Xᵀ
         } else {
-            matmul_at_b_into(out, out, &mut ws.g); // A = Xᵀ X
+            gemm_into(GemmOp::Tn, 1.0, out, out, 0.0, g, gemm); // A = Xᵀ X
         }
-        matmul_into(&ws.g, &ws.g, &mut ws.g2);
+        gemm_into(GemmOp::Nn, 1.0, g, g, 0.0, g2, gemm);
         // B = b·A + c·A² in place (A is no longer needed this iteration).
-        for (gi, &g2i) in ws.g.data.iter_mut().zip(ws.g2.data.iter()) {
+        for (gi, &g2i) in g.data.iter_mut().zip(g2.data.iter()) {
             *gi = b * *gi + c * g2i;
         }
         if wide {
-            matmul_into(&ws.g, out, &mut ws.bx); // B·X
+            gemm_into(GemmOp::Nn, 1.0, g, out, 0.0, bx, gemm); // B·X
         } else {
-            matmul_into(out, &ws.g, &mut ws.bx); // X·B (B symmetric)
+            gemm_into(GemmOp::Nn, 1.0, out, g, 0.0, bx, gemm); // X·B (B symmetric)
         }
-        for (xi, &bxi) in out.data.iter_mut().zip(ws.bx.data.iter()) {
+        for (xi, &bxi) in out.data.iter_mut().zip(bx.data.iter()) {
             *xi = a * *xi + bxi;
         }
     }

@@ -1,7 +1,10 @@
 //! Thin QR via modified Gram-Schmidt with one re-orthogonalization pass
 //! ("MGS2", numerically equivalent to Householder for well-scaled inputs and
 //! far simpler). Used by the randomized range finder (the paper's Block 1)
-//! and in the L2 JAX graphs' Python twin — both sides must agree.
+//! and in the L2 JAX graphs' Python twin — both sides must agree. The
+//! GEMM-shaped work here (the defect check's QᵀQ) routes through the packed
+//! engine in `linalg::matmul`; the MGS inner loops are dot products and
+//! stay local.
 
 use super::{Mat, matmul_at_b};
 

@@ -4,7 +4,10 @@
 //! The range finder sketches `Y = (G Gᵀ)^q G Ω` with a Gaussian test matrix
 //! Ω (n×(r+p)), orthonormalizes with MGS-QR and truncates to rank r. Cost
 //! O(mnr + mr²) versus O(min(mn², m²n)) for a full SVD — the asymmetry the
-//! paper's Table 1 "Computation" row prices.
+//! paper's Table 1 "Computation" row prices. Every sketch product
+//! (`G·Ω`, `Gᵀ·Q_y`, …) runs through the packed GEMM engine in
+//! `linalg::matmul`, so the amortized Block-1 refresh shares the step
+//! kernels' tiling.
 
 use super::{matmul, matmul_at_b, mgs_qr, svd_jacobi, Mat};
 use crate::util::Rng;

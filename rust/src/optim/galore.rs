@@ -57,12 +57,11 @@ fn step_layer(
             let full = p.subspace.back_project(&upd);
             // Decoupled weight decay on the *pre-update* weights (AdamW
             // convention, matching the paper's Block 4 and the HLO twin):
-            // decaying after the axpy would attenuate the fresh update by
-            // (1−ηλ) as well.
-            if cfg.weight_decay > 0.0 {
-                w.scale(1.0 - lr * cfg.weight_decay);
-            }
-            w.axpy(-lr * cfg.scale, &full);
+            // decaying after the update would attenuate it by (1−ηλ) as
+            // well. Single-pass decay+update (bitwise identical to the old
+            // scale-then-axpy form, half the traffic through W; β = 1 when
+            // λ = 0 is exact).
+            w.scale_axpy(1.0 - lr * cfg.weight_decay, -lr * cfg.scale, &full);
         }
     }
 }

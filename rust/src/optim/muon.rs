@@ -50,11 +50,10 @@ impl Optimizer for Muon {
         }
         let o = newton_schulz5(mom, self.cfg.ns_iters);
         // Decoupled decay on the *pre-update* weights (same Block-4 ordering
-        // fix as SUMO/GaLore; the HLO muon twin decays w, not w − η·O).
-        if self.cfg.weight_decay > 0.0 {
-            w.scale(1.0 - lr * self.cfg.weight_decay);
-        }
-        w.axpy(-lr * rms_scale(m, n), &o);
+        // fix as SUMO/GaLore; the HLO muon twin decays w, not w − η·O),
+        // fused with the update into one pass through W (bitwise identical
+        // to the old scale-then-axpy form; β = 1 when λ = 0 is exact).
+        w.scale_axpy(1.0 - lr * self.cfg.weight_decay, -lr * rms_scale(m, n), &o);
     }
 
     fn end_step(&mut self) {}

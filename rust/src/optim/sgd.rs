@@ -29,11 +29,10 @@ impl Optimizer for SgdM {
         let lr = self.cfg.lr * lr_mult;
         let mom = &mut self.moments[idx];
         mom.ema(self.cfg.beta1, 1.0, g); // classical momentum accumulation
-        // Decoupled decay on the *pre-update* weights (Block-4 ordering).
-        if self.cfg.weight_decay > 0.0 {
-            w.scale(1.0 - lr * self.cfg.weight_decay);
-        }
-        w.axpy(-lr, mom);
+        // Decoupled decay on the *pre-update* weights (Block-4 ordering),
+        // fused with the update into one pass through W (bitwise identical
+        // to the old scale-then-axpy form; β = 1 when λ = 0 is exact).
+        w.scale_axpy(1.0 - lr * self.cfg.weight_decay, -lr, mom);
     }
 
     fn end_step(&mut self) {}

@@ -6,8 +6,7 @@
 //! R = Q_newᵀ Q_old (the paper's Block 1.1).
 
 use crate::linalg::{
-    matmul, matmul_a_bt_into, matmul_at_b, matmul_at_b_into, matmul_into, randomized_range, Mat,
-    RsvdOpts,
+    gemm_into, matmul, matmul_at_b, randomized_range, GemmOp, GemmScratch, Mat, RsvdOpts,
 };
 use crate::util::Rng;
 
@@ -95,13 +94,15 @@ impl SubspaceState {
         }
     }
 
-    /// Project into a preallocated output (zero heap allocations — the hot
-    /// path of the SUMO step engine).
-    pub fn project_into(&self, g: &Mat, out: &mut Mat) {
+    /// Project into a preallocated output using the caller's packed-GEMM
+    /// scratch (zero heap allocations — the hot path of the SUMO step
+    /// engine). Arithmetic is identical to [`Self::project`]: both route
+    /// through the same packed core with the same tile geometry.
+    pub fn project_into(&self, g: &Mat, out: &mut Mat, ws: &mut GemmScratch) {
         let q = self.q.as_ref().expect("basis not initialized");
         match self.side {
-            Side::Left => matmul_at_b_into(q, g, out),
-            Side::Right => matmul_into(g, q, out),
+            Side::Left => gemm_into(GemmOp::Tn, 1.0, q, g, 0.0, out, ws),
+            Side::Right => gemm_into(GemmOp::Nn, 1.0, g, q, 0.0, out, ws),
         }
     }
 
@@ -115,11 +116,31 @@ impl SubspaceState {
     }
 
     /// Back-project into a preallocated output (zero heap allocations).
-    pub fn back_project_into(&self, o: &Mat, out: &mut Mat) {
+    pub fn back_project_into(&self, o: &Mat, out: &mut Mat, ws: &mut GemmScratch) {
         let q = self.q.as_ref().expect("basis not initialized");
         match self.side {
-            Side::Left => matmul_into(q, o, out),
-            Side::Right => matmul_a_bt_into(o, q, out),
+            Side::Left => gemm_into(GemmOp::Nn, 1.0, q, o, 0.0, out, ws),
+            Side::Right => gemm_into(GemmOp::Nt, 1.0, o, q, 0.0, out, ws),
+        }
+    }
+
+    /// Fused Block 4: `W ← β·W + α·(back_project(O))` in a single pass
+    /// through W, with the back-projection GEMM's α/β epilogue — no
+    /// full-space intermediate is materialized and W is traversed once
+    /// (`β = 1−ηλ` folds the decoupled pre-update weight decay in,
+    /// `α = −η·scale·s` the update).
+    pub fn back_project_apply_into(
+        &self,
+        o: &Mat,
+        w: &mut Mat,
+        alpha: f32,
+        beta: f32,
+        ws: &mut GemmScratch,
+    ) {
+        let q = self.q.as_ref().expect("basis not initialized");
+        match self.side {
+            Side::Left => gemm_into(GemmOp::Nn, alpha, q, o, beta, w, ws),
+            Side::Right => gemm_into(GemmOp::Nt, alpha, o, q, beta, w, ws),
         }
     }
 
@@ -210,18 +231,45 @@ mod tests {
     #[test]
     fn into_variants_match_allocating_path() {
         let mut rng = Rng::new(21);
+        let mut ws = GemmScratch::new();
         for (m, n) in [(64usize, 32usize), (32, 64)] {
             let g = Mat::randn(m, n, 1.0, &mut rng);
             let mut ss = SubspaceState::new(m, n, 4, 10, Rng::new(22));
             ss.refresh(&g, None);
             let ghat = ss.project(&g);
             let mut ghat2 = Mat::zeros(ghat.rows, ghat.cols);
-            ss.project_into(&g, &mut ghat2);
+            ss.project_into(&g, &mut ghat2, &mut ws);
             assert_eq!(ghat.max_diff(&ghat2), 0.0);
             let back = ss.back_project(&ghat);
             let mut back2 = Mat::zeros(m, n);
-            ss.back_project_into(&ghat, &mut back2);
+            ss.back_project_into(&ghat, &mut back2, &mut ws);
             assert_eq!(back.max_diff(&back2), 0.0);
+        }
+    }
+
+    #[test]
+    fn fused_apply_matches_unfused_block4() {
+        // W ← β·W + α·QO in one pass must match back_project + scale + axpy
+        // within rounding (single- vs double-rounded α term), both sides.
+        let mut rng = Rng::new(31);
+        let mut ws = GemmScratch::new();
+        for (m, n) in [(64usize, 32usize), (32, 64)] {
+            let g = Mat::randn(m, n, 1.0, &mut rng);
+            let mut ss = SubspaceState::new(m, n, 4, 10, Rng::new(32));
+            ss.refresh(&g, None);
+            let o = ss.project(&g);
+            let w0 = Mat::randn(m, n, 0.5, &mut rng);
+            let (alpha, beta) = (-0.07f32, 0.995f32);
+            let mut fused = w0.clone();
+            ss.back_project_apply_into(&o, &mut fused, alpha, beta, &mut ws);
+            let mut unfused = w0.clone();
+            unfused.scale(beta);
+            unfused.axpy(alpha, &ss.back_project(&o));
+            assert!(
+                fused.max_diff(&unfused) < 1e-5 * (1.0 + unfused.max_abs()),
+                "({m},{n}) fused Block 4 diverged: {}",
+                fused.max_diff(&unfused)
+            );
         }
     }
 

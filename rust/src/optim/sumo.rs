@@ -17,7 +17,7 @@
 use crate::config::OptimCfg;
 use crate::linalg::{
     newton_schulz5_into, orth_svd_batched_multi_into, orth_svd_into, BatchOrthScratch,
-    BatchOrthTask, Mat, Ns5Scratch, OrthScratch,
+    BatchOrthTask, GemmScratch, Mat, Ns5Scratch, OrthScratch,
 };
 use crate::util::threadpool::ThreadPool;
 use crate::util::Rng;
@@ -53,8 +53,10 @@ struct StepScratch {
     ghat: Mat,
     /// Orthogonalized update O (moment shape).
     o: Mat,
-    /// Back-projected full-space update (layer shape).
-    full: Mat,
+    /// Packed-GEMM panel buffers shared by the Block-1 projection and the
+    /// fused Block-4 back-project+apply (which writes W directly — the old
+    /// full-space intermediate buffer is gone).
+    gemm: GemmScratch,
     ns5: bool,
     /// Per-layer orthogonalization workspace, built lazily on the first
     /// *serial* [`step_layer`] call: the grouped parallel path runs Block 2b
@@ -69,7 +71,7 @@ impl StepScratch {
         StepScratch {
             ghat: Mat::zeros(mr, mc),
             o: Mat::zeros(mr, mc),
-            full: Mat::zeros(m, n),
+            gemm: GemmScratch::new(),
             ns5,
             orth: None,
         }
@@ -104,7 +106,7 @@ fn project_and_ema(
         *moment = transported;
     }
     // Block 2a: EMA in the subspace, written into preallocated scratch.
-    subspace.project_into(g, &mut scratch.ghat);
+    subspace.project_into(g, &mut scratch.ghat, &mut scratch.gemm);
     let mshape = subspace.moment_shape(m, n);
     let mom = moment.get_or_insert_with(|| Mat::zeros(mshape.0, mshape.1));
     mom.ema(cfg.beta1, 1.0 - cfg.beta1, &scratch.ghat);
@@ -124,17 +126,17 @@ fn apply_update(
 ) {
     // Block 3: norm-growth limiter.
     limiter.apply(&mut scratch.o);
-    // Block 4: W ← W − η·α·s·QO − η·λ·W. Decay acts on the *pre-update*
-    // weights, so it is folded into W before the update lands — applying it
-    // after the axpy would shrink the freshly applied orthogonalized update
-    // by (1−ηλ) too (the ordering bug this replaces; pinned by
-    // `decay_applies_to_pre_update_weights_only`).
-    subspace.back_project_into(&scratch.o, &mut scratch.full);
-    if cfg.weight_decay > 0.0 {
-        w.scale(1.0 - lr * cfg.weight_decay);
-    }
+    // Block 4, fused: W ← (1−ηλ)·W − η·α·s·(Q·O) in one GEMM pass. The
+    // back-projection's α/β epilogue applies the update and the decoupled
+    // decay together, so no full-space intermediate is materialized and W
+    // is traversed once. β = 1−ηλ keeps the decay on the *pre-update*
+    // weights — applying it after the update lands would shrink the fresh
+    // orthogonalized term by (1−ηλ) too (the ordering bug this replaces;
+    // pinned by `decay_applies_to_pre_update_weights_only`; β = 1 when
+    // λ = 0 is exact, so no branch is needed).
+    let decay = 1.0 - lr * cfg.weight_decay;
     let step_scale = lr * cfg.scale * rms_scale(m, n);
-    w.axpy(-step_scale, &scratch.full);
+    subspace.back_project_apply_into(&scratch.o, w, -step_scale, decay, &mut scratch.gemm);
 }
 
 /// One SUMO layer update (Blocks 1–4). Free function so the serial

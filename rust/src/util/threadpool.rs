@@ -60,9 +60,9 @@ pub fn threads_spawned() -> usize {
 
 /// Process-wide shared pool sized from `available_parallelism`, built on
 /// first use and resident for the process lifetime. The coordinator's
-/// per-layer step dispatch and the large-output row split in
-/// `linalg::matmul_into` run here, so constructing coordinators (benches
-/// build many) costs zero thread spawns after the first.
+/// per-layer step dispatch and the GEMM engine's large-problem tile
+/// dispatch (`linalg::matmul`) run here, so constructing coordinators
+/// (benches build many) costs zero thread spawns after the first.
 pub fn global() -> &'static ThreadPool {
     static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
     GLOBAL.get_or_init(ThreadPool::with_default_size)

@@ -1,0 +1,154 @@
+//! Property suite for the packed/tiled GEMM engine (`linalg::matmul`):
+//!
+//! * every orientation (A·B, Aᵀ·B, A·Bᵀ) against an f64 naive reference
+//!   across a shape sweep that includes degenerate cases — 0-row/0-col
+//!   outputs, 1-row, k = 0, and sub-microtile remainders (n < NR, m < MR);
+//! * α/β fusion and the per-element epilogue closure;
+//! * **pool-size bitwise invariance**: dispatching the tile loop across
+//!   resident pools of size {1, 2, 8} must produce results bitwise
+//!   identical to the serial path, mirroring the step-engine sweeps in
+//!   `tests/parallel_step.rs` — tile geometry depends only on the problem
+//!   shape, never on the worker count.
+
+use sumo::linalg::{gemm_into, gemm_pooled_into, GemmOp, GemmScratch, Mat};
+use sumo::util::threadpool::ThreadPool;
+use sumo::util::Rng;
+
+/// f64 reference for C = α·op(A, B) + β·C₀.
+fn reference(op: GemmOp, alpha: f32, a: &Mat, b: &Mat, beta: f32, c0: &Mat) -> Mat {
+    let (m, k, n) = match op {
+        GemmOp::Nn => (a.rows, a.cols, b.cols),
+        GemmOp::Tn => (a.cols, a.rows, b.cols),
+        GemmOp::Nt => (a.rows, a.cols, b.rows),
+    };
+    let mut c = Mat::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut s = 0.0f64;
+            for kk in 0..k {
+                let av = match op {
+                    GemmOp::Nn | GemmOp::Nt => a[(i, kk)],
+                    GemmOp::Tn => a[(kk, i)],
+                } as f64;
+                let bv = match op {
+                    GemmOp::Nn | GemmOp::Tn => b[(kk, j)],
+                    GemmOp::Nt => b[(j, kk)],
+                } as f64;
+                s += av * bv;
+            }
+            c[(i, j)] = (alpha as f64 * s + beta as f64 * c0[(i, j)] as f64) as f32;
+        }
+    }
+    c
+}
+
+/// Build (A, B) with logical GEMM dims (m, k, n) for an orientation.
+fn operands(op: GemmOp, m: usize, k: usize, n: usize, rng: &mut Rng) -> (Mat, Mat) {
+    match op {
+        GemmOp::Nn => (Mat::randn(m, k, 1.0, rng), Mat::randn(k, n, 1.0, rng)),
+        GemmOp::Tn => (Mat::randn(k, m, 1.0, rng), Mat::randn(k, n, 1.0, rng)),
+        GemmOp::Nt => (Mat::randn(m, k, 1.0, rng), Mat::randn(n, k, 1.0, rng)),
+    }
+}
+
+const OPS: [GemmOp; 3] = [GemmOp::Nn, GemmOp::Tn, GemmOp::Nt];
+
+/// Shape sweep: degenerate rows/cols/contraction, sub-microtile remainders
+/// (MR = 4, NR = 8), multi-tile (MC = 128, NC = 64), and multi-Kc-block
+/// (KC = 256) problems, plus the SUMO step's tall-skinny profile.
+const SHAPES: [(usize, usize, usize); 12] = [
+    (0, 3, 4),
+    (4, 3, 0),
+    (5, 0, 7),
+    (1, 1, 1),
+    (1, 17, 5),
+    (3, 5, 2),
+    (7, 9, 6),
+    (17, 300, 23),
+    (64, 32, 48),
+    (130, 70, 33),
+    (140, 260, 70),
+    (256, 16, 40),
+];
+
+#[test]
+fn all_orientations_match_f64_reference() {
+    let mut rng = Rng::new(101);
+    for &op in &OPS {
+        let mut ws = GemmScratch::new();
+        for &(m, k, n) in &SHAPES {
+            let (a, b) = operands(op, m, k, n, &mut rng);
+            let c0 = Mat::randn(m, n, 1.0, &mut rng);
+            for &(alpha, beta) in &[(1.0f32, 0.0f32), (-0.5, 0.8), (2.0, 1.0)] {
+                let mut c = c0.clone();
+                gemm_into(op, alpha, &a, &b, beta, &mut c, &mut ws);
+                let want = reference(op, alpha, &a, &b, beta, &c0);
+                let tol = 1e-4 * (1.0 + (k as f32).sqrt());
+                assert!(
+                    c.max_diff(&want) < tol,
+                    "{op:?} ({m},{k},{n}) α={alpha} β={beta}: diff={}",
+                    c.max_diff(&want)
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn beta_zero_overwrites_nan_poisoned_output() {
+    // β = 0 must *write* the output without reading it: seed C with NaN in
+    // every orientation and require a clean result (also exercises the
+    // NaN-propagating `max_diff` — a swallowed NaN would pass silently).
+    let mut rng = Rng::new(103);
+    let mut ws = GemmScratch::new();
+    for &op in &OPS {
+        let (a, b) = operands(op, 33, 20, 11, &mut rng);
+        let mut c = Mat::zeros(33, 11);
+        c.data.iter_mut().for_each(|x| *x = f32::NAN);
+        gemm_into(op, 1.0, &a, &b, 0.0, &mut c, &mut ws);
+        assert!(c.is_finite(), "{op:?}: β=0 read stale NaN output");
+        let want = reference(op, 1.0, &a, &b, 0.0, &Mat::zeros(33, 11));
+        assert!(c.max_diff(&want) < 1e-3);
+    }
+}
+
+#[test]
+fn pool_sizes_are_bitwise_invariant() {
+    // Mirrors the parallel_step.rs sweep: serial vs pools {1, 2, 8} must be
+    // bitwise identical on multi-tile shapes, every orientation, α/β on.
+    let mut rng = Rng::new(107);
+    let shapes = [(300usize, 40usize, 70usize), (130, 257, 9), (64, 32, 48), (512, 16, 200)];
+    for &op in &OPS {
+        for &(m, k, n) in &shapes {
+            let (a, b) = operands(op, m, k, n, &mut rng);
+            let c0 = Mat::randn(m, n, 1.0, &mut rng);
+            let mut serial = c0.clone();
+            let mut ws = GemmScratch::new();
+            gemm_pooled_into(op, -0.3, &a, &b, 0.9, &mut serial, &mut ws, None);
+            for workers in [1usize, 2, 8] {
+                let pool = ThreadPool::new(workers);
+                let mut pooled = c0.clone();
+                gemm_pooled_into(op, -0.3, &a, &b, 0.9, &mut pooled, &mut ws, Some(&pool));
+                assert_eq!(
+                    serial.data, pooled.data,
+                    "{op:?} ({m},{k},{n}) pool size {workers} diverged bitwise from serial"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn legacy_entry_points_agree_with_each_other() {
+    // matmul / matmul_at_b / matmul_a_bt route through the same core: the
+    // orientation variants must agree with explicit transposition exactly
+    // (same packing-folded arithmetic, same tile geometry).
+    let mut rng = Rng::new(109);
+    let a = Mat::randn(37, 21, 1.0, &mut rng);
+    let b = Mat::randn(21, 13, 1.0, &mut rng);
+    let nn = sumo::linalg::matmul(&a, &b);
+    let tn = sumo::linalg::matmul_at_b(&a.t(), &b);
+    let nt = sumo::linalg::matmul_a_bt(&a, &b.t());
+    assert_eq!(nn.data, tn.data, "Tn packing diverged from Nn");
+    assert_eq!(nn.data, nt.data, "Nt packing diverged from Nn");
+}
