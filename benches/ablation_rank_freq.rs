@@ -2,11 +2,13 @@
 //!   (a) projection rank r sweep,
 //!   (b) subspace refresh frequency K sweep,
 //!   (c) norm-growth limiter on/off,
+//!   (d) fixed (r, K) grid vs the adaptive rank/refresh schedule
+//!       (final loss, rank trace, total refresh FLOPs),
 //! all on the same synthetic-QNLI fine-tune used by Figure 2.
 
 use sumo::bench::{scaled, TableWriter};
 use sumo::config::{OptimCfg, OptimKind, Schedule, TrainCfg};
-use sumo::coordinator::Coordinator;
+use sumo::coordinator::{Coordinator, Engine};
 use sumo::data::glue::GlueTask;
 use sumo::runtime::Runtime;
 use sumo::train::Trainer;
@@ -27,6 +29,59 @@ fn run(rt: &Runtime, ocfg: &OptimCfg, steps: usize) -> anyhow::Result<(f64, usiz
     let task = GlueTask::by_name("QNLI", coord.runner.cfg.vocab, coord.runner.seq_len()).unwrap();
     let report = Trainer::new(tcfg).finetune_glue(&mut coord, &task)?;
     Ok((report.metric, report.optimizer_state_bytes))
+}
+
+/// Diagnostics of one fixed-or-adaptive run driven step by step (the
+/// Trainer loop hides the optimizer, so the adaptive rows drive the
+/// coordinator directly): mean training loss over the last quarter of the
+/// run, the sampled mean-rank trace, total rank events, and the cumulative
+/// Block-1 refresh FLOPs actually spent.
+struct AdaptiveDiag {
+    final_loss: f64,
+    rank_trace: Vec<f32>,
+    rank_events: usize,
+    refresh_gflops: f64,
+}
+
+fn run_diag(rt: &Runtime, ocfg: &OptimCfg, steps: usize) -> anyhow::Result<AdaptiveDiag> {
+    let mut coord = Coordinator::native(rt, "micro_cls2", ocfg, 13, 1)?;
+    let task = GlueTask::by_name("QNLI", coord.runner.cfg.vocab, coord.runner.seq_len()).unwrap();
+    let batch = coord.runner.batch;
+    let sample_every = (steps / 6).max(1);
+    let mut trace = Vec::new();
+    let mut tail_losses = Vec::new();
+    for step in 0..steps {
+        let (toks, labels) = task.batch("train", (step * batch) as u64, batch);
+        let metrics = coord.train_iteration_labeled(&toks, &labels, 1.0)?;
+        if step >= steps - steps / 4 - 1 {
+            tail_losses.push(metrics.loss as f64);
+        }
+        if step % sample_every == 0 || step + 1 == steps {
+            if let Engine::Native(opt) = coord.engine_ref() {
+                if let Some(s) = opt.as_sumo() {
+                    trace.push(s.mean_rank());
+                }
+            }
+        }
+    }
+    let (events, gflops) = match coord.engine_ref() {
+        Engine::Native(opt) => opt
+            .as_sumo()
+            .map(|s| (s.rank_events(), s.refresh_flops_spent() as f64 / 1e9))
+            .unwrap_or((0, 0.0)),
+        _ => (0, 0.0),
+    };
+    Ok(AdaptiveDiag {
+        final_loss: tail_losses.iter().sum::<f64>() / tail_losses.len().max(1) as f64,
+        rank_trace: trace,
+        rank_events: events,
+        refresh_gflops: gflops,
+    })
+}
+
+fn fmt_trace(trace: &[f32]) -> String {
+    let parts: Vec<String> = trace.iter().map(|r| format!("{r:.1}")).collect();
+    parts.join("→")
 }
 
 fn main() -> anyhow::Result<()> {
@@ -64,6 +119,58 @@ fn main() -> anyhow::Result<()> {
         eprintln!("limiter {on}: acc {acc:.4}");
     }
     t.finish().unwrap();
+
+    // (d) Fixed grid vs the adaptive trajectory. Fixed rows re-run through
+    // the same step-by-step harness so the loss column is comparable; the
+    // adaptive row starts at r=8 inside a [2, 32] band with cost-aware
+    // refresh scheduling. The rank trace shows the Lemma 3.1 response:
+    // growth while gradients are broadband, collapse once the spectrum
+    // concentrates.
+    let mut t = TableWriter::new(
+        "ablation_adaptive",
+        &["config", "final loss", "rank trace", "rank events", "refresh GFLOPs"],
+    );
+    for r in [4usize, 8, 16] {
+        let ocfg = OptimCfg::new(OptimKind::Sumo)
+            .with_lr(0.02)
+            .with_rank(r)
+            .with_update_freq(50);
+        let d = run_diag(&rt, &ocfg, steps)?;
+        t.row(&[
+            format!("fixed r{r} K50"),
+            format!("{:.4}", d.final_loss),
+            fmt_trace(&d.rank_trace),
+            format!("{}", d.rank_events),
+            format!("{:.3}", d.refresh_gflops),
+        ]);
+        eprintln!("fixed r{r}: loss {:.4}", d.final_loss);
+    }
+    for (label, freq) in [("adaptive r[2,32]", false), ("adaptive r[2,32]+K", true)] {
+        let mut ocfg = OptimCfg::new(OptimKind::Sumo)
+            .with_lr(0.02)
+            .with_rank(8)
+            .with_update_freq(50)
+            .with_adaptive_rank(2, 32)
+            .with_residual_band(0.01, 0.1);
+        if freq {
+            ocfg = ocfg.with_adaptive_freq();
+        }
+        let d = run_diag(&rt, &ocfg, steps)?;
+        t.row(&[
+            label.to_string(),
+            format!("{:.4}", d.final_loss),
+            fmt_trace(&d.rank_trace),
+            format!("{}", d.rank_events),
+            format!("{:.3}", d.refresh_gflops),
+        ]);
+        eprintln!("{label}: loss {:.4}, trace {}", d.final_loss, fmt_trace(&d.rank_trace));
+    }
+    t.finish().unwrap();
+
     println!("\ndesign-choice ablations: moderate ranks + periodic refresh + limiter = the paper's defaults.");
+    println!(
+        "adaptive rows: the rank trace tracks the residual signal (Lemma 3.1) and the \
+         refresh-GFLOPs column prices the amortized Block-1 cost each schedule actually paid."
+    );
     Ok(())
 }

@@ -203,6 +203,40 @@ fn main() -> anyhow::Result<()> {
         timing_row(&mut t, "native SUMO step", "2048x256 r16", &s);
     }
 
+    // Adaptive rank event: a step whose refresh measures the residual,
+    // grows the rank (8 → 16), transports the moment and regrows the step
+    // scratch. Each timed iteration consumes its own pre-warmed optimizer
+    // positioned one step before its first grow event, so every sample
+    // crosses a rank boundary (a saturated optimizer would measure the
+    // plain refresh path instead).
+    {
+        let iters = bench_iters(5).max(1);
+        let g = Mat::randn(512, 64, 1.0, &mut rng);
+        let mut w = Mat::randn(512, 64, 0.1, &mut rng);
+        let mut cfg = OptimCfg::new(OptimKind::Sumo)
+            .with_rank(8)
+            .with_update_freq(1)
+            .with_adaptive_rank(4, 16)
+            .with_residual_band(0.0, 0.0);
+        cfg.rank_step = 8;
+        let mut opts: Vec<_> = (0..iters)
+            .map(|_| {
+                let mut o = sumo::optim::build(&cfg, &[(512, 64)], &[true], 1);
+                o.step(0, &mut w, &g, 1.0); // warm-up refresh at rank 8
+                o.end_step();
+                o
+            })
+            .collect();
+        let mut k = 0usize;
+        let s = time_fn(0, iters, || {
+            opts[k].step(0, &mut w, &g, 1.0);
+            opts[k].end_step();
+            k += 1;
+        });
+        assert!(opts.iter().all(|o| o.as_sumo().unwrap().rank_events() == 1));
+        timing_row(&mut t, "rank-event step (adaptive)", "512x64 r8→16", &s);
+    }
+
     // Multi-layer step engine: serial loop vs ThreadPool::par_for dispatch
     // over 12 independent layers (the trainer's per-iteration shape).
     {

@@ -5,8 +5,11 @@
 //! flags + named presets — the launcher pattern of Megatron/MaxText-style
 //! frameworks scaled to this repo.
 
+/// Transformer architecture presets ([`ModelCfg`], [`TaskHead`]).
 pub mod model_cfg;
+/// Optimizer hyperparameters ([`OptimCfg`], [`OptimKind`]).
 pub mod optim_cfg;
+/// Training-run configuration ([`TrainCfg`], [`Schedule`]).
 pub mod train_cfg;
 
 pub use model_cfg::{ModelCfg, TaskHead};

@@ -21,6 +21,7 @@ pub enum TaskHead {
 }
 
 impl TaskHead {
+    /// Short tag used in artifact ids (`lm`, `cls2`, `reg`, …).
     pub fn tag(&self) -> String {
         match self {
             TaskHead::Lm => "lm".into(),
@@ -35,13 +36,19 @@ impl TaskHead {
 pub struct ModelCfg {
     /// Preset name (artifact file prefix).
     pub name: String,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Residual-stream width d.
     pub d_model: usize,
+    /// Transformer block count.
     pub n_layers: usize,
+    /// Attention heads per block.
     pub n_heads: usize,
     /// SwiGLU hidden dim (typically (8/3)·d rounded).
     pub d_ff: usize,
+    /// Context length.
     pub seq_len: usize,
+    /// Output head attached to the backbone.
     pub head: TaskHead,
 }
 
@@ -73,11 +80,13 @@ impl ModelCfg {
         })
     }
 
+    /// Replace the output head (builder style).
     pub fn with_head(mut self, head: TaskHead) -> ModelCfg {
         self.head = head;
         self
     }
 
+    /// Per-head attention dimension.
     pub fn head_dim(&self) -> usize {
         self.d_model / self.n_heads
     }
@@ -128,6 +137,7 @@ impl ModelCfg {
         format!("{}_{}", self.name, self.head.tag())
     }
 
+    /// Serialize to the JSON object `from_json` accepts.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("name", Json::str(&self.name)),
@@ -141,6 +151,7 @@ impl ModelCfg {
         ])
     }
 
+    /// Parse from JSON (every key required; unknown heads reject).
     pub fn from_json(j: &Json) -> Option<ModelCfg> {
         let head = match j.get("head").as_str()? {
             "lm" => TaskHead::Lm,

@@ -32,6 +32,7 @@ pub enum OptimKind {
 }
 
 impl OptimKind {
+    /// Parse a CLI/JSON method name (aliases included); `None` on unknown.
     pub fn parse(s: &str) -> Option<OptimKind> {
         Some(match s.to_ascii_lowercase().as_str() {
             "sgd" => OptimKind::Sgd,
@@ -49,6 +50,7 @@ impl OptimKind {
         })
     }
 
+    /// Canonical lowercase name (`parse`-able round trip).
     pub fn name(&self) -> &'static str {
         match self {
             OptimKind::Sgd => "sgd",
@@ -87,6 +89,7 @@ impl OptimKind {
 /// needs; names follow Algorithm 1).
 #[derive(Clone, Debug, PartialEq)]
 pub struct OptimCfg {
+    /// Which optimizer to run.
     pub kind: OptimKind,
     /// Learning rate η.
     pub lr: f32,
@@ -112,6 +115,35 @@ pub struct OptimCfg {
     pub ns_iters: usize,
     /// ReLoRA merge interval (steps).
     pub relora_reset: usize,
+    /// Enable residual-triggered rank adaptation: at each subspace refresh,
+    /// the projection rank moves inside `[rank_min, rank_max]` when the
+    /// Lemma 3.1 residual signal crosses the `residual_lo`/`residual_hi`
+    /// hysteresis band (see `optim::subspace::AdaptiveSpec`).
+    pub adaptive_rank: bool,
+    /// Lower edge of the adaptive rank band (0 ⇒ defaults to `rank`).
+    pub rank_min: usize,
+    /// Upper edge of the adaptive rank band (0 ⇒ defaults to `rank`).
+    pub rank_max: usize,
+    /// Rank grow/shrink increment per event (0 ⇒ `max(1, rank / 4)`).
+    pub rank_step: usize,
+    /// Hysteresis low threshold: residual energy below this marks the
+    /// spectrum as collapsed (shrink rank / stretch the refresh interval).
+    pub residual_lo: f32,
+    /// Hysteresis high threshold: residual energy above this marks the
+    /// basis as insufficient or stale (grow rank / tighten the interval).
+    pub residual_hi: f32,
+    /// Enable cost-aware refresh-interval adaptation: K stretches while the
+    /// residual stays under `residual_lo` and tightens above `residual_hi`,
+    /// floored so the amortized refresh FLOPs never exceed
+    /// `refresh_budget` × per-step FLOPs (`optim::memory`).
+    pub adaptive_freq: bool,
+    /// Lower clamp for the adapted interval (0 ⇒ `max(1, update_freq / 8)`).
+    pub freq_min: usize,
+    /// Upper clamp for the adapted interval (0 ⇒ `update_freq × 8`).
+    pub freq_max: usize,
+    /// Maximum fraction of per-step compute spendable (amortized) on basis
+    /// refreshes; sets the cost floor of the adaptive interval.
+    pub refresh_budget: f32,
 }
 
 impl OptimCfg {
@@ -131,24 +163,66 @@ impl OptimCfg {
             use_limiter: true,
             ns_iters: 5,
             relora_reset: 200,
+            adaptive_rank: false,
+            rank_min: 0,
+            rank_max: 0,
+            rank_step: 0,
+            residual_lo: 0.01,
+            residual_hi: 0.10,
+            adaptive_freq: false,
+            freq_min: 0,
+            freq_max: 0,
+            refresh_budget: 0.25,
         }
     }
 
+    /// Set the learning rate η.
     pub fn with_lr(mut self, lr: f32) -> Self {
         self.lr = lr;
         self
     }
 
+    /// Set the projection rank r.
     pub fn with_rank(mut self, r: usize) -> Self {
         self.rank = r;
         self
     }
 
+    /// Set the subspace refresh interval K.
     pub fn with_update_freq(mut self, k: usize) -> Self {
         self.update_freq = k;
         self
     }
 
+    /// Enable rank adaptation inside the band `r_min..=r_max`. Pass
+    /// `r_min == r_max` to pin the band — adaptation measures but can never
+    /// move the rank, which stays bitwise identical to a fixed-rank run; a
+    /// zero edge keeps the field's documented "defaults to `rank`" meaning.
+    pub fn with_adaptive_rank(mut self, r_min: usize, r_max: usize) -> Self {
+        self.adaptive_rank = true;
+        self.rank_min = r_min;
+        // Preserve the 0 = "defaults to `rank`" sentinel; only order a
+        // fully explicit band.
+        self.rank_max = if r_max == 0 { 0 } else { r_max.max(r_min) };
+        self
+    }
+
+    /// Enable cost-aware refresh-interval adaptation with the default
+    /// clamps (`update_freq / 8` .. `update_freq × 8`).
+    pub fn with_adaptive_freq(mut self) -> Self {
+        self.adaptive_freq = true;
+        self
+    }
+
+    /// Set the residual hysteresis band shared by rank and refresh
+    /// adaptation.
+    pub fn with_residual_band(mut self, lo: f32, hi: f32) -> Self {
+        self.residual_lo = lo;
+        self.residual_hi = hi;
+        self
+    }
+
+    /// Serialize to the JSON object `from_json` accepts.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("kind", Json::str(self.kind.name())),
@@ -164,9 +238,21 @@ impl OptimCfg {
             ("use_limiter", Json::Bool(self.use_limiter)),
             ("ns_iters", Json::num(self.ns_iters as f64)),
             ("relora_reset", Json::num(self.relora_reset as f64)),
+            ("adaptive_rank", Json::Bool(self.adaptive_rank)),
+            ("rank_min", Json::num(self.rank_min as f64)),
+            ("rank_max", Json::num(self.rank_max as f64)),
+            ("rank_step", Json::num(self.rank_step as f64)),
+            ("residual_lo", Json::num(self.residual_lo as f64)),
+            ("residual_hi", Json::num(self.residual_hi as f64)),
+            ("adaptive_freq", Json::Bool(self.adaptive_freq)),
+            ("freq_min", Json::num(self.freq_min as f64)),
+            ("freq_max", Json::num(self.freq_max as f64)),
+            ("refresh_budget", Json::num(self.refresh_budget as f64)),
         ])
     }
 
+    /// Parse from JSON; `kind` is required, every other absent key keeps
+    /// its method default (old configs without the adaptive knobs parse).
     pub fn from_json(j: &Json) -> Option<OptimCfg> {
         let kind = OptimKind::parse(j.get("kind").as_str()?)?;
         let mut cfg = OptimCfg::new(kind);
@@ -206,6 +292,36 @@ impl OptimCfg {
         if let Some(x) = j.get("relora_reset").as_usize() {
             cfg.relora_reset = x;
         }
+        if let Some(x) = j.get("adaptive_rank").as_bool() {
+            cfg.adaptive_rank = x;
+        }
+        if let Some(x) = j.get("rank_min").as_usize() {
+            cfg.rank_min = x;
+        }
+        if let Some(x) = j.get("rank_max").as_usize() {
+            cfg.rank_max = x;
+        }
+        if let Some(x) = j.get("rank_step").as_usize() {
+            cfg.rank_step = x;
+        }
+        if let Some(x) = j.get("residual_lo").as_f64() {
+            cfg.residual_lo = x as f32;
+        }
+        if let Some(x) = j.get("residual_hi").as_f64() {
+            cfg.residual_hi = x as f32;
+        }
+        if let Some(x) = j.get("adaptive_freq").as_bool() {
+            cfg.adaptive_freq = x;
+        }
+        if let Some(x) = j.get("freq_min").as_usize() {
+            cfg.freq_min = x;
+        }
+        if let Some(x) = j.get("freq_max").as_usize() {
+            cfg.freq_max = x;
+        }
+        if let Some(x) = j.get("refresh_budget").as_f64() {
+            cfg.refresh_budget = x as f32;
+        }
         Some(cfg)
     }
 }
@@ -234,6 +350,26 @@ mod tests {
             .with_update_freq(50);
         let j = cfg.to_json();
         assert_eq!(OptimCfg::from_json(&j).unwrap(), cfg);
+    }
+
+    #[test]
+    fn json_roundtrip_adaptive_knobs() {
+        let mut cfg = OptimCfg::new(OptimKind::Sumo)
+            .with_rank(8)
+            .with_adaptive_rank(4, 32)
+            .with_adaptive_freq()
+            .with_residual_band(0.005, 0.2);
+        cfg.rank_step = 4;
+        cfg.freq_min = 25;
+        cfg.freq_max = 800;
+        cfg.refresh_budget = 0.125;
+        let j = cfg.to_json();
+        assert_eq!(OptimCfg::from_json(&j).unwrap(), cfg);
+        // Absent keys keep the non-adaptive defaults (old configs parse).
+        let legacy = Json::parse(r#"{"kind": "sumo", "rank": 8}"#).unwrap();
+        let parsed = OptimCfg::from_json(&legacy).unwrap();
+        assert!(!parsed.adaptive_rank && !parsed.adaptive_freq);
+        assert_eq!(parsed.refresh_budget, OptimCfg::new(OptimKind::Sumo).refresh_budget);
     }
 
     #[test]

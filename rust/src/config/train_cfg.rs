@@ -5,17 +5,27 @@ use crate::util::json::Json;
 /// Learning-rate schedule.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Schedule {
+    /// Constant LR (multiplier 1 at every step).
     Constant,
     /// Linear warmup to peak then cosine decay to `min_ratio`·peak.
-    CosineWarmup { warmup: usize, min_ratio: f32 },
+    CosineWarmup {
+        /// Linear-warmup steps before the cosine decay starts.
+        warmup: usize,
+        /// Final LR as a fraction of peak.
+        min_ratio: f32,
+    },
 }
 
 /// A full training-run configuration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TrainCfg {
+    /// Total optimizer steps.
     pub steps: usize,
+    /// Global batch size (split across data-parallel shards).
     pub batch: usize,
+    /// RNG seed for params, data order and subspace sketches.
     pub seed: u64,
+    /// Learning-rate schedule.
     pub schedule: Schedule,
     /// Gradient-norm clip (0 disables; SUMO uses the Block-3 limiter instead).
     pub grad_clip: f32,
@@ -69,6 +79,7 @@ impl TrainCfg {
         }
     }
 
+    /// Serialize to the JSON object `from_json` accepts.
     pub fn to_json(&self) -> Json {
         let sched = match self.schedule {
             Schedule::Constant => Json::obj(vec![("kind", Json::str("constant"))]),
@@ -92,6 +103,7 @@ impl TrainCfg {
         ])
     }
 
+    /// Parse from JSON; absent keys keep their defaults.
     pub fn from_json(j: &Json) -> Option<TrainCfg> {
         let mut cfg = TrainCfg::default();
         if let Some(x) = j.get("steps").as_usize() {

@@ -7,8 +7,11 @@ use std::ops::{Index, IndexMut};
 /// Dense row-major matrix of f32.
 #[derive(Clone, PartialEq)]
 pub struct Mat {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
+    /// Row-major storage, `rows * cols` long.
     pub data: Vec<f32>,
 }
 
@@ -64,16 +67,19 @@ impl Mat {
         m
     }
 
+    /// `(rows, cols)` pair.
     #[inline]
     pub fn shape(&self) -> (usize, usize) {
         (self.rows, self.cols)
     }
 
+    /// Row `i` as a contiguous slice.
     #[inline]
     pub fn row(&self, i: usize) -> &[f32] {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Row `i` as a mutable contiguous slice.
     #[inline]
     pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
         let c = self.cols;

@@ -93,6 +93,7 @@ pub struct GemmScratch {
 }
 
 impl GemmScratch {
+    /// Empty scratch (no allocation until the first GEMM grows it).
     pub fn new() -> GemmScratch {
         GemmScratch::default()
     }

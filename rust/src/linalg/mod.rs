@@ -8,13 +8,21 @@
 //! (Halko et al., the paper's Block 1), the Newton-Schulz5 quintic (Muon's
 //! orthogonalization) and the exact SVD-based polar factor (SUMO's Block 2).
 
+/// Jacobi eigendecomposition and SVD.
 pub mod jacobi;
+/// Dense row-major f32 matrix type.
 pub mod mat;
+/// Packed, register-tiled GEMM engine (all three orientations).
 pub mod matmul;
+/// Newton-Schulz5 orthogonalization (Muon / SUMO-NS5 ablation).
 pub mod newton_schulz;
+/// Norms, conditioning and low-rank residual measures.
 pub mod norms;
+/// Exact polar-factor orthogonalization (single + batched).
 pub mod orth;
+/// Modified Gram-Schmidt QR.
 pub mod qr;
+/// Randomized range finder / truncated randomized SVD (Block 1).
 pub mod rsvd;
 
 pub use jacobi::{eigh_jacobi, svd_jacobi};
@@ -24,7 +32,7 @@ pub use matmul::{
     matmul_at_b, matmul_at_b_into, matmul_into, GemmOp, GemmScratch,
 };
 pub use newton_schulz::{newton_schulz5, newton_schulz5_into, Ns5Scratch};
-pub use norms::{cond_gram, fro_norm, spectral_norm};
+pub use norms::{cond_gram, fro_norm, lowrank_residual, spectral_norm, subspace_residual};
 pub use orth::{
     orth_svd, orth_svd_batched_into, orth_svd_batched_multi_into, orth_svd_fast, orth_svd_into,
     BatchOrthScratch, BatchOrthTask, OrthScratch,

@@ -27,6 +27,7 @@ pub struct Ns5Scratch {
 }
 
 impl Ns5Scratch {
+    /// Workspace for inputs of shape `rows`×`cols` (either orientation).
     pub fn new(rows: usize, cols: usize) -> Ns5Scratch {
         let k = rows.min(cols).max(1);
         Ns5Scratch {

@@ -1,6 +1,6 @@
 //! Matrix norms and conditioning measures.
 
-use super::{matmul_a_bt, svd_jacobi, Mat};
+use super::{matmul_a_bt, matmul_at_b, svd_jacobi, Mat};
 
 /// Frobenius norm.
 pub fn fro_norm(m: &Mat) -> f32 {
@@ -104,6 +104,24 @@ pub fn lowrank_residual(m: &Mat, r: usize) -> f32 {
     (tail / total) as f32
 }
 
+/// Relative energy of `g` (m×n) outside the span of the orthonormal basis
+/// `q` (m×r): ‖G − Q Qᵀ G‖²_F / ‖G‖²_F = 1 − ‖Qᵀ G‖²_F / ‖G‖²_F.
+///
+/// This is [`lowrank_residual`] evaluated against a *given* basis instead
+/// of the optimal one (so it upper-bounds κ_M(r, t), with equality when Q
+/// spans the top-r subspace) — the adaptive rank/refresh trigger measures
+/// it against the pre-refresh basis at O(mnr) instead of a full SVD.
+/// Returns a value clamped to `0.0..=1.0`; an all-zero `g` reports 0.
+pub fn subspace_residual(g: &Mat, q: &Mat) -> f32 {
+    assert_eq!(g.rows, q.rows, "basis rows must match the matrix rows");
+    let total = g.sumsq();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let captured = matmul_at_b(q, g).sumsq();
+    (1.0 - captured / total).clamp(0.0, 1.0) as f32
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -139,6 +157,33 @@ mod tests {
         let m = crate::linalg::matmul(&u, &v);
         assert!(lowrank_residual(&m, 1) < 1e-5);
         assert!(lowrank_residual(&m, 0) > 0.99);
+    }
+
+    #[test]
+    fn subspace_residual_matches_exact_on_optimal_basis() {
+        // With Q spanning the top-r subspace, the basis residual equals the
+        // Lemma 3.1 tail energy; with a random basis it upper-bounds it.
+        let mut rng = Rng::new(111);
+        let a = Mat::randn(40, 24, 1.0, &mut rng);
+        let r = 6;
+        let (u, _, _) = crate::linalg::svd_jacobi(&a);
+        let q_opt = u.left_cols(r);
+        let exact = lowrank_residual(&a, r);
+        let est = subspace_residual(&a, &q_opt);
+        assert!((est - exact).abs() < 1e-3, "optimal basis: {est} vs {exact}");
+        let x = Mat::randn(40, r, 1.0, &mut rng);
+        let (q_rand, _) = crate::linalg::mgs_qr(&x);
+        assert!(subspace_residual(&a, &q_rand) >= exact - 1e-4);
+    }
+
+    #[test]
+    fn subspace_residual_edge_cases() {
+        let mut rng = Rng::new(113);
+        let a = Mat::randn(12, 8, 1.0, &mut rng);
+        let (q, _) = crate::linalg::mgs_qr(&a.left_cols(8));
+        // Full basis captures everything; zero matrix reports zero.
+        assert!(subspace_residual(&a, &q) < 1e-5);
+        assert_eq!(subspace_residual(&Mat::zeros(12, 8), &q), 0.0);
     }
 
     #[test]

@@ -372,8 +372,11 @@ fn batch_run(problems: &mut [OrthProblem<'_>], k: usize, l: usize) {
 /// One shape-class batch of a multi-class dispatch: the stacked inputs and
 /// outputs plus the class's [`BatchOrthScratch`].
 pub struct BatchOrthTask<'a> {
+    /// Stacked input moments, all in this task's shape class.
     pub inputs: Vec<&'a Mat>,
+    /// Matching outputs (same shapes as `inputs`, written in place).
     pub outs: Vec<&'a mut Mat>,
+    /// The class's batch workspace (capacity ≥ `inputs.len()`).
     pub ws: &'a mut BatchOrthScratch,
 }
 

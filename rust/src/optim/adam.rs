@@ -20,6 +20,7 @@ pub struct DenseAdam {
 }
 
 impl DenseAdam {
+    /// Zero-initialized Adam state for one `rows`×`cols` tensor.
     pub fn new(rows: usize, cols: usize, cfg: &OptimCfg) -> DenseAdam {
         DenseAdam {
             m: Mat::zeros(rows, cols),
@@ -33,6 +34,7 @@ impl DenseAdam {
         }
     }
 
+    /// One bias-corrected Adam(W) update of `w` given gradient `g`.
     pub fn step(&mut self, w: &mut Mat, g: &Mat, lr: f32) {
         let bc1 = 1.0 - self.beta1.powi(self.t as i32);
         let bc2 = 1.0 - self.beta2.powi(self.t as i32);
@@ -54,10 +56,12 @@ impl DenseAdam {
         }
     }
 
+    /// Advance the bias-correction step counter.
     pub fn tick(&mut self) {
         self.t += 1;
     }
 
+    /// Optimizer-state float count (M and V).
     pub fn state_floats(&self) -> usize {
         self.m.data.len() + self.v.data.len()
     }
@@ -70,6 +74,7 @@ pub struct Adam {
 }
 
 impl Adam {
+    /// Build dense Adam(W) state for every layer shape.
     pub fn new(cfg: &OptimCfg, shapes: &[(usize, usize)]) -> Adam {
         Adam {
             cfg: cfg.clone(),

@@ -9,13 +9,20 @@ use crate::util::threadpool::ThreadPool;
 use crate::util::Rng;
 
 use super::adam::DenseAdam;
-use super::subspace::SubspaceState;
+use super::subspace::{AdaptiveSpec, SubspaceState};
 use super::Optimizer;
 
 struct ProjState {
     subspace: SubspaceState,
     m: Option<Mat>,
     v: Option<Mat>,
+    /// Step at which V was last (re)initialized: its bias correction runs
+    /// relative to this epoch, so a mid-run reset at a rank event
+    /// normalizes the rebuilt V exactly like a cold start instead of
+    /// dividing a near-zero V by bc2 ≈ 1 (a ~1/√(1−β₂) oversized update).
+    /// 1 for the whole run when no rank event fires — the exponent then
+    /// equals the global t and the correction is bitwise the original.
+    v_t0: usize,
 }
 
 enum LayerState {
@@ -39,7 +46,17 @@ fn step_layer(
             if p.subspace.due() {
                 p.m = p.subspace.refresh(g, p.m.take());
                 // Second moment is *not* rotation-equivariant; GaLore
-                // keeps it (officially) — we keep it too for parity.
+                // keeps it (officially) — we keep it too for parity. An
+                // adaptive rank event changes the moment shape, though, and
+                // V has no transport: reset it and restart its bias
+                // correction from this step (`v_t0`), so the rebuilt V is
+                // normalized like a cold start rather than divided by
+                // bc2 ≈ 1 while still near zero.
+                let mshape = p.subspace.moment_shape(mr, nr);
+                if p.v.as_ref().is_some_and(|v| v.shape() != mshape) {
+                    p.v = Some(Mat::zeros(mshape.0, mshape.1));
+                    p.v_t0 = t;
+                }
             }
             let ghat = p.subspace.project(g);
             let (sm, sn) = p.subspace.moment_shape(mr, nr);
@@ -47,7 +64,7 @@ fn step_layer(
             let v = p.v.get_or_insert_with(|| Mat::zeros(sm, sn));
             let (b1, b2, eps) = (cfg.beta1, cfg.beta2, cfg.eps);
             let bc1 = 1.0 - b1.powi(t as i32);
-            let bc2 = 1.0 - b2.powi(t as i32);
+            let bc2 = 1.0 - b2.powi((t + 1 - p.v_t0) as i32);
             let mut upd = Mat::zeros(sm, sn);
             for i in 0..ghat.data.len() {
                 m.data[i] = b1 * m.data[i] + (1.0 - b1) * ghat.data[i];
@@ -66,6 +83,9 @@ fn step_layer(
     }
 }
 
+/// GaLore: Adam in a low-rank gradient subspace with periodic basis
+/// refresh; inherits the adaptive rank/refresh schedule through
+/// [`SubspaceState`] when the config enables it.
 pub struct GaLore {
     cfg: OptimCfg,
     layers: Vec<LayerState>,
@@ -74,8 +94,12 @@ pub struct GaLore {
 }
 
 impl GaLore {
+    /// Build the optimizer for the given layer shapes; `projected` marks
+    /// layers that get the low-rank treatment. The adaptive rank/refresh
+    /// knobs of `cfg` are inherited through [`SubspaceState`], same as SUMO.
     pub fn new(cfg: &OptimCfg, shapes: &[(usize, usize)], projected: &[bool], seed: u64) -> GaLore {
         let mut rng = Rng::new(seed ^ 0x47414C4F); // "GALO"
+        let spec = AdaptiveSpec::from_cfg(cfg);
         let layers = shapes
             .iter()
             .zip(projected)
@@ -88,9 +112,11 @@ impl GaLore {
                             cfg.rank,
                             cfg.update_freq,
                             rng.fork(m as u64 * 131 + n as u64),
-                        ),
+                        )
+                        .with_adaptive(spec),
                         m: None,
                         v: None,
+                        v_t0: 1,
                     })
                 } else {
                     LayerState::Dense(DenseAdam::new(m, n, cfg))

@@ -15,6 +15,8 @@ pub struct NormGrowthLimiter {
 }
 
 impl NormGrowthLimiter {
+    /// Fresh limiter with growth ratio `gamma`; `enabled = false` makes
+    /// [`Self::apply`] a norm-tracking no-op.
     pub fn new(gamma: f32, enabled: bool) -> NormGrowthLimiter {
         NormGrowthLimiter {
             gamma,
@@ -35,6 +37,7 @@ impl NormGrowthLimiter {
         norm
     }
 
+    /// The reference norm the next update's growth is measured against.
     pub fn prev_norm(&self) -> f32 {
         self.prev_norm
     }

@@ -62,6 +62,8 @@ enum LayerState {
     Dense(DenseAdam),
 }
 
+/// LoRA (and, with `relora`, ReLoRA) adapter training at the optimizer
+/// level: Adam on the A/B factors, W re-materialized after each update.
 pub struct Lora {
     cfg: OptimCfg,
     layers: Vec<LayerState>,
@@ -72,6 +74,7 @@ pub struct Lora {
 }
 
 impl Lora {
+    /// Build adapter state; `relora` enables periodic merge-and-restart.
     pub fn new(
         cfg: &OptimCfg,
         shapes: &[(usize, usize)],

@@ -15,12 +15,14 @@ enum LayerState {
     Dense(DenseAdam),
 }
 
+/// Momentum descent restricted to a fixed random rank-r subspace per layer.
 pub struct LowRank {
     cfg: OptimCfg,
     layers: Vec<LayerState>,
 }
 
 impl LowRank {
+    /// Build per-layer fixed bases; `projected` marks the 2-D layers.
     pub fn new(cfg: &OptimCfg, shapes: &[(usize, usize)], projected: &[bool], seed: u64) -> LowRank {
         let mut rng = Rng::new(seed ^ 0x4C4F_5752);
         let layers = shapes

@@ -41,18 +41,18 @@ pub fn analytic_extra(m: usize, n: usize) -> Vec<(&'static str, usize)> {
 /// the §3.1 FLOP analysis (SVD ≈ 4ab² + 8b³ for an a×b, a ≥ b; NS5 ≈
 /// 2·r²·n·i + 2·r³·i for i iterations on an r×n input).
 pub fn flops_per_step(kind: OptimKind, m: usize, n: usize, r: usize, k: usize) -> u64 {
-    let (m, n, r, k) = (m as u64, n as u64, r as u64, k.max(1) as u64);
+    // The SUMO per-step cost and the amortized Block-1 refresh come from
+    // the same helpers the adaptive schedule prices with
+    // ([`sumo_step_flops`], [`refresh_flops`]), so the Table-1 accounting
+    // and the cost floor cannot drift apart.
+    let sumo_step = sumo_step_flops(m, n, r);
+    let refresh = refresh_flops(m, n, r) / k.max(1) as u64;
+    let (m, n, r) = (m as u64, n as u64, r as u64);
     let (m, n) = if m >= n { (m, n) } else { (n, m) };
     let proj = 2 * m * n * r; // Qᵀ G
     let back = 2 * m * n * r; // Q O
-    let refresh = (2 * m * n * r + 2 * m * r * r) / k; // amortized rSVD
     match kind {
-        OptimKind::Sumo | OptimKind::SumoNs5 => {
-            // exact orth of r×n moment: Gram (2r²n) + Jacobi O(r³·sweeps) +
-            // back-multiplies (2r²n + 2r²n).
-            let orth = 2 * r * r * n + 30 * r * r * r + 4 * r * r * n;
-            proj + back + orth + refresh
-        }
+        OptimKind::Sumo | OptimKind::SumoNs5 => sumo_step + refresh,
         OptimKind::GaLore => proj + back + 10 * r * n + refresh,
         OptimKind::Adam | OptimKind::AdamW => 10 * m * n,
         OptimKind::Sgd => 4 * m * n,
@@ -67,6 +67,45 @@ pub fn flops_per_step(kind: OptimKind, m: usize, n: usize, r: usize, k: usize) -
         OptimKind::LowRank => proj + back + 4 * r * n,
         OptimKind::Lora | OptimKind::ReLora => 4 * m * n * r + 10 * (m * r + r * n),
     }
+}
+
+/// Un-amortized FLOPs of one Block-1 basis refresh for an m×n layer at rank
+/// r: the randomized range-finder sketch (2mnr) plus its QR pass (2mr²) —
+/// the numerator of the `refresh / K` amortization in [`flops_per_step`].
+pub fn refresh_flops(m: usize, n: usize, r: usize) -> u64 {
+    let (m, n, r) = (m as u64, n as u64, r as u64);
+    let (m, n) = if m >= n { (m, n) } else { (n, m) };
+    2 * m * n * r + 2 * m * r * r
+}
+
+/// Per-step FLOPs of the SUMO update *excluding* the amortized refresh:
+/// projection + back-projection + subspace orthogonalization. The
+/// denominator of the amortized-cost model behind the adaptive refresh
+/// schedule.
+pub fn sumo_step_flops(m: usize, n: usize, r: usize) -> u64 {
+    let (m, n, r) = (m as u64, n as u64, r as u64);
+    let (m, n) = if m >= n { (m, n) } else { (n, m) };
+    let proj = 2 * m * n * r;
+    let back = 2 * m * n * r;
+    let orth = 2 * r * r * n + 30 * r * r * r + 4 * r * r * n;
+    proj + back + orth
+}
+
+/// Smallest refresh interval K whose *amortized* refresh cost stays within
+/// `budget` × the per-step SUMO FLOPs: K ≥ refresh / (budget · step). The
+/// adaptive refresh schedule never tightens K below this floor — refreshing
+/// more often would make Block 1 dominate the step, defeating the paper's
+/// amortization argument (§3.1). The denominator is [`sumo_step_flops`];
+/// for GaLore (whose per-step cost is slightly lower) the floor is a close
+/// but optimistic proxy.
+pub fn min_refresh_interval(m: usize, n: usize, r: usize, budget: f32) -> usize {
+    let step = sumo_step_flops(m, n, r) as f64;
+    if budget <= 0.0 || !budget.is_finite() || step <= 0.0 {
+        return 1;
+    }
+    let k = (refresh_flops(m, n, r) as f64 / (budget as f64 * step)).ceil();
+    // Float→int casts saturate, so an absurd budget cannot overflow.
+    k.max(1.0) as usize
 }
 
 /// Total optimizer-state bytes for a whole model given its layer shapes.
@@ -133,6 +172,37 @@ mod tests {
         let sumo = flops_per_step(OptimKind::Sumo, M, N, R, 200);
         let muon = flops_per_step(OptimKind::Muon, M, N, R, 200);
         assert!(muon > 5 * sumo, "muon {muon} vs sumo {sumo}");
+    }
+
+    #[test]
+    fn refresh_amortization_is_consistent() {
+        // flops_per_step's amortized term is exactly refresh_flops / K.
+        let k = 200usize;
+        let with = flops_per_step(OptimKind::Sumo, M, N, R, k);
+        let step_only = sumo_step_flops(M, N, R);
+        assert_eq!(with, step_only + refresh_flops(M, N, R) / k as u64);
+    }
+
+    #[test]
+    fn min_refresh_interval_respects_budget() {
+        for &budget in &[0.1f32, 0.25, 1.0] {
+            let k = min_refresh_interval(M, N, R, budget);
+            assert!(k >= 1);
+            // Amortized refresh at the floor fits the budget…
+            let amortized = refresh_flops(M, N, R) as f64 / k as f64;
+            let cap = budget as f64 * sumo_step_flops(M, N, R) as f64;
+            assert!(amortized <= cap + 1.0, "K={k}: {amortized} > {cap}");
+            // …and one step tighter would not (unless already at K = 1).
+            if k > 1 {
+                let tighter = refresh_flops(M, N, R) as f64 / (k - 1) as f64;
+                assert!(tighter > cap, "floor K={k} not tight");
+            }
+        }
+        // Degenerate budgets fall back to the no-floor value.
+        assert_eq!(min_refresh_interval(M, N, R, 0.0), 1);
+        assert_eq!(min_refresh_interval(M, N, R, f32::NAN), 1);
+        // Tighter budgets can only raise the floor.
+        assert!(min_refresh_interval(M, N, R, 0.05) >= min_refresh_interval(M, N, R, 0.5));
     }
 
     #[test]

@@ -6,16 +6,27 @@
 //! semantics* and integration tests assert step-level equivalence, so the
 //! three implementations (numpy oracle, JAX graph, native Rust) agree.
 
+/// Adam / AdamW (the "Full-Rank" baseline and the dense fallback).
 pub mod adam;
+/// GaLore: projected Adam with periodic basis refresh.
 pub mod galore;
+/// Norm-growth limiter (Block 3).
 pub mod limiter;
+/// LoRA / ReLoRA adapter baselines.
 pub mod lora;
+/// Fixed-random-subspace "Low-Rank" baseline.
 pub mod lowrank;
+/// Analytic memory & FLOP accounting (Table 1 + the adaptive cost model).
 pub mod memory;
+/// Muon: full-space Newton-Schulz5 moment orthogonalization.
 pub mod muon;
+/// OSGDM: per-step gradient orthogonalization.
 pub mod osgdm;
+/// SGD with momentum.
 pub mod sgd;
+/// Subspace basis management (Blocks 1 & 1.1 + the adaptive schedule).
 pub mod subspace;
+/// SUMO itself (Algorithm 1, serial + grouped three-phase parallel).
 pub mod sumo;
 
 use crate::config::{OptimCfg, OptimKind};
@@ -23,13 +34,14 @@ use crate::linalg::Mat;
 use crate::util::threadpool::ThreadPool;
 
 pub use limiter::NormGrowthLimiter;
-pub use memory::{flops_per_step, state_memory_floats};
-pub use subspace::SubspaceState;
+pub use memory::{flops_per_step, min_refresh_interval, refresh_flops, state_memory_floats};
+pub use subspace::{AdaptiveSpec, RankBand, RefreshBand, SubspaceState};
 
 /// A layer-wise optimizer. The coordinator calls `step` once per layer per
 /// iteration (per-layer updates during backprop, as in the paper §3.2),
 /// then `end_step` once per iteration.
 pub trait Optimizer: Send {
+    /// Canonical method name (matches [`crate::config::OptimKind::name`]).
     fn name(&self) -> &'static str;
 
     /// Update layer `idx` in place given its gradient. `lr_mult` is the
@@ -76,7 +88,14 @@ pub trait Optimizer: Send {
         None
     }
 
+    /// Downcast hook for Muon diagnostics (Lemma 3.1 reads its moment).
     fn as_muon(&self) -> Option<&muon::Muon> {
+        None
+    }
+
+    /// Downcast hook for SUMO diagnostics (the adaptive-rank ablation bench
+    /// reads the per-layer rank trace and refresh-FLOP ledger).
+    fn as_sumo(&self) -> Option<&sumo::Sumo> {
         None
     }
 }

@@ -8,6 +8,11 @@ use crate::linalg::{newton_schulz5, Mat};
 use super::sumo::rms_scale;
 use super::Optimizer;
 
+/// Muon: momentum EMA followed by full-space Newton-Schulz5
+/// orthogonalization. Muon has no projection subspace, so the adaptive
+/// rank/refresh schedule does not apply to it (there is no rank to adapt);
+/// it remains the full-space reference the subspace methods are measured
+/// against.
 pub struct Muon {
     cfg: OptimCfg,
     moments: Vec<Mat>,
@@ -15,6 +20,7 @@ pub struct Muon {
 }
 
 impl Muon {
+    /// Build zero-momentum state for every layer shape.
     pub fn new(cfg: &OptimCfg, shapes: &[(usize, usize)]) -> Muon {
         Muon {
             cfg: cfg.clone(),

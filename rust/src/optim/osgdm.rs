@@ -7,6 +7,7 @@ use crate::linalg::{orth_svd_fast, Mat};
 
 use super::Optimizer;
 
+/// OSGDM: exact gradient orthogonalization before the momentum EMA.
 pub struct Osgdm {
     cfg: OptimCfg,
     moments: Vec<Mat>,
@@ -14,6 +15,7 @@ pub struct Osgdm {
 }
 
 impl Osgdm {
+    /// Build zero-momentum state for every layer shape.
     pub fn new(cfg: &OptimCfg, shapes: &[(usize, usize)]) -> Osgdm {
         Osgdm {
             cfg: cfg.clone(),

@@ -6,12 +6,14 @@ use crate::linalg::Mat;
 
 use super::Optimizer;
 
+/// SGD with classical momentum and decoupled weight decay.
 pub struct SgdM {
     cfg: OptimCfg,
     moments: Vec<Mat>,
 }
 
 impl SgdM {
+    /// Build zero-momentum state for every layer shape.
     pub fn new(cfg: &OptimCfg, shapes: &[(usize, usize)]) -> SgdM {
         SgdM {
             cfg: cfg.clone(),

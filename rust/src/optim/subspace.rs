@@ -4,11 +4,49 @@
 //! via the randomized range finder on the current gradient, and transports
 //! the first moment between the old and new subspaces with
 //! R = Q_newᵀ Q_old (the paper's Block 1.1).
+//!
+//! # Adaptive rank & refresh
+//!
+//! With an [`AdaptiveSpec`] attached (see [`SubspaceState::with_adaptive`]),
+//! each on-schedule refresh first *measures* before it re-sketches:
+//!
+//! * the **staleness/insufficiency signal** ρ =
+//!   [`subspace_residual`]`(G, Q_old)` — the energy fraction of the current
+//!   gradient outside the pre-refresh basis, an O(mnr) upper bound on the
+//!   Lemma 3.1 tail energy κ_M(r, t);
+//! * the **collapse signal** — [`lowrank_residual`] of the projected first
+//!   moment at the shrink-candidate rank (an r×r-Gram SVD, cheap because the
+//!   moment already lives in the subspace).
+//!
+//! Crossing the hysteresis band moves the rank one `step` inside the
+//! configured band (ρ above `residual_hi` grows, moment tail below
+//! `residual_lo` shrinks) and stretches/tightens the refresh interval K
+//! (×2 / ÷2) inside its clamp, floored by the amortized-FLOP model of
+//! [`min_refresh_interval`] so Block 1 never exceeds its compute budget.
+//! The subsequent sketch draws Q_new at the *new* rank and the standard
+//! R = Q_newᵀ Q_old transport carries the moment across the rank change
+//! (R is r_new×r_old, so no special case is needed).
+//!
+//! Invariants the rest of the engine relies on:
+//!
+//! * **Pinned band ⇒ bitwise-fixed run.** Measurement touches neither the
+//!   basis RNG nor any optimizer state, so with `r_min == r_max` and a
+//!   pinned interval an adaptive run is bitwise identical to a fixed-(r, K)
+//!   run (`tests/adaptive_rank.rs`).
+//! * **Rank is always re-clamped against (m, n)**: it never exceeds
+//!   `min(m, n)` or drops below 1, whatever the configured band says.
+//! * **Rank events are counted** ([`SubspaceState::rank_events`]) so the
+//!   grouped step engine knows when to rebuild shape-class groups and
+//!   regrow scratch; steps *between* events stay zero-alloc.
 
+use crate::config::OptimCfg;
 use crate::linalg::{
-    gemm_into, matmul, matmul_at_b, randomized_range, GemmOp, GemmScratch, Mat, RsvdOpts,
+    gemm_into, lowrank_residual, matmul, matmul_at_b, randomized_range, subspace_residual, GemmOp,
+    GemmScratch, Mat, RsvdOpts,
 };
 use crate::util::Rng;
+
+use super::memory::{min_refresh_interval, refresh_flops};
 
 /// Which side of the weight matrix the basis multiplies.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -20,6 +58,7 @@ pub enum Side {
 }
 
 impl Side {
+    /// Projection side for an m×n layer (the paper projects the long side).
     pub fn for_shape(m: usize, n: usize) -> Side {
         if m >= n {
             Side::Left
@@ -29,18 +68,124 @@ impl Side {
     }
 }
 
-/// Per-layer subspace state (basis + refresh bookkeeping).
+/// Rank band for adaptive runs: the rank moves by `step` inside
+/// `r_min..=r_max` when the residual signal crosses the hysteresis band.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RankBand {
+    /// Lower edge of the band (≥ 1).
+    pub r_min: usize,
+    /// Upper edge of the band (re-clamped to `min(m, n)` per layer).
+    pub r_max: usize,
+    /// Grow/shrink increment per rank event (≥ 1).
+    pub step: usize,
+}
+
+/// Refresh-interval band for cost-aware refresh scheduling.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RefreshBand {
+    /// Lower clamp for the adapted interval K.
+    pub k_min: usize,
+    /// Upper clamp for the adapted interval K.
+    pub k_max: usize,
+    /// Maximum fraction of per-step FLOPs spendable (amortized) on
+    /// refreshes; combined with [`min_refresh_interval`] into the floor.
+    /// The per-step cost is priced with the SUMO step model (projection +
+    /// back-projection + subspace orthogonalization) — for GaLore, whose
+    /// elementwise Adam update is cheaper than the orthogonalization, the
+    /// floor is therefore slightly optimistic.
+    pub flop_budget: f32,
+}
+
+/// Adaptive-schedule specification shared by every subspace optimizer
+/// (SUMO and GaLore build it from [`OptimCfg`] via
+/// [`AdaptiveSpec::from_cfg`]). Either half may be absent: `rank: None`
+/// keeps the rank fixed, `refresh: None` keeps the cadence fixed.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdaptiveSpec {
+    /// Hysteresis low threshold on the residual energy fraction.
+    pub residual_lo: f32,
+    /// Hysteresis high threshold on the residual energy fraction.
+    pub residual_hi: f32,
+    /// Rank adaptation band, if enabled.
+    pub rank: Option<RankBand>,
+    /// Refresh-interval adaptation band, if enabled.
+    pub refresh: Option<RefreshBand>,
+}
+
+impl AdaptiveSpec {
+    /// Resolve the adaptive knobs of an [`OptimCfg`] into a spec; `None`
+    /// when both `adaptive_rank` and `adaptive_freq` are off. Zero-valued
+    /// band edges fall back to the documented defaults (band pinned at
+    /// `rank`, interval clamped to `update_freq/8 .. update_freq×8`).
+    pub fn from_cfg(cfg: &OptimCfg) -> Option<AdaptiveSpec> {
+        if !cfg.adaptive_rank && !cfg.adaptive_freq {
+            return None;
+        }
+        let rank = cfg.adaptive_rank.then(|| {
+            let r_min = if cfg.rank_min == 0 { cfg.rank } else { cfg.rank_min }.max(1);
+            let r_max = if cfg.rank_max == 0 { cfg.rank } else { cfg.rank_max }.max(r_min);
+            let step = if cfg.rank_step == 0 {
+                (cfg.rank / 4).max(1)
+            } else {
+                cfg.rank_step
+            };
+            RankBand { r_min, r_max, step }
+        });
+        let refresh = cfg.adaptive_freq.then(|| {
+            let k_min = if cfg.freq_min == 0 {
+                (cfg.update_freq / 8).max(1)
+            } else {
+                cfg.freq_min.max(1)
+            };
+            let k_max = if cfg.freq_max == 0 {
+                cfg.update_freq.saturating_mul(8)
+            } else {
+                cfg.freq_max
+            }
+            .max(k_min);
+            RefreshBand {
+                k_min,
+                k_max,
+                flop_budget: cfg.refresh_budget,
+            }
+        });
+        Some(AdaptiveSpec {
+            residual_lo: cfg.residual_lo,
+            residual_hi: cfg.residual_hi,
+            rank,
+            refresh,
+        })
+    }
+}
+
+/// Per-layer subspace state (basis + refresh bookkeeping + optional
+/// adaptive rank/refresh schedule).
 pub struct SubspaceState {
+    /// Which side of the layer the basis multiplies.
     pub side: Side,
+    /// Current projection rank r (mutated only at refresh-time rank
+    /// events when an adaptive rank band is attached).
     pub rank: usize,
+    /// Current refresh interval K (mutated only at refreshes when an
+    /// adaptive refresh band is attached).
     pub update_freq: usize,
+    /// The orthonormal basis Q; `None` until the first refresh.
     pub q: Option<Mat>,
+    m: usize,
+    n: usize,
+    spec: Option<AdaptiveSpec>,
     rng: Rng,
-    steps: usize,
+    /// Steps since the last refresh (drives [`Self::due`]; countdown form
+    /// so a changed K takes effect relative to the last refresh).
+    since_refresh: usize,
     refreshes: usize,
+    rank_events: usize,
+    last_residual: Option<f32>,
+    spent_refresh_flops: u64,
 }
 
 impl SubspaceState {
+    /// Fixed-(r, K) subspace state (non-adaptive; the seed behavior).
     pub fn new(m: usize, n: usize, rank: usize, update_freq: usize, rng: Rng) -> SubspaceState {
         let side = Side::for_shape(m, n);
         let rank = rank.min(m).min(n).max(1);
@@ -49,40 +194,139 @@ impl SubspaceState {
             rank,
             update_freq: update_freq.max(1),
             q: None,
+            m,
+            n,
+            spec: None,
             rng,
-            steps: 0,
+            since_refresh: 0,
             refreshes: 0,
+            rank_events: 0,
+            last_residual: None,
+            spent_refresh_flops: 0,
         }
     }
 
-    /// True when this call should refresh the basis (every K steps,
-    /// including the very first).
+    /// Attach an adaptive rank/refresh schedule (builder style). A `None`
+    /// spec leaves the state fixed; a pinned band measures but never moves.
+    pub fn with_adaptive(mut self, spec: Option<AdaptiveSpec>) -> SubspaceState {
+        if let Some(AdaptiveSpec { rank: Some(band), .. }) = spec {
+            // Start inside the band, re-clamped against the layer shape.
+            let (r_min, r_max) = self.clamped_band(&band);
+            self.rank = self.rank.clamp(r_min, r_max);
+        }
+        if let Some(AdaptiveSpec { refresh: Some(band), .. }) = spec {
+            // Start inside the interval clamp as well: `adapt` only runs
+            // from the second refresh on, so without this a configured K
+            // below the amortized-cost floor would violate the budget for
+            // the whole first interval.
+            let floor = band
+                .k_min
+                .max(min_refresh_interval(self.m, self.n, self.rank, band.flop_budget));
+            let ceil = band.k_max.max(floor);
+            self.update_freq = self.update_freq.clamp(floor, ceil);
+        }
+        self.spec = spec;
+        self
+    }
+
+    /// The rank band's edges re-clamped against this layer's (m, n) — the
+    /// "rank never exceeds `min(m, n)`, never drops below 1" invariant,
+    /// shared by construction-time and refresh-time clamping.
+    fn clamped_band(&self, band: &RankBand) -> (usize, usize) {
+        let r_max = band.r_max.min(self.m).min(self.n).max(1);
+        let r_min = band.r_min.min(r_max).max(1);
+        (r_min, r_max)
+    }
+
+    /// True when this call should refresh the basis: on the very first step
+    /// and whenever `update_freq` steps have elapsed since the last refresh
+    /// (for a fixed K this reproduces the `step % K == 0` schedule exactly).
     pub fn due(&self) -> bool {
-        self.q.is_none() || self.steps % self.update_freq == 0
+        self.q.is_none() || self.since_refresh >= self.update_freq
     }
 
     /// Refresh the basis from gradient `g`; transports `moment` (if given)
     /// into the new subspace and returns it.
+    ///
+    /// With an adaptive spec attached, the rank and refresh interval are
+    /// re-evaluated *before* the sketch (see the module docs); the moment
+    /// transport R = Q_newᵀ Q_old is rank-change-aware by construction
+    /// (R is r_new×r_old). Measurement never touches the basis RNG, so a
+    /// pinned band stays bitwise identical to a fixed-(r, K) run.
     pub fn refresh(&mut self, g: &Mat, moment: Option<Mat>) -> Option<Mat> {
         let work = match self.side {
             Side::Left => g.clone(),
             Side::Right => g.t(),
         };
+        if self.spec.is_some() && self.q.is_some() {
+            self.adapt(&work, moment.as_ref());
+        }
         let q_new = randomized_range(&work, self.rank, RsvdOpts::default(), &mut self.rng);
         let transported = match (self.q.as_ref(), moment) {
             (Some(q_old), Some(m)) => {
-                // R = Q_newᵀ Q_old (r×r).
+                // R = Q_newᵀ Q_old (r_new×r_old).
                 let r = matmul_at_b(&q_new, q_old);
                 Some(match self.side {
-                    Side::Left => matmul(&r, &m),   // (r×r)(r×n)
-                    Side::Right => matmul(&m, &r.t()), // (m×r)(r×r)ᵀ
+                    Side::Left => matmul(&r, &m),      // (r_new×r_old)(r_old×n)
+                    Side::Right => matmul(&m, &r.t()), // (m×r_old)(r_old×r_new)
                 })
             }
             (_, m) => m,
         };
         self.q = Some(q_new);
         self.refreshes += 1;
+        self.since_refresh = 0;
+        self.spent_refresh_flops += refresh_flops(self.m, self.n, self.rank);
         transported
+    }
+
+    /// Measure the residual signals against the pre-refresh basis and move
+    /// the rank / refresh interval inside their bands (hysteresis applied).
+    fn adapt(&mut self, work: &Mat, moment: Option<&Mat>) {
+        let spec = self.spec.expect("adapt called without a spec");
+        let q = self.q.as_ref().expect("adapt called without a basis");
+        // Energy fraction of the current gradient outside span(Q_old).
+        let rho = subspace_residual(work, q);
+        self.last_residual = Some(rho);
+        if let Some(band) = spec.rank {
+            let (r_min, r_max) = self.clamped_band(&band);
+            let step = band.step.max(1);
+            let old = self.rank;
+            if rho > spec.residual_hi && self.rank < r_max {
+                // Basis misses too much mass: grow toward r_max.
+                self.rank = (self.rank + step).min(r_max);
+            } else if rho < spec.residual_lo && self.rank > r_min {
+                // Spectrum may have collapsed (Lemma 3.1): shrink only when
+                // the *moment* keeps almost no energy beyond the candidate
+                // rank AND the basis itself is not starved. The cheap ρ
+                // check gates the moment SVD, so refreshes inside the
+                // hysteresis band never pay for it.
+                let down = self.rank.saturating_sub(step).max(r_min);
+                let tail = moment.map(|m| lowrank_residual(m, down)).unwrap_or(1.0);
+                if tail < spec.residual_lo {
+                    self.rank = down;
+                }
+            }
+            if self.rank != old {
+                self.rank_events += 1;
+            }
+        }
+        if let Some(band) = spec.refresh {
+            let floor = band
+                .k_min
+                .max(min_refresh_interval(self.m, self.n, self.rank, band.flop_budget));
+            let ceil = band.k_max.max(floor);
+            let k = if rho > spec.residual_hi {
+                // Basis going stale fast: refresh sooner.
+                self.update_freq / 2
+            } else if rho < spec.residual_lo {
+                // Spectrum collapsed: the basis stays valid longer.
+                self.update_freq.saturating_mul(2)
+            } else {
+                self.update_freq
+            };
+            self.update_freq = k.clamp(floor, ceil);
+        }
     }
 
     /// Project a full-space gradient into the subspace.
@@ -152,14 +396,37 @@ impl SubspaceState {
         }
     }
 
+    /// Advance the refresh clock by one optimizer step.
     pub fn tick(&mut self) {
-        self.steps += 1;
+        self.since_refresh += 1;
     }
 
+    /// Number of basis refreshes performed so far.
     pub fn refreshes(&self) -> usize {
         self.refreshes
     }
 
+    /// Number of refresh-time rank changes so far. The grouped step engine
+    /// compares the sum across layers against its cached value to decide
+    /// when shape-class groups and batch scratch must be rebuilt.
+    pub fn rank_events(&self) -> usize {
+        self.rank_events
+    }
+
+    /// Residual energy fraction measured at the most recent adaptive
+    /// refresh (`None` before the first measurement or without a spec).
+    pub fn last_residual(&self) -> Option<f32> {
+        self.last_residual
+    }
+
+    /// Cumulative Block-1 refresh FLOPs spent so far, priced by
+    /// [`refresh_flops`] at each refresh's rank (the ablation bench's
+    /// "total refresh FLOPs" column).
+    pub fn spent_refresh_flops(&self) -> u64 {
+        self.spent_refresh_flops
+    }
+
+    /// Persistent optimizer-state float count held by this subspace (Q).
     pub fn state_floats(&self) -> usize {
         self.q.as_ref().map(|q| q.data.len()).unwrap_or(0)
     }
@@ -174,6 +441,20 @@ mod tests {
         let u = Mat::randn(m, r, 1.0, rng);
         let v = Mat::randn(r, n, 1.0, rng);
         matmul(&u, &v)
+    }
+
+    fn spec(
+        lo: f32,
+        hi: f32,
+        rank: Option<RankBand>,
+        refresh: Option<RefreshBand>,
+    ) -> AdaptiveSpec {
+        AdaptiveSpec {
+            residual_lo: lo,
+            residual_hi: hi,
+            rank,
+            refresh,
+        }
     }
 
     #[test]
@@ -290,5 +571,161 @@ mod tests {
     fn rank_clamped() {
         let ss = SubspaceState::new(4, 3, 100, 5, Rng::new(10));
         assert_eq!(ss.rank, 3);
+    }
+
+    #[test]
+    fn pinned_band_never_moves_but_measures() {
+        // r_min == r_max: adaptation measures the residual but can change
+        // neither the rank nor (absent a refresh band) the interval.
+        let band = RankBand {
+            r_min: 4,
+            r_max: 4,
+            step: 2,
+        };
+        let mut ss = SubspaceState::new(48, 24, 4, 5, Rng::new(40))
+            .with_adaptive(Some(spec(0.01, 0.1, Some(band), None)));
+        let mut rng = Rng::new(41);
+        for _ in 0..4 {
+            let g = Mat::randn(48, 24, 1.0, &mut rng);
+            ss.refresh(&g, None);
+        }
+        assert_eq!(ss.rank, 4);
+        assert_eq!(ss.rank_events(), 0);
+        assert_eq!(ss.update_freq, 5);
+        assert!(ss.last_residual().is_some());
+    }
+
+    #[test]
+    fn grow_on_high_residual_transports_moment() {
+        // Full-rank noise keeps the out-of-basis energy high, so the rank
+        // must climb toward r_max; the transported moment keeps the new
+        // (bigger) moment shape and stays finite.
+        let band = RankBand {
+            r_min: 2,
+            r_max: 12,
+            step: 4,
+        };
+        let mut ss = SubspaceState::new(64, 32, 4, 5, Rng::new(50))
+            .with_adaptive(Some(spec(0.01, 0.1, Some(band), None)));
+        let mut rng = Rng::new(51);
+        let g = Mat::randn(64, 32, 1.0, &mut rng);
+        ss.refresh(&g, None);
+        let moment = Some(ss.project(&g));
+        let g2 = Mat::randn(64, 32, 1.0, &mut rng);
+        let transported = ss.refresh(&g2, moment).unwrap();
+        assert_eq!(ss.rank, 8, "one grow step of 4 from rank 4");
+        assert_eq!(ss.rank_events(), 1);
+        assert_eq!(transported.shape(), ss.moment_shape(64, 32));
+        assert!(transported.is_finite());
+    }
+
+    #[test]
+    fn shrink_on_collapsed_spectrum() {
+        // Rank-2 gradients with a rank-8 basis: the basis captures all the
+        // energy (ρ ≈ 0) and the moment's tail beyond rank 4 is ≈ 0, so the
+        // rank must step down toward r_min.
+        let band = RankBand {
+            r_min: 2,
+            r_max: 8,
+            step: 4,
+        };
+        let mut ss = SubspaceState::new(64, 32, 8, 5, Rng::new(60))
+            .with_adaptive(Some(spec(0.01, 0.1, Some(band), None)));
+        let mut rng = Rng::new(61);
+        let g = lowrank(64, 32, 2, &mut rng);
+        ss.refresh(&g, None);
+        let moment = ss.project(&g);
+        let transported = ss.refresh(&g, Some(moment)).unwrap();
+        assert_eq!(ss.rank, 4, "one shrink step of 4 from rank 8");
+        assert_eq!(ss.rank_events(), 1);
+        assert_eq!(transported.shape(), ss.moment_shape(64, 32));
+        // The rank-2 content survives the narrower basis.
+        let back = ss.back_project(&ss.project(&g));
+        assert!(back.max_diff(&g) < 5e-2 * (1.0 + g.max_abs()));
+    }
+
+    #[test]
+    fn refresh_interval_stretches_and_tightens() {
+        let refresh = RefreshBand {
+            k_min: 2,
+            k_max: 40,
+            flop_budget: 1.0,
+        };
+        // Collapsed spectrum (ρ ≈ 0 < lo): K doubles per refresh up to k_max.
+        let g_low = lowrank(64, 32, 2, &mut Rng::new(71));
+        let mut ss = SubspaceState::new(64, 32, 4, 10, Rng::new(70))
+            .with_adaptive(Some(spec(0.01, 0.1, None, Some(refresh))));
+        ss.refresh(&g_low, None);
+        ss.refresh(&g_low, None);
+        assert_eq!(ss.update_freq, 20);
+        ss.refresh(&g_low, None);
+        assert_eq!(ss.update_freq, 40);
+        ss.refresh(&g_low, None);
+        assert_eq!(ss.update_freq, 40, "clamped at k_max");
+        // High residual (full-rank noise): K halves down to the floor.
+        let mut ss = SubspaceState::new(64, 32, 4, 16, Rng::new(72))
+            .with_adaptive(Some(spec(0.01, 0.1, None, Some(refresh))));
+        let mut rng = Rng::new(73);
+        ss.refresh(&Mat::randn(64, 32, 1.0, &mut rng), None);
+        ss.refresh(&Mat::randn(64, 32, 1.0, &mut rng), None);
+        assert_eq!(ss.update_freq, 8);
+        ss.refresh(&Mat::randn(64, 32, 1.0, &mut rng), None);
+        assert_eq!(ss.update_freq, 4);
+        ss.refresh(&Mat::randn(64, 32, 1.0, &mut rng), None);
+        let floor = min_refresh_interval(64, 32, 4, 1.0).max(2);
+        assert_eq!(ss.update_freq, 2.max(floor), "clamped at the floor");
+    }
+
+    #[test]
+    fn construction_clamps_interval_to_cost_floor() {
+        // A configured K below the amortized-cost floor is lifted at
+        // construction — the budget holds from the first interval on.
+        let refresh = RefreshBand {
+            k_min: 1,
+            k_max: 100,
+            flop_budget: 0.25,
+        };
+        let ss = SubspaceState::new(64, 32, 4, 1, Rng::new(99))
+            .with_adaptive(Some(spec(0.01, 0.1, None, Some(refresh))));
+        let floor = min_refresh_interval(64, 32, 4, 0.25).max(1);
+        assert_eq!(ss.update_freq, floor);
+        assert!(ss.update_freq > 1, "K = 1 must be lifted to the cost floor");
+    }
+
+    #[test]
+    fn adaptive_band_reclamps_against_shape() {
+        // r_max beyond min(m, n) must re-clamp; growth saturates there.
+        let band = RankBand {
+            r_min: 2,
+            r_max: 100,
+            step: 64,
+        };
+        let mut ss = SubspaceState::new(16, 8, 4, 5, Rng::new(80))
+            .with_adaptive(Some(spec(0.0, 0.0, Some(band), None)));
+        let mut rng = Rng::new(81);
+        ss.refresh(&Mat::randn(16, 8, 1.0, &mut rng), None);
+        ss.refresh(&Mat::randn(16, 8, 1.0, &mut rng), None);
+        assert_eq!(ss.rank, 8, "rank clamped to min(m, n)");
+    }
+
+    #[test]
+    fn spec_from_cfg_defaults() {
+        use crate::config::{OptimCfg, OptimKind};
+        let cfg = OptimCfg::new(OptimKind::Sumo).with_rank(8).with_update_freq(200);
+        assert!(AdaptiveSpec::from_cfg(&cfg).is_none());
+        let cfg = cfg.with_adaptive_rank(0, 0).with_adaptive_freq();
+        let spec = AdaptiveSpec::from_cfg(&cfg).unwrap();
+        let band = spec.rank.unwrap();
+        // Zero edges keep the documented default — the band pins at the
+        // configured rank (NOT at 1); step defaults to rank / 4.
+        assert_eq!((band.r_min, band.r_max, band.step), (8, 8, 2));
+        let refresh = spec.refresh.unwrap();
+        assert_eq!((refresh.k_min, refresh.k_max), (25, 1600));
+        assert_eq!(refresh.flop_budget, 0.25);
+        // A zero r_max through the builder still defaults to `rank` — it
+        // must not collapse the band onto r_min.
+        let cfg = OptimCfg::new(OptimKind::Sumo).with_rank(8).with_adaptive_rank(4, 0);
+        let band = AdaptiveSpec::from_cfg(&cfg).unwrap().rank.unwrap();
+        assert_eq!((band.r_min, band.r_max), (4, 8));
     }
 }

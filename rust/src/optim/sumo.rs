@@ -26,7 +26,7 @@ use std::collections::BTreeMap;
 
 use super::adam::DenseAdam;
 use super::limiter::NormGrowthLimiter;
-use super::subspace::SubspaceState;
+use super::subspace::{AdaptiveSpec, SubspaceState};
 use super::Optimizer;
 
 /// RMS-consistent per-layer scale (mirrors python/compile/optim.py).
@@ -104,6 +104,16 @@ fn project_and_ema(
     if subspace.due() {
         let transported = subspace.refresh(g, moment.take());
         *moment = transported;
+        // A refresh-time rank event changes the moment shape: regrow the
+        // per-layer scratch once (the orth workspace rebuilds lazily at the
+        // new shape). Steps between rank events never enter this branch's
+        // body, so the steady state stays zero-alloc.
+        let (mr, mc) = subspace.moment_shape(m, n);
+        if scratch.ghat.shape() != (mr, mc) {
+            scratch.ghat = Mat::zeros(mr, mc);
+            scratch.o = Mat::zeros(mr, mc);
+            scratch.orth = None;
+        }
     }
     // Block 2a: EMA in the subspace, written into preallocated scratch.
     subspace.project_into(g, &mut scratch.ghat, &mut scratch.gemm);
@@ -201,11 +211,18 @@ pub struct Sumo {
     /// Moment shape classes for the grouped (phase-2) batched
     /// orthogonalization; empty in NS5 mode, which has no batched kernel.
     groups: Vec<ShapeGroup>,
+    /// Sum of per-layer rank-event counters the current `groups` were built
+    /// for; a mismatch after phase 1 triggers a rebuild (adaptive runs
+    /// only — fixed-rank runs never change it).
+    rank_epoch: usize,
     ns5: bool,
     t: usize,
 }
 
 impl Sumo {
+    /// Build the optimizer for the given layer shapes. `projected` marks
+    /// layers that get the low-rank subspace treatment (others fall back to
+    /// dense Adam); `ns5` switches Block 2 to the Newton-Schulz5 ablation.
     pub fn new(
         cfg: &OptimCfg,
         shapes: &[(usize, usize)],
@@ -214,6 +231,7 @@ impl Sumo {
         ns5: bool,
     ) -> Sumo {
         let mut rng = Rng::new(seed ^ 0x53_55_4D_4F); // "SUMO"
+        let spec = AdaptiveSpec::from_cfg(cfg);
         let layers: Vec<LayerState> = shapes
             .iter()
             .zip(projected)
@@ -225,7 +243,8 @@ impl Sumo {
                         cfg.rank,
                         cfg.update_freq,
                         rng.fork(m as u64 * 31 + n as u64),
-                    );
+                    )
+                    .with_adaptive(spec);
                     let scratch = StepScratch::new(m, n, &subspace, ns5);
                     LayerState::Projected {
                         subspace,
@@ -248,13 +267,16 @@ impl Sumo {
             layers,
             shapes: shapes.to_vec(),
             groups,
+            rank_epoch: 0,
             ns5,
             t: 0,
         }
     }
 
     /// Group projected layers by moment shape class `(min, max)`. Moment
-    /// shapes are fixed at construction, so the grouping never changes; the
+    /// shapes only change at adaptive rank events (never for fixed-rank
+    /// runs), so the grouping is built at construction, checked against the
+    /// rank-event epoch after phase 1, and rebuilt only on a mismatch; the
     /// per-class batch scratch is built on the first `step_parallel` call
     /// and reused every iteration after.
     fn shape_groups(layers: &[LayerState], shapes: &[(usize, usize)]) -> Vec<ShapeGroup> {
@@ -279,7 +301,40 @@ impl Sumo {
             .collect()
     }
 
-    /// Orthogonalization error proxy for diagnostics: ‖O Oᵀ − I‖_max.
+    /// Sum of per-layer rank-event counters — the cheap O(layers) signal
+    /// the grouped dispatch compares against its cached epoch.
+    fn current_rank_epoch(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| match l {
+                LayerState::Projected { subspace, .. } => subspace.rank_events(),
+                LayerState::Dense(_) => 0,
+            })
+            .sum()
+    }
+
+    /// Rebuild the shape-class groups after a rank event, carrying over
+    /// every still-valid batch scratch: a class whose `(k, l)` survives the
+    /// rebuild keeps its workspace as long as the capacity still fits
+    /// (grow-once — allocation happens only at the event, and the steady
+    /// state between events stays zero-alloc).
+    fn rebuild_groups(&mut self) {
+        let mut kept: BTreeMap<(usize, usize), BatchOrthScratch> = std::mem::take(&mut self.groups)
+            .into_iter()
+            .filter_map(|g| g.scratch.map(|s| ((g.k, g.l), s)))
+            .collect();
+        self.groups = Self::shape_groups(&self.layers, &self.shapes);
+        for group in &mut self.groups {
+            if let Some(ws) = kept.remove(&(group.k, group.l)) {
+                if ws.capacity() >= group.members.len() {
+                    group.scratch = Some(ws);
+                }
+            }
+        }
+    }
+
+    /// True when this optimizer runs the Newton-Schulz5 ablation instead of
+    /// the exact SVD polar factor in Block 2.
     pub fn ns5_mode(&self) -> bool {
         self.ns5
     }
@@ -289,6 +344,65 @@ impl Sumo {
         match &self.layers[idx] {
             LayerState::Projected { subspace, .. } => subspace.refreshes(),
             LayerState::Dense(_) => 0,
+        }
+    }
+
+    /// Current projection rank of layer `idx` (`None` for dense layers) —
+    /// the adaptive-run rank trace read by `benches/ablation_rank_freq.rs`.
+    pub fn layer_rank(&self, idx: usize) -> Option<usize> {
+        match &self.layers[idx] {
+            LayerState::Projected { subspace, .. } => Some(subspace.rank),
+            LayerState::Dense(_) => None,
+        }
+    }
+
+    /// Current refresh interval of layer `idx` (`None` for dense layers).
+    pub fn layer_update_freq(&self, idx: usize) -> Option<usize> {
+        match &self.layers[idx] {
+            LayerState::Projected { subspace, .. } => Some(subspace.update_freq),
+            LayerState::Dense(_) => None,
+        }
+    }
+
+    /// Residual measured at layer `idx`'s most recent adaptive refresh.
+    pub fn layer_residual(&self, idx: usize) -> Option<f32> {
+        match &self.layers[idx] {
+            LayerState::Projected { subspace, .. } => subspace.last_residual(),
+            LayerState::Dense(_) => None,
+        }
+    }
+
+    /// Total refresh-time rank events across all projected layers.
+    pub fn rank_events(&self) -> usize {
+        self.current_rank_epoch()
+    }
+
+    /// Cumulative Block-1 refresh FLOPs across all projected layers (the
+    /// amortized-cost side of the adaptive schedule's ledger).
+    pub fn refresh_flops_spent(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| match l {
+                LayerState::Projected { subspace, .. } => subspace.spent_refresh_flops(),
+                LayerState::Dense(_) => 0,
+            })
+            .sum()
+    }
+
+    /// Mean projection rank over projected layers (adaptive-run summary).
+    pub fn mean_rank(&self) -> f32 {
+        let mut sum = 0usize;
+        let mut count = 0usize;
+        for idx in 0..self.layers.len() {
+            if let Some(r) = self.layer_rank(idx) {
+                sum += r;
+                count += 1;
+            }
+        }
+        if count == 0 {
+            0.0
+        } else {
+            sum as f32 / count as f32
         }
     }
 }
@@ -302,6 +416,10 @@ impl Optimizer for Sumo {
         }
     }
 
+    fn as_sumo(&self) -> Option<&Sumo> {
+        Some(self)
+    }
+
     fn step(&mut self, idx: usize, w: &mut Mat, g: &Mat, lr_mult: f32) {
         let lr = self.cfg.lr * lr_mult;
         step_layer(&self.cfg, self.shapes[idx], &mut self.layers[idx], w, g, lr);
@@ -311,7 +429,7 @@ impl Optimizer for Sumo {
     /// project+EMA (Blocks 1–2a), batched orthogonalization per moment shape
     /// class (Block 2b, one Jacobi sweep schedule over each class's stacked
     /// moments), parallel per-layer limiter+back-project+apply (Blocks 3–4).
-    /// Per-layer arithmetic runs in exactly the serial [`step_layer`] order
+    /// Per-layer arithmetic runs in exactly the serial `step_layer` order
     /// and the batched kernel is bitwise identical to the per-layer one, so
     /// results match the serial path bitwise (`tests/parallel_step.rs`).
     /// The NS5 ablation has no batched kernel and keeps the single-phase
@@ -344,6 +462,17 @@ impl Optimizer for Sumo {
                 } => project_and_ema(cfg, shapes[idx], subspace, moment, scratch, g),
             }
         });
+        // Adaptive rank events in phase 1 change moment shape classes: the
+        // epoch check is O(layers) with no allocation, so steady-state steps
+        // (no event) pay nothing and a rank-event step rebuilds groups once,
+        // carrying over every still-valid per-class scratch. (Re-borrow cfg
+        // and shapes afterwards — the rebuild needs `&mut self`.)
+        let epoch = self.current_rank_epoch();
+        if epoch != self.rank_epoch {
+            self.rank_epoch = epoch;
+            self.rebuild_groups();
+        }
+        let (cfg, shapes) = (&self.cfg, &self.shapes);
         // Phase 2 — Block 2b: batched orthogonalization. Every shape class
         // contributes one task and ALL tasks' problems flatten into a single
         // pool dispatch, so models with many small (even singleton) classes

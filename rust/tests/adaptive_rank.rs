@@ -1,0 +1,287 @@
+//! Adaptive rank growth + cost-aware refresh scheduling, end to end.
+//!
+//! Three properties are load bearing:
+//!
+//! * **Pinned band ⇒ bitwise-fixed run** — with the adaptive machinery
+//!   enabled but the rank band pinned to `[r, r]` (default cadence), every
+//!   step must be bitwise identical to the plain fixed-(r, K) optimizer:
+//!   measurement must not perturb the basis RNG or any optimizer state.
+//! * **Rank events are sound** — a grow step transports the moment into the
+//!   wider subspace (no NaNs, back-projection error shrinks) and the
+//!   optimizer keeps optimizing across the boundary.
+//! * **Determinism across pool sizes** — the three-phase grouped dispatch
+//!   stays bitwise identical to the serial loop at pool sizes {1, 2, 8}
+//!   even when steps cross rank-change boundaries (groups and scratch are
+//!   rebuilt mid-run).
+
+use sumo::config::{OptimCfg, OptimKind};
+use sumo::linalg::{matmul, subspace_residual, Mat};
+use sumo::optim;
+use sumo::optim::subspace::{AdaptiveSpec, RankBand, SubspaceState};
+use sumo::util::threadpool::ThreadPool;
+use sumo::util::Rng;
+
+/// Mixed model: dense norm layer + both projection orientations + square,
+/// with repeated shapes so the grouped dispatch gets real multi-member
+/// shape classes.
+fn layer_shapes() -> (Vec<(usize, usize)>, Vec<bool>) {
+    let mut shapes: Vec<(usize, usize)> = vec![(1, 32)];
+    let mut projected = vec![false];
+    for _ in 0..3 {
+        shapes.push((64, 32));
+        projected.push(true);
+    }
+    for _ in 0..2 {
+        shapes.push((32, 64));
+        projected.push(true);
+    }
+    shapes.push((48, 48));
+    projected.push(true);
+    (shapes, projected)
+}
+
+/// Run `steps` serial optimizer steps from a fixed seed; returns weights.
+fn run_serial(
+    cfg: &OptimCfg,
+    shapes: &[(usize, usize)],
+    projected: &[bool],
+    steps: usize,
+) -> Vec<Mat> {
+    let mut opt = optim::build(cfg, shapes, projected, 42);
+    let mut wrng = Rng::new(7);
+    let mut weights: Vec<Mat> = shapes
+        .iter()
+        .map(|&(m, n)| Mat::randn(m, n, 0.5, &mut wrng))
+        .collect();
+    let mut grng = Rng::new(8);
+    for _ in 0..steps {
+        let grads: Vec<Mat> = shapes
+            .iter()
+            .map(|&(m, n)| Mat::randn(m, n, 1.0, &mut grng))
+            .collect();
+        for (i, (w, g)) in weights.iter_mut().zip(&grads).enumerate() {
+            opt.step(i, w, g, 1.0);
+        }
+        opt.end_step();
+    }
+    weights
+}
+
+#[test]
+fn pinned_band_matches_fixed_run_bitwise() {
+    // adaptive_rank on with r_min == r_max == rank and the default cadence:
+    // the residual is measured at every refresh, but nothing may move — so
+    // the run must be bitwise identical to the plain fixed-(r, K) one.
+    let (shapes, projected) = layer_shapes();
+    for kind in [OptimKind::Sumo, OptimKind::SumoNs5, OptimKind::GaLore] {
+        let fixed = OptimCfg::new(kind).with_lr(0.02).with_rank(4).with_update_freq(3);
+        let pinned = fixed.clone().with_adaptive_rank(4, 4);
+        let w_fixed = run_serial(&fixed, &shapes, &projected, 10);
+        let w_pinned = run_serial(&pinned, &shapes, &projected, 10);
+        for (i, (a, b)) in w_fixed.iter().zip(&w_pinned).enumerate() {
+            assert!(a.is_finite(), "{kind:?} layer {i} not finite");
+            assert_eq!(
+                a.max_diff(b),
+                0.0,
+                "{kind:?} layer {i}: pinned-band adaptive run diverged from fixed run"
+            );
+        }
+    }
+}
+
+#[test]
+fn pinned_cadence_matches_fixed_run_bitwise() {
+    // adaptive_freq pinned to [K, K] (with K above the amortized-cost
+    // floor): the interval is re-derived every refresh but must never move.
+    let (shapes, projected) = layer_shapes();
+    let fixed = OptimCfg::new(OptimKind::Sumo).with_lr(0.02).with_rank(4).with_update_freq(4);
+    let mut pinned = fixed.clone().with_adaptive_rank(4, 4).with_adaptive_freq();
+    pinned.freq_min = 4;
+    pinned.freq_max = 4;
+    pinned.refresh_budget = 10.0; // cost floor = 1: the [4, 4] clamp rules
+    let w_fixed = run_serial(&fixed, &shapes, &projected, 12);
+    let w_pinned = run_serial(&pinned, &shapes, &projected, 12);
+    for (a, b) in w_fixed.iter().zip(&w_pinned) {
+        assert_eq!(a.max_diff(b), 0.0, "pinned-cadence run diverged from fixed run");
+    }
+}
+
+#[test]
+fn grow_event_transports_moment_and_shrinks_residual() {
+    // Rank-8 gradient, rank-4 basis, band [4, 16]: the residual trigger
+    // must grow the rank, the transported moment must stay finite at the
+    // new shape, and the refreshed (wider) basis must capture strictly
+    // more of the gradient than the starved one did.
+    let mut rng = Rng::new(90);
+    let u = Mat::randn(64, 8, 1.0, &mut rng);
+    let v = Mat::randn(8, 32, 1.0, &mut rng);
+    let g = matmul(&u, &v);
+    let spec = AdaptiveSpec {
+        residual_lo: 0.001,
+        residual_hi: 0.05,
+        rank: Some(RankBand {
+            r_min: 4,
+            r_max: 16,
+            step: 4,
+        }),
+        refresh: None,
+    };
+    let mut ss = SubspaceState::new(64, 32, 4, 5, Rng::new(91)).with_adaptive(Some(spec));
+    ss.refresh(&g, None);
+    let before = subspace_residual(&g, ss.q.as_ref().unwrap());
+    assert!(before > 0.05, "rank-4 basis must miss rank-8 mass: {before}");
+    let moment = Some(ss.project(&g));
+    let transported = ss.refresh(&g, moment).unwrap();
+    assert_eq!(ss.rank, 8, "grow step of 4 from rank 4");
+    assert_eq!(ss.rank_events(), 1);
+    assert_eq!(transported.shape(), ss.moment_shape(64, 32));
+    assert!(transported.is_finite(), "transport produced non-finite moment");
+    let after = subspace_residual(&g, ss.q.as_ref().unwrap());
+    assert!(
+        after < before,
+        "back-projection error must shrink across the grow event: {before} -> {after}"
+    );
+    assert!(after < 1e-3, "rank-8 basis captures the rank-8 gradient: {after}");
+}
+
+#[test]
+fn sumo_keeps_optimizing_across_rank_events() {
+    // Quadratic descent with an adaptive band wide enough to move: the run
+    // must stay finite, trigger at least one rank event, and reduce loss.
+    let mut cfg = OptimCfg::new(OptimKind::Sumo)
+        .with_lr(0.05)
+        .with_rank(2)
+        .with_update_freq(5)
+        .with_adaptive_rank(2, 12)
+        .with_residual_band(0.01, 0.05);
+    cfg.rank_step = 2;
+    let mut opt = optim::build(&cfg, &[(32, 16)], &[true], 1);
+    let mut rng = Rng::new(11);
+    let target = Mat::randn(32, 16, 1.0, &mut rng);
+    let mut w = Mat::zeros(32, 16);
+    let l0 = target.sumsq();
+    for _ in 0..200 {
+        let mut g = w.clone();
+        g.axpy(-1.0, &target);
+        opt.step(0, &mut w, &g, 1.0);
+        opt.end_step();
+    }
+    assert!(w.is_finite());
+    let sumo_ref = opt.as_sumo().expect("built a Sumo");
+    assert!(sumo_ref.rank_events() > 0, "full-rank residual must trigger growth");
+    assert!(sumo_ref.layer_rank(0).unwrap() > 2, "rank must have grown");
+    assert!(sumo_ref.refresh_flops_spent() > 0);
+    let mut diff = w.clone();
+    diff.axpy(-1.0, &target);
+    assert!(diff.sumsq() < 0.35 * l0, "loss {l0} -> {}", diff.sumsq());
+}
+
+#[test]
+fn galore_survives_rank_events() {
+    // GaLore inherits the adaptive subspace; a rank event resets V (no
+    // transport exists for it) — the run must stay finite and converge.
+    let mut cfg = OptimCfg::new(OptimKind::GaLore)
+        .with_lr(0.05)
+        .with_rank(2)
+        .with_update_freq(5)
+        .with_adaptive_rank(2, 8)
+        .with_residual_band(0.01, 0.05);
+    cfg.rank_step = 2;
+    let mut opt = optim::build(&cfg, &[(32, 16)], &[true], 3);
+    let mut rng = Rng::new(13);
+    let u = Mat::randn(32, 4, 1.0, &mut rng);
+    let vt = Mat::randn(4, 16, 1.0, &mut rng);
+    let target = matmul(&u, &vt);
+    let mut w = Mat::zeros(32, 16);
+    for _ in 0..300 {
+        let mut g = w.clone();
+        g.axpy(-1.0, &target);
+        opt.step(0, &mut w, &g, 1.0);
+        opt.end_step();
+    }
+    assert!(w.is_finite());
+    // The moment spectrum length is the live rank: growth must have fired.
+    let live_rank = opt.as_galore().unwrap().moment_spectrum(0).unwrap().len();
+    assert!(live_rank > 2, "galore rank must have grown: {live_rank}");
+    assert!(
+        w.max_diff(&target) < 0.3 * target.max_abs(),
+        "diff={}",
+        w.max_diff(&target)
+    );
+}
+
+#[test]
+fn pool_sweep_bitwise_across_rank_events() {
+    // Adaptive run with frequent refreshes and a wide band: rank events hit
+    // mid-run, forcing group/scratch rebuilds in the three-phase dispatch.
+    // Every pool size must stay bitwise identical to the serial loop.
+    let (shapes, projected) = layer_shapes();
+    let mut cfg = OptimCfg::new(OptimKind::Sumo)
+        .with_lr(0.02)
+        .with_rank(2)
+        .with_update_freq(2)
+        .with_adaptive_rank(2, 12)
+        .with_residual_band(0.01, 0.05);
+    cfg.rank_step = 4;
+    cfg.weight_decay = 0.05;
+    let w_serial = run_serial(&cfg, &shapes, &projected, 9);
+    for workers in [1usize, 2, 8] {
+        let pool = ThreadPool::new(workers);
+        let mut par = optim::build(&cfg, &shapes, &projected, 42);
+        let mut wrng = Rng::new(7);
+        let mut w_par: Vec<Mat> = shapes
+            .iter()
+            .map(|&(m, n)| Mat::randn(m, n, 0.5, &mut wrng))
+            .collect();
+        let mut grng = Rng::new(8);
+        for _ in 0..9 {
+            let grads: Vec<Mat> = shapes
+                .iter()
+                .map(|&(m, n)| Mat::randn(m, n, 1.0, &mut grng))
+                .collect();
+            let mut refs: Vec<&mut Mat> = w_par.iter_mut().collect();
+            par.step_parallel(&pool, &mut refs, &grads, 1.0);
+            par.end_step();
+        }
+        let sumo_ref = par.as_sumo().expect("built a Sumo");
+        assert!(sumo_ref.rank_events() > 0, "run must cross a rank boundary");
+        for (i, (a, b)) in w_serial.iter().zip(&w_par).enumerate() {
+            assert!(a.is_finite(), "layer {i} not finite");
+            assert_eq!(
+                a.max_diff(b),
+                0.0,
+                "pool={workers} layer {i}: threaded adaptive step diverged from serial"
+            );
+        }
+    }
+}
+
+#[test]
+fn adaptive_cadence_stretches_on_lowrank_gradients() {
+    // A gradient stream of fixed low rank collapses the residual signal, so
+    // the cost-aware schedule must stretch K — fewer refreshes than the
+    // fixed-cadence run over the same horizon.
+    let mut rng = Rng::new(21);
+    let u = Mat::randn(48, 2, 1.0, &mut rng);
+    let v = Mat::randn(2, 24, 1.0, &mut rng);
+    let g = matmul(&u, &v);
+    let run = |adaptive: bool| -> usize {
+        let mut cfg = OptimCfg::new(OptimKind::Sumo).with_lr(0.01).with_rank(4).with_update_freq(4);
+        if adaptive {
+            cfg = cfg.with_adaptive_freq();
+        }
+        let mut opt = optim::build(&cfg, &[(48, 24)], &[true], 5);
+        let mut w = Mat::zeros(48, 24);
+        for _ in 0..64 {
+            opt.step(0, &mut w, &g, 1.0);
+            opt.end_step();
+        }
+        opt.as_sumo().unwrap().refresh_flops_spent() as usize
+    };
+    let fixed = run(false);
+    let adaptive = run(true);
+    assert!(
+        adaptive < fixed,
+        "stretched cadence must spend fewer refresh FLOPs: {adaptive} vs {fixed}"
+    );
+}

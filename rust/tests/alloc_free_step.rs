@@ -49,15 +49,20 @@ fn alloc_count() -> u64 {
 }
 
 fn assert_steady_state_alloc_free(kind: OptimKind) {
-    // Both projection orientations plus a square layer.
-    let shapes = vec![(96usize, 48usize), (32, 64), (40, 40)];
-    let projected = vec![true, true, true];
     // Huge refresh interval: after the first (warm-up) refresh the basis
     // stays fixed, which is exactly the steady-state regime measured here.
     let cfg = OptimCfg::new(kind)
         .with_lr(0.01)
         .with_rank(8)
         .with_update_freq(1_000_000);
+    assert_steady_state_alloc_free_with(cfg);
+}
+
+fn assert_steady_state_alloc_free_with(cfg: OptimCfg) {
+    let kind = cfg.kind;
+    // Both projection orientations plus a square layer.
+    let shapes = vec![(96usize, 48usize), (32, 64), (40, 40)];
+    let projected = vec![true, true, true];
     let mut opt = optim::build(&cfg, &shapes, &projected, 3);
 
     let mut rng = Rng::new(5);
@@ -99,4 +104,14 @@ fn assert_steady_state_alloc_free(kind: OptimKind) {
 fn sumo_steady_state_step_is_allocation_free() {
     assert_steady_state_alloc_free(OptimKind::Sumo);
     assert_steady_state_alloc_free(OptimKind::SumoNs5);
+    // Adaptive machinery enabled (band + cadence knobs live) must add no
+    // allocations to steady-state steps: measurement and adaptation only
+    // run at refresh time, and no refresh fires during the measured window.
+    let cfg = OptimCfg::new(OptimKind::Sumo)
+        .with_lr(0.01)
+        .with_rank(8)
+        .with_update_freq(1_000_000)
+        .with_adaptive_rank(4, 16)
+        .with_adaptive_freq();
+    assert_steady_state_alloc_free_with(cfg);
 }

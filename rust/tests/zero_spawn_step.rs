@@ -83,4 +83,46 @@ fn three_phase_sumo_step_spawns_no_threads() {
     for w in &weights {
         assert!(w.is_finite());
     }
+
+    // Adaptive rank events may allocate (scratch regrow, group rebuild) but
+    // must never spawn: refresh + residual measurement + rebuilt dispatch
+    // all run on the same resident pool.
+    let mut acfg = OptimCfg::new(OptimKind::Sumo)
+        .with_lr(0.02)
+        .with_rank(2)
+        .with_update_freq(2)
+        .with_adaptive_rank(2, 12)
+        .with_residual_band(0.01, 0.05);
+    acfg.rank_step = 4;
+    let mut aopt = optim::build(&acfg, &shapes, &projected, 43);
+    {
+        let mut refs: Vec<&mut Mat> = weights.iter_mut().collect();
+        aopt.step_parallel(&pool, &mut refs, &grads, 1.0);
+        aopt.end_step();
+    }
+    let spawned_before = threadpool::threads_spawned();
+    let os_before = os_thread_count();
+    for _ in 0..8 {
+        let mut refs: Vec<&mut Mat> = weights.iter_mut().collect();
+        aopt.step_parallel(&pool, &mut refs, &grads, 1.0);
+        aopt.end_step();
+    }
+    assert!(
+        aopt.as_sumo().unwrap().rank_events() > 0,
+        "adaptive run must cross a rank boundary"
+    );
+    assert_eq!(
+        threadpool::threads_spawned(),
+        spawned_before,
+        "rank-event steps must not construct worker threads"
+    );
+    if let (Some(before), Some(after)) = (os_before, os_thread_count()) {
+        assert_eq!(
+            before, after,
+            "OS thread count changed across rank-event steps: {before} -> {after}"
+        );
+    }
+    for w in &weights {
+        assert!(w.is_finite());
+    }
 }
