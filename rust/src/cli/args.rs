@@ -1,12 +1,16 @@
-//! Minimal argument parser: positional command + `--key value` /
-//! `--flag` options, with typed accessors and an unknown-flag check.
+//! Minimal argument parser: positional command (+ optional subcommand) +
+//! `--key value` / `--flag` options, with typed accessors and an
+//! unknown-flag check.
 
 use std::collections::BTreeMap;
 
-/// Parsed command line.
+/// Parsed command line: `sumo <command> [<subcommand>] [--key value|--flag]...`.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
     pub command: String,
+    /// Second leading positional (`sumo cluster worker ...`); empty for the
+    /// flat commands. Leaf handlers reject a stray non-empty subcommand.
+    pub subcommand: String,
     pub options: BTreeMap<String, String>,
     pub flags: Vec<String>,
 }
@@ -18,6 +22,11 @@ impl Args {
         if let Some(cmd) = it.peek() {
             if !cmd.starts_with("--") {
                 args.command = it.next().unwrap().clone();
+                if let Some(sub) = it.peek() {
+                    if !sub.starts_with("--") {
+                        args.subcommand = it.next().unwrap().clone();
+                    }
+                }
             }
         }
         while let Some(tok) = it.next() {
@@ -119,14 +128,36 @@ mod tests {
     }
 
     #[test]
+    fn parses_nested_subcommand() {
+        let a = parse(&["cluster", "worker", "--id", "3", "--connect", "host:7700"]);
+        assert_eq!(a.command, "cluster");
+        assert_eq!(a.subcommand, "worker");
+        assert_eq!(a.usize_or("id", 0).unwrap(), 3);
+        assert_eq!(a.get("connect"), Some("host:7700"));
+        // Flat commands leave the subcommand empty.
+        let b = parse(&["train", "--steps", "5"]);
+        assert_eq!(b.command, "train");
+        assert_eq!(b.subcommand, "");
+    }
+
+    #[test]
     fn rejects_stray_positionals() {
-        let argv: Vec<String> = ["train", "oops"].iter().map(|s| s.to_string()).collect();
+        // Two leading positionals are command + subcommand; a third (or a
+        // positional after any option) is an error.
+        let argv: Vec<String> = ["cluster", "worker", "oops"].iter().map(|s| s.to_string()).collect();
         assert!(Args::parse(&argv).is_err());
+        let argv: Vec<String> = ["train", "--steps", "5", "oops"].iter().map(|s| s.to_string()).collect();
+        assert!(Args::parse(&argv).is_err());
+        // "train oops" now parses as a subcommand; the dispatch layer
+        // rejects it (`cli::commands::tests::leaf_commands_reject_subcommands`).
+        let argv: Vec<String> = ["train", "oops"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(Args::parse(&argv).unwrap().subcommand, "oops");
     }
 
     #[test]
     fn empty_is_ok() {
         let a = parse(&[]);
         assert_eq!(a.command, "");
+        assert_eq!(a.subcommand, "");
     }
 }

@@ -1,0 +1,190 @@
+//! `sumo cluster <coordinator|worker|local|kill-all>` — the multi-process
+//! training surface. Config comes from `--cfg FILE` (JSON, partial is
+//! fine) with individual flags layered on top.
+
+use crate::cluster::{coordinator, local, worker, RunOutcome};
+use crate::config::{ClusterCfg, OptimCfg, OptimKind};
+use crate::Result;
+
+use super::commands::default_lr;
+use super::Args;
+
+const CLUSTER_USAGE: &str = "sumo cluster — multi-process data-parallel training
+
+USAGE: sumo cluster <SUBCOMMAND> [OPTIONS]
+
+SUBCOMMANDS:
+  coordinator start the coordinator: bind, shard layers across N workers,
+              drive lockstep rounds
+              --cfg FILE (JSON ClusterCfg) --workers N --preset nano|...
+              --steps N --seed S --sigma X --bind HOST:PORT
+              --optimizer sumo|galore|... --lr X --rank R --update-freq K
+              --ckpt-every N --ckpt-dir DIR --heartbeat-every N
+              --io-timeout-ms MS --join-timeout-ms MS --resume
+  worker      start worker K and connect to a coordinator
+              --id K --connect HOST:PORT [--ckpt-dir DIR]
+              [--io-timeout-ms MS] [--connect-attempts N] [--backoff-ms MS]
+  local       run the identical computation single-process (the bitwise
+              reference for the loopback test); same options as coordinator
+  kill-all    ask a running coordinator to abort its session
+              --connect HOST:PORT
+  help        this text";
+
+pub fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_str() {
+        "coordinator" => cmd_coordinator(args),
+        "worker" => cmd_worker(args),
+        "local" => cmd_local(args),
+        "kill-all" => cmd_kill_all(args),
+        "" | "help" => {
+            println!("{CLUSTER_USAGE}");
+            Ok(())
+        }
+        other => anyhow::bail!("unknown cluster subcommand {other:?}\n\n{CLUSTER_USAGE}"),
+    }
+}
+
+/// `--cfg FILE` (or defaults) with flag overrides on top. Shared by
+/// `coordinator` and `local` so the pair is guaranteed to describe the same
+/// run when given the same flags.
+pub(crate) fn cluster_cfg_from(args: &Args) -> Result<ClusterCfg> {
+    let mut cfg = match args.get("cfg") {
+        Some(path) => ClusterCfg::load(path)?,
+        None => ClusterCfg::default(),
+    };
+    cfg.workers = args.usize_or("workers", cfg.workers)?;
+    cfg.preset = args.get_or("preset", &cfg.preset);
+    cfg.steps = args.usize_or("steps", cfg.steps)?;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    cfg.sigma = args.f32_or("sigma", cfg.sigma)?;
+    cfg.bind = args.get_or("bind", &cfg.bind);
+    cfg.ckpt_every = args.usize_or("ckpt-every", cfg.ckpt_every)?;
+    cfg.ckpt_dir = args.get_or("ckpt-dir", &cfg.ckpt_dir);
+    cfg.heartbeat_every = args.usize_or("heartbeat-every", cfg.heartbeat_every)?;
+    cfg.io_timeout_ms = args.u64_or("io-timeout-ms", cfg.io_timeout_ms)?;
+    cfg.join_timeout_ms = args.u64_or("join-timeout-ms", cfg.join_timeout_ms)?;
+    if args.has_flag("resume") {
+        cfg.resume = true;
+    }
+    if let Some(name) = args.get("optimizer") {
+        let kind = OptimKind::parse(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown optimizer {name:?}"))?;
+        cfg.optim = OptimCfg::new(kind).with_lr(default_lr(kind));
+    }
+    cfg.optim.lr = args.f32_or("lr", cfg.optim.lr)?;
+    cfg.optim.rank = args.usize_or("rank", cfg.optim.rank)?;
+    cfg.optim.update_freq = args.usize_or("update-freq", cfg.optim.update_freq)?;
+    Ok(cfg)
+}
+
+/// One line per run, shared by `coordinator` and `local` — the loopback CI
+/// test compares exactly these `weights_fnv` values.
+fn print_outcome(what: &str, o: &RunOutcome) {
+    if o.killed {
+        println!("{what}: killed before completion");
+        return;
+    }
+    println!(
+        "{what}: steps {}..{} final_loss={:.6} layers={} weights_fnv=0x{:016x}",
+        o.start_step,
+        o.final_step,
+        o.final_loss,
+        o.weights.len(),
+        o.fingerprint()
+    );
+}
+
+fn cmd_coordinator(args: &Args) -> Result<()> {
+    let cfg = cluster_cfg_from(args)?;
+    let outcome = coordinator::run(&cfg)?;
+    print_outcome("cluster", &outcome);
+    Ok(())
+}
+
+fn cmd_local(args: &Args) -> Result<()> {
+    let cfg = cluster_cfg_from(args)?;
+    let outcome = local::run_local(&cfg)?;
+    print_outcome("local", &outcome);
+    Ok(())
+}
+
+fn cmd_worker(args: &Args) -> Result<()> {
+    let connect = args
+        .get("connect")
+        .ok_or_else(|| anyhow::anyhow!("--connect HOST:PORT required"))?;
+    let id = args.usize_or("id", usize::MAX)?;
+    anyhow::ensure!(id != usize::MAX, "--id K required");
+    let mut wcfg = worker::WorkerCfg::new(id as u32, connect);
+    wcfg.ckpt_dir = args.get("ckpt-dir").map(|s| s.to_string());
+    wcfg.io_timeout_ms = args.u64_or("io-timeout-ms", wcfg.io_timeout_ms)?;
+    wcfg.connect_attempts = args.u64_or("connect-attempts", wcfg.connect_attempts as u64)? as u32;
+    wcfg.backoff_ms = args.u64_or("backoff-ms", wcfg.backoff_ms)?;
+    let report = worker::run(&wcfg)?;
+    println!(
+        "worker {}: steps_run={} final_step={} reason={:?} weights_fnv=0x{:016x}",
+        report.worker_id,
+        report.steps_run,
+        report.final_step,
+        report.shutdown_reason,
+        report.weights_fnv
+    );
+    Ok(())
+}
+
+fn cmd_kill_all(args: &Args) -> Result<()> {
+    let addr = args.get_or("connect", &ClusterCfg::default().bind);
+    coordinator::kill_all(&addr)?;
+    println!("cluster at {addr}: kill acknowledged");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn flag_overrides_layer_over_cfg_file() {
+        let dir = std::env::temp_dir().join("sumo_cluster_cmd_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cluster.json");
+        std::fs::write(&path, r#"{"workers": 5, "steps": 7, "preset": "micro"}"#).unwrap();
+        let a = parse(&[
+            "cluster",
+            "coordinator",
+            "--cfg",
+            path.to_str().unwrap(),
+            "--steps",
+            "9",
+            "--optimizer",
+            "galore",
+            "--lr",
+            "0.5",
+            "--resume",
+        ]);
+        let cfg = cluster_cfg_from(&a).unwrap();
+        assert_eq!(cfg.workers, 5, "from file");
+        assert_eq!(cfg.preset, "micro", "from file");
+        assert_eq!(cfg.steps, 9, "flag wins over file");
+        assert_eq!(cfg.optim.kind, OptimKind::GaLore);
+        assert_eq!(cfg.optim.lr, 0.5);
+        assert!(cfg.resume);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn defaults_without_cfg_file() {
+        let cfg = cluster_cfg_from(&parse(&["cluster", "local"])).unwrap();
+        assert_eq!(cfg, ClusterCfg::default());
+    }
+
+    #[test]
+    fn worker_requires_id_and_connect() {
+        assert!(cmd_worker(&parse(&["cluster", "worker", "--id", "0"])).is_err());
+        let err = dispatch(&parse(&["cluster", "frobnicate"])).unwrap_err().to_string();
+        assert!(err.contains("unknown cluster subcommand"), "got: {err}");
+    }
+}

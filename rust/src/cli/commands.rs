@@ -33,24 +33,39 @@ COMMANDS:
   perf-diff   diff two BENCH_perf_hotpath.json artifacts (CI perf trajectory)
               --base PATH --new PATH [--threshold PCT=10] [--min-ms MS=0.05]
               [--out PATH (markdown report)] — exits nonzero on regressions
+  cluster     multi-process data-parallel training (see `sumo cluster help`)
+              coordinator | worker | local | kill-all
   help        this text
 
 Benchmarks live under `cargo bench` (one target per paper table/figure).";
 
 pub fn dispatch(args: &Args) -> Result<()> {
     match args.command.as_str() {
-        "train" => cmd_train(args),
-        "finetune" => cmd_finetune(args),
-        "eval" => cmd_eval(args),
-        "adapter" => cmd_adapter(args),
-        "inspect" => cmd_inspect(args),
-        "perf-diff" => cmd_perf_diff(args),
+        "train" => leaf(args, cmd_train),
+        "finetune" => leaf(args, cmd_finetune),
+        "eval" => leaf(args, cmd_eval),
+        "adapter" => leaf(args, cmd_adapter),
+        "inspect" => leaf(args, cmd_inspect),
+        "perf-diff" => leaf(args, cmd_perf_diff),
+        "cluster" => super::cluster_cmd::dispatch(args),
         "" | "help" | "--help" => {
             println!("{USAGE}");
             Ok(())
         }
         other => anyhow::bail!("unknown command {other:?}\n\n{USAGE}"),
     }
+}
+
+/// Run a flat (subcommand-less) handler, rejecting stray positionals that
+/// the parser now accepts as a subcommand slot.
+fn leaf(args: &Args, f: fn(&Args) -> Result<()>) -> Result<()> {
+    anyhow::ensure!(
+        args.subcommand.is_empty(),
+        "command {:?} takes no subcommand (got {:?})",
+        args.command,
+        args.subcommand
+    );
+    f(args)
 }
 
 fn optim_cfg_from(args: &Args) -> Result<OptimCfg> {
@@ -375,5 +390,16 @@ mod tests {
             ..Default::default()
         };
         assert!(dispatch(&args).is_err());
+    }
+
+    #[test]
+    fn leaf_commands_reject_subcommands() {
+        let args = Args {
+            command: "train".into(),
+            subcommand: "oops".into(),
+            ..Default::default()
+        };
+        let err = dispatch(&args).unwrap_err().to_string();
+        assert!(err.contains("takes no subcommand"), "got: {err}");
     }
 }

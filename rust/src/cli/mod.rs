@@ -1,6 +1,7 @@
 //! Hand-rolled CLI (clap is unavailable offline): `sumo <command> [--flag value]...`.
 
 pub mod args;
+pub mod cluster_cmd;
 pub mod commands;
 
 pub use args::Args;

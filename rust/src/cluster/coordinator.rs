@@ -1,0 +1,521 @@
+//! The coordinator side of a cluster session.
+//!
+//! One coordinator process drives N workers in lockstep rounds: collect
+//! `Grads` from every shard, reduce through the same
+//! [`crate::coordinator::allreduce_mean`] tree the in-process engine uses,
+//! broadcast `ReducedGrads`, repeat. The coordinator owns liveness: its
+//! sockets carry short read timeouts, it heartbeats on a step cadence, and
+//! any silent worker fails the run with a clean error naming the worker —
+//! never a hang. A `kill-all` control connection can abort the run at any
+//! point (join phase or mid-run).
+
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use crate::config::{ClusterCfg, ModelCfg};
+use crate::coordinator::allreduce_mean;
+use crate::linalg::Mat;
+use crate::{log_info, log_warn};
+
+use super::messages::{encode, read_msg, write_frame, write_msg, Msg, ShardAssignment};
+use super::{model_layers, net, task, RunOutcome};
+
+/// Split layer element counts into `n` contiguous groups balanced by
+/// parameter count (each group non-empty). Returns `(start, end)` index
+/// pairs partitioning `0..sizes.len()`.
+pub(crate) fn layer_groups(sizes: &[usize], n: usize) -> Vec<(usize, usize)> {
+    assert!((1..=sizes.len()).contains(&n));
+    let total: u64 = sizes.iter().map(|&s| s as u64).sum();
+    let mut bounds = Vec::with_capacity(n);
+    let mut start = 0usize;
+    let mut cum = 0u64;
+    for k in 0..n {
+        let groups_left = n - k;
+        // Leave at least one layer for every later group.
+        let max_end = sizes.len() - (groups_left - 1);
+        let mut end = start + 1;
+        cum += sizes[start] as u64;
+        // Grow the group until the cumulative mass reaches the k-th
+        // equal-share target.
+        while end < max_end && cum * n as u64 < (k as u64 + 1) * total {
+            cum += sizes[end] as u64;
+            end += 1;
+        }
+        bounds.push((start, end));
+        start = end;
+    }
+    assert_eq!(start, sizes.len());
+    bounds
+}
+
+/// Run a coordinator bound to `cfg.bind`.
+pub fn run(cfg: &ClusterCfg) -> crate::Result<RunOutcome> {
+    let listener = TcpListener::bind(&cfg.bind)
+        .map_err(|e| anyhow::anyhow!("cannot bind coordinator to {}: {e}", cfg.bind))?;
+    run_on(cfg, listener)
+}
+
+/// Run a coordinator on an already-bound listener (tests bind port 0 and
+/// pass the listener in so workers can learn the real port).
+pub fn run_on(cfg: &ClusterCfg, listener: TcpListener) -> crate::Result<RunOutcome> {
+    anyhow::ensure!(cfg.workers >= 1, "cluster needs at least one worker");
+    let model = ModelCfg::preset(&cfg.preset)
+        .ok_or_else(|| anyhow::anyhow!("unknown model preset {:?}", cfg.preset))?;
+    let layers = model_layers(&model);
+    anyhow::ensure!(
+        cfg.workers <= layers.len(),
+        "{} workers but only {} layers to shard",
+        cfg.workers,
+        layers.len()
+    );
+    let sizes: Vec<usize> = layers.iter().map(|l| l.rows * l.cols).collect();
+    let groups = layer_groups(&sizes, cfg.workers);
+    let n = cfg.workers;
+
+    // ---- Join phase: accept Hello from each worker id (or KillAll). ----
+    listener.set_nonblocking(true)?;
+    let mut slots: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
+    let deadline = Instant::now() + Duration::from_millis(cfg.join_timeout_ms);
+    let mut joined = 0usize;
+    while joined < n {
+        anyhow::ensure!(
+            Instant::now() < deadline,
+            "only {joined}/{n} workers joined within {} ms",
+            cfg.join_timeout_ms
+        );
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if admit(cfg, &mut slots, stream, &mut joined)? {
+                    return killed_outcome(slots.iter_mut().filter_map(|s| s.as_mut()));
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => anyhow::bail!("accept failed: {e}"),
+        }
+    }
+    let mut streams: Vec<TcpStream> = slots.into_iter().map(|s| s.unwrap()).collect();
+    log_info!("cluster: {n} workers joined");
+
+    // ---- Assignment + resume reconciliation. ----
+    let optim_json = cfg.optim.to_json().dump();
+    for (k, stream) in streams.iter_mut().enumerate() {
+        let (gs, ge) = groups[k];
+        let assignment = ShardAssignment {
+            worker_id: k as u32,
+            n_workers: n as u32,
+            steps: cfg.steps as u64,
+            seed: cfg.seed,
+            sigma: cfg.sigma,
+            resume: cfg.resume,
+            ckpt_every: cfg.ckpt_every as u64,
+            ckpt_dir: cfg.ckpt_dir.clone(),
+            heartbeat_every: cfg.heartbeat_every as u64,
+            optim_json: optim_json.clone(),
+            tag: cfg.preset.clone(),
+            layers: layers.clone(),
+            group_start: gs as u32,
+            group_end: ge as u32,
+        };
+        write_msg(stream, &Msg::AssignShards(Box::new(assignment)))?;
+    }
+
+    // Each worker offers its group's (step, weights); all offers must agree
+    // on the step or the shard files are from mismatched sessions.
+    let mut offers: Vec<(u64, Vec<Mat>)> = Vec::with_capacity(n);
+    for k in 0..n {
+        let msg = match read_msg(&mut streams[k]) {
+            Ok(m) => m,
+            Err(e) => {
+                return fail_run(&mut streams, k, &format!(
+                    "worker {k} failed while offering group state: {e}"
+                ));
+            }
+        };
+        match msg {
+            Msg::GroupState { step, mats } => {
+                let (gs, ge) = groups[k];
+                if mats.len() != ge - gs {
+                    return fail_run(&mut streams, usize::MAX, &format!(
+                        "worker {k} offered {} tensors for a {}-layer group",
+                        mats.len(),
+                        ge - gs
+                    ));
+                }
+                if let Some(l) = mats
+                    .iter()
+                    .zip(&layers[gs..ge])
+                    .find(|(m, l)| m.shape() != (l.rows, l.cols))
+                    .map(|(_, l)| l)
+                {
+                    return fail_run(&mut streams, usize::MAX, &format!(
+                        "worker {k} group tensor shape mismatch for {:?}",
+                        l.name
+                    ));
+                }
+                offers.push((step, mats));
+            }
+            m => {
+                return fail_run(&mut streams, usize::MAX, &format!(
+                    "unexpected {} from worker {k} while collecting group state",
+                    m.name()
+                ));
+            }
+        }
+    }
+    let start_step = offers[0].0;
+    if !offers.iter().all(|(s, _)| *s == start_step) {
+        let steps: Vec<u64> = offers.iter().map(|(s, _)| *s).collect();
+        return fail_run(&mut streams, usize::MAX, &format!(
+            "inconsistent shard checkpoints: worker steps {steps:?} — run every worker with \
+             the same shard files (or without --resume)"
+        ));
+    }
+
+    // Groups partition the layer list in worker order, so concatenating the
+    // offers reassembles the full model.
+    let mut weights: Vec<Mat> = Vec::with_capacity(layers.len());
+    for (_, mats) in offers {
+        weights.extend(mats);
+    }
+    let sync = encode(&Msg::SyncWeights { start_step, mats: weights });
+    for stream in streams.iter_mut() {
+        write_frame(stream, &sync)?;
+    }
+    drop(sync);
+
+    // ---- Lockstep rounds. ----
+    let final_step = start_step + cfg.steps as u64;
+    let mut pending_hb: Vec<Option<u64>> = vec![None; n];
+    let mut hb_nonce = 0u64;
+    let mut last_loss = 0.0f64;
+    // A worker acks a heartbeat *after* the Grads it already sent for the
+    // current round, so an ack can legitimately trail by one round; cadence 1
+    // would false-positive the missed-ack check. Clamp to >= 2.
+    let hb_every = if cfg.heartbeat_every == 0 { 0 } else { cfg.heartbeat_every.max(2) as u64 };
+    for t in start_step..final_step {
+        // A KillAll control connection can arrive at any round boundary.
+        if poll_kill(&listener, cfg)? {
+            return killed_outcome(streams.iter_mut());
+        }
+        if hb_every > 0 && t > start_step && (t - start_step) % hb_every == 0 {
+            for k in 0..n {
+                if pending_hb[k].is_some() {
+                    return fail_run(&mut streams, k, &format!(
+                        "worker {k} missed a heartbeat (no ack within {hb_every} steps)"
+                    ));
+                }
+            }
+            hb_nonce += 1;
+            let hb = encode(&Msg::Heartbeat { nonce: hb_nonce });
+            for (k, stream) in streams.iter_mut().enumerate() {
+                write_frame(stream, &hb)?;
+                pending_hb[k] = Some(hb_nonce);
+            }
+        }
+
+        let mut shard_grads: Vec<Vec<Mat>> = Vec::with_capacity(n);
+        let mut loss_sum = 0.0f64;
+        for k in 0..n {
+            loop {
+                let msg = match read_msg(&mut streams[k]) {
+                    Ok(m) => m,
+                    Err(e) => {
+                        return fail_run(&mut streams, k, &format!(
+                            "worker {k} failed at step {t}: {e}"
+                        ));
+                    }
+                };
+                match msg {
+                    Msg::HeartbeatAck { nonce } => {
+                        if pending_hb[k] == Some(nonce) {
+                            pending_hb[k] = None;
+                        }
+                    }
+                    Msg::Grads { step, loss, mats } => {
+                        if step != t || mats.len() != layers.len() {
+                            return fail_run(&mut streams, k, &format!(
+                                "worker {k} sent gradients for step {step} ({} tensors) during \
+                                 step {t}",
+                                mats.len()
+                            ));
+                        }
+                        loss_sum += loss;
+                        shard_grads.push(mats);
+                        break;
+                    }
+                    Msg::Error { detail } => {
+                        return fail_run(&mut streams, k, &format!("worker {k} reported: {detail}"));
+                    }
+                    m => {
+                        return fail_run(&mut streams, k, &format!(
+                            "unexpected {} from worker {k} at step {t}",
+                            m.name()
+                        ));
+                    }
+                }
+            }
+        }
+        last_loss = loss_sum / n as f64;
+        let reduced = allreduce_mean(&mut shard_grads);
+        let frame = encode(&Msg::ReducedGrads { step: t, loss: last_loss, mats: reduced });
+        for stream in streams.iter_mut() {
+            write_frame(stream, &frame)?;
+        }
+
+        if cfg.ckpt_every > 0
+            && (t + 1 - start_step) % cfg.ckpt_every as u64 == 0
+            && t + 1 != final_step
+        {
+            checkpoint_barrier(&mut streams, &mut pending_hb, t + 1)?;
+        }
+        if (t + 1 - start_step) % 10 == 0 {
+            log_info!("cluster step {}/{final_step}: loss {last_loss:.6}", t + 1);
+        }
+    }
+
+    // ---- Session end: final checkpoint, state gather, shutdown. ----
+    checkpoint_barrier(&mut streams, &mut pending_hb, final_step)?;
+    let mut weights: Vec<Mat> = Vec::with_capacity(layers.len());
+    for k in 0..n {
+        let msg = match read_msg(&mut streams[k]) {
+            Ok(m) => m,
+            Err(e) => {
+                return fail_run(&mut streams, k, &format!(
+                    "worker {k} failed while sending final state: {e}"
+                ));
+            }
+        };
+        match msg {
+            Msg::GroupState { step, mats } => {
+                if step != final_step {
+                    return fail_run(&mut streams, usize::MAX, &format!(
+                        "worker {k} final state at step {step}, expected {final_step}"
+                    ));
+                }
+                weights.extend(mats);
+            }
+            m => {
+                return fail_run(&mut streams, usize::MAX, &format!(
+                    "unexpected {} from worker {k} while gathering final state",
+                    m.name()
+                ));
+            }
+        }
+    }
+    anyhow::ensure!(weights.len() == layers.len(), "gathered {} of {} layers", weights.len(), layers.len());
+    let done = encode(&Msg::Shutdown { reason: "done".to_string() });
+    for stream in streams.iter_mut() {
+        let _ = write_frame(stream, &done);
+    }
+    let final_loss = task::SyntheticTask::new(cfg.seed, cfg.sigma, &layers).loss(&weights);
+    log_info!(
+        "cluster done: steps {start_step}..{final_step}, mean shard loss {last_loss:.6}, \
+         final loss {final_loss:.6}"
+    );
+    Ok(RunOutcome {
+        start_step,
+        final_step,
+        final_loss,
+        weights,
+        layer_names: layers.into_iter().map(|l| l.name).collect(),
+        killed: false,
+    })
+}
+
+/// Handle one freshly accepted connection during the join phase. Returns
+/// `true` if it was a `KillAll` control connection (already acked).
+fn admit(
+    cfg: &ClusterCfg,
+    slots: &mut [Option<TcpStream>],
+    stream: TcpStream,
+    joined: &mut usize,
+) -> crate::Result<bool> {
+    // Accepted sockets must not inherit the listener's non-blocking mode.
+    stream.set_nonblocking(false)?;
+    net::configure(&stream, cfg.io_timeout_ms)?;
+    let mut stream = stream;
+    match read_msg(&mut stream) {
+        Ok(Msg::Hello { worker_id }) => {
+            let id = worker_id as usize;
+            if id >= slots.len() || slots[id].is_some() {
+                let detail = if id >= slots.len() {
+                    format!("worker id {id} out of range (cluster size {})", slots.len())
+                } else {
+                    format!("worker id {id} already joined")
+                };
+                let _ = write_msg(&mut stream, &Msg::Error { detail: detail.clone() });
+                anyhow::bail!("{detail}");
+            }
+            slots[id] = Some(stream);
+            *joined += 1;
+            Ok(false)
+        }
+        Ok(Msg::KillAll) => {
+            let _ = write_msg(&mut stream, &Msg::Ack { step: 0 });
+            Ok(true)
+        }
+        Ok(m) => {
+            // Not part of the protocol handshake — reject the connection but
+            // keep the join going (a stray client must not kill the run).
+            log_warn!("cluster: dropping connection with unexpected first message {}", m.name());
+            let _ = write_msg(&mut stream, &Msg::Error {
+                detail: format!("expected Hello, got {}", m.name()),
+            });
+            Ok(false)
+        }
+        Err(e) => {
+            log_warn!("cluster: dropping undecodable connection: {e}");
+            Ok(false)
+        }
+    }
+}
+
+/// Non-blocking check for a `KillAll` control connection between rounds.
+/// Returns `true` when one arrived (already acked).
+fn poll_kill(listener: &TcpListener, cfg: &ClusterCfg) -> crate::Result<bool> {
+    match listener.accept() {
+        Ok((stream, _)) => {
+            stream.set_nonblocking(false)?;
+            net::configure(&stream, cfg.io_timeout_ms)?;
+            let mut stream = stream;
+            match read_msg(&mut stream) {
+                Ok(Msg::KillAll) => {
+                    let _ = write_msg(&mut stream, &Msg::Ack { step: 0 });
+                    Ok(true)
+                }
+                Ok(m) => {
+                    log_warn!("cluster: dropping mid-run connection ({})", m.name());
+                    Ok(false)
+                }
+                Err(e) => {
+                    log_warn!("cluster: dropping undecodable mid-run connection: {e}");
+                    Ok(false)
+                }
+            }
+        }
+        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(false),
+        Err(e) => anyhow::bail!("accept failed: {e}"),
+    }
+}
+
+/// Broadcast `Shutdown {"killed"}` to every joined worker and return the
+/// killed outcome.
+fn killed_outcome<'a, I: IntoIterator<Item = &'a mut TcpStream>>(
+    streams: I,
+) -> crate::Result<RunOutcome> {
+    let frame = encode(&Msg::Shutdown { reason: "killed".to_string() });
+    for stream in streams {
+        let _ = write_frame(stream, &frame);
+    }
+    log_info!("cluster: killed by control connection");
+    Ok(RunOutcome {
+        start_step: 0,
+        final_step: 0,
+        final_loss: 0.0,
+        weights: Vec::new(),
+        layer_names: Vec::new(),
+        killed: true,
+    })
+}
+
+/// Abort the run: best-effort `Shutdown` to every worker except the failed
+/// one, then surface `detail` as the error.
+fn fail_run<T>(streams: &mut [TcpStream], failed: usize, detail: &str) -> crate::Result<T> {
+    let frame = encode(&Msg::Shutdown { reason: format!("aborted: {detail}") });
+    for (k, stream) in streams.iter_mut().enumerate() {
+        if k != failed {
+            let _ = write_frame(stream, &frame);
+        }
+    }
+    anyhow::bail!("{detail}")
+}
+
+/// Drive the `Checkpoint {step}` → `Ack {step}` barrier across all
+/// workers (heartbeat acks may interleave).
+fn checkpoint_barrier(
+    streams: &mut [TcpStream],
+    pending_hb: &mut [Option<u64>],
+    step: u64,
+) -> crate::Result<()> {
+    let frame = encode(&Msg::Checkpoint { step });
+    for stream in streams.iter_mut() {
+        write_frame(stream, &frame)?;
+    }
+    for k in 0..streams.len() {
+        loop {
+            let msg = match read_msg(&mut streams[k]) {
+                Ok(m) => m,
+                Err(e) => {
+                    return fail_run(streams, k, &format!(
+                        "worker {k} failed during checkpoint {step}: {e}"
+                    ));
+                }
+            };
+            match msg {
+                Msg::HeartbeatAck { nonce } => {
+                    if pending_hb[k] == Some(nonce) {
+                        pending_hb[k] = None;
+                    }
+                }
+                Msg::Ack { step: s } if s == step => break,
+                m => {
+                    return fail_run(streams, k, &format!(
+                        "unexpected {} from worker {k} during checkpoint {step}",
+                        m.name()
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Connect to a coordinator and ask it to abort the run (`sumo cluster
+/// kill-all`). Succeeds once the coordinator acknowledges.
+pub fn kill_all(addr: &str) -> crate::Result<()> {
+    let mut stream = net::connect_retry(addr, 3, 50, 5000)?;
+    write_msg(&mut stream, &Msg::KillAll)?;
+    match read_msg(&mut stream)? {
+        Msg::Ack { .. } => Ok(()),
+        m => anyhow::bail!("unexpected {} in reply to KillAll", m.name()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn groups_partition_and_balance() {
+        // Realistic shape: one huge embed followed by uniform blocks.
+        let sizes = vec![16384, 4096, 4096, 4096, 4096, 4096, 4096, 256];
+        for n in 1..=sizes.len() {
+            let groups = layer_groups(&sizes, n);
+            assert_eq!(groups.len(), n);
+            assert_eq!(groups[0].0, 0);
+            assert_eq!(groups[n - 1].1, sizes.len());
+            for w in groups.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous");
+            }
+            for &(s, e) in &groups {
+                assert!(e > s, "non-empty");
+            }
+        }
+        // Two workers over the realistic shape: the huge first layer lands
+        // alone-ish, the rest balance the tail.
+        let g = layer_groups(&sizes, 2);
+        let mass = |r: (usize, usize)| sizes[r.0..r.1].iter().sum::<usize>();
+        let (a, b) = (mass(g[0]), mass(g[1]));
+        let total: usize = sizes.iter().sum();
+        assert!(a >= total / 3 && b >= total / 5, "grossly unbalanced: {a} vs {b}");
+    }
+
+    #[test]
+    fn one_group_per_layer_at_the_limit() {
+        let sizes = vec![10, 20, 30];
+        let groups = layer_groups(&sizes, 3);
+        assert_eq!(groups, vec![(0, 1), (1, 2), (2, 3)]);
+    }
+}

@@ -1,0 +1,119 @@
+//! Single-process reference runner for the cluster's synthetic task.
+//!
+//! Runs the *identical* computation the distributed cluster performs —
+//! same [`super::task::stream_seed`] streams, same
+//! [`crate::coordinator::allreduce_mean`] reduction, same optimizer build
+//! and step order — in one process with no sockets. The loopback
+//! integration test asserts the multi-process run's final weights are
+//! bitwise-identical to this reference; it is also the quickest way to
+//! smoke the cluster math locally (`sumo cluster local`).
+
+use crate::config::{ClusterCfg, ModelCfg};
+use crate::coordinator::allreduce_mean;
+use crate::linalg::Mat;
+use crate::optim;
+use crate::util::threadpool;
+
+use super::{model_layers, task, RunOutcome};
+
+/// Run `cfg.steps` synchronous data-parallel steps in-process, with
+/// `cfg.workers` synthetic gradient shards per step.
+pub fn run_local(cfg: &ClusterCfg) -> crate::Result<RunOutcome> {
+    anyhow::ensure!(cfg.workers >= 1, "cluster needs at least one worker");
+    let model = ModelCfg::preset(&cfg.preset)
+        .ok_or_else(|| anyhow::anyhow!("unknown model preset {:?}", cfg.preset))?;
+    let layers = model_layers(&model);
+    anyhow::ensure!(
+        cfg.workers <= layers.len(),
+        "{} workers but the model only has {} layers to shard",
+        cfg.workers,
+        layers.len()
+    );
+
+    let mut weights = task::init_weights(cfg.seed, &layers);
+    let task = task::SyntheticTask::new(cfg.seed, cfg.sigma, &layers);
+    let shapes: Vec<(usize, usize)> = layers.iter().map(|l| (l.rows, l.cols)).collect();
+    let projected: Vec<bool> = layers.iter().map(|l| l.projected).collect();
+    let mut opt = optim::build(&cfg.optim, &shapes, &projected, cfg.seed);
+    let pool = threadpool::global();
+
+    for t in 0..cfg.steps as u64 {
+        let mut shard_grads: Vec<Vec<Mat>> = (0..cfg.workers as u64)
+            .map(|s| task.shard_grads(&weights, t, s).1)
+            .collect();
+        let reduced = allreduce_mean(&mut shard_grads);
+        let mut refs: Vec<&mut Mat> = weights.iter_mut().collect();
+        opt.step_parallel(pool, &mut refs, &reduced, 1.0);
+        for idx in 0..weights.len() {
+            opt.finalize_weights(idx, &mut weights[idx]);
+        }
+        opt.end_step();
+    }
+
+    let final_loss = task.loss(&weights);
+    Ok(RunOutcome {
+        start_step: 0,
+        final_step: cfg.steps as u64,
+        final_loss,
+        weights,
+        layer_names: layers.into_iter().map(|l| l.name).collect(),
+        killed: false,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::weights_fingerprint;
+
+    fn cfg(workers: usize, steps: usize) -> ClusterCfg {
+        ClusterCfg {
+            workers,
+            steps,
+            ..ClusterCfg::default()
+        }
+    }
+
+    #[test]
+    fn local_run_is_deterministic_and_descends() {
+        let a = run_local(&cfg(2, 12)).unwrap();
+        let b = run_local(&cfg(2, 12)).unwrap();
+        assert_eq!(
+            weights_fingerprint(&a.weights),
+            weights_fingerprint(&b.weights),
+            "same cfg must reproduce bitwise"
+        );
+        let init_loss = {
+            let model = ModelCfg::preset("nano").unwrap();
+            let layers = model_layers(&model);
+            let t = task::SyntheticTask::new(42, 0.0, &layers);
+            t.loss(&task::init_weights(42, &layers))
+        };
+        assert!(
+            a.final_loss < init_loss,
+            "loss should descend: {} -> {}",
+            init_loss,
+            a.final_loss
+        );
+        assert_eq!(a.final_step, 12);
+        assert_eq!(a.layer_names.len(), a.weights.len());
+    }
+
+    #[test]
+    fn shard_count_changes_the_trajectory() {
+        // With σ > 0 the mean over a different shard count is a different
+        // gradient, so the runs must diverge — this is what makes the
+        // bitwise cluster comparison a real test of the reduction path.
+        let a = run_local(&cfg(2, 6)).unwrap();
+        let b = run_local(&cfg(3, 6)).unwrap();
+        assert_ne!(
+            weights_fingerprint(&a.weights),
+            weights_fingerprint(&b.weights)
+        );
+    }
+
+    #[test]
+    fn rejects_more_workers_than_layers() {
+        assert!(run_local(&cfg(10_000, 1)).is_err());
+    }
+}

@@ -1,0 +1,626 @@
+//! Typed, versioned, length-prefixed wire protocol for the cluster.
+//!
+//! Every message travels as one frame:
+//!
+//! ```text
+//! +------+---------+-----+-------------------+----------------+
+//! | SUWP | version | tag | payload len (u64) |    payload     |
+//! +------+---------+-----+-------------------+----------------+
+//!   4 B      1 B     1 B        8 B LE          `len` bytes
+//! ```
+//!
+//! Decoding follows the same hostile-header discipline as
+//! `model::checkpoint::load`: magic, version, tag, and claimed length are
+//! all validated **before** the payload buffer is allocated, and inside the
+//! payload every string/matrix size is checked against a cap and against
+//! the bytes actually present (`util::codec::ByteReader`). A malicious or
+//! corrupt peer gets a clean error, never a multi-GB allocation or a panic.
+
+use std::io::{Read, Write};
+
+use crate::linalg::Mat;
+use crate::util::codec::{ByteReader, ByteWriter};
+
+/// Frame magic (`SUmo Wire Protocol`).
+pub const WIRE_MAGIC: &[u8; 4] = b"SUWP";
+/// Protocol version carried in every frame header.
+pub const WIRE_VERSION: u8 = 1;
+/// Frame header size: magic + version + tag + u64 payload length.
+pub const HEADER_BYTES: usize = 4 + 1 + 1 + 8;
+/// Hard cap on a frame payload (256 MiB — far above any real message for
+/// the presets this repo trains, far below an allocation bomb).
+pub const MAX_FRAME_BYTES: u64 = 1 << 28;
+/// Cap on a single matrix's element count inside a payload.
+pub const MAX_MAT_ELEMS: usize = 1 << 25;
+/// Cap on the matrix count of one message.
+pub const MAX_MATS: usize = 4096;
+/// Cap on layer-spec count in an assignment.
+pub const MAX_LAYERS: usize = 4096;
+/// Cap on any string field.
+pub const MAX_STR: usize = 1 << 20;
+
+/// Shape + projection eligibility of one model layer, as shipped to
+/// workers (the cluster equivalent of `ModelCfg::param_specs` +
+/// `projected_mask`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerSpec {
+    /// Layer name (`embed`, `l0.wq`, …).
+    pub name: String,
+    /// Row count.
+    pub rows: usize,
+    /// Column count.
+    pub cols: usize,
+    /// Eligible for low-rank projection (2-D non-norm matrices).
+    pub projected: bool,
+}
+
+/// Everything one worker needs to run its deterministic slice of a cluster
+/// session. Sent by the coordinator right after `Hello`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardAssignment {
+    /// This worker's id (also its data-parallel shard index).
+    pub worker_id: u32,
+    /// Total worker count N.
+    pub n_workers: u32,
+    /// Steps to run this session.
+    pub steps: u64,
+    /// Master seed (init + gradient noise streams derive from it).
+    pub seed: u64,
+    /// Gradient noise scale σ of the synthetic task.
+    pub sigma: f32,
+    /// Resume from the worker's shard checkpoint file.
+    pub resume: bool,
+    /// Checkpoint cadence in steps (0 ⇒ only at session end).
+    pub ckpt_every: u64,
+    /// Directory for shard checkpoint files.
+    pub ckpt_dir: String,
+    /// Coordinator heartbeat cadence in steps (0 ⇒ off).
+    pub heartbeat_every: u64,
+    /// Optimizer config as JSON text (`OptimCfg::to_json().dump()`).
+    pub optim_json: String,
+    /// Run tag (model preset name) — pins shard files to a config.
+    pub tag: String,
+    /// Every model layer, in registration order.
+    pub layers: Vec<LayerSpec>,
+    /// First layer index of this worker's checkpoint group (inclusive).
+    pub group_start: u32,
+    /// One past the last layer index of this worker's group (exclusive).
+    pub group_end: u32,
+}
+
+/// One cluster protocol message. The `u8` discriminants are the on-wire
+/// frame tags and are part of the protocol: never reuse or renumber, only
+/// append (bump [`WIRE_VERSION`] for incompatible changes).
+#[derive(Clone, PartialEq)]
+pub enum Msg {
+    /// Worker → coordinator: first message on a fresh connection.
+    Hello {
+        /// The connecting worker's id.
+        worker_id: u32,
+    },
+    /// Coordinator → worker: the session plan.
+    AssignShards(Box<ShardAssignment>),
+    /// Worker → coordinator: the weights of the worker's layer group at
+    /// `step` (resume offer at session start, final state at session end).
+    GroupState {
+        /// Step the group weights correspond to.
+        step: u64,
+        /// Group weights, in layer order.
+        mats: Vec<Mat>,
+    },
+    /// Coordinator → worker: full model weights every worker starts from.
+    SyncWeights {
+        /// First step of this session.
+        start_step: u64,
+        /// Full weights, in layer order.
+        mats: Vec<Mat>,
+    },
+    /// Worker → coordinator: this shard's gradients for `step`.
+    Grads {
+        /// The step these gradients belong to.
+        step: u64,
+        /// This shard's loss at `step`.
+        loss: f64,
+        /// Per-layer gradients, in layer order.
+        mats: Vec<Mat>,
+    },
+    /// Coordinator → worker: all-reduced mean gradients for `step`.
+    ReducedGrads {
+        /// The step these gradients belong to.
+        step: u64,
+        /// Mean loss across shards at `step`.
+        loss: f64,
+        /// Per-layer mean gradients, in layer order.
+        mats: Vec<Mat>,
+    },
+    /// Coordinator → worker: write your shard checkpoint for `step` now.
+    Checkpoint {
+        /// The step the saved weights correspond to.
+        step: u64,
+    },
+    /// Worker → coordinator: checkpoint for `step` is on disk.
+    Ack {
+        /// Echo of the checkpoint step.
+        step: u64,
+    },
+    /// Coordinator → worker: liveness probe.
+    Heartbeat {
+        /// Echoed back in the matching [`Msg::HeartbeatAck`].
+        nonce: u64,
+    },
+    /// Worker → coordinator: liveness reply.
+    HeartbeatAck {
+        /// Echo of the probe nonce.
+        nonce: u64,
+    },
+    /// Control client → coordinator: abort the run, shut every worker down.
+    KillAll,
+    /// Coordinator → worker: session over (cleanly or not); exit.
+    Shutdown {
+        /// Human-readable cause (`"done"`, `"killed"`, …).
+        reason: String,
+    },
+    /// Either direction: fatal condition description before disconnect.
+    Error {
+        /// Human-readable cause.
+        detail: String,
+    },
+}
+
+impl Msg {
+    /// On-wire frame tag.
+    pub fn tag(&self) -> u8 {
+        match self {
+            Msg::Hello { .. } => 1,
+            Msg::AssignShards(_) => 2,
+            Msg::GroupState { .. } => 3,
+            Msg::SyncWeights { .. } => 4,
+            Msg::Grads { .. } => 5,
+            Msg::ReducedGrads { .. } => 6,
+            Msg::Checkpoint { .. } => 7,
+            Msg::Ack { .. } => 8,
+            Msg::Heartbeat { .. } => 9,
+            Msg::HeartbeatAck { .. } => 10,
+            Msg::KillAll => 11,
+            Msg::Shutdown { .. } => 12,
+            Msg::Error { .. } => 13,
+        }
+    }
+
+    /// Human-readable variant name for errors and logs (`Mat` carries no
+    /// `Debug`, so messages print by name, not by content).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Msg::Hello { .. } => "Hello",
+            Msg::AssignShards(_) => "AssignShards",
+            Msg::GroupState { .. } => "GroupState",
+            Msg::SyncWeights { .. } => "SyncWeights",
+            Msg::Grads { .. } => "Grads",
+            Msg::ReducedGrads { .. } => "ReducedGrads",
+            Msg::Checkpoint { .. } => "Checkpoint",
+            Msg::Ack { .. } => "Ack",
+            Msg::Heartbeat { .. } => "Heartbeat",
+            Msg::HeartbeatAck { .. } => "HeartbeatAck",
+            Msg::KillAll => "KillAll",
+            Msg::Shutdown { .. } => "Shutdown",
+            Msg::Error { .. } => "Error",
+        }
+    }
+}
+
+fn put_bool(w: &mut ByteWriter, b: bool) {
+    w.put_u8(b as u8);
+}
+
+fn take_bool(r: &mut ByteReader, what: &str) -> crate::Result<bool> {
+    match r.take_u8(what)? {
+        0 => Ok(false),
+        1 => Ok(true),
+        x => anyhow::bail!("{what}: invalid bool byte {x}"),
+    }
+}
+
+fn put_mats(w: &mut ByteWriter, mats: &[Mat]) {
+    w.put_u32(mats.len() as u32);
+    for m in mats {
+        w.put_mat(m);
+    }
+}
+
+fn take_mats(r: &mut ByteReader, what: &str) -> crate::Result<Vec<Mat>> {
+    let n = r.take_u32(what)? as usize;
+    anyhow::ensure!(n <= MAX_MATS, "{what}: claimed {n} matrices exceeds cap {MAX_MATS}");
+    let mut mats = Vec::with_capacity(n);
+    for _ in 0..n {
+        mats.push(r.take_mat(MAX_MAT_ELEMS, what)?);
+    }
+    Ok(mats)
+}
+
+fn put_assignment(w: &mut ByteWriter, a: &ShardAssignment) {
+    w.put_u32(a.worker_id);
+    w.put_u32(a.n_workers);
+    w.put_u64(a.steps);
+    w.put_u64(a.seed);
+    w.put_f32(a.sigma);
+    put_bool(w, a.resume);
+    w.put_u64(a.ckpt_every);
+    w.put_str(&a.ckpt_dir);
+    w.put_u64(a.heartbeat_every);
+    w.put_str(&a.optim_json);
+    w.put_str(&a.tag);
+    w.put_u32(a.group_start);
+    w.put_u32(a.group_end);
+    w.put_u32(a.layers.len() as u32);
+    for l in &a.layers {
+        w.put_str(&l.name);
+        w.put_u32(l.rows as u32);
+        w.put_u32(l.cols as u32);
+        put_bool(w, l.projected);
+    }
+}
+
+fn take_assignment(r: &mut ByteReader) -> crate::Result<ShardAssignment> {
+    let what = "AssignShards";
+    let worker_id = r.take_u32(what)?;
+    let n_workers = r.take_u32(what)?;
+    let steps = r.take_u64(what)?;
+    let seed = r.take_u64(what)?;
+    let sigma = r.take_f32(what)?;
+    let resume = take_bool(r, what)?;
+    let ckpt_every = r.take_u64(what)?;
+    let ckpt_dir = r.take_str(MAX_STR, what)?;
+    let heartbeat_every = r.take_u64(what)?;
+    let optim_json = r.take_str(MAX_STR, what)?;
+    let tag = r.take_str(MAX_STR, what)?;
+    let group_start = r.take_u32(what)?;
+    let group_end = r.take_u32(what)?;
+    let n_layers = r.take_u32(what)? as usize;
+    anyhow::ensure!(
+        n_layers <= MAX_LAYERS,
+        "{what}: claimed {n_layers} layers exceeds cap {MAX_LAYERS}"
+    );
+    let mut layers = Vec::with_capacity(n_layers);
+    for _ in 0..n_layers {
+        layers.push(LayerSpec {
+            name: r.take_str(MAX_STR, what)?,
+            rows: r.take_u32(what)? as usize,
+            cols: r.take_u32(what)? as usize,
+            projected: take_bool(r, what)?,
+        });
+    }
+    Ok(ShardAssignment {
+        worker_id,
+        n_workers,
+        steps,
+        seed,
+        sigma,
+        resume,
+        ckpt_every,
+        ckpt_dir,
+        heartbeat_every,
+        optim_json,
+        tag,
+        layers,
+        group_start,
+        group_end,
+    })
+}
+
+fn encode_payload(msg: &Msg) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    match msg {
+        Msg::Hello { worker_id } => w.put_u32(*worker_id),
+        Msg::AssignShards(a) => put_assignment(&mut w, a),
+        Msg::GroupState { step, mats } => {
+            w.put_u64(*step);
+            put_mats(&mut w, mats);
+        }
+        Msg::SyncWeights { start_step, mats } => {
+            w.put_u64(*start_step);
+            put_mats(&mut w, mats);
+        }
+        Msg::Grads { step, loss, mats } | Msg::ReducedGrads { step, loss, mats } => {
+            w.put_u64(*step);
+            w.put_u64(loss.to_bits());
+            put_mats(&mut w, mats);
+        }
+        Msg::Checkpoint { step } | Msg::Ack { step } => w.put_u64(*step),
+        Msg::Heartbeat { nonce } | Msg::HeartbeatAck { nonce } => w.put_u64(*nonce),
+        Msg::KillAll => {}
+        Msg::Shutdown { reason } => w.put_str(reason),
+        Msg::Error { detail } => w.put_str(detail),
+    }
+    w.into_bytes()
+}
+
+fn decode_payload(tag: u8, payload: &[u8]) -> crate::Result<Msg> {
+    let mut r = ByteReader::new(payload);
+    let msg = match tag {
+        1 => Msg::Hello {
+            worker_id: r.take_u32("Hello")?,
+        },
+        2 => Msg::AssignShards(Box::new(take_assignment(&mut r)?)),
+        3 => Msg::GroupState {
+            step: r.take_u64("GroupState")?,
+            mats: take_mats(&mut r, "GroupState")?,
+        },
+        4 => Msg::SyncWeights {
+            start_step: r.take_u64("SyncWeights")?,
+            mats: take_mats(&mut r, "SyncWeights")?,
+        },
+        5 => Msg::Grads {
+            step: r.take_u64("Grads")?,
+            loss: f64::from_bits(r.take_u64("Grads")?),
+            mats: take_mats(&mut r, "Grads")?,
+        },
+        6 => Msg::ReducedGrads {
+            step: r.take_u64("ReducedGrads")?,
+            loss: f64::from_bits(r.take_u64("ReducedGrads")?),
+            mats: take_mats(&mut r, "ReducedGrads")?,
+        },
+        7 => Msg::Checkpoint {
+            step: r.take_u64("Checkpoint")?,
+        },
+        8 => Msg::Ack {
+            step: r.take_u64("Ack")?,
+        },
+        9 => Msg::Heartbeat {
+            nonce: r.take_u64("Heartbeat")?,
+        },
+        10 => Msg::HeartbeatAck {
+            nonce: r.take_u64("HeartbeatAck")?,
+        },
+        11 => Msg::KillAll,
+        12 => Msg::Shutdown {
+            reason: r.take_str(MAX_STR, "Shutdown")?,
+        },
+        13 => Msg::Error {
+            detail: r.take_str(MAX_STR, "Error")?,
+        },
+        t => anyhow::bail!("unknown frame tag {t}"),
+    };
+    r.expect_end(msg.name())?;
+    Ok(msg)
+}
+
+/// Encode a message into one complete frame (header + payload).
+pub fn encode(msg: &Msg) -> Vec<u8> {
+    let payload = encode_payload(msg);
+    let mut frame = Vec::with_capacity(HEADER_BYTES + payload.len());
+    frame.extend_from_slice(WIRE_MAGIC);
+    frame.push(WIRE_VERSION);
+    frame.push(msg.tag());
+    frame.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    frame.extend_from_slice(&payload);
+    frame
+}
+
+/// Decode one complete frame produced by [`encode`]. Rejects bad magic,
+/// unknown version/tag, oversized or inconsistent claimed lengths, and
+/// trailing bytes — all before touching the payload content.
+pub fn decode(frame: &[u8]) -> crate::Result<Msg> {
+    anyhow::ensure!(
+        frame.len() >= HEADER_BYTES,
+        "frame too short for header: {} bytes",
+        frame.len()
+    );
+    anyhow::ensure!(&frame[0..4] == WIRE_MAGIC, "bad frame magic");
+    let version = frame[4];
+    anyhow::ensure!(
+        version == WIRE_VERSION,
+        "unsupported protocol version {version} (this build speaks {WIRE_VERSION})"
+    );
+    let tag = frame[5];
+    let len = u64::from_le_bytes(frame[6..14].try_into().unwrap());
+    anyhow::ensure!(
+        len <= MAX_FRAME_BYTES,
+        "claimed payload length {len} exceeds frame cap {MAX_FRAME_BYTES}"
+    );
+    anyhow::ensure!(
+        len == (frame.len() - HEADER_BYTES) as u64,
+        "claimed payload length {len} != {} bytes present",
+        frame.len() - HEADER_BYTES
+    );
+    decode_payload(tag, &frame[HEADER_BYTES..])
+}
+
+/// Translate stream read failures into protocol-level errors: timeouts get
+/// a stable "timed out" message (the dead-worker detector greps for it),
+/// and a clean EOF on a frame boundary is named as a disconnect.
+fn map_io(e: std::io::Error, what: &str) -> anyhow::Error {
+    match e.kind() {
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+            anyhow::anyhow!("timed out reading {what}")
+        }
+        std::io::ErrorKind::UnexpectedEof => {
+            anyhow::anyhow!("peer disconnected while reading {what}")
+        }
+        _ => anyhow::anyhow!("io error reading {what}: {e}"),
+    }
+}
+
+/// Write one message to a stream (frame built in memory, one `write_all`,
+/// then flush — a frame is never interleaved or partially buffered).
+pub fn write_msg<W: Write>(w: &mut W, msg: &Msg) -> crate::Result<()> {
+    let frame = encode(msg);
+    w.write_all(&frame)
+        .map_err(|e| anyhow::anyhow!("io error writing {}: {e}", msg.name()))?;
+    w.flush()
+        .map_err(|e| anyhow::anyhow!("io error flushing {}: {e}", msg.name()))?;
+    Ok(())
+}
+
+/// Write pre-encoded frame bytes (broadcast path: encode once, send N×).
+pub fn write_frame<W: Write>(w: &mut W, frame: &[u8]) -> crate::Result<()> {
+    w.write_all(frame)
+        .map_err(|e| anyhow::anyhow!("io error writing frame: {e}"))?;
+    w.flush()
+        .map_err(|e| anyhow::anyhow!("io error flushing frame: {e}"))?;
+    Ok(())
+}
+
+/// Read one message from a stream. The header is read and validated first;
+/// the payload buffer is only allocated after the claimed length passes the
+/// frame cap. Socket timeouts surface as "timed out" errors.
+pub fn read_msg<R: Read>(r: &mut R) -> crate::Result<Msg> {
+    let mut header = [0u8; HEADER_BYTES];
+    r.read_exact(&mut header).map_err(|e| map_io(e, "frame header"))?;
+    anyhow::ensure!(&header[0..4] == WIRE_MAGIC, "bad frame magic");
+    let version = header[4];
+    anyhow::ensure!(
+        version == WIRE_VERSION,
+        "unsupported protocol version {version} (this build speaks {WIRE_VERSION})"
+    );
+    let tag = header[5];
+    let len = u64::from_le_bytes(header[6..14].try_into().unwrap());
+    anyhow::ensure!(
+        len <= MAX_FRAME_BYTES,
+        "claimed payload length {len} exceeds frame cap {MAX_FRAME_BYTES}"
+    );
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload).map_err(|e| map_io(e, "frame payload"))?;
+    decode_payload(tag, &payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn sample_assignment() -> ShardAssignment {
+        ShardAssignment {
+            worker_id: 1,
+            n_workers: 2,
+            steps: 20,
+            seed: 42,
+            sigma: 0.01,
+            resume: true,
+            ckpt_every: 5,
+            ckpt_dir: "/tmp/shards".to_string(),
+            heartbeat_every: 4,
+            optim_json: r#"{"kind":"sumo"}"#.to_string(),
+            tag: "nano".to_string(),
+            layers: vec![
+                LayerSpec { name: "embed".into(), rows: 8, cols: 4, projected: true },
+                LayerSpec { name: "l0.attn_norm".into(), rows: 1, cols: 4, projected: false },
+            ],
+            group_start: 0,
+            group_end: 1,
+        }
+    }
+
+    fn sample_msgs() -> Vec<Msg> {
+        let mut rng = Rng::new(5);
+        let mats = vec![Mat::randn(3, 2, 1.0, &mut rng), Mat::randn(1, 4, 1.0, &mut rng)];
+        vec![
+            Msg::Hello { worker_id: 3 },
+            Msg::AssignShards(Box::new(sample_assignment())),
+            Msg::GroupState { step: 7, mats: mats.clone() },
+            Msg::SyncWeights { start_step: 0, mats: mats.clone() },
+            Msg::Grads { step: 9, loss: 1.25, mats: mats.clone() },
+            Msg::ReducedGrads { step: 9, loss: f64::NAN, mats },
+            Msg::Checkpoint { step: 10 },
+            Msg::Ack { step: 10 },
+            Msg::Heartbeat { nonce: 0xABCD },
+            Msg::HeartbeatAck { nonce: 0xABCD },
+            Msg::KillAll,
+            Msg::Shutdown { reason: "done".into() },
+            Msg::Error { detail: "boom".into() },
+        ]
+    }
+
+    #[test]
+    fn every_variant_roundtrips() {
+        for msg in sample_msgs() {
+            let frame = encode(&msg);
+            let back = decode(&frame).unwrap();
+            // Loss travels by bit pattern, so even NaN round-trips; compare
+            // through re-encoding (Msg is PartialEq but NaN != NaN).
+            assert_eq!(encode(&back), frame, "{} drifted", msg.name());
+            assert_eq!(back.tag(), msg.tag());
+        }
+    }
+
+    #[test]
+    fn streaming_roundtrip() {
+        let mut buf = Vec::new();
+        for msg in sample_msgs() {
+            write_msg(&mut buf, &msg).unwrap();
+        }
+        let mut cur = std::io::Cursor::new(&buf);
+        for msg in sample_msgs() {
+            let got = read_msg(&mut cur).unwrap();
+            assert_eq!(encode(&got), encode(&msg));
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic_version_tag() {
+        let mut frame = encode(&Msg::KillAll);
+        frame[0] = b'X';
+        assert!(decode(&frame).unwrap_err().to_string().contains("magic"));
+
+        let mut frame = encode(&Msg::KillAll);
+        frame[4] = 99;
+        assert!(decode(&frame).unwrap_err().to_string().contains("version 99"));
+
+        let mut frame = encode(&Msg::KillAll);
+        frame[5] = 200;
+        assert!(decode(&frame).unwrap_err().to_string().contains("unknown frame tag"));
+    }
+
+    #[test]
+    fn rejects_oversized_and_inconsistent_lengths() {
+        // Claimed length over the frame cap — must fail before allocating.
+        let mut frame = encode(&Msg::KillAll);
+        frame[6..14].copy_from_slice(&(u64::MAX).to_le_bytes());
+        assert!(decode(&frame).unwrap_err().to_string().contains("frame cap"));
+
+        // Claimed length larger than the bytes present (under the cap).
+        let mut frame = encode(&Msg::Checkpoint { step: 3 });
+        frame[6..14].copy_from_slice(&1000u64.to_le_bytes());
+        assert!(decode(&frame).unwrap_err().to_string().contains("bytes present"));
+
+        // Truncated payload.
+        let frame = encode(&Msg::Shutdown { reason: "bye".into() });
+        assert!(decode(&frame[..frame.len() - 2]).is_err());
+
+        // Trailing garbage after a valid payload.
+        let mut frame = encode(&Msg::Ack { step: 1 });
+        frame.extend_from_slice(&[0u8; 4]);
+        assert!(decode(&frame).is_err());
+    }
+
+    #[test]
+    fn rejects_hostile_mat_dims_inside_valid_frame() {
+        // A well-formed frame whose payload claims a matrix far larger than
+        // the payload: caught by the element cap, not by an allocation.
+        let mut w = ByteWriter::new();
+        w.put_u64(0); // step
+        w.put_u32(1); // one matrix
+        w.put_u32(1 << 20);
+        w.put_u32(1 << 20);
+        let payload = w.into_bytes();
+        let mut frame = Vec::new();
+        frame.extend_from_slice(WIRE_MAGIC);
+        frame.push(WIRE_VERSION);
+        frame.push(3); // GroupState
+        frame.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        let err = decode(&frame).unwrap_err().to_string();
+        assert!(err.contains("element cap"), "{err}");
+    }
+
+    #[test]
+    fn timeout_maps_to_stable_message() {
+        struct TimesOut;
+        impl std::io::Read for TimesOut {
+            fn read(&mut self, _buf: &mut [u8]) -> std::io::Result<usize> {
+                Err(std::io::Error::new(std::io::ErrorKind::WouldBlock, "t"))
+            }
+        }
+        let err = read_msg(&mut TimesOut).unwrap_err().to_string();
+        assert!(err.contains("timed out"), "{err}");
+    }
+}

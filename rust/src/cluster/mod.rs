@@ -1,0 +1,157 @@
+//! Multi-process training cluster: coordinator/worker processes over a
+//! typed TCP wire protocol.
+//!
+//! # Process topology
+//!
+//! One **coordinator** ([`coordinator::run`]) owns the listener, the
+//! gradient all-reduce, and the global step clock. `N` **workers**
+//! ([`worker::run`]) connect over localhost/LAN TCP, each owning one
+//! contiguous *layer group* for checkpointing purposes while replicating
+//! the full optimizer state for bitwise determinism:
+//!
+//! ```text
+//!   coordinator ──listen──▶ :7700
+//!        │  AssignShards / SyncWeights / ReducedGrads / Checkpoint
+//!        ▼
+//!   worker 0 … worker N-1      (each: Hello → lockstep step loop)
+//! ```
+//!
+//! Every worker computes its own data shard's gradients for **all**
+//! layers; the coordinator reduces the shards through the same
+//! [`crate::coordinator::allreduce_mean`] tree used by the in-process
+//! sharded trainer and broadcasts the mean back. Because every worker
+//! applies the identical reduced gradient with an identically seeded
+//! optimizer, weights stay bitwise-identical across processes — verified
+//! in CI against a single-process [`local::run_local`] reference.
+//!
+//! # Message lifecycle
+//!
+//! See [`messages`] for the framed protocol. The happy path per run:
+//! `Hello → AssignShards → GroupState → SyncWeights → (Grads →
+//! ReducedGrads)* → Checkpoint/Ack barriers → GroupState → Shutdown`,
+//! with `Heartbeat`/`HeartbeatAck` interleaved for liveness and
+//! `KillAll` accepted on fresh connections as an out-of-band stop.
+//!
+//! # Shard checkpoints
+//!
+//! Each worker persists only its layer group to
+//! `<dir>/shard_<id>_of_<n>.bin` ([`shard`]), so checkpoint IO scales
+//! out with the cluster and a restarted worker resumes from its own
+//! file. The coordinator reconciles offered steps at join time and
+//! rejects inconsistent shard sets instead of silently mixing steps.
+
+pub mod coordinator;
+pub mod local;
+pub mod messages;
+mod net;
+pub mod shard;
+pub mod task;
+pub mod worker;
+
+use crate::config::ModelCfg;
+use crate::linalg::Mat;
+use messages::LayerSpec;
+
+/// Final state of a completed (or killed) cluster run, as observed by the
+/// coordinator or the single-process reference runner.
+pub struct RunOutcome {
+    /// Step the run started from (0, or the resumed shard step).
+    pub start_step: u64,
+    /// Step after the last applied update.
+    pub final_step: u64,
+    /// Synthetic-task loss at the final weights (noise-free).
+    pub final_loss: f64,
+    /// Final weights in layer order (empty when `killed`).
+    pub weights: Vec<Mat>,
+    /// Layer names matching `weights` (empty when `killed`).
+    pub layer_names: Vec<String>,
+    /// True when the run was stopped by `kill-all` before completing.
+    pub killed: bool,
+}
+
+impl RunOutcome {
+    /// FNV-1a fingerprint of the final weights; `0` for killed runs.
+    pub fn fingerprint(&self) -> u64 {
+        if self.killed {
+            0
+        } else {
+            weights_fingerprint(&self.weights)
+        }
+    }
+}
+
+/// Order-sensitive FNV-1a fingerprint over matrix dims and raw little-endian
+/// f32 bytes. Two weight sets fingerprint equal iff they are bitwise equal
+/// in the same layer order — the cluster CI equality check.
+pub fn weights_fingerprint(mats: &[Mat]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    };
+    for m in mats {
+        let (r, c) = m.shape();
+        eat(&(r as u64).to_le_bytes());
+        eat(&(c as u64).to_le_bytes());
+        for &x in &m.data {
+            eat(&x.to_le_bytes());
+        }
+    }
+    h
+}
+
+/// Wire-level layer specs for a model config: `param_specs` order (the
+/// registration order every other subsystem uses) with the projection
+/// eligibility mask resolved per layer.
+pub fn model_layers(model: &ModelCfg) -> Vec<LayerSpec> {
+    let projected = model.projected_layers();
+    model
+        .param_specs()
+        .into_iter()
+        .map(|(name, rows, cols)| LayerSpec {
+            projected: projected.contains(&name),
+            name,
+            rows,
+            cols,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fingerprint_is_order_and_shape_sensitive() {
+        let a = Mat::from_vec(1, 2, vec![1.0, 2.0]);
+        let b = Mat::from_vec(2, 1, vec![1.0, 2.0]);
+        let c = Mat::from_vec(1, 2, vec![2.0, 1.0]);
+        let fa = weights_fingerprint(&[a.clone()]);
+        assert_eq!(fa, weights_fingerprint(&[a.clone()]));
+        assert_ne!(fa, weights_fingerprint(&[b]), "shape matters");
+        assert_ne!(fa, weights_fingerprint(&[c.clone()]), "values matter");
+        assert_ne!(
+            weights_fingerprint(&[a.clone(), c.clone()]),
+            weights_fingerprint(&[c, a]),
+            "order matters"
+        );
+    }
+
+    #[test]
+    fn model_layers_match_param_specs() {
+        let cfg = ModelCfg::preset("nano").unwrap();
+        let layers = model_layers(&cfg);
+        let specs = cfg.param_specs();
+        assert_eq!(layers.len(), specs.len());
+        for (l, (name, r, c)) in layers.iter().zip(&specs) {
+            assert_eq!((&l.name, l.rows, l.cols), (name, *r, *c));
+        }
+        assert!(layers.iter().any(|l| l.projected));
+        assert!(
+            layers.iter().filter(|l| l.name.ends_with("norm")).all(|l| !l.projected),
+            "norm layers never project"
+        );
+    }
+}

@@ -1,0 +1,74 @@
+//! TCP plumbing shared by coordinator and worker: socket configuration and
+//! bounded connect-retry with backoff.
+
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// Apply the cluster socket discipline: `TCP_NODELAY` (frames are small
+/// and latency-bound) and symmetric read/write timeouts so a dead peer
+/// surfaces as a clean "timed out" error instead of a hang. A timeout of 0
+/// means "no timeout" (`None`).
+pub(crate) fn configure(stream: &TcpStream, io_timeout_ms: u64) -> crate::Result<()> {
+    stream.set_nodelay(true)?;
+    let t = if io_timeout_ms == 0 {
+        None
+    } else {
+        Some(Duration::from_millis(io_timeout_ms))
+    };
+    stream.set_read_timeout(t)?;
+    stream.set_write_timeout(t)?;
+    Ok(())
+}
+
+/// Connect to `addr` with bounded retry + exponential backoff (doubling
+/// from `backoff_ms`, capped at 2 s). Workers typically start before the
+/// coordinator's listener is up; a handful of retries absorbs that race
+/// without masking a genuinely absent coordinator.
+pub(crate) fn connect_retry(
+    addr: &str,
+    attempts: u32,
+    backoff_ms: u64,
+    io_timeout_ms: u64,
+) -> crate::Result<TcpStream> {
+    let attempts = attempts.max(1);
+    let mut delay = Duration::from_millis(backoff_ms.max(1));
+    let mut last_err = String::new();
+    for attempt in 0..attempts {
+        match TcpStream::connect(addr) {
+            Ok(stream) => {
+                configure(&stream, io_timeout_ms)?;
+                return Ok(stream);
+            }
+            Err(e) => {
+                last_err = e.to_string();
+                if attempt + 1 < attempts {
+                    std::thread::sleep(delay);
+                    delay = (delay * 2).min(Duration::from_secs(2));
+                }
+            }
+        }
+    }
+    anyhow::bail!("cannot connect to coordinator at {addr} after {attempts} attempts: {last_err}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn connect_retry_reports_attempts_on_dead_address() {
+        // Port 1 on localhost is essentially never listening; bounded retry
+        // must return an error naming the address, not hang.
+        let err = connect_retry("127.0.0.1:1", 2, 1, 100).unwrap_err().to_string();
+        assert!(err.contains("127.0.0.1:1") && err.contains("2 attempts"), "{err}");
+    }
+
+    #[test]
+    fn connect_retry_succeeds_against_listener() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let stream = connect_retry(&addr, 3, 1, 250).unwrap();
+        assert!(stream.read_timeout().unwrap().is_some());
+        assert!(stream.nodelay().unwrap());
+    }
+}

@@ -1,0 +1,243 @@
+//! Per-worker shard checkpoints.
+//!
+//! Each worker owns one contiguous layer group and checkpoints **only**
+//! that group to its own file (`shard_007_of_016.bin`), so checkpointing
+//! never serializes through a single writer and a restarted worker resumes
+//! from its own file without touching anyone else's. File layout mirrors
+//! `model::checkpoint` (magic + u64 LE JSON header + raw LE f32 payloads)
+//! through the same `util::codec` primitives, including the
+//! validate-before-allocate discipline for hostile headers.
+//!
+//! Optimizer moments are *not* checkpointed: on resume every worker
+//! rebuilds fresh optimizer state, mirroring how this repo's single-process
+//! checkpoints behave. Weights are exact; the moment warm-up replays.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use crate::linalg::Mat;
+use crate::util::codec;
+use crate::util::json::Json;
+
+use super::messages::LayerSpec;
+
+const MAGIC: &[u8; 8] = b"SUMOSHD1";
+
+/// Identity + position of a shard checkpoint: which run shape it belongs
+/// to, which worker wrote it, and at which step.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardMeta {
+    /// Run tag (model preset name) — a shard from a different model shape
+    /// must be rejected, not loaded into mismatched tensors.
+    pub tag: String,
+    /// Writing worker's id.
+    pub worker_id: u32,
+    /// Total worker count of the writing run.
+    pub n_workers: u32,
+    /// Step the saved weights correspond to.
+    pub step: u64,
+    /// First layer index of the group (inclusive).
+    pub group_start: u32,
+    /// One past the last layer index of the group (exclusive).
+    pub group_end: u32,
+    /// Specs of the layers in the group, in order.
+    pub layers: Vec<LayerSpec>,
+}
+
+/// Canonical shard file path for worker `id` of `n` inside `dir`.
+pub fn shard_path(dir: &str, id: u32, n: u32) -> PathBuf {
+    Path::new(dir).join(format!("shard_{id:03}_of_{n:03}.bin"))
+}
+
+/// Save a worker's layer-group weights (+ metadata) to `path`.
+pub fn save<P: AsRef<Path>>(meta: &ShardMeta, weights: &[Mat], path: P) -> crate::Result<()> {
+    anyhow::ensure!(
+        weights.len() == meta.layers.len(),
+        "shard save: {} weights for {} layer specs",
+        weights.len(),
+        meta.layers.len()
+    );
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut w = BufWriter::new(File::create(path)?);
+    codec::write_magic(&mut w, MAGIC)?;
+    let header = Json::obj(vec![
+        ("tag", Json::str(&meta.tag)),
+        ("worker_id", Json::num(meta.worker_id as f64)),
+        ("n_workers", Json::num(meta.n_workers as f64)),
+        ("step", Json::num(meta.step as f64)),
+        ("group_start", Json::num(meta.group_start as f64)),
+        ("group_end", Json::num(meta.group_end as f64)),
+        (
+            "layers",
+            Json::arr(meta.layers.iter().map(|l| {
+                Json::obj(vec![
+                    ("name", Json::str(&l.name)),
+                    ("rows", Json::num(l.rows as f64)),
+                    ("cols", Json::num(l.cols as f64)),
+                    ("projected", Json::Bool(l.projected)),
+                ])
+            })),
+        ),
+    ]);
+    let htext = header.dump();
+    codec::write_u64_le(&mut w, htext.len() as u64)?;
+    w.write_all(htext.as_bytes())?;
+    for t in weights {
+        codec::write_f32s(&mut w, &t.data)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a shard checkpoint. Header-claimed tensor sizes are validated
+/// against the file's actual length before any payload allocation, exactly
+/// like `checkpoint::load`.
+pub fn load<P: AsRef<Path>>(path: P) -> crate::Result<(ShardMeta, Vec<Mat>)> {
+    let file = File::open(&path)?;
+    let file_len = file.metadata()?.len();
+    let mut r = BufReader::new(file);
+    codec::expect_magic(&mut r, MAGIC, "SUMO shard checkpoint")?;
+    let hlen = codec::read_u64_le(&mut r)? as usize;
+    anyhow::ensure!(hlen < 16 << 20, "shard header too large");
+    let hbytes = codec::read_vec(&mut r, hlen)?;
+    let header = Json::parse(std::str::from_utf8(&hbytes)?)
+        .map_err(|e| anyhow::anyhow!("bad shard header: {e}"))?;
+    let mut layers = Vec::new();
+    for l in header
+        .get("layers")
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("shard header missing layers"))?
+    {
+        layers.push(LayerSpec {
+            name: l.get("name").as_str().unwrap_or("").to_string(),
+            rows: l.get("rows").as_usize().unwrap_or(0),
+            cols: l.get("cols").as_usize().unwrap_or(0),
+            projected: l.get("projected").as_bool().unwrap_or(false),
+        });
+    }
+    let meta = ShardMeta {
+        tag: header.get("tag").as_str().unwrap_or("").to_string(),
+        worker_id: header.get("worker_id").as_usize().unwrap_or(0) as u32,
+        n_workers: header.get("n_workers").as_usize().unwrap_or(0) as u32,
+        step: header.get("step").as_f64().unwrap_or(0.0) as u64,
+        group_start: header.get("group_start").as_usize().unwrap_or(0) as u32,
+        group_end: header.get("group_end").as_usize().unwrap_or(0) as u32,
+        layers,
+    };
+    let mut weights = Vec::with_capacity(meta.layers.len());
+    let mut payload_off = (8 + 8 + hlen) as u64;
+    for l in &meta.layers {
+        let bytes = (l.rows as u64)
+            .checked_mul(l.cols as u64)
+            .and_then(|e| e.checked_mul(4))
+            .ok_or_else(|| {
+                anyhow::anyhow!("shard layer {:?}: {}x{} size overflows", l.name, l.rows, l.cols)
+            })?;
+        let remaining = file_len.saturating_sub(payload_off);
+        anyhow::ensure!(
+            bytes <= remaining,
+            "shard layer {:?} claims {}x{} ({bytes} bytes) but only {remaining} bytes remain \
+             in the file — truncated or corrupt shard checkpoint",
+            l.name,
+            l.rows,
+            l.cols
+        );
+        payload_off += bytes;
+        let data = codec::read_f32s(&mut r, l.rows * l.cols)?;
+        weights.push(Mat::from_vec(l.rows, l.cols, data));
+    }
+    Ok((meta, weights))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn sample() -> (ShardMeta, Vec<Mat>) {
+        let mut rng = Rng::new(3);
+        let layers = vec![
+            LayerSpec { name: "l0.wq".into(), rows: 4, cols: 4, projected: true },
+            LayerSpec { name: "l0.mlp_norm".into(), rows: 1, cols: 4, projected: false },
+        ];
+        let weights = layers
+            .iter()
+            .map(|l| Mat::randn(l.rows, l.cols, 1.0, &mut rng))
+            .collect();
+        let meta = ShardMeta {
+            tag: "nano".into(),
+            worker_id: 1,
+            n_workers: 2,
+            step: 17,
+            group_start: 3,
+            group_end: 5,
+            layers,
+        };
+        (meta, weights)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let (meta, weights) = sample();
+        let dir = std::env::temp_dir().join("sumo_shard_test");
+        let path = shard_path(dir.to_str().unwrap(), meta.worker_id, meta.n_workers);
+        save(&meta, &weights, &path).unwrap();
+        let (m2, w2) = load(&path).unwrap();
+        assert_eq!(m2, meta);
+        for (a, b) in weights.iter().zip(&w2) {
+            assert_eq!(a.data, b.data);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_oversized_header_claim_and_garbage() {
+        let (mut meta, weights) = sample();
+        meta.layers[0].rows = 1 << 30;
+        meta.layers[0].cols = 1 << 30;
+        let dir = std::env::temp_dir().join("sumo_shard_test2");
+        let path = dir.join("hostile.bin");
+        // Bypass save()'s own consistency by writing the hostile header by
+        // hand: save checks weights against specs, a hostile file does not.
+        std::fs::create_dir_all(&dir).unwrap();
+        {
+            use std::io::Write;
+            let mut f = File::create(&path).unwrap();
+            f.write_all(MAGIC).unwrap();
+            let header = Json::obj(vec![
+                ("tag", Json::str("nano")),
+                ("step", Json::num(0.0)),
+                (
+                    "layers",
+                    Json::arr(meta.layers.iter().map(|l| {
+                        Json::obj(vec![
+                            ("name", Json::str(&l.name)),
+                            ("rows", Json::num(l.rows as f64)),
+                            ("cols", Json::num(l.cols as f64)),
+                        ])
+                    })),
+                ),
+            ])
+            .dump();
+            f.write_all(&(header.len() as u64).to_le_bytes()).unwrap();
+            f.write_all(header.as_bytes()).unwrap();
+            f.write_all(&[0u8; 8]).unwrap();
+        }
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("remain"), "{err}");
+        // Truncation of a valid file is caught the same way.
+        let ok_path = dir.join("ok.bin");
+        let (meta2, _) = sample();
+        save(&meta2, &weights, &ok_path).unwrap();
+        let full = std::fs::read(&ok_path).unwrap();
+        std::fs::write(&ok_path, &full[..full.len() - 8]).unwrap();
+        assert!(load(&ok_path).is_err());
+        // And garbage is rejected at the magic.
+        std::fs::write(&ok_path, b"not a shard").unwrap();
+        assert!(load(&ok_path).unwrap_err().to_string().contains("bad magic"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,219 @@
+//! Deterministic synthetic training task for cluster runs.
+//!
+//! Cluster CI must assert *bitwise* equality between a multi-process run
+//! and a single-process reference — which rules out the PJRT transformer
+//! path (artifacts are absent in offline environments) and rules out any
+//! RNG whose stream depends on call order across processes. This module
+//! provides both pieces:
+//!
+//! * [`stream_seed`] — an order-independent mix of
+//!   (master seed, salt, step, shard, layer) into an [`Rng`] seed. Unlike
+//!   [`Rng::fork`], which advances the parent generator and is therefore
+//!   call-order-dependent, any process can compute any stream's seed
+//!   locally and get the identical generator.
+//! * [`SyntheticTask`] — a noisy quadratic: shard `s` observes the
+//!   gradient `(W − T) + σ·ε(step, s, layer)` toward fixed random targets
+//!   `T`. The σ-noise makes every shard's gradient distinct, so the
+//!   all-reduce mean genuinely changes the update — a cluster that dropped
+//!   or duplicated a shard would diverge bitwise from the reference.
+//!
+//! The task exercises the full optimizer stack (subspace projection,
+//! moment orthogonalization, limiter) with no model forward/backward, so a
+//! loopback cluster test runs in milliseconds.
+
+use crate::linalg::Mat;
+use crate::util::Rng;
+
+use super::messages::LayerSpec;
+
+/// Stream salt: weight initialization.
+pub const SALT_INIT: u64 = 1;
+/// Stream salt: per-(step, shard, layer) gradient noise.
+pub const SALT_GRAD: u64 = 2;
+/// Stream salt: the fixed target weights.
+pub const SALT_TARGET: u64 = 3;
+
+#[inline]
+fn avalanche(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Order-independent seed for the `(salt, step, shard, layer)` stream of a
+/// run keyed by `seed`. Pure function of its inputs — every process derives
+/// identical generators without any shared RNG state or draw ordering.
+pub fn stream_seed(seed: u64, salt: u64, step: u64, shard: u64, layer: u64) -> u64 {
+    let mut h = avalanche(seed ^ 0x5355_4D4F_434C_5553); // "SUMOCLUS"
+    h = avalanche(h ^ salt.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    h = avalanche(h ^ step.wrapping_mul(0xC2B2_AE3D_27D4_EB4F));
+    h = avalanche(h ^ shard.wrapping_mul(0x1656_67B1_9E37_79F9));
+    h = avalanche(h ^ layer.wrapping_mul(0x2545_F491_4F6C_DD1D));
+    h
+}
+
+/// Initialize full model weights for a cluster run: the same per-layer
+/// scheme as `ParamStore::init` (norm scales = 1, embeddings ~ N(0, 0.02²),
+/// matrices ~ N(0, 2/(m+n))) but drawn from per-layer [`stream_seed`]
+/// streams, so the result is identical no matter which process computes
+/// which layers.
+pub fn init_weights(seed: u64, layers: &[LayerSpec]) -> Vec<Mat> {
+    layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| {
+            let mut rng = Rng::new(stream_seed(seed, SALT_INIT, 0, 0, i as u64));
+            if l.name.ends_with("norm") {
+                Mat::from_vec(l.rows, l.cols, vec![1.0; l.rows * l.cols])
+            } else if l.name == "embed" {
+                Mat::randn(l.rows, l.cols, 0.02, &mut rng)
+            } else {
+                Mat::randn(l.rows, l.cols, (2.0 / (l.rows + l.cols) as f32).sqrt(), &mut rng)
+            }
+        })
+        .collect()
+}
+
+/// The noisy quadratic objective: ½·‖W − T‖² / n_params, with per-shard
+/// gradient noise of scale σ.
+pub struct SyntheticTask {
+    /// Master seed (noise streams derive from it).
+    pub seed: u64,
+    /// Gradient noise scale σ.
+    pub sigma: f32,
+    /// Fixed random targets T, one per layer.
+    pub targets: Vec<Mat>,
+    n_params: usize,
+}
+
+impl SyntheticTask {
+    /// Build the task for a layer set: targets are drawn from the
+    /// `SALT_TARGET` streams at init-like scale, so the initial loss is
+    /// O(1) and the optimizer has a well-conditioned basin to descend.
+    pub fn new(seed: u64, sigma: f32, layers: &[LayerSpec]) -> SyntheticTask {
+        let targets = layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                let mut rng = Rng::new(stream_seed(seed, SALT_TARGET, 0, 0, i as u64));
+                Mat::randn(l.rows, l.cols, 0.1, &mut rng)
+            })
+            .collect();
+        let n_params = layers.iter().map(|l| l.rows * l.cols).sum();
+        SyntheticTask {
+            seed,
+            sigma,
+            targets,
+            n_params,
+        }
+    }
+
+    /// Loss at `weights`: ½·Σ‖W − T‖² / n_params (noise-free, so every
+    /// process computes the identical value from identical weights).
+    pub fn loss(&self, weights: &[Mat]) -> f64 {
+        assert_eq!(weights.len(), self.targets.len());
+        let sq: f64 = weights
+            .iter()
+            .zip(&self.targets)
+            .map(|(w, t)| {
+                let mut d = w.clone();
+                d.axpy(-1.0, t);
+                d.sumsq()
+            })
+            .sum();
+        0.5 * sq / self.n_params as f64
+    }
+
+    /// Shard `shard`'s gradient observation at `step`:
+    /// `(W − T) + σ·ε(step, shard, layer)`, plus the (noise-free) loss.
+    pub fn shard_grads(&self, weights: &[Mat], step: u64, shard: u64) -> (f64, Vec<Mat>) {
+        assert_eq!(weights.len(), self.targets.len());
+        let grads = weights
+            .iter()
+            .zip(&self.targets)
+            .enumerate()
+            .map(|(i, (w, t))| {
+                let mut g = w.clone();
+                g.axpy(-1.0, t);
+                if self.sigma > 0.0 {
+                    let mut rng =
+                        Rng::new(stream_seed(self.seed, SALT_GRAD, step, shard, i as u64));
+                    for x in g.data.iter_mut() {
+                        *x += self.sigma * rng.normal_f32();
+                    }
+                }
+                g
+            })
+            .collect();
+        (self.loss(weights), grads)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layers() -> Vec<LayerSpec> {
+        vec![
+            LayerSpec { name: "embed".into(), rows: 6, cols: 4, projected: true },
+            LayerSpec { name: "l0.attn_norm".into(), rows: 1, cols: 4, projected: false },
+            LayerSpec { name: "l0.wq".into(), rows: 4, cols: 4, projected: true },
+        ]
+    }
+
+    #[test]
+    fn stream_seed_is_order_independent_and_distinct() {
+        let a = stream_seed(42, SALT_GRAD, 3, 1, 7);
+        let b = stream_seed(42, SALT_GRAD, 3, 1, 7);
+        assert_eq!(a, b);
+        // Each coordinate perturbs the stream.
+        assert_ne!(a, stream_seed(43, SALT_GRAD, 3, 1, 7));
+        assert_ne!(a, stream_seed(42, SALT_INIT, 3, 1, 7));
+        assert_ne!(a, stream_seed(42, SALT_GRAD, 4, 1, 7));
+        assert_ne!(a, stream_seed(42, SALT_GRAD, 3, 2, 7));
+        assert_ne!(a, stream_seed(42, SALT_GRAD, 3, 1, 8));
+    }
+
+    #[test]
+    fn init_matches_param_store_scheme() {
+        let w = init_weights(9, &layers());
+        assert!(w[1].data.iter().all(|&x| x == 1.0), "norms init to 1");
+        let embed_std = (w[0].sumsq() / w[0].data.len() as f64).sqrt();
+        assert!(embed_std < 0.1, "embed scale ~0.02, got {embed_std}");
+        // Deterministic.
+        let w2 = init_weights(9, &layers());
+        for (a, b) in w.iter().zip(&w2) {
+            assert_eq!(a.data, b.data);
+        }
+    }
+
+    #[test]
+    fn shards_differ_but_loss_does_not() {
+        let ls = layers();
+        let w = init_weights(3, &ls);
+        let task = SyntheticTask::new(3, 0.05, &ls);
+        let (loss0, g0) = task.shard_grads(&w, 2, 0);
+        let (loss1, g1) = task.shard_grads(&w, 2, 1);
+        assert_eq!(loss0, loss1, "loss is noise-free");
+        assert!(g0[0].max_diff(&g1[0]) > 0.0, "shard noise differs");
+        // Same (step, shard) reproduces bitwise.
+        let (_, g0b) = task.shard_grads(&w, 2, 0);
+        assert_eq!(g0[0].data, g0b[0].data);
+        // Zero sigma: shards identical, gradient exactly W − T.
+        let clean = SyntheticTask::new(3, 0.0, &ls);
+        let (_, a) = clean.shard_grads(&w, 5, 0);
+        let (_, b) = clean.shard_grads(&w, 5, 3);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.data, y.data);
+        }
+    }
+
+    #[test]
+    fn loss_is_zero_at_target() {
+        let ls = layers();
+        let task = SyntheticTask::new(4, 0.0, &ls);
+        assert_eq!(task.loss(&task.targets), 0.0);
+        let w = init_weights(4, &ls);
+        assert!(task.loss(&w) > 0.0);
+    }
+}

@@ -1,0 +1,326 @@
+//! The worker side of a cluster session.
+//!
+//! A worker connects to the coordinator, announces itself (`Hello`),
+//! receives its [`ShardAssignment`], and then runs the lockstep round
+//! protocol: compute this shard's gradients → `Grads` → wait for
+//! `ReducedGrads` → apply the (replicated) optimizer step. Every worker
+//! holds the full model and full optimizer state; because the reduced
+//! gradient, the optimizer arithmetic, and the RNG streams are all
+//! deterministic, the weights stay bitwise identical across workers —
+//! what is *sharded* is the data-parallel gradient work and the
+//! checkpoint: each worker persists only its own layer group to its own
+//! shard file and resumes from it.
+
+use std::net::TcpStream;
+
+use crate::config::OptimCfg;
+use crate::linalg::Mat;
+use crate::log_info;
+use crate::optim;
+use crate::util::json::Json;
+use crate::util::threadpool;
+
+use super::messages::{read_msg, write_msg, Msg, ShardAssignment};
+use super::{net, shard, task, weights_fingerprint};
+
+/// Worker process configuration (CLI flags; everything else arrives in the
+/// assignment).
+#[derive(Clone, Debug)]
+pub struct WorkerCfg {
+    /// This worker's id (must match one of the coordinator's N slots).
+    pub id: u32,
+    /// Coordinator address to connect to.
+    pub connect: String,
+    /// Override the assignment's shard-checkpoint directory (useful when
+    /// workers run on machines with different filesystems).
+    pub ckpt_dir: Option<String>,
+    /// Socket read/write timeout (ms). Workers are patient — the default
+    /// covers the coordinator's whole join window — because the coordinator
+    /// is the one responsible for detecting dead peers quickly.
+    pub io_timeout_ms: u64,
+    /// Connection attempts before giving up (workers usually start before
+    /// the coordinator's listener is ready).
+    pub connect_attempts: u32,
+    /// Initial connect retry backoff (ms), doubling per attempt.
+    pub backoff_ms: u64,
+}
+
+impl WorkerCfg {
+    /// Defaults for `id` connecting to `connect`.
+    pub fn new(id: u32, connect: &str) -> WorkerCfg {
+        WorkerCfg {
+            id,
+            connect: connect.to_string(),
+            ckpt_dir: None,
+            io_timeout_ms: 30_000,
+            connect_attempts: 40,
+            backoff_ms: 25,
+        }
+    }
+}
+
+/// What a worker did before exiting cleanly.
+#[derive(Clone, Debug)]
+pub struct WorkerReport {
+    /// This worker's id.
+    pub worker_id: u32,
+    /// Steps actually run this session.
+    pub steps_run: u64,
+    /// Step the weights correspond to at exit.
+    pub final_step: u64,
+    /// The coordinator's shutdown reason (`"done"`, `"killed"`, …).
+    pub shutdown_reason: String,
+    /// FNV-1a fingerprint of the full final weights (0 if none were built).
+    pub weights_fnv: u64,
+}
+
+/// Run a worker process to completion: connect, execute the assigned
+/// session, return a report. Errors are clean and bounded — connect retry
+/// is capped, every read carries the socket timeout, and a coordinator
+/// `Shutdown` at any point exits gracefully.
+pub fn run(cfg: &WorkerCfg) -> crate::Result<WorkerReport> {
+    let mut stream = net::connect_retry(
+        &cfg.connect,
+        cfg.connect_attempts,
+        cfg.backoff_ms,
+        cfg.io_timeout_ms,
+    )?;
+    write_msg(&mut stream, &Msg::Hello { worker_id: cfg.id })?;
+    match read_msg(&mut stream)? {
+        Msg::AssignShards(a) => run_assignment(cfg, stream, *a),
+        Msg::Shutdown { reason } => Ok(WorkerReport {
+            worker_id: cfg.id,
+            steps_run: 0,
+            final_step: 0,
+            shutdown_reason: reason,
+            weights_fnv: 0,
+        }),
+        Msg::Error { detail } => anyhow::bail!("coordinator rejected worker {}: {detail}", cfg.id),
+        m => anyhow::bail!("unexpected {} while waiting for assignment", m.name()),
+    }
+}
+
+fn run_assignment(
+    cfg: &WorkerCfg,
+    mut stream: TcpStream,
+    a: ShardAssignment,
+) -> crate::Result<WorkerReport> {
+    anyhow::ensure!(a.worker_id == cfg.id, "assignment addressed to worker {}", a.worker_id);
+    let group = a.group_start as usize..a.group_end as usize;
+    anyhow::ensure!(
+        (a.group_start..=a.layers.len() as u32).contains(&a.group_end),
+        "bad layer group {}..{} over {} layers",
+        a.group_start,
+        a.group_end,
+        a.layers.len()
+    );
+    let ocfg_json = Json::parse(&a.optim_json)
+        .map_err(|e| anyhow::anyhow!("bad optimizer JSON in assignment: {e}"))?;
+    let ocfg = OptimCfg::from_json(&ocfg_json)
+        .ok_or_else(|| anyhow::anyhow!("bad optimizer config in assignment"))?;
+
+    let mut weights = task::init_weights(a.seed, &a.layers);
+    let ckpt_dir = cfg.ckpt_dir.clone().unwrap_or_else(|| a.ckpt_dir.clone());
+    let path = shard::shard_path(&ckpt_dir, a.worker_id, a.n_workers);
+
+    // Resume offer: if this worker has a shard file matching the run shape,
+    // its group weights + step go to the coordinator, which reconciles all
+    // offers into one consistent start state for everyone.
+    let mut my_step = 0u64;
+    if a.resume && path.exists() {
+        let (meta, group_w) = shard::load(&path)?;
+        anyhow::ensure!(
+            meta.tag == a.tag
+                && meta.n_workers == a.n_workers
+                && meta.group_start == a.group_start
+                && meta.group_end == a.group_end
+                && meta.layers == a.layers[group.clone()],
+            "stale shard checkpoint {}: written for a different run shape",
+            path.display()
+        );
+        for (dst, src) in weights[group.clone()].iter_mut().zip(group_w) {
+            *dst = src;
+        }
+        my_step = meta.step;
+    }
+    write_msg(
+        &mut stream,
+        &Msg::GroupState {
+            step: my_step,
+            mats: weights[group.clone()].to_vec(),
+        },
+    )?;
+
+    // The coordinator reconciles every worker's offer and replies with the
+    // authoritative full weights + start step.
+    let start_step = loop {
+        match read_msg(&mut stream)? {
+            Msg::Heartbeat { nonce } => write_msg(&mut stream, &Msg::HeartbeatAck { nonce })?,
+            Msg::SyncWeights { start_step, mats } => {
+                anyhow::ensure!(
+                    mats.len() == a.layers.len(),
+                    "SyncWeights carries {} tensors for {} layers",
+                    mats.len(),
+                    a.layers.len()
+                );
+                for (m, l) in mats.iter().zip(&a.layers) {
+                    anyhow::ensure!(
+                        m.shape() == (l.rows, l.cols),
+                        "SyncWeights shape mismatch for layer {:?}",
+                        l.name
+                    );
+                }
+                weights = mats;
+                break start_step;
+            }
+            Msg::Shutdown { reason } => {
+                return Ok(WorkerReport {
+                    worker_id: cfg.id,
+                    steps_run: 0,
+                    final_step: my_step,
+                    shutdown_reason: reason,
+                    weights_fnv: weights_fingerprint(&weights),
+                })
+            }
+            Msg::Error { detail } => anyhow::bail!("coordinator error: {detail}"),
+            m => anyhow::bail!("unexpected {} while waiting for SyncWeights", m.name()),
+        }
+    };
+
+    let shapes: Vec<(usize, usize)> = a.layers.iter().map(|l| (l.rows, l.cols)).collect();
+    let projected: Vec<bool> = a.layers.iter().map(|l| l.projected).collect();
+    let mut opt = optim::build(&ocfg, &shapes, &projected, a.seed);
+    let pool = threadpool::global();
+    let task = task::SyntheticTask::new(a.seed, a.sigma, &a.layers);
+    let final_step = start_step + a.steps;
+
+    let save_shard = |weights: &[Mat], step: u64| -> crate::Result<()> {
+        let meta = shard::ShardMeta {
+            tag: a.tag.clone(),
+            worker_id: a.worker_id,
+            n_workers: a.n_workers,
+            step,
+            group_start: a.group_start,
+            group_end: a.group_end,
+            layers: a.layers[group.clone()].to_vec(),
+        };
+        shard::save(&meta, &weights[group.clone()], &path)
+    };
+
+    for t in start_step..final_step {
+        let (loss, grads) = task.shard_grads(&weights, t, a.worker_id as u64);
+        write_msg(&mut stream, &Msg::Grads { step: t, loss, mats: grads })?;
+        let reduced = loop {
+            match read_msg(&mut stream)? {
+                Msg::Heartbeat { nonce } => write_msg(&mut stream, &Msg::HeartbeatAck { nonce })?,
+                Msg::ReducedGrads { step, loss: _, mats } => {
+                    anyhow::ensure!(
+                        step == t && mats.len() == weights.len(),
+                        "ReducedGrads for step {step} ({} tensors) at local step {t}",
+                        mats.len()
+                    );
+                    break mats;
+                }
+                Msg::Shutdown { reason } => {
+                    return Ok(WorkerReport {
+                        worker_id: cfg.id,
+                        steps_run: t - start_step,
+                        final_step: t,
+                        shutdown_reason: reason,
+                        weights_fnv: weights_fingerprint(&weights),
+                    })
+                }
+                Msg::Error { detail } => anyhow::bail!("coordinator error: {detail}"),
+                m => anyhow::bail!("unexpected {} while waiting for ReducedGrads", m.name()),
+            }
+        };
+        {
+            let mut refs: Vec<&mut Mat> = weights.iter_mut().collect();
+            opt.step_parallel(pool, &mut refs, &reduced, 1.0);
+        }
+        for idx in 0..weights.len() {
+            opt.finalize_weights(idx, &mut weights[idx]);
+        }
+        opt.end_step();
+
+        // Mid-run checkpoint barrier: both sides derive the cadence from the
+        // assignment, so the worker knows exactly when a Checkpoint frame is
+        // next on the stream — no speculative reads, no buffering.
+        let due = a.ckpt_every > 0 && (t + 1 - start_step) % a.ckpt_every == 0 && t + 1 != final_step;
+        if due {
+            if let Some(report) = checkpoint_barrier(cfg, &mut stream, t + 1, &weights, &save_shard, start_step)? {
+                return Ok(report);
+            }
+        }
+    }
+
+    // Session end: final checkpoint barrier (always — this is what resume
+    // reads), then hand the group state back and wait for Shutdown.
+    if let Some(report) = checkpoint_barrier(cfg, &mut stream, final_step, &weights, &save_shard, start_step)? {
+        return Ok(report);
+    }
+    write_msg(
+        &mut stream,
+        &Msg::GroupState {
+            step: final_step,
+            mats: weights[group.clone()].to_vec(),
+        },
+    )?;
+    let reason = loop {
+        match read_msg(&mut stream)? {
+            Msg::Heartbeat { nonce } => write_msg(&mut stream, &Msg::HeartbeatAck { nonce })?,
+            Msg::Shutdown { reason } => break reason,
+            Msg::Error { detail } => anyhow::bail!("coordinator error: {detail}"),
+            m => anyhow::bail!("unexpected {} while waiting for Shutdown", m.name()),
+        }
+    };
+    log_info!(
+        "worker {} done: steps {}..{} ({})",
+        cfg.id,
+        start_step,
+        final_step,
+        reason
+    );
+    Ok(WorkerReport {
+        worker_id: cfg.id,
+        steps_run: final_step - start_step,
+        final_step,
+        shutdown_reason: reason,
+        weights_fnv: weights_fingerprint(&weights),
+    })
+}
+
+/// Wait for the coordinator's `Checkpoint {step}` frame, persist the shard,
+/// acknowledge. Returns `Some(report)` if the coordinator shut the session
+/// down instead.
+fn checkpoint_barrier(
+    cfg: &WorkerCfg,
+    stream: &mut TcpStream,
+    step: u64,
+    weights: &[Mat],
+    save_shard: &dyn Fn(&[Mat], u64) -> crate::Result<()>,
+    start_step: u64,
+) -> crate::Result<Option<WorkerReport>> {
+    loop {
+        match read_msg(stream)? {
+            Msg::Heartbeat { nonce } => write_msg(stream, &Msg::HeartbeatAck { nonce })?,
+            Msg::Checkpoint { step: s } => {
+                anyhow::ensure!(s == step, "Checkpoint for step {s}, expected {step}");
+                save_shard(weights, step)?;
+                write_msg(stream, &Msg::Ack { step })?;
+                return Ok(None);
+            }
+            Msg::Shutdown { reason } => {
+                return Ok(Some(WorkerReport {
+                    worker_id: cfg.id,
+                    steps_run: step.saturating_sub(start_step),
+                    final_step: step,
+                    shutdown_reason: reason,
+                    weights_fnv: weights_fingerprint(weights),
+                }))
+            }
+            Msg::Error { detail } => anyhow::bail!("coordinator error: {detail}"),
+            m => anyhow::bail!("unexpected {} while waiting for Checkpoint", m.name()),
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! Multi-process cluster run configuration ([`ClusterCfg`]).
+//!
+//! One struct describes a whole data-parallel run: every worker receives it
+//! (embedded in the `AssignShards` message) from the coordinator, so a run
+//! is fully specified by the coordinator's config file plus each worker's
+//! `--id`. Loadable from JSON (`--cfg cluster.json`) with CLI flag
+//! overrides on top, like the other config types.
+
+use crate::util::json::Json;
+
+use super::{OptimCfg, OptimKind};
+
+/// Everything a coordinator needs to drive a data-parallel cluster run, and
+/// everything a worker needs to reproduce its deterministic slice of it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterCfg {
+    /// Data-parallel worker process count N (gradient shards).
+    pub workers: usize,
+    /// Model preset name (`ModelCfg::preset`) defining the layer set.
+    pub preset: String,
+    /// Optimization steps to run this session.
+    pub steps: usize,
+    /// Master seed: weight init and every per-(step, shard, layer) gradient
+    /// noise stream derive from it order-independently.
+    pub seed: u64,
+    /// Gradient noise scale σ of the synthetic quadratic task (0 ⇒ shards
+    /// are identical and the mean is trivial; >0 makes the all-reduce earn
+    /// its keep).
+    pub sigma: f32,
+    /// Optimizer run by every worker (replicated state, identical updates).
+    pub optim: OptimCfg,
+    /// Coordinator bind / worker connect address.
+    pub bind: String,
+    /// Checkpoint every this many steps (0 ⇒ only at run end).
+    pub ckpt_every: usize,
+    /// Directory for per-shard checkpoint files.
+    pub ckpt_dir: String,
+    /// Coordinator sends a heartbeat every this many steps (0 ⇒ off).
+    pub heartbeat_every: usize,
+    /// Coordinator-side socket read/write timeout (ms). This is the dead
+    /// worker detector: a worker silent for longer fails the step cleanly.
+    pub io_timeout_ms: u64,
+    /// How long the coordinator waits for all N workers to join (ms).
+    pub join_timeout_ms: u64,
+    /// Resume workers from their shard checkpoint files.
+    pub resume: bool,
+}
+
+impl Default for ClusterCfg {
+    fn default() -> ClusterCfg {
+        ClusterCfg {
+            workers: 2,
+            preset: "nano".to_string(),
+            steps: 20,
+            seed: 42,
+            sigma: 0.01,
+            optim: OptimCfg::new(OptimKind::Sumo)
+                .with_lr(2e-2)
+                .with_rank(4)
+                .with_update_freq(10),
+            bind: "127.0.0.1:7700".to_string(),
+            ckpt_every: 0,
+            ckpt_dir: "cluster_ckpt".to_string(),
+            heartbeat_every: 16,
+            io_timeout_ms: 5000,
+            join_timeout_ms: 30_000,
+            resume: false,
+        }
+    }
+}
+
+impl ClusterCfg {
+    /// Serialize to the JSON object `from_json` accepts.
+    ///
+    /// `seed` travels through JSON's f64 number space; seeds above 2^53
+    /// would lose bits, so keep them below that (the default and every test
+    /// seed are tiny).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("workers", Json::num(self.workers as f64)),
+            ("preset", Json::str(&self.preset)),
+            ("steps", Json::num(self.steps as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("sigma", Json::num(self.sigma as f64)),
+            ("optim", self.optim.to_json()),
+            ("bind", Json::str(&self.bind)),
+            ("ckpt_every", Json::num(self.ckpt_every as f64)),
+            ("ckpt_dir", Json::str(&self.ckpt_dir)),
+            ("heartbeat_every", Json::num(self.heartbeat_every as f64)),
+            ("io_timeout_ms", Json::num(self.io_timeout_ms as f64)),
+            ("join_timeout_ms", Json::num(self.join_timeout_ms as f64)),
+            ("resume", Json::Bool(self.resume)),
+        ])
+    }
+
+    /// Parse from JSON; every absent key keeps its default, so a partial
+    /// config file (or `{}`) is valid.
+    pub fn from_json(j: &Json) -> Option<ClusterCfg> {
+        let mut cfg = ClusterCfg::default();
+        if let Some(x) = j.get("workers").as_usize() {
+            cfg.workers = x;
+        }
+        if let Some(s) = j.get("preset").as_str() {
+            cfg.preset = s.to_string();
+        }
+        if let Some(x) = j.get("steps").as_usize() {
+            cfg.steps = x;
+        }
+        if let Some(x) = j.get("seed").as_f64() {
+            cfg.seed = x as u64;
+        }
+        if let Some(x) = j.get("sigma").as_f64() {
+            cfg.sigma = x as f32;
+        }
+        if !matches!(j.get("optim"), Json::Null) {
+            cfg.optim = OptimCfg::from_json(j.get("optim"))?;
+        }
+        if let Some(s) = j.get("bind").as_str() {
+            cfg.bind = s.to_string();
+        }
+        if let Some(x) = j.get("ckpt_every").as_usize() {
+            cfg.ckpt_every = x;
+        }
+        if let Some(s) = j.get("ckpt_dir").as_str() {
+            cfg.ckpt_dir = s.to_string();
+        }
+        if let Some(x) = j.get("heartbeat_every").as_usize() {
+            cfg.heartbeat_every = x;
+        }
+        if let Some(x) = j.get("io_timeout_ms").as_f64() {
+            cfg.io_timeout_ms = x as u64;
+        }
+        if let Some(x) = j.get("join_timeout_ms").as_f64() {
+            cfg.join_timeout_ms = x as u64;
+        }
+        if let Some(x) = j.get("resume").as_bool() {
+            cfg.resume = x;
+        }
+        Some(cfg)
+    }
+
+    /// Load from a JSON file.
+    pub fn load(path: &str) -> crate::Result<ClusterCfg> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read cluster config {path}: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("bad JSON in {path}: {e}"))?;
+        ClusterCfg::from_json(&j).ok_or_else(|| anyhow::anyhow!("bad cluster config in {path}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let mut cfg = ClusterCfg {
+            workers: 3,
+            preset: "micro".to_string(),
+            steps: 55,
+            seed: 7,
+            sigma: 0.125,
+            bind: "127.0.0.1:9000".to_string(),
+            ckpt_every: 10,
+            ckpt_dir: "/tmp/shards".to_string(),
+            heartbeat_every: 4,
+            io_timeout_ms: 1500,
+            join_timeout_ms: 9000,
+            resume: true,
+            ..ClusterCfg::default()
+        };
+        cfg.optim = OptimCfg::new(OptimKind::GaLore).with_lr(1e-2);
+        let j = cfg.to_json();
+        assert_eq!(ClusterCfg::from_json(&j).unwrap(), cfg);
+    }
+
+    #[test]
+    fn partial_json_keeps_defaults() {
+        let j = Json::parse(r#"{"workers": 4, "steps": 3}"#).unwrap();
+        let cfg = ClusterCfg::from_json(&j).unwrap();
+        let dflt = ClusterCfg::default();
+        assert_eq!(cfg.workers, 4);
+        assert_eq!(cfg.steps, 3);
+        assert_eq!(cfg.preset, dflt.preset);
+        assert_eq!(cfg.optim, dflt.optim);
+        assert_eq!(ClusterCfg::from_json(&Json::parse("{}").unwrap()).unwrap(), dflt);
+    }
+
+    #[test]
+    fn bad_optim_rejects() {
+        let j = Json::parse(r#"{"optim": {"kind": "shampoo-9000"}}"#).unwrap();
+        assert!(ClusterCfg::from_json(&j).is_none());
+    }
+}

@@ -5,6 +5,8 @@
 //! flags + named presets — the launcher pattern of Megatron/MaxText-style
 //! frameworks scaled to this repo.
 
+/// Multi-process cluster run configuration ([`ClusterCfg`]).
+pub mod cluster_cfg;
 /// Transformer architecture presets ([`ModelCfg`], [`TaskHead`]).
 pub mod model_cfg;
 /// Optimizer hyperparameters ([`OptimCfg`], [`OptimKind`]).
@@ -12,6 +14,7 @@ pub mod optim_cfg;
 /// Training-run configuration ([`TrainCfg`], [`Schedule`]).
 pub mod train_cfg;
 
+pub use cluster_cfg::ClusterCfg;
 pub use model_cfg::{ModelCfg, TaskHead};
 pub use optim_cfg::{OptimCfg, OptimKind};
 pub use train_cfg::{Schedule, TrainCfg};

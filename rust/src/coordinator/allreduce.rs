@@ -1,13 +1,20 @@
 //! Gradient all-reduce across data-parallel shards.
 //!
 //! On this single-process testbed shards are batch splits; the reduction
-//! tree is the same code a multi-host deployment would run per bucket.
+//! tree is the same code a multi-host deployment would run per bucket —
+//! and the cluster coordinator (`cluster::coordinator`) runs exactly this
+//! function over the per-worker gradients it collects off the wire.
 
 use crate::linalg::Mat;
 
 /// Average a set of per-shard gradients in place into the first one.
 /// Tree reduction: pairwise sums, then scale — O(log n) depth.
-pub fn allreduce_mean(shards: &mut Vec<Vec<Mat>>) -> Vec<Mat> {
+///
+/// Takes a slice (the caller keeps ownership of the outer collection; the
+/// shard gradients themselves are consumed — shard 0 is moved out as the
+/// result and the rest are left summed-into/unchanged but semantically
+/// spent).
+pub fn allreduce_mean(shards: &mut [Vec<Mat>]) -> Vec<Mat> {
     assert!(!shards.is_empty());
     let n = shards.len();
     let mut stride = 1;
@@ -25,7 +32,7 @@ pub fn allreduce_mean(shards: &mut Vec<Vec<Mat>>) -> Vec<Mat> {
         }
         stride *= 2;
     }
-    let mut out = shards.swap_remove(0);
+    let mut out = std::mem::take(&mut shards[0]);
     let scale = 1.0 / n as f32;
     for g in out.iter_mut() {
         g.scale(scale);
@@ -38,18 +45,27 @@ mod tests {
     use super::*;
     use crate::util::Rng;
 
+    /// Dense reference mean for comparison against the tree reduction.
+    fn reference_mean(shards: &[Vec<Mat>]) -> Vec<Mat> {
+        let n = shards.len() as f32;
+        let mut want: Vec<Mat> = shards[0]
+            .iter()
+            .map(|m| Mat::zeros(m.rows, m.cols))
+            .collect();
+        for s in shards {
+            for (w, g) in want.iter_mut().zip(s.iter()) {
+                w.axpy(1.0 / n, g);
+            }
+        }
+        want
+    }
+
     #[test]
     fn mean_of_shards() {
         let mut rng = Rng::new(1);
         let make = |rng: &mut Rng| vec![Mat::randn(4, 3, 1.0, rng), Mat::randn(2, 2, 1.0, rng)];
         let shards: Vec<Vec<Mat>> = (0..5).map(|_| make(&mut rng)).collect();
-        // Reference mean.
-        let mut want = vec![Mat::zeros(4, 3), Mat::zeros(2, 2)];
-        for s in &shards {
-            for (w, g) in want.iter_mut().zip(s.iter()) {
-                w.axpy(1.0 / 5.0, g);
-            }
-        }
+        let want = reference_mean(&shards);
         let mut shards = shards;
         let got = allreduce_mean(&mut shards);
         for (g, w) in got.iter().zip(want.iter()) {
@@ -64,6 +80,42 @@ mod tests {
         let mut shards = vec![vec![g.clone()]];
         let got = allreduce_mean(&mut shards);
         assert!(got[0].max_diff(&g) < 1e-6);
+        // The slice signature must not shrink the outer collection; shard 0
+        // is moved out, not removed.
+        assert_eq!(shards.len(), 1);
+        assert!(shards[0].is_empty());
+    }
+
+    #[test]
+    fn non_power_of_two_counts() {
+        // 3, 5, 6, 7 shards exercise the ragged tail of the reduction tree
+        // (the path a cluster with a non-power-of-two worker count hits).
+        let mut rng = Rng::new(9);
+        for n in [3usize, 5, 6, 7] {
+            let shards: Vec<Vec<Mat>> =
+                (0..n).map(|_| vec![Mat::randn(6, 4, 1.0, &mut rng)]).collect();
+            let want = reference_mean(&shards);
+            let mut work = shards;
+            let got = allreduce_mean(&mut work);
+            assert_eq!(work.len(), n, "outer slice must keep its length");
+            for (g, w) in got.iter().zip(want.iter()) {
+                assert!(g.max_diff(w) < 1e-5, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn works_through_plain_slices() {
+        // The cluster collects gradients into a fixed array, not a Vec that
+        // can be resized — the `&mut [Vec<Mat>]` signature must accept it.
+        let mut rng = Rng::new(4);
+        let mut work: [Vec<Mat>; 2] = [
+            vec![Mat::randn(3, 3, 1.0, &mut rng)],
+            vec![Mat::randn(3, 3, 1.0, &mut rng)],
+        ];
+        let want = reference_mean(&work);
+        let got = allreduce_mean(&mut work);
+        assert!(got[0].max_diff(&want[0]) < 1e-6);
     }
 
     #[test]

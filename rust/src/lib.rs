@@ -49,6 +49,7 @@ pub mod bench;
 /// `sumo` launcher CLI (arg parsing + subcommands).
 #[allow(missing_docs)]
 pub mod cli;
+pub mod cluster;
 pub mod config;
 /// Training coordinator: parameter store, gradient scheduling, all-reduce.
 #[allow(missing_docs)]

@@ -1,12 +1,18 @@
 //! Checkpoint I/O: a simple self-describing binary format
 //! (magic + JSON header + raw little-endian f32 payloads).
+//!
+//! Framing and payload primitives come from [`crate::util::codec`], the
+//! serialization facade shared with the cluster wire protocol and shard
+//! checkpoints. The on-disk format predates the facade and is pinned
+//! byte-for-byte by the `golden_bytes` test below.
 
 use std::fs::File;
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{BufReader, BufWriter, Write};
 use std::path::Path;
 
 use crate::config::ModelCfg;
 use crate::linalg::Mat;
+use crate::util::codec;
 use crate::util::json::Json;
 
 use super::ParamStore;
@@ -19,7 +25,7 @@ pub fn save<P: AsRef<Path>>(store: &ParamStore, step: usize, path: P) -> crate::
         std::fs::create_dir_all(dir)?;
     }
     let mut w = BufWriter::new(File::create(path)?);
-    w.write_all(MAGIC)?;
+    codec::write_magic(&mut w, MAGIC)?;
     let header = Json::obj(vec![
         ("cfg", store.cfg.to_json()),
         ("step", Json::num(step as f64)),
@@ -35,12 +41,10 @@ pub fn save<P: AsRef<Path>>(store: &ParamStore, step: usize, path: P) -> crate::
         ),
     ]);
     let htext = header.dump();
-    w.write_all(&(htext.len() as u64).to_le_bytes())?;
+    codec::write_u64_le(&mut w, htext.len() as u64)?;
     w.write_all(htext.as_bytes())?;
     for (_, t) in &store.tensors {
-        for &x in &t.data {
-            w.write_all(&x.to_le_bytes())?;
-        }
+        codec::write_f32s(&mut w, &t.data)?;
     }
     w.flush()?;
     Ok(())
@@ -56,15 +60,10 @@ pub fn load<P: AsRef<Path>>(path: P) -> crate::Result<(ParamStore, usize)> {
     let file = File::open(path)?;
     let file_len = file.metadata()?.len();
     let mut r = BufReader::new(file);
-    let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
-    anyhow::ensure!(&magic == MAGIC, "not a SUMO checkpoint");
-    let mut len8 = [0u8; 8];
-    r.read_exact(&mut len8)?;
-    let hlen = u64::from_le_bytes(len8) as usize;
+    codec::expect_magic(&mut r, MAGIC, "SUMO checkpoint")?;
+    let hlen = codec::read_u64_le(&mut r)? as usize;
     anyhow::ensure!(hlen < 16 << 20, "header too large");
-    let mut hbytes = vec![0u8; hlen];
-    r.read_exact(&mut hbytes)?;
+    let hbytes = codec::read_vec(&mut r, hlen)?;
     let header = Json::parse(std::str::from_utf8(&hbytes)?)
         .map_err(|e| anyhow::anyhow!("bad header: {e}"))?;
     let cfg = ModelCfg::from_json(header.get("cfg"))
@@ -92,12 +91,7 @@ pub fn load<P: AsRef<Path>>(path: P) -> crate::Result<(ParamStore, usize)> {
              remain in the file — truncated or corrupt checkpoint header"
         );
         payload_off += bytes;
-        let mut data = vec![0f32; rows * cols];
-        let mut buf = vec![0u8; rows * cols * 4];
-        r.read_exact(&mut buf)?;
-        for (i, chunk) in buf.chunks_exact(4).enumerate() {
-            data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
-        }
+        let data = codec::read_f32s(&mut r, rows * cols)?;
         tensors.push((name, Mat::from_vec(rows, cols, data)));
     }
     Ok((ParamStore { cfg, tensors }, step))
@@ -119,6 +113,56 @@ mod tests {
         assert_eq!(loaded.cfg, cfg);
         assert_eq!(loaded.max_diff(&store), 0.0);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn golden_bytes_pin_on_disk_format() {
+        // The exact byte layout is a compatibility contract (old checkpoints
+        // must keep loading after the codec extraction), so it is pinned
+        // here byte-for-byte: magic, u64 LE header length, compact JSON
+        // header with sorted keys, then raw LE f32 payloads in tensor order.
+        let cfg = ModelCfg::preset("nano").unwrap();
+        let store = ParamStore {
+            cfg,
+            tensors: vec![
+                ("a".to_string(), Mat::from_vec(1, 2, vec![1.0, -2.0])),
+                ("b".to_string(), Mat::from_vec(2, 1, vec![0.5, 0.25])),
+            ],
+        };
+        let dir = std::env::temp_dir().join("sumo_ckpt_golden");
+        let path = dir.join("golden.ckpt");
+        save(&store, 9, &path).unwrap();
+        let got = std::fs::read(&path).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+
+        let header = concat!(
+            r#"{"cfg":{"d_ff":176,"d_model":64,"head":"lm","n_layers":2,"#,
+            r#""n_heads":4,"name":"nano","seq_len":32,"vocab":256},"step":9,"#,
+            r#""tensors":[{"cols":2,"name":"a","rows":1},"#,
+            r#"{"cols":1,"name":"b","rows":2}]}"#
+        );
+        let mut want = Vec::new();
+        want.extend_from_slice(b"SUMOCKP1");
+        want.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        want.extend_from_slice(header.as_bytes());
+        for x in [1.0f32, -2.0, 0.5, 0.25] {
+            want.extend_from_slice(&x.to_le_bytes());
+        }
+        assert_eq!(got, want, "checkpoint byte layout drifted");
+
+        let (loaded, step) = {
+            let dir = std::env::temp_dir().join("sumo_ckpt_golden2");
+            let path = dir.join("golden.ckpt");
+            std::fs::create_dir_all(&dir).unwrap();
+            std::fs::write(&path, &want).unwrap();
+            let out = load(&path).unwrap();
+            std::fs::remove_dir_all(&dir).ok();
+            out
+        };
+        assert_eq!(step, 9);
+        assert_eq!(loaded.tensors.len(), 2);
+        assert_eq!(loaded.tensors[0].1.data, vec![1.0, -2.0]);
+        assert_eq!(loaded.tensors[1].1.data, vec![0.5, 0.25]);
     }
 
     #[test]

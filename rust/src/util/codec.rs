@@ -1,0 +1,363 @@
+//! One serialization facade for every binary surface of the framework.
+//!
+//! Three byte formats share the exact same primitives and the same hostile-
+//! input discipline (every size a header *claims* is validated against the
+//! bytes actually *present* before any buffer is allocated):
+//!
+//! * the checkpoint file format (`model::checkpoint` — magic + u64 LE
+//!   length-prefixed JSON header + raw LE f32 payloads),
+//! * the cluster shard-checkpoint files (`cluster::shard` — same framing,
+//!   different magic/header), and
+//! * the cluster wire protocol (`cluster::messages` — length-prefixed typed
+//!   frames decoded through [`ByteReader`]).
+//!
+//! The writer side is infallible in memory ([`ByteWriter`]) and thin over
+//! `io::Write` for streams; the reader side returns a clean error (never a
+//! panic, never an attempted multi-GB allocation) on truncated, oversized,
+//! or otherwise malformed input.
+
+use std::io::{Read, Write};
+
+use crate::linalg::Mat;
+
+// ---------------------------------------------------------------------------
+// In-memory building of binary payloads.
+// ---------------------------------------------------------------------------
+
+/// Append-only little-endian byte buffer for building binary payloads.
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    /// Empty buffer.
+    pub fn new() -> ByteWriter {
+        ByteWriter::default()
+    }
+
+    /// Bytes written so far.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when nothing has been written.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Consume the writer, returning the built bytes.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Append one byte.
+    pub fn put_u8(&mut self, x: u8) {
+        self.buf.push(x);
+    }
+
+    /// Append a little-endian u32.
+    pub fn put_u32(&mut self, x: u32) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    /// Append a little-endian u64.
+    pub fn put_u64(&mut self, x: u64) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    /// Append a little-endian f32.
+    pub fn put_f32(&mut self, x: f32) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    /// Append raw bytes (no length prefix).
+    pub fn put_bytes(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Append a u64 length prefix followed by the string's UTF-8 bytes.
+    pub fn put_str(&mut self, s: &str) {
+        self.put_u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Append a matrix: u32 rows, u32 cols, then `rows*cols` LE f32 values.
+    pub fn put_mat(&mut self, m: &Mat) {
+        self.put_u32(m.rows as u32);
+        self.put_u32(m.cols as u32);
+        self.buf.reserve(m.data.len() * 4);
+        for &x in &m.data {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checked decoding of binary payloads.
+// ---------------------------------------------------------------------------
+
+/// Cursor over a byte slice with checked, allocation-guarded reads.
+///
+/// Every variable-size read validates the claimed size against both a
+/// caller-provided cap *and* the bytes remaining in the buffer **before**
+/// allocating — the discipline `checkpoint::load` established for hostile
+/// headers, shared here by the wire protocol.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    /// Read from the start of `buf`.
+    pub fn new(buf: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> crate::Result<&'a [u8]> {
+        anyhow::ensure!(
+            n <= self.remaining(),
+            "truncated payload: {what} needs {n} bytes, {} remain",
+            self.remaining()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Read one byte.
+    pub fn take_u8(&mut self, what: &str) -> crate::Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    /// Read a little-endian u32.
+    pub fn take_u32(&mut self, what: &str) -> crate::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    /// Read a little-endian u64.
+    pub fn take_u64(&mut self, what: &str) -> crate::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    /// Read a little-endian f32.
+    pub fn take_f32(&mut self, what: &str) -> crate::Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    /// Read a u64 length-prefixed UTF-8 string of at most `max_len` bytes.
+    pub fn take_str(&mut self, max_len: usize, what: &str) -> crate::Result<String> {
+        let len = self.take_u64(what)?;
+        anyhow::ensure!(
+            len <= max_len as u64,
+            "{what}: claimed string length {len} exceeds cap {max_len}"
+        );
+        let bytes = self.take(len as usize, what)?;
+        Ok(std::str::from_utf8(bytes)
+            .map_err(|e| anyhow::anyhow!("{what}: invalid UTF-8: {e}"))?
+            .to_string())
+    }
+
+    /// Read a matrix written by [`ByteWriter::put_mat`]. The claimed
+    /// `rows*cols` is validated (checked multiply, `max_elems` cap, and
+    /// payload actually present) before the element buffer is allocated.
+    pub fn take_mat(&mut self, max_elems: usize, what: &str) -> crate::Result<Mat> {
+        let rows = self.take_u32(what)? as usize;
+        let cols = self.take_u32(what)? as usize;
+        let elems = (rows as u64)
+            .checked_mul(cols as u64)
+            .ok_or_else(|| anyhow::anyhow!("{what}: {rows}x{cols} size overflows"))?;
+        anyhow::ensure!(
+            elems <= max_elems as u64,
+            "{what}: claimed {rows}x{cols} matrix exceeds element cap {max_elems}"
+        );
+        let nbytes = (elems as usize) * 4;
+        anyhow::ensure!(
+            nbytes <= self.remaining(),
+            "{what}: claimed {rows}x{cols} matrix needs {nbytes} bytes, {} remain",
+            self.remaining()
+        );
+        let bytes = self.take(nbytes, what)?;
+        let mut data = vec![0f32; elems as usize];
+        for (x, chunk) in data.iter_mut().zip(bytes.chunks_exact(4)) {
+            *x = f32::from_le_bytes(chunk.try_into().unwrap());
+        }
+        Ok(Mat::from_vec(rows, cols, data))
+    }
+
+    /// Error unless every byte has been consumed (catches frames that carry
+    /// trailing garbage after a well-formed prefix).
+    pub fn expect_end(&self, what: &str) -> crate::Result<()> {
+        anyhow::ensure!(
+            self.remaining() == 0,
+            "{what}: {} trailing bytes after payload",
+            self.remaining()
+        );
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stream (io::Read / io::Write) primitives shared by the file formats.
+// ---------------------------------------------------------------------------
+
+/// Write a magic tag.
+pub fn write_magic<W: Write>(w: &mut W, magic: &[u8]) -> crate::Result<()> {
+    w.write_all(magic)?;
+    Ok(())
+}
+
+/// Read and verify a magic tag; `what` names the format for the error.
+pub fn expect_magic<R: Read>(r: &mut R, magic: &[u8], what: &str) -> crate::Result<()> {
+    let mut got = vec![0u8; magic.len()];
+    r.read_exact(&mut got)?;
+    anyhow::ensure!(got == magic, "not a {what} (bad magic)");
+    Ok(())
+}
+
+/// Write a little-endian u64.
+pub fn write_u64_le<W: Write>(w: &mut W, x: u64) -> crate::Result<()> {
+    w.write_all(&x.to_le_bytes())?;
+    Ok(())
+}
+
+/// Read a little-endian u64.
+pub fn read_u64_le<R: Read>(r: &mut R) -> crate::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Read exactly `n` bytes into a fresh buffer. Callers must validate `n`
+/// against a cap (and, for files, the bytes actually present) first.
+pub fn read_vec<R: Read>(r: &mut R, n: usize) -> crate::Result<Vec<u8>> {
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+/// Write a slice of f32 values as raw little-endian bytes.
+pub fn write_f32s<W: Write>(w: &mut W, xs: &[f32]) -> crate::Result<()> {
+    for &x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Read exactly `n` little-endian f32 values. Callers must validate `n`
+/// before this allocates (`checkpoint::load` checks the header's claimed
+/// sizes against the file length first).
+pub fn read_f32s<R: Read>(r: &mut R, n: usize) -> crate::Result<Vec<f32>> {
+    let bytes = read_vec(r, n * 4)?;
+    let mut data = vec![0f32; n];
+    for (x, chunk) in data.iter_mut().zip(bytes.chunks_exact(4)) {
+        *x = f32::from_le_bytes(chunk.try_into().unwrap());
+    }
+    Ok(data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip_all_primitives() {
+        let mut rng = Rng::new(11);
+        let m = Mat::randn(5, 3, 1.0, &mut rng);
+        let mut w = ByteWriter::new();
+        w.put_u8(7);
+        w.put_u32(0xDEAD_BEEF);
+        w.put_u64(u64::MAX - 3);
+        w.put_f32(-0.5);
+        w.put_str("héllo");
+        w.put_mat(&m);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.take_u8("a").unwrap(), 7);
+        assert_eq!(r.take_u32("b").unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.take_u64("c").unwrap(), u64::MAX - 3);
+        assert_eq!(r.take_f32("d").unwrap(), -0.5);
+        assert_eq!(r.take_str(64, "e").unwrap(), "héllo");
+        let got = r.take_mat(1 << 20, "f").unwrap();
+        assert_eq!(got.shape(), m.shape());
+        assert_eq!(got.data, m.data);
+        r.expect_end("frame").unwrap();
+    }
+
+    #[test]
+    fn oversized_claims_rejected_before_allocation() {
+        // A string claiming more bytes than the cap.
+        let mut w = ByteWriter::new();
+        w.put_u64(1 << 40);
+        let bytes = w.into_bytes();
+        let err = ByteReader::new(&bytes).take_str(1024, "s").unwrap_err();
+        assert!(err.to_string().contains("exceeds cap"), "{err}");
+
+        // A string claiming more bytes than are present (under the cap).
+        let mut w = ByteWriter::new();
+        w.put_u64(100);
+        w.put_bytes(b"short");
+        let bytes = w.into_bytes();
+        let err = ByteReader::new(&bytes).take_str(1024, "s").unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err}");
+
+        // A matrix whose dims overflow u64 element count.
+        let mut w = ByteWriter::new();
+        w.put_u32(u32::MAX);
+        w.put_u32(u32::MAX);
+        let bytes = w.into_bytes();
+        let err = ByteReader::new(&bytes).take_mat(1 << 20, "m").unwrap_err();
+        assert!(err.to_string().contains("exceeds element cap"), "{err}");
+
+        // A matrix over the element cap.
+        let mut w = ByteWriter::new();
+        w.put_u32(1 << 16);
+        w.put_u32(1 << 16);
+        let bytes = w.into_bytes();
+        let err = ByteReader::new(&bytes).take_mat(1 << 20, "m").unwrap_err();
+        assert!(err.to_string().contains("exceeds element cap"), "{err}");
+
+        // A matrix under the cap but with no payload behind the claim.
+        let mut w = ByteWriter::new();
+        w.put_u32(64);
+        w.put_u32(64);
+        let bytes = w.into_bytes();
+        let err = ByteReader::new(&bytes).take_mat(1 << 20, "m").unwrap_err();
+        assert!(err.to_string().contains("remain"), "{err}");
+    }
+
+    #[test]
+    fn trailing_bytes_detected() {
+        let mut w = ByteWriter::new();
+        w.put_u32(1);
+        w.put_u8(0xFF);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        r.take_u32("x").unwrap();
+        assert!(r.expect_end("frame").unwrap_err().to_string().contains("trailing"));
+    }
+
+    #[test]
+    fn stream_helpers_roundtrip() {
+        let mut buf = Vec::new();
+        write_magic(&mut buf, b"TESTMAG1").unwrap();
+        write_u64_le(&mut buf, 42).unwrap();
+        write_f32s(&mut buf, &[1.0, -2.5, 3.25]).unwrap();
+        let mut r = std::io::Cursor::new(&buf);
+        expect_magic(&mut r, b"TESTMAG1", "test blob").unwrap();
+        assert_eq!(read_u64_le(&mut r).unwrap(), 42);
+        assert_eq!(read_f32s(&mut r, 3).unwrap(), vec![1.0, -2.5, 3.25]);
+
+        let mut r = std::io::Cursor::new(&buf);
+        assert!(expect_magic(&mut r, b"OTHERMAG", "test blob")
+            .unwrap_err()
+            .to_string()
+            .contains("bad magic"));
+    }
+}

@@ -4,6 +4,7 @@
 //! (rand, serde_json, env_logger, rayon, criterion plots) with tested,
 //! purpose-built modules.
 
+pub mod codec;
 pub mod json;
 pub mod logging;
 pub mod plot;

@@ -1,0 +1,227 @@
+//! Cluster wire-path integration tests: a real coordinator + real workers
+//! over localhost TCP, checked bitwise against the single-process
+//! reference, plus the failure paths (hostile frames, dead workers,
+//! inconsistent resume, kill-all) that must error cleanly instead of
+//! hanging.
+
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+use sumo::cluster::messages::{encode, read_msg, write_msg, Msg, HEADER_BYTES, WIRE_MAGIC};
+use sumo::cluster::worker::{WorkerCfg, WorkerReport};
+use sumo::cluster::{coordinator, local, task, weights_fingerprint, RunOutcome};
+use sumo::config::ClusterCfg;
+
+fn test_cfg(name: &str, workers: usize, steps: usize) -> ClusterCfg {
+    ClusterCfg {
+        workers,
+        steps,
+        sigma: 0.01,
+        heartbeat_every: 2,
+        io_timeout_ms: 4000,
+        join_timeout_ms: 10_000,
+        ckpt_dir: std::env::temp_dir()
+            .join(format!("sumo_cluster_{name}"))
+            .to_string_lossy()
+            .into_owned(),
+        ..ClusterCfg::default()
+    }
+}
+
+/// Bind port 0, run the coordinator on a thread, and hand the real address
+/// to the caller so workers can be pointed at it.
+fn spawn_coordinator(
+    cfg: ClusterCfg,
+) -> (String, std::thread::JoinHandle<sumo::Result<RunOutcome>>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || coordinator::run_on(&cfg, listener));
+    (addr, handle)
+}
+
+fn spawn_worker(
+    id: u32,
+    addr: &str,
+) -> std::thread::JoinHandle<sumo::Result<WorkerReport>> {
+    let cfg = WorkerCfg::new(id, addr);
+    std::thread::spawn(move || sumo::cluster::worker::run(&cfg))
+}
+
+#[test]
+fn loopback_run_is_bitwise_identical_to_single_process() {
+    let mut cfg = test_cfg("loopback", 2, 8);
+    cfg.ckpt_every = 3; // exercise the mid-run checkpoint barrier too
+    std::fs::remove_dir_all(&cfg.ckpt_dir).ok();
+
+    let (addr, coord) = spawn_coordinator(cfg.clone());
+    let w0 = spawn_worker(0, &addr);
+    let w1 = spawn_worker(1, &addr);
+    let outcome = coord.join().unwrap().expect("coordinator failed");
+    let r0 = w0.join().unwrap().expect("worker 0 failed");
+    let r1 = w1.join().unwrap().expect("worker 1 failed");
+
+    let reference = local::run_local(&cfg).unwrap();
+    assert_eq!(outcome.start_step, 0);
+    assert_eq!(outcome.final_step, 8);
+    assert_eq!(
+        weights_fingerprint(&outcome.weights),
+        weights_fingerprint(&reference.weights),
+        "cluster weights must be bitwise identical to the single-process run"
+    );
+    assert_eq!(outcome.final_loss, reference.final_loss);
+    // Every worker's replicated weights match the coordinator's gather.
+    assert_eq!(r0.weights_fnv, weights_fingerprint(&outcome.weights));
+    assert_eq!(r1.weights_fnv, r0.weights_fnv);
+    assert_eq!((r0.steps_run, r1.steps_run), (8, 8));
+    assert_eq!(r0.shutdown_reason, "done");
+    // Both shard checkpoints exist (the final barrier always writes them).
+    for id in 0..2 {
+        assert!(sumo::cluster::shard::shard_path(&cfg.ckpt_dir, id, 2).exists());
+    }
+    std::fs::remove_dir_all(&cfg.ckpt_dir).ok();
+}
+
+#[test]
+fn resume_continues_from_shard_files_and_rejects_mismatched_steps() {
+    let mut cfg = test_cfg("resume", 2, 6);
+    std::fs::remove_dir_all(&cfg.ckpt_dir).ok();
+
+    // Session 1: fresh run, leaves shard files at step 6.
+    let (addr, coord) = spawn_coordinator(cfg.clone());
+    let (w0, w1) = (spawn_worker(0, &addr), spawn_worker(1, &addr));
+    let first = coord.join().unwrap().unwrap();
+    w0.join().unwrap().unwrap();
+    w1.join().unwrap().unwrap();
+    assert_eq!(first.final_step, 6);
+
+    // Session 2: resume + 4 more steps picks up at step 6.
+    cfg.resume = true;
+    cfg.steps = 4;
+    let (addr, coord) = spawn_coordinator(cfg.clone());
+    let (w0, w1) = (spawn_worker(0, &addr), spawn_worker(1, &addr));
+    let second = coord.join().unwrap().unwrap();
+    let r0 = w0.join().unwrap().unwrap();
+    w1.join().unwrap().unwrap();
+    assert_eq!(second.start_step, 6);
+    assert_eq!(second.final_step, 10);
+    assert_eq!(r0.final_step, 10);
+    assert_ne!(
+        weights_fingerprint(&second.weights),
+        weights_fingerprint(&first.weights),
+        "resumed session must make progress"
+    );
+
+    // Session 3: worker 1 resumes from an empty directory — its offer (step
+    // 0) disagrees with worker 0's (step 10) and the coordinator must fail
+    // with a clean reconciliation error, not mix the steps.
+    let empty = std::env::temp_dir().join("sumo_cluster_resume_empty");
+    std::fs::remove_dir_all(&empty).ok();
+    let (addr, coord) = spawn_coordinator(cfg.clone());
+    let w0 = spawn_worker(0, &addr);
+    let mut wc1 = WorkerCfg::new(1, &addr);
+    wc1.ckpt_dir = Some(empty.to_string_lossy().into_owned());
+    let w1 = std::thread::spawn(move || sumo::cluster::worker::run(&wc1));
+    let err = coord.join().unwrap().unwrap_err().to_string();
+    assert!(err.contains("inconsistent shard checkpoints"), "got: {err}");
+    // Both workers are released by the abort broadcast — no hang.
+    let r0 = w0.join().unwrap().unwrap();
+    assert!(r0.shutdown_reason.contains("aborted"), "got: {}", r0.shutdown_reason);
+    w1.join().unwrap().unwrap();
+    std::fs::remove_dir_all(&empty).ok();
+    std::fs::remove_dir_all(&cfg.ckpt_dir).ok();
+}
+
+#[test]
+fn killed_worker_times_out_cleanly_and_releases_survivors() {
+    let mut cfg = test_cfg("deadworker", 2, 50);
+    cfg.io_timeout_ms = 1000; // fast dead-worker detection for the test
+    std::fs::remove_dir_all(&cfg.ckpt_dir).ok();
+
+    let (addr, coord) = spawn_coordinator(cfg.clone());
+    let w0 = spawn_worker(0, &addr);
+    // "Zombie" worker 1: speaks the protocol through the handshake, then
+    // goes silent mid-run — the shape of a killed/hung process.
+    let zaddr = addr.clone();
+    let zombie = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(&zaddr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+        write_msg(&mut s, &Msg::Hello { worker_id: 1 }).unwrap();
+        let a = match read_msg(&mut s).unwrap() {
+            Msg::AssignShards(a) => *a,
+            m => panic!("expected assignment, got {}", m.name()),
+        };
+        let group = a.group_start as usize..a.group_end as usize;
+        let weights = task::init_weights(a.seed, &a.layers);
+        write_msg(
+            &mut s,
+            &Msg::GroupState { step: 0, mats: weights[group].to_vec() },
+        )
+        .unwrap();
+        match read_msg(&mut s).unwrap() {
+            Msg::SyncWeights { .. } => {}
+            m => panic!("expected SyncWeights, got {}", m.name()),
+        }
+        // Silence. Hold the socket open so only the timeout can detect us.
+        std::thread::sleep(Duration::from_secs(8));
+    });
+
+    let err = coord.join().unwrap().unwrap_err().to_string();
+    assert!(
+        err.contains("worker 1") && err.contains("timed out"),
+        "dead worker must surface a clean timeout naming the worker, got: {err}"
+    );
+    // The healthy worker is released by the abort broadcast.
+    let r0 = w0.join().unwrap().unwrap();
+    assert!(r0.shutdown_reason.contains("aborted"), "got: {}", r0.shutdown_reason);
+    zombie.join().unwrap();
+    std::fs::remove_dir_all(&cfg.ckpt_dir).ok();
+}
+
+#[test]
+fn kill_all_aborts_the_join_phase() {
+    let cfg = test_cfg("killall", 2, 10);
+    let (addr, coord) = spawn_coordinator(cfg);
+    coordinator::kill_all(&addr).unwrap();
+    let outcome = coord.join().unwrap().unwrap();
+    assert!(outcome.killed);
+    assert_eq!(outcome.fingerprint(), 0);
+}
+
+#[test]
+fn hostile_frames_are_rejected_before_allocation() {
+    // A length prefix claiming 2^60 bytes must be rejected from the header
+    // alone — decode never allocates the claimed size.
+    let mut frame = Vec::new();
+    frame.extend_from_slice(WIRE_MAGIC);
+    frame.push(1); // version
+    frame.push(1); // Hello tag
+    frame.extend_from_slice(&(1u64 << 60).to_le_bytes());
+    assert_eq!(frame.len(), HEADER_BYTES);
+    let err = sumo::cluster::messages::decode(&frame).unwrap_err().to_string();
+    assert!(err.contains("frame"), "got: {err}");
+
+    // Truncated payload: header promises more bytes than are present.
+    let mut good = encode(&Msg::Hello { worker_id: 3 });
+    good.truncate(good.len() - 2);
+    assert!(sumo::cluster::messages::decode(&good).is_err());
+
+    // Bad version byte.
+    let mut bad = encode(&Msg::Hello { worker_id: 3 });
+    bad[4] = 99;
+    let err = sumo::cluster::messages::decode(&bad).unwrap_err().to_string();
+    assert!(err.contains("version"), "got: {err}");
+
+    // And over a real socket: a coordinator that receives garbage during
+    // join drops the connection and keeps listening (then gets killed).
+    let cfg = test_cfg("hostile", 1, 5);
+    let (addr, coord) = spawn_coordinator(cfg);
+    {
+        use std::io::Write;
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
+    }
+    std::thread::sleep(Duration::from_millis(100));
+    coordinator::kill_all(&addr).unwrap();
+    let outcome = coord.join().unwrap().unwrap();
+    assert!(outcome.killed, "garbage connection must not take down the join");
+}
