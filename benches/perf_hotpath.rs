@@ -12,6 +12,8 @@
 //! accumulates across PRs.
 
 use sumo::bench::{bench_iters, TableWriter};
+use sumo::cluster::messages::{decode, encode, Msg};
+use sumo::cluster::model_layers;
 use sumo::config::{ModelCfg, OptimCfg, OptimKind};
 use sumo::coordinator::Coordinator;
 use sumo::data::{Batcher, SyntheticCorpus};
@@ -117,6 +119,30 @@ fn main() -> anyhow::Result<()> {
             let _ = randomized_range(&g, 16, RsvdOpts::default(), &mut r2);
         });
         timing_row(&mut t, "rsvd range (refresh)", "2048x256 r16", &s);
+    }
+
+    // Cluster wire codec at real LM gradient shapes: one `Grads` frame
+    // carrying a full nano gradient set — the payload every worker sends
+    // each round under `--task lm` — encoded and decoded back.
+    {
+        let mcfg = ModelCfg::preset("nano").unwrap();
+        let layers = model_layers(&mcfg);
+        let mats: Vec<Mat> = layers
+            .iter()
+            .map(|l| Mat::randn(l.rows, l.cols, 1.0, &mut rng))
+            .collect();
+        let nlayers = layers.len();
+        let msg = Msg::Grads { step: 7, loss: 3.25, mats };
+        let s = time_fn(1, bench_iters(8), || {
+            let frame = encode(&msg);
+            let _ = decode(&frame).unwrap();
+        });
+        timing_row(
+            &mut t,
+            "grads codec (encode+decode)",
+            &format!("nano {nlayers}T"),
+            &s,
+        );
     }
 
     // Dispatch overhead: the same worker-count parallel-for over trivial

@@ -17,13 +17,15 @@ SUBCOMMANDS:
   coordinator start the coordinator: bind, shard layers across N workers,
               drive lockstep rounds
               --cfg FILE (JSON ClusterCfg) --workers N --preset nano|...
-              --steps N --seed S --sigma X --bind HOST:PORT
+              --task synthetic|lm --steps N --seed S --sigma X --batch B
+              --bind HOST:PORT
               --optimizer sumo|galore|... --lr X --rank R --update-freq K
               --ckpt-every N --ckpt-dir DIR --heartbeat-every N
               --io-timeout-ms MS --join-timeout-ms MS --resume
   worker      start worker K and connect to a coordinator
-              --id K --connect HOST:PORT [--ckpt-dir DIR]
+              --id K --connect HOST:PORT [--cfg FILE] [--ckpt-dir DIR]
               [--io-timeout-ms MS] [--connect-attempts N] [--backoff-ms MS]
+              [--backoff-cap-ms MS]
   local       run the identical computation single-process (the bitwise
               reference for the loopback test); same options as coordinator
   kill-all    ask a running coordinator to abort its session
@@ -56,7 +58,9 @@ pub(crate) fn cluster_cfg_from(args: &Args) -> Result<ClusterCfg> {
     cfg.preset = args.get_or("preset", &cfg.preset);
     cfg.steps = args.usize_or("steps", cfg.steps)?;
     cfg.seed = args.u64_or("seed", cfg.seed)?;
+    cfg.task = args.get_or("task", &cfg.task);
     cfg.sigma = args.f32_or("sigma", cfg.sigma)?;
+    cfg.train.batch = args.usize_or("batch", cfg.train.batch)?;
     cfg.bind = args.get_or("bind", &cfg.bind);
     cfg.ckpt_every = args.usize_or("ckpt-every", cfg.ckpt_every)?;
     cfg.ckpt_dir = args.get_or("ckpt-dir", &cfg.ckpt_dir);
@@ -114,11 +118,17 @@ fn cmd_worker(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow::anyhow!("--connect HOST:PORT required"))?;
     let id = args.usize_or("id", usize::MAX)?;
     anyhow::ensure!(id != usize::MAX, "--id K required");
-    let mut wcfg = worker::WorkerCfg::new(id as u32, connect);
+    // A worker can reuse the coordinator's cluster config file for the
+    // connection-discipline knobs (timeouts/backoff); flags layer on top.
+    let mut wcfg = match args.get("cfg") {
+        Some(path) => worker::WorkerCfg::from_cluster(id as u32, connect, &ClusterCfg::load(path)?),
+        None => worker::WorkerCfg::new(id as u32, connect),
+    };
     wcfg.ckpt_dir = args.get("ckpt-dir").map(|s| s.to_string());
     wcfg.io_timeout_ms = args.u64_or("io-timeout-ms", wcfg.io_timeout_ms)?;
     wcfg.connect_attempts = args.u64_or("connect-attempts", wcfg.connect_attempts as u64)? as u32;
     wcfg.backoff_ms = args.u64_or("backoff-ms", wcfg.backoff_ms)?;
+    wcfg.backoff_cap_ms = args.u64_or("backoff-cap-ms", wcfg.backoff_cap_ms)?;
     let report = worker::run(&wcfg)?;
     println!(
         "worker {}: steps_run={} final_step={} reason={:?} weights_fnv=0x{:016x}",
@@ -179,6 +189,14 @@ mod tests {
     fn defaults_without_cfg_file() {
         let cfg = cluster_cfg_from(&parse(&["cluster", "local"])).unwrap();
         assert_eq!(cfg, ClusterCfg::default());
+    }
+
+    #[test]
+    fn task_and_batch_flags_reach_the_cfg() {
+        let a = parse(&["cluster", "local", "--task", "lm", "--batch", "4"]);
+        let cfg = cluster_cfg_from(&a).unwrap();
+        assert_eq!(cfg.task, "lm");
+        assert_eq!(cfg.train.batch, 4);
     }
 
     #[test]

@@ -19,8 +19,10 @@ USAGE: sumo <COMMAND> [OPTIONS]
 COMMANDS:
   train       pretrain a model on the synthetic C4-like corpus
               --preset nano|micro|mini|small  --optimizer sumo|galore|adam|...
-              --steps N --lr X --rank R --update-freq K --seed S
+              --steps N --batch B --lr X --rank R --update-freq K --seed S
               --dp N (data-parallel shards) --hlo (use the HLO SUMO engine)
+              --native (CPU fwd/bwd through the cluster round engine; no
+              artifacts needed, prints weights_fnv for cluster comparison)
               --save PATH (checkpoint) --csv PATH (loss curve)
   finetune    fine-tune on a synthetic GLUE task
               --task RTE|QNLI|SST2|... --preset micro --optimizer ... --steps N
@@ -101,6 +103,7 @@ pub fn default_lr(kind: OptimKind) -> f32 {
 fn train_cfg_from(args: &Args) -> Result<TrainCfg> {
     Ok(TrainCfg {
         steps: args.usize_or("steps", 100)?,
+        batch: args.usize_or("batch", 8)?,
         seed: args.u64_or("seed", 42)?,
         log_every: args.usize_or("log-every", 10)?,
         eval_every: args.usize_or("eval-every", 0)?,
@@ -115,11 +118,14 @@ fn train_cfg_from(args: &Args) -> Result<TrainCfg> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    let rt = Runtime::new(args.get_or("artifacts", "artifacts"))?;
     let preset = args.get_or("preset", "nano");
-    let model_id = format!("{preset}_lm");
     let ocfg = optim_cfg_from(args)?;
     let tcfg = train_cfg_from(args)?;
+    if args.has_flag("native") {
+        return cmd_train_native(args, &preset, &ocfg, tcfg);
+    }
+    let rt = Runtime::new(args.get_or("artifacts", "artifacts"))?;
+    let model_id = format!("{preset}_lm");
     log_info!(
         "train {model_id} optimizer={} steps={} (platform {})",
         ocfg.kind.name(),
@@ -147,6 +153,48 @@ fn cmd_train(args: &Args) -> Result<()> {
     );
     if let Some(path) = args.get("save") {
         checkpoint::save(&coord.params, report.steps, path)?;
+        log_info!("checkpoint saved to {path}");
+    }
+    Ok(())
+}
+
+/// `sumo train --native`: the real transformer forward/backward on the CPU
+/// path, driven through the cluster's round engine — no PJRT artifacts
+/// required. Prints `weights_fnv` so the result can be compared bitwise
+/// against `sumo cluster coordinator --task lm` on the same config.
+fn cmd_train_native(args: &Args, preset: &str, ocfg: &OptimCfg, tcfg: TrainCfg) -> Result<()> {
+    let model = crate::config::ModelCfg::preset(preset)
+        .ok_or_else(|| anyhow::anyhow!("unknown model preset {preset:?}"))?;
+    log_info!(
+        "train {preset} (native engine) optimizer={} steps={} dp={}",
+        ocfg.kind.name(),
+        tcfg.steps,
+        tcfg.dp_workers
+    );
+    let mut csv = match args.get("csv") {
+        Some(path) => Some(CsvWriter::create(path, &["step", "loss", "lr_mult", "seconds"])?),
+        None => None,
+    };
+    let steps = tcfg.steps;
+    let out = Trainer::new(tcfg).pretrain_native(&model, ocfg, csv.as_mut())?;
+    println!(
+        "final_loss={:.4} val_loss={:.4} val_ppl={:.2} tokens={} optim_state={:.2}MB \
+         wall={:.1}s weights_fnv=0x{:016x}",
+        out.report.final_loss,
+        out.report.val_loss,
+        out.report.val_ppl,
+        out.report.tokens_seen,
+        out.report.optimizer_state_bytes as f64 / 1e6,
+        out.report.seconds,
+        out.weights_fnv
+    );
+    if let Some(path) = args.get("save") {
+        let names = crate::cluster::model_layers(&model).into_iter().map(|l| l.name);
+        let store = crate::model::ParamStore {
+            cfg: model.clone(),
+            tensors: names.zip(out.weights).collect(),
+        };
+        checkpoint::save(&store, steps, path)?;
         log_info!("checkpoint saved to {path}");
     }
     Ok(())

@@ -17,8 +17,9 @@ use crate::coordinator::allreduce_mean;
 use crate::linalg::Mat;
 use crate::{log_info, log_warn};
 
-use super::messages::{encode, read_msg, write_frame, write_msg, Msg, ShardAssignment};
-use super::{model_layers, net, task, RunOutcome};
+use super::messages::{encode, read_msg, write_frame, write_msg, Msg, ShardAssignment, TaskDesc};
+use super::task::TrainTask;
+use super::{model_layers, net, task, task_desc, RunOutcome};
 
 /// Split layer element counts into `n` contiguous groups balanced by
 /// parameter count (each group non-empty). Returns `(start, end)` index
@@ -71,6 +72,8 @@ pub fn run_on(cfg: &ClusterCfg, listener: TcpListener) -> crate::Result<RunOutco
     let sizes: Vec<usize> = layers.iter().map(|l| l.rows * l.cols).collect();
     let groups = layer_groups(&sizes, cfg.workers);
     let n = cfg.workers;
+    let desc = task_desc(cfg)?;
+    let task = task::build_task(&desc, cfg.seed, &layers)?;
 
     // ---- Join phase: accept Hello from each worker id (or KillAll). ----
     listener.set_nonblocking(true)?;
@@ -85,7 +88,7 @@ pub fn run_on(cfg: &ClusterCfg, listener: TcpListener) -> crate::Result<RunOutco
         );
         match listener.accept() {
             Ok((stream, _)) => {
-                if admit(cfg, &mut slots, stream, &mut joined)? {
+                if admit(cfg, &desc, &mut slots, stream, &mut joined)? {
                     return killed_outcome(slots.iter_mut().filter_map(|s| s.as_mut()));
                 }
             }
@@ -96,7 +99,7 @@ pub fn run_on(cfg: &ClusterCfg, listener: TcpListener) -> crate::Result<RunOutco
         }
     }
     let mut streams: Vec<TcpStream> = slots.into_iter().map(|s| s.unwrap()).collect();
-    log_info!("cluster: {n} workers joined");
+    log_info!("cluster: {n} workers joined (task {})", desc.kind_name());
 
     // ---- Assignment + resume reconciliation. ----
     let optim_json = cfg.optim.to_json().dump();
@@ -107,7 +110,7 @@ pub fn run_on(cfg: &ClusterCfg, listener: TcpListener) -> crate::Result<RunOutco
             n_workers: n as u32,
             steps: cfg.steps as u64,
             seed: cfg.seed,
-            sigma: cfg.sigma,
+            task: desc.clone(),
             resume: cfg.resume,
             ckpt_every: cfg.ckpt_every as u64,
             ckpt_dir: cfg.ckpt_dir.clone(),
@@ -309,7 +312,7 @@ pub fn run_on(cfg: &ClusterCfg, listener: TcpListener) -> crate::Result<RunOutco
     for stream in streams.iter_mut() {
         let _ = write_frame(stream, &done);
     }
-    let final_loss = task::SyntheticTask::new(cfg.seed, cfg.sigma, &layers).loss(&weights);
+    let final_loss = task.eval_loss(&weights);
     log_info!(
         "cluster done: steps {start_step}..{final_step}, mean shard loss {last_loss:.6}, \
          final loss {final_loss:.6}"
@@ -328,6 +331,7 @@ pub fn run_on(cfg: &ClusterCfg, listener: TcpListener) -> crate::Result<RunOutco
 /// `true` if it was a `KillAll` control connection (already acked).
 fn admit(
     cfg: &ClusterCfg,
+    desc: &TaskDesc,
     slots: &mut [Option<TcpStream>],
     stream: TcpStream,
     joined: &mut usize,
@@ -337,7 +341,7 @@ fn admit(
     net::configure(&stream, cfg.io_timeout_ms)?;
     let mut stream = stream;
     match read_msg(&mut stream) {
-        Ok(Msg::Hello { worker_id }) => {
+        Ok(Msg::Hello { worker_id, task_support }) => {
             let id = worker_id as usize;
             if id >= slots.len() || slots[id].is_some() {
                 let detail = if id >= slots.len() {
@@ -345,6 +349,14 @@ fn admit(
                 } else {
                     format!("worker id {id} already joined")
                 };
+                let _ = write_msg(&mut stream, &Msg::Error { detail: detail.clone() });
+                anyhow::bail!("{detail}");
+            }
+            if task_support & desc.support_bit() == 0 {
+                let detail = format!(
+                    "worker {id} does not support the {} task (support mask {task_support:#04x})",
+                    desc.kind_name()
+                );
                 let _ = write_msg(&mut stream, &Msg::Error { detail: detail.clone() });
                 anyhow::bail!("{detail}");
             }
@@ -475,7 +487,7 @@ fn checkpoint_barrier(
 /// Connect to a coordinator and ask it to abort the run (`sumo cluster
 /// kill-all`). Succeeds once the coordinator acknowledges.
 pub fn kill_all(addr: &str) -> crate::Result<()> {
-    let mut stream = net::connect_retry(addr, 3, 50, 5000)?;
+    let mut stream = net::connect_retry(addr, 3, 50, 2000, 5000)?;
     write_msg(&mut stream, &Msg::KillAll)?;
     match read_msg(&mut stream)? {
         Msg::Ack { .. } => Ok(()),

@@ -1,23 +1,22 @@
-//! Single-process reference runner for the cluster's synthetic task.
+//! Single-process reference runner for the cluster's training tasks.
 //!
 //! Runs the *identical* computation the distributed cluster performs —
 //! same [`super::task::stream_seed`] streams, same
 //! [`crate::coordinator::allreduce_mean`] reduction, same optimizer build
-//! and step order — in one process with no sockets. The loopback
-//! integration test asserts the multi-process run's final weights are
-//! bitwise-identical to this reference; it is also the quickest way to
-//! smoke the cluster math locally (`sumo cluster local`).
+//! and the same shared [`super::round`] engine — in one process with no
+//! sockets. The loopback integration test asserts the multi-process run's
+//! final weights are bitwise-identical to this reference; it is also the
+//! quickest way to smoke the cluster math locally (`sumo cluster local`).
 
 use crate::config::{ClusterCfg, ModelCfg};
-use crate::coordinator::allreduce_mean;
-use crate::linalg::Mat;
 use crate::optim;
 use crate::util::threadpool;
 
-use super::{model_layers, task, RunOutcome};
+use super::round::{run_rounds, LocalShards, RoundCfg};
+use super::{model_layers, task, task_desc, RunOutcome};
 
 /// Run `cfg.steps` synchronous data-parallel steps in-process, with
-/// `cfg.workers` synthetic gradient shards per step.
+/// `cfg.workers` gradient shards per step of the configured task.
 pub fn run_local(cfg: &ClusterCfg) -> crate::Result<RunOutcome> {
     anyhow::ensure!(cfg.workers >= 1, "cluster needs at least one worker");
     let model = ModelCfg::preset(&cfg.preset)
@@ -30,30 +29,35 @@ pub fn run_local(cfg: &ClusterCfg) -> crate::Result<RunOutcome> {
         layers.len()
     );
 
+    let desc = task_desc(cfg)?;
+    let task = task::build_task(&desc, cfg.seed, &layers)?;
     let mut weights = task::init_weights(cfg.seed, &layers);
-    let task = task::SyntheticTask::new(cfg.seed, cfg.sigma, &layers);
     let shapes: Vec<(usize, usize)> = layers.iter().map(|l| (l.rows, l.cols)).collect();
     let projected: Vec<bool> = layers.iter().map(|l| l.projected).collect();
     let mut opt = optim::build(&cfg.optim, &shapes, &projected, cfg.seed);
-    let pool = threadpool::global();
 
-    for t in 0..cfg.steps as u64 {
-        let mut shard_grads: Vec<Vec<Mat>> = (0..cfg.workers as u64)
-            .map(|s| task.shard_grads(&weights, t, s).1)
-            .collect();
-        let reduced = allreduce_mean(&mut shard_grads);
-        let mut refs: Vec<&mut Mat> = weights.iter_mut().collect();
-        opt.step_parallel(pool, &mut refs, &reduced, 1.0);
-        for idx in 0..weights.len() {
-            opt.finalize_weights(idx, &mut weights[idx]);
-        }
-        opt.end_step();
-    }
+    let mut io = LocalShards {
+        shards: cfg.workers as u64,
+    };
+    let rcfg = RoundCfg {
+        start_step: 0,
+        steps: cfg.steps as u64,
+        ckpt_every: 0,
+    };
+    let out = run_rounds(
+        task.as_ref(),
+        opt.as_mut(),
+        threadpool::global(),
+        &mut weights,
+        &mut io,
+        &rcfg,
+        &mut |_, _, _| {},
+    )?;
 
-    let final_loss = task.loss(&weights);
+    let final_loss = task.eval_loss(&weights);
     Ok(RunOutcome {
         start_step: 0,
-        final_step: cfg.steps as u64,
+        final_step: out.final_step,
         final_loss,
         weights,
         layer_names: layers.into_iter().map(|l| l.name).collect(),
@@ -115,5 +119,33 @@ mod tests {
     #[test]
     fn rejects_more_workers_than_layers() {
         assert!(run_local(&cfg(10_000, 1)).is_err());
+    }
+
+    #[test]
+    fn lm_local_run_is_deterministic_and_descends() {
+        let mut c = cfg(2, 6);
+        c.task = "lm".to_string();
+        c.train.batch = 2;
+        c.train.eval_batches = 2;
+        let a = run_local(&c).unwrap();
+        let b = run_local(&c).unwrap();
+        assert_eq!(
+            weights_fingerprint(&a.weights),
+            weights_fingerprint(&b.weights),
+            "LM run must reproduce bitwise"
+        );
+        // The eval loss after 6 steps should beat the init weights' loss.
+        let model = ModelCfg::preset("nano").unwrap();
+        let layers = model_layers(&model);
+        let desc = task_desc(&c).unwrap();
+        let task = task::build_task(&desc, c.seed, &layers).unwrap();
+        let init_loss = task.eval_loss(&task::init_weights(c.seed, &layers));
+        assert!(
+            a.final_loss < init_loss,
+            "LM loss should descend: {} -> {}",
+            init_loss,
+            a.final_loss
+        );
+        assert_eq!(a.final_step, 6);
     }
 }

@@ -23,8 +23,9 @@ use crate::util::codec::{ByteReader, ByteWriter};
 
 /// Frame magic (`SUmo Wire Protocol`).
 pub const WIRE_MAGIC: &[u8; 4] = b"SUWP";
-/// Protocol version carried in every frame header.
-pub const WIRE_VERSION: u8 = 1;
+/// Protocol version carried in every frame header. v2 added the task
+/// descriptor to `AssignShards` and the task-support mask to `Hello`.
+pub const WIRE_VERSION: u8 = 2;
 /// Frame header size: magic + version + tag + u64 payload length.
 pub const HEADER_BYTES: usize = 4 + 1 + 1 + 8;
 /// Hard cap on a frame payload (256 MiB — far above any real message for
@@ -54,6 +55,61 @@ pub struct LayerSpec {
     pub projected: bool,
 }
 
+/// `Hello.task_support` bit: the worker can run the synthetic task.
+pub const TASK_SUPPORT_SYNTHETIC: u8 = 1;
+/// `Hello.task_support` bit: the worker can run the native LM task.
+pub const TASK_SUPPORT_LM: u8 = 2;
+/// Every task kind this build implements (what workers advertise).
+pub const TASK_SUPPORT_ALL: u8 = TASK_SUPPORT_SYNTHETIC | TASK_SUPPORT_LM;
+
+/// The versioned wire description of *what* a cluster run trains. Carried
+/// inside [`ShardAssignment`]; `cluster::task::build_task` turns it into a
+/// live `TrainTask` on every process. The descriptor is self-contained —
+/// a worker reconstructs the exact objective from these fields plus the
+/// assignment's seed and layer specs, nothing else.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TaskDesc {
+    /// Noisy quadratic toward fixed random targets (the CI workhorse).
+    Synthetic {
+        /// Per-shard gradient noise scale σ.
+        sigma: f32,
+    },
+    /// Native CPU transformer LM over the deterministic synthetic corpus.
+    Lm {
+        /// `ModelCfg::to_json().dump()` of the architecture.
+        model_json: String,
+        /// `TrainCfg::to_json().dump()` of batch size / schedule / eval.
+        train_json: String,
+    },
+}
+
+impl TaskDesc {
+    /// On-wire kind byte (part of the protocol: append, never renumber).
+    pub fn kind(&self) -> u8 {
+        match self {
+            TaskDesc::Synthetic { .. } => 1,
+            TaskDesc::Lm { .. } => 2,
+        }
+    }
+
+    /// The [`TASK_SUPPORT_SYNTHETIC`]/[`TASK_SUPPORT_LM`] bit a worker must
+    /// advertise to be assigned this task.
+    pub fn support_bit(&self) -> u8 {
+        match self {
+            TaskDesc::Synthetic { .. } => TASK_SUPPORT_SYNTHETIC,
+            TaskDesc::Lm { .. } => TASK_SUPPORT_LM,
+        }
+    }
+
+    /// Short kind name for logs and errors.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            TaskDesc::Synthetic { .. } => "synthetic",
+            TaskDesc::Lm { .. } => "lm",
+        }
+    }
+}
+
 /// Everything one worker needs to run its deterministic slice of a cluster
 /// session. Sent by the coordinator right after `Hello`.
 #[derive(Clone, Debug, PartialEq)]
@@ -66,8 +122,8 @@ pub struct ShardAssignment {
     pub steps: u64,
     /// Master seed (init + gradient noise streams derive from it).
     pub seed: u64,
-    /// Gradient noise scale σ of the synthetic task.
-    pub sigma: f32,
+    /// What this run trains (objective + its hyperparameters).
+    pub task: TaskDesc,
     /// Resume from the worker's shard checkpoint file.
     pub resume: bool,
     /// Checkpoint cadence in steps (0 ⇒ only at session end).
@@ -97,6 +153,10 @@ pub enum Msg {
     Hello {
         /// The connecting worker's id.
         worker_id: u32,
+        /// Bitmask of task kinds this worker build can run
+        /// ([`TASK_SUPPORT_SYNTHETIC`] | [`TASK_SUPPORT_LM`]); the
+        /// coordinator rejects workers missing the session's task bit.
+        task_support: u8,
     },
     /// Coordinator → worker: the session plan.
     AssignShards(Box<ShardAssignment>),
@@ -237,12 +297,34 @@ fn take_mats(r: &mut ByteReader, what: &str) -> crate::Result<Vec<Mat>> {
     Ok(mats)
 }
 
+fn put_task(w: &mut ByteWriter, t: &TaskDesc) {
+    w.put_u8(t.kind());
+    match t {
+        TaskDesc::Synthetic { sigma } => w.put_f32(*sigma),
+        TaskDesc::Lm { model_json, train_json } => {
+            w.put_str(model_json);
+            w.put_str(train_json);
+        }
+    }
+}
+
+fn take_task(r: &mut ByteReader, what: &str) -> crate::Result<TaskDesc> {
+    match r.take_u8(what)? {
+        1 => Ok(TaskDesc::Synthetic { sigma: r.take_f32(what)? }),
+        2 => Ok(TaskDesc::Lm {
+            model_json: r.take_str(MAX_STR, what)?,
+            train_json: r.take_str(MAX_STR, what)?,
+        }),
+        k => anyhow::bail!("{what}: unknown task kind byte {k}"),
+    }
+}
+
 fn put_assignment(w: &mut ByteWriter, a: &ShardAssignment) {
     w.put_u32(a.worker_id);
     w.put_u32(a.n_workers);
     w.put_u64(a.steps);
     w.put_u64(a.seed);
-    w.put_f32(a.sigma);
+    put_task(w, &a.task);
     put_bool(w, a.resume);
     w.put_u64(a.ckpt_every);
     w.put_str(&a.ckpt_dir);
@@ -266,7 +348,7 @@ fn take_assignment(r: &mut ByteReader) -> crate::Result<ShardAssignment> {
     let n_workers = r.take_u32(what)?;
     let steps = r.take_u64(what)?;
     let seed = r.take_u64(what)?;
-    let sigma = r.take_f32(what)?;
+    let task = take_task(r, what)?;
     let resume = take_bool(r, what)?;
     let ckpt_every = r.take_u64(what)?;
     let ckpt_dir = r.take_str(MAX_STR, what)?;
@@ -294,7 +376,7 @@ fn take_assignment(r: &mut ByteReader) -> crate::Result<ShardAssignment> {
         n_workers,
         steps,
         seed,
-        sigma,
+        task,
         resume,
         ckpt_every,
         ckpt_dir,
@@ -310,7 +392,10 @@ fn take_assignment(r: &mut ByteReader) -> crate::Result<ShardAssignment> {
 fn encode_payload(msg: &Msg) -> Vec<u8> {
     let mut w = ByteWriter::new();
     match msg {
-        Msg::Hello { worker_id } => w.put_u32(*worker_id),
+        Msg::Hello { worker_id, task_support } => {
+            w.put_u32(*worker_id);
+            w.put_u8(*task_support);
+        }
         Msg::AssignShards(a) => put_assignment(&mut w, a),
         Msg::GroupState { step, mats } => {
             w.put_u64(*step);
@@ -339,6 +424,7 @@ fn decode_payload(tag: u8, payload: &[u8]) -> crate::Result<Msg> {
     let msg = match tag {
         1 => Msg::Hello {
             worker_id: r.take_u32("Hello")?,
+            task_support: r.take_u8("Hello")?,
         },
         2 => Msg::AssignShards(Box::new(take_assignment(&mut r)?)),
         3 => Msg::GroupState {
@@ -494,7 +580,7 @@ mod tests {
             n_workers: 2,
             steps: 20,
             seed: 42,
-            sigma: 0.01,
+            task: TaskDesc::Synthetic { sigma: 0.01 },
             resume: true,
             ckpt_every: 5,
             ckpt_dir: "/tmp/shards".to_string(),
@@ -513,9 +599,15 @@ mod tests {
     fn sample_msgs() -> Vec<Msg> {
         let mut rng = Rng::new(5);
         let mats = vec![Mat::randn(3, 2, 1.0, &mut rng), Mat::randn(1, 4, 1.0, &mut rng)];
+        let mut lm_assign = sample_assignment();
+        lm_assign.task = TaskDesc::Lm {
+            model_json: r#"{"name":"nano"}"#.to_string(),
+            train_json: r#"{"batch":4}"#.to_string(),
+        };
         vec![
-            Msg::Hello { worker_id: 3 },
+            Msg::Hello { worker_id: 3, task_support: TASK_SUPPORT_ALL },
             Msg::AssignShards(Box::new(sample_assignment())),
+            Msg::AssignShards(Box::new(lm_assign)),
             Msg::GroupState { step: 7, mats: mats.clone() },
             Msg::SyncWeights { start_step: 0, mats: mats.clone() },
             Msg::Grads { step: 9, loss: 1.25, mats: mats.clone() },
@@ -610,6 +702,24 @@ mod tests {
         frame.extend_from_slice(&payload);
         let err = decode(&frame).unwrap_err().to_string();
         assert!(err.contains("element cap"), "{err}");
+    }
+
+    #[test]
+    fn rejects_unknown_task_kind_and_v1_frames() {
+        // An AssignShards payload whose task kind byte is unknown.
+        let frame = encode(&Msg::AssignShards(Box::new(sample_assignment())));
+        // The kind byte sits right after worker_id + n_workers + steps + seed.
+        let kind_off = HEADER_BYTES + 4 + 4 + 8 + 8;
+        let mut bad = frame.clone();
+        bad[kind_off] = 77;
+        let err = decode(&bad).unwrap_err().to_string();
+        assert!(err.contains("task kind"), "{err}");
+
+        // v1 peers are refused up front: version mismatch, not a mis-parse.
+        let mut old = frame;
+        old[4] = 1;
+        let err = decode(&old).unwrap_err().to_string();
+        assert!(err.contains("version 1"), "{err}");
     }
 
     #[test]

@@ -21,8 +21,14 @@
 //! [`crate::coordinator::allreduce_mean`] tree used by the in-process
 //! sharded trainer and broadcasts the mean back. Because every worker
 //! applies the identical reduced gradient with an identically seeded
-//! optimizer, weights stay bitwise-identical across processes — verified
-//! in CI against a single-process [`local::run_local`] reference.
+//! optimizer — through the one shared [`round`] engine — weights stay
+//! bitwise-identical across processes, verified in CI against a
+//! single-process [`local::run_local`] reference.
+//!
+//! *What* gets trained is a [`task::TrainTask`] chosen by the wire-level
+//! [`messages::TaskDesc`]: the synthetic quadratic ([`task::SyntheticTask`])
+//! or the real transformer LM path ([`task::LmTask`] over
+//! [`crate::model::lm`]).
 //!
 //! # Message lifecycle
 //!
@@ -44,13 +50,14 @@ pub mod coordinator;
 pub mod local;
 pub mod messages;
 mod net;
+pub mod round;
 pub mod shard;
 pub mod task;
 pub mod worker;
 
-use crate::config::ModelCfg;
+use crate::config::{ClusterCfg, ModelCfg};
 use crate::linalg::Mat;
-use messages::LayerSpec;
+use messages::{LayerSpec, TaskDesc};
 
 /// Final state of a completed (or killed) cluster run, as observed by the
 /// coordinator or the single-process reference runner.
@@ -59,7 +66,8 @@ pub struct RunOutcome {
     pub start_step: u64,
     /// Step after the last applied update.
     pub final_step: u64,
-    /// Synthetic-task loss at the final weights (noise-free).
+    /// The task's deterministic evaluation loss at the final weights
+    /// (noise-free / fixed eval data — identical on every process).
     pub final_loss: f64,
     /// Final weights in layer order (empty when `killed`).
     pub weights: Vec<Mat>,
@@ -102,6 +110,30 @@ pub fn weights_fingerprint(mats: &[Mat]) -> u64 {
     h
 }
 
+/// Resolve a [`ClusterCfg`]'s task field into the wire [`TaskDesc`] every
+/// process reconstructs the objective from. For the LM task the embedded
+/// `TrainCfg`'s `steps`/`seed`/`dp_workers` are overridden by the cluster
+/// fields — the descriptor a worker receives is fully resolved, so no
+/// process re-derives anything from partial config.
+pub fn task_desc(cfg: &ClusterCfg) -> crate::Result<TaskDesc> {
+    match cfg.task.as_str() {
+        "synthetic" => Ok(TaskDesc::Synthetic { sigma: cfg.sigma }),
+        "lm" => {
+            let model = ModelCfg::preset(&cfg.preset)
+                .ok_or_else(|| anyhow::anyhow!("unknown model preset {:?}", cfg.preset))?;
+            let mut train = cfg.train.clone();
+            train.steps = cfg.steps;
+            train.seed = cfg.seed;
+            train.dp_workers = cfg.workers;
+            Ok(TaskDesc::Lm {
+                model_json: model.to_json().dump(),
+                train_json: train.to_json().dump(),
+            })
+        }
+        other => anyhow::bail!("unknown cluster task {other:?} (expected \"synthetic\" or \"lm\")"),
+    }
+}
+
 /// Wire-level layer specs for a model config: `param_specs` order (the
 /// registration order every other subsystem uses) with the projection
 /// eligibility mask resolved per layer.
@@ -137,6 +169,32 @@ mod tests {
             weights_fingerprint(&[c, a]),
             "order matters"
         );
+    }
+
+    #[test]
+    fn task_desc_resolves_cluster_fields_into_the_lm_descriptor() {
+        let mut cfg = ClusterCfg {
+            task: "lm".to_string(),
+            steps: 9,
+            seed: 77,
+            workers: 3,
+            ..ClusterCfg::default()
+        };
+        let desc = task_desc(&cfg).unwrap();
+        match &desc {
+            TaskDesc::Lm { train_json, .. } => {
+                let j = crate::util::json::Json::parse(train_json).unwrap();
+                let train = crate::config::TrainCfg::from_json(&j).unwrap();
+                assert_eq!(train.steps, 9);
+                assert_eq!(train.seed, 77);
+                assert_eq!(train.dp_workers, 3);
+            }
+            other => panic!("expected Lm descriptor, got {other:?}"),
+        }
+        cfg.task = "quadratic-ish".to_string();
+        assert!(task_desc(&cfg).is_err());
+        cfg.task = "synthetic".to_string();
+        assert_eq!(task_desc(&cfg).unwrap(), TaskDesc::Synthetic { sigma: cfg.sigma });
     }
 
     #[test]

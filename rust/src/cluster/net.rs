@@ -21,17 +21,19 @@ pub(crate) fn configure(stream: &TcpStream, io_timeout_ms: u64) -> crate::Result
 }
 
 /// Connect to `addr` with bounded retry + exponential backoff (doubling
-/// from `backoff_ms`, capped at 2 s). Workers typically start before the
-/// coordinator's listener is up; a handful of retries absorbs that race
-/// without masking a genuinely absent coordinator.
+/// from `backoff_ms`, capped at `backoff_cap_ms`). Workers typically start
+/// before the coordinator's listener is up; a handful of retries absorbs
+/// that race without masking a genuinely absent coordinator.
 pub(crate) fn connect_retry(
     addr: &str,
     attempts: u32,
     backoff_ms: u64,
+    backoff_cap_ms: u64,
     io_timeout_ms: u64,
 ) -> crate::Result<TcpStream> {
     let attempts = attempts.max(1);
-    let mut delay = Duration::from_millis(backoff_ms.max(1));
+    let cap = Duration::from_millis(backoff_cap_ms.max(1));
+    let mut delay = Duration::from_millis(backoff_ms.max(1)).min(cap);
     let mut last_err = String::new();
     for attempt in 0..attempts {
         match TcpStream::connect(addr) {
@@ -43,7 +45,7 @@ pub(crate) fn connect_retry(
                 last_err = e.to_string();
                 if attempt + 1 < attempts {
                     std::thread::sleep(delay);
-                    delay = (delay * 2).min(Duration::from_secs(2));
+                    delay = (delay * 2).min(cap);
                 }
             }
         }
@@ -59,7 +61,7 @@ mod tests {
     fn connect_retry_reports_attempts_on_dead_address() {
         // Port 1 on localhost is essentially never listening; bounded retry
         // must return an error naming the address, not hang.
-        let err = connect_retry("127.0.0.1:1", 2, 1, 100).unwrap_err().to_string();
+        let err = connect_retry("127.0.0.1:1", 2, 1, 8, 100).unwrap_err().to_string();
         assert!(err.contains("127.0.0.1:1") && err.contains("2 attempts"), "{err}");
     }
 
@@ -67,7 +69,7 @@ mod tests {
     fn connect_retry_succeeds_against_listener() {
         let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
-        let stream = connect_retry(&addr, 3, 1, 250).unwrap();
+        let stream = connect_retry(&addr, 3, 1, 8, 250).unwrap();
         assert!(stream.read_timeout().unwrap().is_some());
         assert!(stream.nodelay().unwrap());
     }

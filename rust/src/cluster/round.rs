@@ -1,0 +1,331 @@
+//! The one round engine every execution mode runs.
+//!
+//! A training "round" is the same everywhere: compute shard gradients,
+//! all-reduce them to a mean, apply one replicated optimizer step, honor the
+//! checkpoint cadence. Before this module, that loop lived three times —
+//! in `train::Trainer`, in `cluster::worker`, and in `cluster::local` — and
+//! the bitwise-equality guarantee between modes rested on the three copies
+//! never drifting. Now the loop lives here once; the modes differ only in
+//! *where the reduced gradient comes from* ([`RoundIo`]):
+//!
+//! * [`LocalShards`] — all shards computed in-process, reduced with
+//!   `allreduce_mean` (single-process trainer and `cluster local`).
+//! * `cluster::worker`'s wire-backed impl — this shard computed locally,
+//!   the reduction received from the coordinator over TCP.
+//!
+//! Because the optimizer step ([`apply_replicated_update`]) and the step/
+//! checkpoint bookkeeping are shared code, "worker weights == local weights
+//! == trainer weights, bitwise" holds by construction.
+
+use crate::coordinator::allreduce::allreduce_mean;
+use crate::linalg::Mat;
+use crate::optim::Optimizer;
+use crate::util::threadpool::ThreadPool;
+
+use super::task::TrainTask;
+
+/// The replicated optimizer step, shared verbatim by every mode: one
+/// `step_parallel` over the full layer list, per-layer weight finalization,
+/// then `end_step`. Any two processes that call this with identical
+/// `(optimizer state, weights, reduced, lr_mult)` stay bitwise identical.
+pub fn apply_replicated_update(
+    opt: &mut dyn Optimizer,
+    pool: &ThreadPool,
+    weights: &mut [&mut Mat],
+    reduced: &[Mat],
+    lr_mult: f32,
+) {
+    opt.step_parallel(pool, weights, reduced, lr_mult);
+    for (idx, w) in weights.iter_mut().enumerate() {
+        opt.finalize_weights(idx, w);
+    }
+    opt.end_step();
+}
+
+/// What one round produced: a reduced gradient to apply, or a stop signal
+/// (coordinator shutdown, kill) that ends the session mid-run.
+pub enum Round {
+    /// The mean gradient across shards, plus the mean shard loss.
+    Reduced {
+        /// Mean shard loss at this step.
+        loss: f64,
+        /// Per-layer mean gradients, in layer order.
+        mats: Vec<Mat>,
+    },
+    /// The session is over before this step's update (clean or aborted).
+    Stopped {
+        /// Human-readable cause (mirrors `Msg::Shutdown::reason`).
+        reason: String,
+    },
+}
+
+/// Where a mode's reduced gradients and checkpoint barriers come from.
+///
+/// `reduce` must return the all-reduced mean over **all** shards of the run
+/// for `step` — how it gets them (computing locally, or over the wire) is
+/// the mode's business. `checkpoint` persists/acknowledges state at `step`;
+/// returning `Ok(Some(reason))` stops the run (a worker that receives
+/// `Shutdown` while waiting at the barrier reports it this way).
+pub trait RoundIo {
+    /// Produce the reduced mean gradient for `step` at `weights`.
+    fn reduce(&mut self, task: &dyn TrainTask, weights: &[Mat], step: u64) -> crate::Result<Round>;
+
+    /// Checkpoint barrier at `step` (post-update weights). `None` continues.
+    fn checkpoint(&mut self, weights: &[Mat], step: u64) -> crate::Result<Option<String>>;
+}
+
+/// In-process [`RoundIo`]: computes every shard serially (shard order 0..n,
+/// the same order the coordinator reduces worker gradients in) and reduces
+/// with [`allreduce_mean`]. Checkpoints are a no-op.
+pub struct LocalShards {
+    /// Number of data-parallel shards to emulate.
+    pub shards: u64,
+}
+
+impl RoundIo for LocalShards {
+    fn reduce(&mut self, task: &dyn TrainTask, weights: &[Mat], step: u64) -> crate::Result<Round> {
+        let mut loss_sum = 0.0f64;
+        let mut shard_grads: Vec<Vec<Mat>> = Vec::with_capacity(self.shards as usize);
+        for s in 0..self.shards {
+            let (loss, grads) = task.shard_grads(weights, step, s);
+            loss_sum += loss;
+            shard_grads.push(grads);
+        }
+        Ok(Round::Reduced {
+            loss: loss_sum / self.shards as f64,
+            mats: allreduce_mean(&mut shard_grads),
+        })
+    }
+
+    fn checkpoint(&mut self, _weights: &[Mat], _step: u64) -> crate::Result<Option<String>> {
+        Ok(None)
+    }
+}
+
+/// Step/checkpoint bookkeeping for one session of rounds.
+pub struct RoundCfg {
+    /// First step of this session (resume offset).
+    pub start_step: u64,
+    /// Steps to run this session.
+    pub steps: u64,
+    /// Mid-run checkpoint cadence (0 ⇒ only the final barrier).
+    pub ckpt_every: u64,
+}
+
+/// How a session of rounds ended.
+pub struct RoundOutcome {
+    /// The step the weights correspond to when the session ended.
+    pub final_step: u64,
+    /// Steps actually executed this session.
+    pub steps_run: u64,
+    /// Mean shard loss at the last executed step (0 if none ran).
+    pub last_loss: f64,
+    /// `Some(reason)` if the session stopped before completing its steps.
+    pub stopped: Option<String>,
+}
+
+/// Run `cfg.steps` rounds: reduce → replicated update → cadenced
+/// checkpoint, then the unconditional end-of-session checkpoint barrier.
+///
+/// `observe` is called after each applied update with
+/// `(step, mean shard loss, lr multiplier)` — logging and CSV writers hook
+/// in there without touching the loop.
+///
+/// Checkpoint cadence matches the coordinator's: a mid-run barrier fires
+/// when `ckpt_every > 0` and `step+1` is a multiple of the cadence past
+/// `start_step`, except at the final step, which always gets the closing
+/// barrier regardless of cadence.
+pub fn run_rounds(
+    task: &dyn TrainTask,
+    opt: &mut dyn Optimizer,
+    pool: &ThreadPool,
+    weights: &mut [Mat],
+    io: &mut dyn RoundIo,
+    cfg: &RoundCfg,
+    observe: &mut dyn FnMut(u64, f64, f32),
+) -> crate::Result<RoundOutcome> {
+    let final_step = cfg.start_step + cfg.steps;
+    let mut last_loss = 0.0f64;
+    for t in cfg.start_step..final_step {
+        let (loss, reduced) = match io.reduce(task, weights, t)? {
+            Round::Reduced { loss, mats } => (loss, mats),
+            Round::Stopped { reason } => {
+                return Ok(RoundOutcome {
+                    final_step: t,
+                    steps_run: t - cfg.start_step,
+                    last_loss,
+                    stopped: Some(reason),
+                })
+            }
+        };
+        let lr_mult = task.lr_mult(t);
+        let mut refs: Vec<&mut Mat> = weights.iter_mut().collect();
+        apply_replicated_update(opt, pool, &mut refs, &reduced, lr_mult);
+        drop(refs);
+        last_loss = loss;
+        observe(t, loss, lr_mult);
+
+        let due = cfg.ckpt_every > 0 && (t + 1 - cfg.start_step) % cfg.ckpt_every == 0;
+        if due && t + 1 != final_step {
+            if let Some(reason) = io.checkpoint(weights, t + 1)? {
+                return Ok(RoundOutcome {
+                    final_step: t + 1,
+                    steps_run: t + 1 - cfg.start_step,
+                    last_loss,
+                    stopped: Some(reason),
+                });
+            }
+        }
+    }
+    let stopped = io.checkpoint(weights, final_step)?;
+    Ok(RoundOutcome {
+        final_step,
+        steps_run: cfg.steps,
+        last_loss,
+        stopped,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::messages::LayerSpec;
+    use super::super::task::{init_weights, SyntheticTask};
+    use super::*;
+    use crate::config::{OptimCfg, OptimKind};
+    use crate::util::threadpool;
+
+    fn layers() -> Vec<LayerSpec> {
+        vec![
+            LayerSpec { name: "embed".into(), rows: 6, cols: 4, projected: true },
+            LayerSpec { name: "l0.wq".into(), rows: 4, cols: 4, projected: true },
+        ]
+    }
+
+    fn build_opt(ls: &[LayerSpec], seed: u64) -> Box<dyn crate::optim::Optimizer> {
+        let shapes: Vec<(usize, usize)> = ls.iter().map(|l| (l.rows, l.cols)).collect();
+        let projected: Vec<bool> = ls.iter().map(|l| l.projected).collect();
+        let cfg = OptimCfg::new(OptimKind::Sumo).with_lr(2e-2).with_rank(4).with_update_freq(10);
+        crate::optim::build(&cfg, &shapes, &projected, seed)
+    }
+
+    #[test]
+    fn local_rounds_are_deterministic() {
+        let ls = layers();
+        let task = SyntheticTask::new(11, 0.02, &ls);
+        let cfg = RoundCfg { start_step: 0, steps: 8, ckpt_every: 0 };
+        let run = || {
+            let mut w = init_weights(11, &ls);
+            let mut opt = build_opt(&ls, 11);
+            let mut io = LocalShards { shards: 3 };
+            let out = run_rounds(
+                &task,
+                opt.as_mut(),
+                threadpool::global(),
+                &mut w,
+                &mut io,
+                &cfg,
+                &mut |_, _, _| {},
+            )
+            .unwrap();
+            (out.final_step, out.steps_run, w)
+        };
+        let (f1, s1, w1) = run();
+        let (f2, s2, w2) = run();
+        assert_eq!((f1, s1), (8, 8));
+        assert_eq!((f1, s1), (f2, s2));
+        for (a, b) in w1.iter().zip(&w2) {
+            assert_eq!(a.data, b.data);
+        }
+    }
+
+    /// A RoundIo that records barrier steps and stops on demand.
+    struct Scripted {
+        inner: LocalShards,
+        barriers: Vec<u64>,
+        stop_reduce_at: Option<u64>,
+        stop_ckpt_at: Option<u64>,
+    }
+
+    impl RoundIo for Scripted {
+        fn reduce(&mut self, task: &dyn TrainTask, w: &[Mat], step: u64) -> crate::Result<Round> {
+            if self.stop_reduce_at == Some(step) {
+                return Ok(Round::Stopped { reason: "scripted".into() });
+            }
+            self.inner.reduce(task, w, step)
+        }
+
+        fn checkpoint(&mut self, _w: &[Mat], step: u64) -> crate::Result<Option<String>> {
+            self.barriers.push(step);
+            if self.stop_ckpt_at == Some(step) {
+                return Ok(Some("scripted-ckpt".into()));
+            }
+            Ok(None)
+        }
+    }
+
+    #[test]
+    fn checkpoint_cadence_and_final_barrier() {
+        let ls = layers();
+        let task = SyntheticTask::new(3, 0.0, &ls);
+        let mut w = init_weights(3, &ls);
+        let mut opt = build_opt(&ls, 3);
+        let mut io = Scripted {
+            inner: LocalShards { shards: 2 },
+            barriers: vec![],
+            stop_reduce_at: None,
+            stop_ckpt_at: None,
+        };
+        let cfg = RoundCfg { start_step: 4, steps: 6, ckpt_every: 2 };
+        let out = run_rounds(
+            &task,
+            opt.as_mut(),
+            threadpool::global(),
+            &mut w,
+            &mut io,
+            &cfg,
+            &mut |_, _, _| {},
+        )
+        .unwrap();
+        // Cadence 2 from start 4 over 6 steps: mid barriers at 6 and 8; 10
+        // is the final step so it takes the closing barrier instead.
+        assert_eq!(io.barriers, vec![6, 8, 10]);
+        assert_eq!(out.final_step, 10);
+        assert_eq!(out.steps_run, 6);
+        assert!(out.stopped.is_none());
+    }
+
+    #[test]
+    fn stop_during_reduce_and_during_checkpoint() {
+        let ls = layers();
+        let task = SyntheticTask::new(3, 0.0, &ls);
+        let pool = threadpool::global();
+
+        let mut w = init_weights(3, &ls);
+        let mut opt = build_opt(&ls, 3);
+        let mut io = Scripted {
+            inner: LocalShards { shards: 2 },
+            barriers: vec![],
+            stop_reduce_at: Some(3),
+            stop_ckpt_at: None,
+        };
+        let cfg = RoundCfg { start_step: 0, steps: 10, ckpt_every: 0 };
+        let out = run_rounds(&task, opt.as_mut(), pool, &mut w, &mut io, &cfg, &mut |_, _, _| {}).unwrap();
+        assert_eq!(out.final_step, 3);
+        assert_eq!(out.steps_run, 3);
+        assert_eq!(out.stopped.as_deref(), Some("scripted"));
+
+        let mut w = init_weights(3, &ls);
+        let mut opt = build_opt(&ls, 3);
+        let mut io = Scripted {
+            inner: LocalShards { shards: 2 },
+            barriers: vec![],
+            stop_reduce_at: None,
+            stop_ckpt_at: Some(4),
+        };
+        let cfg = RoundCfg { start_step: 0, steps: 10, ckpt_every: 4 };
+        let out = run_rounds(&task, opt.as_mut(), pool, &mut w, &mut io, &cfg, &mut |_, _, _| {}).unwrap();
+        assert_eq!(out.final_step, 4);
+        assert_eq!(out.steps_run, 4);
+        assert_eq!(out.stopped.as_deref(), Some("scripted-ckpt"));
+    }
+}

@@ -21,10 +21,14 @@
 //! moment orthogonalization, limiter) with no model forward/backward, so a
 //! loopback cluster test runs in milliseconds.
 
+use crate::config::{ModelCfg, TrainCfg};
+use crate::data::Batcher;
 use crate::linalg::Mat;
+use crate::model::lm;
+use crate::util::json::Json;
 use crate::util::Rng;
 
-use super::messages::LayerSpec;
+use super::messages::{LayerSpec, TaskDesc};
 
 /// Stream salt: weight initialization.
 pub const SALT_INIT: u64 = 1;
@@ -32,6 +36,10 @@ pub const SALT_INIT: u64 = 1;
 pub const SALT_GRAD: u64 = 2;
 /// Stream salt: the fixed target weights.
 pub const SALT_TARGET: u64 = 3;
+/// Stream salt: per-(step, shard) LM training data.
+pub const SALT_DATA: u64 = 4;
+/// Stream salt: fixed LM evaluation batches.
+pub const SALT_EVAL: u64 = 5;
 
 #[inline]
 fn avalanche(mut z: u64) -> u64 {
@@ -72,6 +80,37 @@ pub fn init_weights(seed: u64, layers: &[LayerSpec]) -> Vec<Mat> {
             }
         })
         .collect()
+}
+
+/// A sharded training objective every execution mode (single-process
+/// trainer, `cluster local`, coordinator + workers) can drive through the
+/// shared round engine.
+///
+/// The contract is determinism and order-independence: `shard_grads` must be
+/// a pure function of `(weights, step, shard)` — any RNG it uses derives
+/// from [`stream_seed`], never from shared mutable state — so that shard `s`
+/// computes bitwise-identical gradients whether it runs in-process, on
+/// worker 3, or replayed out of order. `eval_loss` must likewise be a pure
+/// function of the weights. That is the whole reason a multi-process run can
+/// be fingerprint-compared against a single-process reference.
+pub trait TrainTask: Send + Sync {
+    /// Short task name for logs (`"synthetic"`, `"lm"`).
+    fn name(&self) -> &'static str;
+
+    /// Shard `shard`'s loss and per-layer gradients at `step`. Deterministic
+    /// in `(weights, step, shard)`; shards must be averageable (the round
+    /// engine feeds them to `allreduce_mean`).
+    fn shard_grads(&self, weights: &[Mat], step: u64, shard: u64) -> (f64, Vec<Mat>);
+
+    /// Deterministic evaluation loss at `weights` (noise-free / fixed data),
+    /// used for the end-of-run report on both sides of the fingerprint.
+    fn eval_loss(&self, weights: &[Mat]) -> f64;
+
+    /// Learning-rate multiplier for `step` (schedules live in the task so
+    /// every execution mode applies the identical curve). Default: constant.
+    fn lr_mult(&self, _step: u64) -> f32 {
+        1.0
+    }
 }
 
 /// The noisy quadratic objective: ½·‖W − T‖² / n_params, with per-shard
@@ -149,6 +188,106 @@ impl SyntheticTask {
     }
 }
 
+impl TrainTask for SyntheticTask {
+    fn name(&self) -> &'static str {
+        "synthetic"
+    }
+
+    fn shard_grads(&self, weights: &[Mat], step: u64, shard: u64) -> (f64, Vec<Mat>) {
+        SyntheticTask::shard_grads(self, weights, step, shard)
+    }
+
+    fn eval_loss(&self, weights: &[Mat]) -> f64 {
+        self.loss(weights)
+    }
+    // lr_mult: default 1.0 — the synthetic trajectory stays bitwise-frozen.
+}
+
+/// The real-model task: next-token loss and gradients of the native CPU
+/// transformer ([`crate::model::lm`]) over deterministic synthetic-corpus
+/// batches. Shard `s` at step `t` reads the batch keyed by
+/// `stream_seed(seed, SALT_DATA, t, s, 0)`, so data parallelism is pure
+/// function application — no dataloader state crosses processes.
+pub struct LmTask {
+    /// Transformer architecture (must match the assigned layer specs).
+    pub model: ModelCfg,
+    /// Training hyperparameters: batch size, LR schedule, eval batches.
+    pub train: TrainCfg,
+    /// Master seed; data/eval streams derive from it.
+    pub seed: u64,
+}
+
+impl LmTask {
+    /// Build the task, checking the layer specs agree with what
+    /// `cluster::model_layers(&model)` derives (same names and shapes) so a
+    /// coordinator/worker pair can't silently train different architectures.
+    pub fn new(model: ModelCfg, train: TrainCfg, seed: u64, layers: &[LayerSpec]) -> crate::Result<LmTask> {
+        let expect = super::model_layers(&model);
+        if expect != layers {
+            anyhow::bail!(
+                "task/layer mismatch: model '{}' derives {} layers, assignment carries {}",
+                model.name,
+                expect.len(),
+                layers.len()
+            );
+        }
+        Ok(LmTask { model, train, seed })
+    }
+}
+
+impl TrainTask for LmTask {
+    fn name(&self) -> &'static str {
+        "lm"
+    }
+
+    fn shard_grads(&self, weights: &[Mat], step: u64, shard: u64) -> (f64, Vec<Mat>) {
+        let batch = Batcher::batch_at(
+            self.model.vocab,
+            stream_seed(self.seed, SALT_DATA, step, shard, 0),
+            self.train.batch,
+            self.model.seq_len,
+        );
+        lm::loss_grads(&self.model, weights, &batch)
+    }
+
+    fn eval_loss(&self, weights: &[Mat]) -> f64 {
+        let n = self.train.eval_batches.max(1);
+        let mut sum = 0.0f64;
+        for b in 0..n {
+            let batch = Batcher::batch_at(
+                self.model.vocab,
+                stream_seed(self.seed, SALT_EVAL, 0, b as u64, 0),
+                self.train.batch,
+                self.model.seq_len,
+            );
+            sum += lm::eval_loss(&self.model, weights, &batch);
+        }
+        sum / n as f64
+    }
+
+    fn lr_mult(&self, step: u64) -> f32 {
+        self.train.lr_mult(step as usize)
+    }
+}
+
+/// Instantiate the task a wire [`TaskDesc`] describes. Every process on a
+/// run calls this with the same descriptor + seed + layer specs and gets a
+/// behaviorally identical task — the descriptor is the *entire* task state.
+pub fn build_task(desc: &TaskDesc, seed: u64, layers: &[LayerSpec]) -> crate::Result<Box<dyn TrainTask>> {
+    match desc {
+        TaskDesc::Synthetic { sigma } => Ok(Box::new(SyntheticTask::new(seed, *sigma, layers))),
+        TaskDesc::Lm { model_json, train_json } => {
+            let mj = Json::parse(model_json).map_err(|e| anyhow::anyhow!("bad task model_json: {e:?}"))?;
+            let model = ModelCfg::from_json(&mj)
+                .ok_or_else(|| anyhow::anyhow!("task model_json missing required fields"))?;
+            let tj = Json::parse(train_json).map_err(|e| anyhow::anyhow!("bad task train_json: {e:?}"))?;
+            let train = TrainCfg::from_json(&tj)
+                .ok_or_else(|| anyhow::anyhow!("task train_json is not an object"))?;
+            Ok(Box::new(LmTask::new(model, train, seed, layers)?))
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -206,6 +345,76 @@ mod tests {
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.data, y.data);
         }
+    }
+
+    fn lm_setup() -> (ModelCfg, TrainCfg, Vec<LayerSpec>) {
+        let model = ModelCfg {
+            name: "task-test".into(),
+            vocab: 32,
+            d_model: 8,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 16,
+            seq_len: 6,
+            head: crate::config::TaskHead::Lm,
+        };
+        let train = TrainCfg {
+            batch: 2,
+            eval_batches: 2,
+            ..TrainCfg::default()
+        };
+        let layers = super::super::model_layers(&model);
+        (model, train, layers)
+    }
+
+    #[test]
+    fn lm_task_shards_are_deterministic_and_distinct() {
+        let (model, train, layers) = lm_setup();
+        let w = init_weights(5, &layers);
+        let task = LmTask::new(model, train, 5, &layers).unwrap();
+        let (l0, g0) = TrainTask::shard_grads(&task, &w, 1, 0);
+        let (l0b, g0b) = TrainTask::shard_grads(&task, &w, 1, 0);
+        assert_eq!(l0, l0b);
+        for (a, b) in g0.iter().zip(&g0b) {
+            assert_eq!(a.data, b.data);
+        }
+        // Different shards see different data, hence different grads + loss.
+        let (l1, g1) = TrainTask::shard_grads(&task, &w, 1, 1);
+        assert_ne!(l0, l1);
+        assert!(g0[0].max_diff(&g1[0]) > 0.0);
+        // Eval loss is a pure function of the weights.
+        assert_eq!(task.eval_loss(&w), task.eval_loss(&w));
+    }
+
+    #[test]
+    fn lm_task_rejects_mismatched_layers() {
+        let (model, train, _) = lm_setup();
+        let wrong = layers(); // the synthetic 3-layer toy set
+        assert!(LmTask::new(model, train, 5, &wrong).is_err());
+    }
+
+    #[test]
+    fn build_task_dispatches_both_kinds() {
+        let ls = layers();
+        let t = build_task(&TaskDesc::Synthetic { sigma: 0.02 }, 7, &ls).unwrap();
+        assert_eq!(t.name(), "synthetic");
+        assert_eq!(t.lr_mult(3), 1.0);
+
+        let (model, train, lm_layers) = lm_setup();
+        let desc = TaskDesc::Lm {
+            model_json: model.to_json().dump(),
+            train_json: train.to_json().dump(),
+        };
+        let t = build_task(&desc, 7, &lm_layers).unwrap();
+        assert_eq!(t.name(), "lm");
+        // Schedule rides along: warmup step 0 is scaled down under cosine.
+        assert!(t.lr_mult(0) < 1.0);
+        assert!(build_task(&desc, 7, &ls).is_err(), "layer mismatch must fail");
+        let bad = TaskDesc::Lm {
+            model_json: "{not json".into(),
+            train_json: "{}".into(),
+        };
+        assert!(build_task(&bad, 7, &lm_layers).is_err());
     }
 
     #[test]

@@ -13,14 +13,16 @@
 
 use std::net::TcpStream;
 
-use crate::config::OptimCfg;
+use crate::config::{ClusterCfg, OptimCfg};
 use crate::linalg::Mat;
 use crate::log_info;
 use crate::optim;
 use crate::util::json::Json;
 use crate::util::threadpool;
 
-use super::messages::{read_msg, write_msg, Msg, ShardAssignment};
+use super::messages::{read_msg, write_msg, Msg, ShardAssignment, TASK_SUPPORT_ALL};
+use super::round::{run_rounds, Round, RoundCfg, RoundIo};
+use super::task::TrainTask;
 use super::{net, shard, task, weights_fingerprint};
 
 /// Worker process configuration (CLI flags; everything else arrives in the
@@ -43,18 +45,38 @@ pub struct WorkerCfg {
     pub connect_attempts: u32,
     /// Initial connect retry backoff (ms), doubling per attempt.
     pub backoff_ms: u64,
+    /// Upper bound on the doubled connect backoff (ms).
+    pub backoff_cap_ms: u64,
 }
 
 impl WorkerCfg {
-    /// Defaults for `id` connecting to `connect`.
+    /// Defaults for `id` connecting to `connect`. The timeout/backoff
+    /// defaults are [`ClusterCfg::default`]'s — one source of truth for
+    /// "today's values" on both sides of the wire.
     pub fn new(id: u32, connect: &str) -> WorkerCfg {
+        let d = ClusterCfg::default();
         WorkerCfg {
             id,
             connect: connect.to_string(),
             ckpt_dir: None,
-            io_timeout_ms: 30_000,
-            connect_attempts: 40,
-            backoff_ms: 25,
+            io_timeout_ms: d.worker_io_timeout_ms,
+            connect_attempts: d.connect_attempts,
+            backoff_ms: d.connect_backoff_ms,
+            backoff_cap_ms: d.connect_backoff_cap_ms,
+        }
+    }
+
+    /// Worker settings from a shared cluster config file (`--cfg` on the
+    /// worker CLI): same struct the coordinator loads, worker-side fields.
+    pub fn from_cluster(id: u32, connect: &str, cfg: &ClusterCfg) -> WorkerCfg {
+        WorkerCfg {
+            id,
+            connect: connect.to_string(),
+            ckpt_dir: None,
+            io_timeout_ms: cfg.worker_io_timeout_ms,
+            connect_attempts: cfg.connect_attempts,
+            backoff_ms: cfg.connect_backoff_ms,
+            backoff_cap_ms: cfg.connect_backoff_cap_ms,
         }
     }
 }
@@ -83,9 +105,16 @@ pub fn run(cfg: &WorkerCfg) -> crate::Result<WorkerReport> {
         &cfg.connect,
         cfg.connect_attempts,
         cfg.backoff_ms,
+        cfg.backoff_cap_ms,
         cfg.io_timeout_ms,
     )?;
-    write_msg(&mut stream, &Msg::Hello { worker_id: cfg.id })?;
+    write_msg(
+        &mut stream,
+        &Msg::Hello {
+            worker_id: cfg.id,
+            task_support: TASK_SUPPORT_ALL,
+        },
+    )?;
     match read_msg(&mut stream)? {
         Msg::AssignShards(a) => run_assignment(cfg, stream, *a),
         Msg::Shutdown { reason } => Ok(WorkerReport {
@@ -190,8 +219,7 @@ fn run_assignment(
     let shapes: Vec<(usize, usize)> = a.layers.iter().map(|l| (l.rows, l.cols)).collect();
     let projected: Vec<bool> = a.layers.iter().map(|l| l.projected).collect();
     let mut opt = optim::build(&ocfg, &shapes, &projected, a.seed);
-    let pool = threadpool::global();
-    let task = task::SyntheticTask::new(a.seed, a.sigma, &a.layers);
+    let task = task::build_task(&a.task, a.seed, &a.layers)?;
     let final_step = start_step + a.steps;
 
     let save_shard = |weights: &[Mat], step: u64| -> crate::Result<()> {
@@ -207,58 +235,44 @@ fn run_assignment(
         shard::save(&meta, &weights[group.clone()], &path)
     };
 
-    for t in start_step..final_step {
-        let (loss, grads) = task.shard_grads(&weights, t, a.worker_id as u64);
-        write_msg(&mut stream, &Msg::Grads { step: t, loss, mats: grads })?;
-        let reduced = loop {
-            match read_msg(&mut stream)? {
-                Msg::Heartbeat { nonce } => write_msg(&mut stream, &Msg::HeartbeatAck { nonce })?,
-                Msg::ReducedGrads { step, loss: _, mats } => {
-                    anyhow::ensure!(
-                        step == t && mats.len() == weights.len(),
-                        "ReducedGrads for step {step} ({} tensors) at local step {t}",
-                        mats.len()
-                    );
-                    break mats;
-                }
-                Msg::Shutdown { reason } => {
-                    return Ok(WorkerReport {
-                        worker_id: cfg.id,
-                        steps_run: t - start_step,
-                        final_step: t,
-                        shutdown_reason: reason,
-                        weights_fnv: weights_fingerprint(&weights),
-                    })
-                }
-                Msg::Error { detail } => anyhow::bail!("coordinator error: {detail}"),
-                m => anyhow::bail!("unexpected {} while waiting for ReducedGrads", m.name()),
-            }
+    // The round loop itself — shard grads → reduced update → checkpoint
+    // cadence — is the shared engine; this worker only supplies the wire
+    // transport (`WireRounds`). Both sides derive the cadence from the
+    // assignment, so the worker knows exactly when a Checkpoint frame is
+    // next on the stream — no speculative reads, no buffering.
+    let out = {
+        let mut io = WireRounds {
+            stream: &mut stream,
+            shard: a.worker_id as u64,
+            save: &save_shard,
         };
-        {
-            let mut refs: Vec<&mut Mat> = weights.iter_mut().collect();
-            opt.step_parallel(pool, &mut refs, &reduced, 1.0);
-        }
-        for idx in 0..weights.len() {
-            opt.finalize_weights(idx, &mut weights[idx]);
-        }
-        opt.end_step();
-
-        // Mid-run checkpoint barrier: both sides derive the cadence from the
-        // assignment, so the worker knows exactly when a Checkpoint frame is
-        // next on the stream — no speculative reads, no buffering.
-        let due = a.ckpt_every > 0 && (t + 1 - start_step) % a.ckpt_every == 0 && t + 1 != final_step;
-        if due {
-            if let Some(report) = checkpoint_barrier(cfg, &mut stream, t + 1, &weights, &save_shard, start_step)? {
-                return Ok(report);
-            }
-        }
+        let rcfg = RoundCfg {
+            start_step,
+            steps: a.steps,
+            ckpt_every: a.ckpt_every,
+        };
+        run_rounds(
+            task.as_ref(),
+            opt.as_mut(),
+            threadpool::global(),
+            &mut weights,
+            &mut io,
+            &rcfg,
+            &mut |_, _, _| {},
+        )?
+    };
+    if let Some(reason) = out.stopped {
+        return Ok(WorkerReport {
+            worker_id: cfg.id,
+            steps_run: out.steps_run,
+            final_step: out.final_step,
+            shutdown_reason: reason,
+            weights_fnv: weights_fingerprint(&weights),
+        });
     }
 
-    // Session end: final checkpoint barrier (always — this is what resume
-    // reads), then hand the group state back and wait for Shutdown.
-    if let Some(report) = checkpoint_barrier(cfg, &mut stream, final_step, &weights, &save_shard, start_step)? {
-        return Ok(report);
-    }
+    // Session end (the engine already ran the final checkpoint barrier):
+    // hand the group state back and wait for Shutdown.
     write_msg(
         &mut stream,
         &Msg::GroupState {
@@ -290,37 +304,54 @@ fn run_assignment(
     })
 }
 
-/// Wait for the coordinator's `Checkpoint {step}` frame, persist the shard,
-/// acknowledge. Returns `Some(report)` if the coordinator shut the session
-/// down instead.
-fn checkpoint_barrier(
-    cfg: &WorkerCfg,
-    stream: &mut TcpStream,
-    step: u64,
-    weights: &[Mat],
-    save_shard: &dyn Fn(&[Mat], u64) -> crate::Result<()>,
-    start_step: u64,
-) -> crate::Result<Option<WorkerReport>> {
-    loop {
-        match read_msg(stream)? {
-            Msg::Heartbeat { nonce } => write_msg(stream, &Msg::HeartbeatAck { nonce })?,
-            Msg::Checkpoint { step: s } => {
-                anyhow::ensure!(s == step, "Checkpoint for step {s}, expected {step}");
-                save_shard(weights, step)?;
-                write_msg(stream, &Msg::Ack { step })?;
-                return Ok(None);
+/// The wire-backed [`RoundIo`]: this shard's gradients go out as `Grads`,
+/// the reduction comes back as `ReducedGrads`, and checkpoint barriers wait
+/// for the coordinator's `Checkpoint` frame before persisting + `Ack`ing.
+/// Heartbeats are answered wherever the worker is blocked reading.
+struct WireRounds<'a> {
+    stream: &'a mut TcpStream,
+    /// This worker's data shard index (its worker id).
+    shard: u64,
+    /// Persists the layer group at a step (`shard::save` + meta).
+    save: &'a dyn Fn(&[Mat], u64) -> crate::Result<()>,
+}
+
+impl RoundIo for WireRounds<'_> {
+    fn reduce(&mut self, task: &dyn TrainTask, weights: &[Mat], step: u64) -> crate::Result<Round> {
+        let (loss, grads) = task.shard_grads(weights, step, self.shard);
+        write_msg(self.stream, &Msg::Grads { step, loss, mats: grads })?;
+        loop {
+            match read_msg(self.stream)? {
+                Msg::Heartbeat { nonce } => write_msg(self.stream, &Msg::HeartbeatAck { nonce })?,
+                Msg::ReducedGrads { step: s, loss, mats } => {
+                    anyhow::ensure!(
+                        s == step && mats.len() == weights.len(),
+                        "ReducedGrads for step {s} ({} tensors) at local step {step}",
+                        mats.len()
+                    );
+                    return Ok(Round::Reduced { loss, mats });
+                }
+                Msg::Shutdown { reason } => return Ok(Round::Stopped { reason }),
+                Msg::Error { detail } => anyhow::bail!("coordinator error: {detail}"),
+                m => anyhow::bail!("unexpected {} while waiting for ReducedGrads", m.name()),
             }
-            Msg::Shutdown { reason } => {
-                return Ok(Some(WorkerReport {
-                    worker_id: cfg.id,
-                    steps_run: step.saturating_sub(start_step),
-                    final_step: step,
-                    shutdown_reason: reason,
-                    weights_fnv: weights_fingerprint(weights),
-                }))
+        }
+    }
+
+    fn checkpoint(&mut self, weights: &[Mat], step: u64) -> crate::Result<Option<String>> {
+        loop {
+            match read_msg(self.stream)? {
+                Msg::Heartbeat { nonce } => write_msg(self.stream, &Msg::HeartbeatAck { nonce })?,
+                Msg::Checkpoint { step: s } => {
+                    anyhow::ensure!(s == step, "Checkpoint for step {s}, expected {step}");
+                    (self.save)(weights, step)?;
+                    write_msg(self.stream, &Msg::Ack { step })?;
+                    return Ok(None);
+                }
+                Msg::Shutdown { reason } => return Ok(Some(reason)),
+                Msg::Error { detail } => anyhow::bail!("coordinator error: {detail}"),
+                m => anyhow::bail!("unexpected {} while waiting for Checkpoint", m.name()),
             }
-            Msg::Error { detail } => anyhow::bail!("coordinator error: {detail}"),
-            m => anyhow::bail!("unexpected {} while waiting for Checkpoint", m.name()),
         }
     }
 }

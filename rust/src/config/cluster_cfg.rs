@@ -8,7 +8,7 @@
 
 use crate::util::json::Json;
 
-use super::{OptimCfg, OptimKind};
+use super::{OptimCfg, OptimKind, TrainCfg};
 
 /// Everything a coordinator needs to drive a data-parallel cluster run, and
 /// everything a worker needs to reproduce its deterministic slice of it.
@@ -23,10 +23,18 @@ pub struct ClusterCfg {
     /// Master seed: weight init and every per-(step, shard, layer) gradient
     /// noise stream derive from it order-independently.
     pub seed: u64,
+    /// What the cluster trains: `"synthetic"` (noisy quadratic) or `"lm"`
+    /// (native transformer over the deterministic corpus).
+    pub task: String,
     /// Gradient noise scale σ of the synthetic quadratic task (0 ⇒ shards
     /// are identical and the mean is trivial; >0 makes the all-reduce earn
-    /// its keep).
+    /// its keep). Ignored by the LM task.
     pub sigma: f32,
+    /// LM-task training hyperparameters (batch size, LR schedule, eval
+    /// batches). `steps`/`seed`/`dp_workers` inside it are overridden by
+    /// this struct's own fields when the task descriptor is built, so the
+    /// cluster-level knobs stay the single source of truth.
+    pub train: TrainCfg,
     /// Optimizer run by every worker (replicated state, identical updates).
     pub optim: OptimCfg,
     /// Coordinator bind / worker connect address.
@@ -42,6 +50,16 @@ pub struct ClusterCfg {
     pub io_timeout_ms: u64,
     /// How long the coordinator waits for all N workers to join (ms).
     pub join_timeout_ms: u64,
+    /// Worker-side socket read/write timeout (ms). Longer than the
+    /// coordinator's: a worker is usually *waiting* (for slower shards to
+    /// be reduced, for barriers), not detecting death.
+    pub worker_io_timeout_ms: u64,
+    /// Worker connect retries before giving up on the coordinator address.
+    pub connect_attempts: u32,
+    /// Initial worker connect backoff (ms); doubles per failed attempt.
+    pub connect_backoff_ms: u64,
+    /// Upper bound on the doubled connect backoff (ms).
+    pub connect_backoff_cap_ms: u64,
     /// Resume workers from their shard checkpoint files.
     pub resume: bool,
 }
@@ -53,7 +71,9 @@ impl Default for ClusterCfg {
             preset: "nano".to_string(),
             steps: 20,
             seed: 42,
+            task: "synthetic".to_string(),
             sigma: 0.01,
+            train: TrainCfg::default(),
             optim: OptimCfg::new(OptimKind::Sumo)
                 .with_lr(2e-2)
                 .with_rank(4)
@@ -64,6 +84,10 @@ impl Default for ClusterCfg {
             heartbeat_every: 16,
             io_timeout_ms: 5000,
             join_timeout_ms: 30_000,
+            worker_io_timeout_ms: 30_000,
+            connect_attempts: 40,
+            connect_backoff_ms: 25,
+            connect_backoff_cap_ms: 2000,
             resume: false,
         }
     }
@@ -81,7 +105,9 @@ impl ClusterCfg {
             ("preset", Json::str(&self.preset)),
             ("steps", Json::num(self.steps as f64)),
             ("seed", Json::num(self.seed as f64)),
+            ("task", Json::str(&self.task)),
             ("sigma", Json::num(self.sigma as f64)),
+            ("train", self.train.to_json()),
             ("optim", self.optim.to_json()),
             ("bind", Json::str(&self.bind)),
             ("ckpt_every", Json::num(self.ckpt_every as f64)),
@@ -89,6 +115,10 @@ impl ClusterCfg {
             ("heartbeat_every", Json::num(self.heartbeat_every as f64)),
             ("io_timeout_ms", Json::num(self.io_timeout_ms as f64)),
             ("join_timeout_ms", Json::num(self.join_timeout_ms as f64)),
+            ("worker_io_timeout_ms", Json::num(self.worker_io_timeout_ms as f64)),
+            ("connect_attempts", Json::num(self.connect_attempts as f64)),
+            ("connect_backoff_ms", Json::num(self.connect_backoff_ms as f64)),
+            ("connect_backoff_cap_ms", Json::num(self.connect_backoff_cap_ms as f64)),
             ("resume", Json::Bool(self.resume)),
         ])
     }
@@ -109,8 +139,14 @@ impl ClusterCfg {
         if let Some(x) = j.get("seed").as_f64() {
             cfg.seed = x as u64;
         }
+        if let Some(s) = j.get("task").as_str() {
+            cfg.task = s.to_string();
+        }
         if let Some(x) = j.get("sigma").as_f64() {
             cfg.sigma = x as f32;
+        }
+        if !matches!(j.get("train"), Json::Null) {
+            cfg.train = TrainCfg::from_json(j.get("train"))?;
         }
         if !matches!(j.get("optim"), Json::Null) {
             cfg.optim = OptimCfg::from_json(j.get("optim"))?;
@@ -132,6 +168,18 @@ impl ClusterCfg {
         }
         if let Some(x) = j.get("join_timeout_ms").as_f64() {
             cfg.join_timeout_ms = x as u64;
+        }
+        if let Some(x) = j.get("worker_io_timeout_ms").as_f64() {
+            cfg.worker_io_timeout_ms = x as u64;
+        }
+        if let Some(x) = j.get("connect_attempts").as_f64() {
+            cfg.connect_attempts = x as u32;
+        }
+        if let Some(x) = j.get("connect_backoff_ms").as_f64() {
+            cfg.connect_backoff_ms = x as u64;
+        }
+        if let Some(x) = j.get("connect_backoff_cap_ms").as_f64() {
+            cfg.connect_backoff_cap_ms = x as u64;
         }
         if let Some(x) = j.get("resume").as_bool() {
             cfg.resume = x;
@@ -159,6 +207,7 @@ mod tests {
             preset: "micro".to_string(),
             steps: 55,
             seed: 7,
+            task: "lm".to_string(),
             sigma: 0.125,
             bind: "127.0.0.1:9000".to_string(),
             ckpt_every: 10,
@@ -166,12 +215,34 @@ mod tests {
             heartbeat_every: 4,
             io_timeout_ms: 1500,
             join_timeout_ms: 9000,
+            worker_io_timeout_ms: 12_000,
+            connect_attempts: 7,
+            connect_backoff_ms: 10,
+            connect_backoff_cap_ms: 640,
             resume: true,
             ..ClusterCfg::default()
         };
         cfg.optim = OptimCfg::new(OptimKind::GaLore).with_lr(1e-2);
+        cfg.train = TrainCfg {
+            batch: 4,
+            eval_batches: 2,
+            ..TrainCfg::default()
+        };
         let j = cfg.to_json();
         assert_eq!(ClusterCfg::from_json(&j).unwrap(), cfg);
+    }
+
+    #[test]
+    fn timeout_defaults_match_the_previously_hardcoded_values() {
+        // These were literals in worker.rs / net.rs before they moved here;
+        // the defaults must not drift (existing deployments rely on them).
+        let d = ClusterCfg::default();
+        assert_eq!(d.io_timeout_ms, 5000, "coordinator dead-worker detector");
+        assert_eq!(d.worker_io_timeout_ms, 30_000, "worker read timeout");
+        assert_eq!(d.connect_attempts, 40);
+        assert_eq!(d.connect_backoff_ms, 25);
+        assert_eq!(d.connect_backoff_cap_ms, 2000, "net::connect_retry cap");
+        assert_eq!(d.task, "synthetic");
     }
 
     #[test]

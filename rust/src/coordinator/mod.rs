@@ -251,13 +251,17 @@ impl<'rt> Coordinator<'rt> {
         let gn2: f64 = grads.iter().map(|g| g.sumsq()).sum();
         match &mut self.engine {
             Engine::Native(opt) => {
+                // Same replicated-update triplet the cluster round engine
+                // runs — one code path for "apply a reduced gradient".
                 let mut weights: Vec<&mut Mat> =
                     self.params.tensors.iter_mut().map(|(_, t)| t).collect();
-                opt.step_parallel(self.pool, &mut weights, &grads, lr_mult);
-                for (idx, (_, w)) in self.params.tensors.iter_mut().enumerate() {
-                    opt.finalize_weights(idx, w);
-                }
-                opt.end_step();
+                crate::cluster::round::apply_replicated_update(
+                    opt.as_mut(),
+                    self.pool,
+                    &mut weights,
+                    &grads,
+                    lr_mult,
+                );
             }
             Engine::Hlo(opt) => {
                 let mut weights: Vec<&mut Mat> =

@@ -82,6 +82,16 @@ impl Batcher {
         let seqs = self.corpus.next_batch(self.batch, self.seq + 1);
         Batch::from_sequences(&seqs, self.seq)
     }
+
+    /// One-shot deterministic batch: a fresh corpus keyed by `seed` producing
+    /// exactly one `[batch, seq]` LM batch. This is what lets sharded tasks
+    /// key their data on `(seed, step, shard)` without any streaming state —
+    /// the same seed always yields bitwise-identical tokens on every host.
+    pub fn batch_at(vocab: usize, seed: u64, batch: usize, seq: usize) -> Batch {
+        let mut corpus = SyntheticCorpus::new(vocab, seed);
+        let seqs = corpus.next_batch(batch, seq + 1);
+        Batch::from_sequences(&seqs, seq)
+    }
 }
 
 #[cfg(test)]
@@ -106,6 +116,17 @@ mod tests {
         // Targets are the inputs shifted within each row.
         let b2 = b.next();
         assert_ne!(batch.inputs, b2.inputs);
+    }
+
+    #[test]
+    fn batch_at_is_deterministic_and_seed_sensitive() {
+        let a = Batcher::batch_at(64, 7, 2, 8);
+        let b = Batcher::batch_at(64, 7, 2, 8);
+        let c = Batcher::batch_at(64, 8, 2, 8);
+        assert_eq!(a.inputs, b.inputs);
+        assert_eq!(a.targets, b.targets);
+        assert_ne!(a.inputs, c.inputs);
+        assert_eq!(a.inputs.len(), 16);
     }
 
     #[test]

@@ -1,0 +1,617 @@
+//! Native CPU language-model forward/backward: the callable gradient engine.
+//!
+//! This module mirrors the reference transformer in `python/compile/model.py`
+//! (pre-norm residual blocks, RoPE attention, SwiGLU MLP, tied embedding head)
+//! as plain Rust over [`Mat`], so real LM gradients are available without a
+//! PJRT runtime. It is the engine behind `cluster::task::LmTask` and
+//! `train::Trainer::pretrain_native`: given a [`ModelCfg`], a flat weight list
+//! in `ModelCfg::param_specs` order, and a [`Batch`], it returns the
+//! PAD-masked mean cross-entropy loss and the gradient for every tensor.
+//!
+//! Everything here is serial and allocation-per-call: determinism is the
+//! contract (same `(cfg, weights, batch)` → bitwise-identical loss + grads on
+//! every host), speed is secondary — the cluster amortizes it across shards.
+
+use crate::config::model_cfg::{ModelCfg, TaskHead};
+use crate::data::corpus::PAD;
+use crate::data::Batch;
+use crate::linalg::{matmul, matmul_a_bt, matmul_at_b, Mat};
+
+const RMS_EPS: f64 = 1e-6;
+const ROPE_BASE: f32 = 10_000.0;
+
+/// Number of weight tensors the LM head expects for `cfg`
+/// (embed + 9 per layer + final norm; the head is tied to the embedding).
+pub fn n_tensors(cfg: &ModelCfg) -> usize {
+    2 + 9 * cfg.n_layers
+}
+
+fn check_shapes(cfg: &ModelCfg, weights: &[Mat], batch: &Batch) {
+    assert!(
+        matches!(cfg.head, TaskHead::Lm),
+        "model::lm drives the tied-embedding LM head, got {:?}",
+        cfg.head
+    );
+    assert_eq!(
+        weights.len(),
+        n_tensors(cfg),
+        "LM weight count mismatch for '{}'",
+        cfg.name
+    );
+    assert_eq!(weights[0].shape(), (cfg.vocab, cfg.d_model), "embed shape");
+    assert_eq!(batch.inputs.len(), batch.batch * batch.seq, "batch inputs");
+    assert_eq!(batch.targets.len(), batch.batch * batch.seq, "batch targets");
+    assert!(batch.seq <= cfg.seq_len, "batch.seq exceeds cfg.seq_len");
+    assert_eq!(cfg.d_model % cfg.n_heads, 0, "d_model divisible by n_heads");
+    assert_eq!(cfg.head_dim() % 2, 0, "RoPE needs an even head_dim");
+}
+
+/// Per-position RoPE tables: `cos[p * half + i] = cos(p / base^(i/half))`.
+fn rope_tables(seq: usize, head_dim: usize) -> (Vec<f32>, Vec<f32>) {
+    let half = head_dim / 2;
+    let mut cos = vec![0.0f32; seq * half];
+    let mut sin = vec![0.0f32; seq * half];
+    for p in 0..seq {
+        for i in 0..half {
+            let inv_freq = 1.0f32 / ROPE_BASE.powf(i as f32 / half as f32);
+            let theta = p as f32 * inv_freq;
+            cos[p * half + i] = theta.cos();
+            sin[p * half + i] = theta.sin();
+        }
+    }
+    (cos, sin)
+}
+
+/// Rotate each head's `(i, i + half)` pairs in place. `sign = 1.0` applies
+/// RoPE; `sign = -1.0` applies the inverse rotation (the backward pass).
+fn rope_apply(m: &mut Mat, seq: usize, n_heads: usize, head_dim: usize, cos: &[f32], sin: &[f32], sign: f32) {
+    let half = head_dim / 2;
+    for r in 0..m.rows {
+        let p = r % seq;
+        let row = m.row_mut(r);
+        for h in 0..n_heads {
+            let base = h * head_dim;
+            for i in 0..half {
+                let c = cos[p * half + i];
+                let s = sign * sin[p * half + i];
+                let x1 = row[base + i];
+                let x2 = row[base + i + half];
+                row[base + i] = x1 * c - x2 * s;
+                row[base + i + half] = x1 * s + x2 * c;
+            }
+        }
+    }
+}
+
+/// RMSNorm forward: `y = x * rsqrt(mean(x^2) + eps) * g`. Returns the
+/// normalized rows plus each row's `rsqrt` factor for the backward pass.
+fn rmsnorm_fwd(x: &Mat, g: &Mat) -> (Mat, Vec<f32>) {
+    let (rows, d) = x.shape();
+    let gr = g.row(0);
+    let mut y = Mat::zeros(rows, d);
+    let mut rinv = vec![0.0f32; rows];
+    for r in 0..rows {
+        let xr = x.row(r);
+        let mut ms = 0.0f64;
+        for &v in xr {
+            ms += (v as f64) * (v as f64);
+        }
+        let rv = (1.0 / (ms / d as f64 + RMS_EPS).sqrt()) as f32;
+        rinv[r] = rv;
+        let yr = y.row_mut(r);
+        for j in 0..d {
+            yr[j] = xr[j] * rv * gr[j];
+        }
+    }
+    (y, rinv)
+}
+
+/// RMSNorm backward. `dy` is the upstream gradient; returns `dx` and
+/// accumulates the scale gradient into `dg` (a `1 x d` row).
+fn rmsnorm_bwd(x: &Mat, g: &Mat, rinv: &[f32], dy: &Mat, dg: &mut Mat) -> Mat {
+    let (rows, d) = x.shape();
+    let gr = g.row(0);
+    let mut dx = Mat::zeros(rows, d);
+    let dgr = dg.row_mut(0);
+    for r in 0..rows {
+        let xr = x.row(r);
+        let dyr = dy.row(r);
+        let rv = rinv[r];
+        let mut dot = 0.0f64;
+        for j in 0..d {
+            dot += (dyr[j] as f64) * (gr[j] as f64) * (xr[j] as f64);
+        }
+        let coef = (rv as f64).powi(3) / d as f64 * dot;
+        let dxr = dx.row_mut(r);
+        for j in 0..d {
+            dxr[j] = dyr[j] * gr[j] * rv - (xr[j] as f64 * coef) as f32;
+            dgr[j] += dyr[j] * xr[j] * rv;
+        }
+    }
+    dx
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+fn silu_prime(x: f32) -> f32 {
+    let s = 1.0 / (1.0 + (-x).exp());
+    s * (1.0 + x * (1.0 - s))
+}
+
+/// Copy one head's `(seq, head_dim)` block for batch element `b`.
+fn head_block(m: &Mat, b: usize, h: usize, seq: usize, head_dim: usize) -> Mat {
+    let mut out = Mat::zeros(seq, head_dim);
+    for i in 0..seq {
+        let src = m.row(b * seq + i);
+        out.row_mut(i).copy_from_slice(&src[h * head_dim..(h + 1) * head_dim]);
+    }
+    out
+}
+
+/// Add one head's `(seq, head_dim)` block back into the full `(rows, d)` mat.
+fn head_block_add(dst: &mut Mat, src: &Mat, b: usize, h: usize, seq: usize, head_dim: usize) {
+    for i in 0..seq {
+        let d = dst.row_mut(b * seq + i);
+        let s = src.row(i);
+        for j in 0..head_dim {
+            d[h * head_dim + j] += s[j];
+        }
+    }
+}
+
+/// Everything the backward pass needs from one transformer block.
+struct LayerCache {
+    x_in: Mat,
+    n1: Mat,
+    r1: Vec<f32>,
+    q: Mat,
+    k: Mat,
+    v: Mat,
+    /// Causal softmax probabilities, one `(seq, seq)` mat per `(batch, head)`.
+    probs: Vec<Mat>,
+    ctx: Mat,
+    x_mid: Mat,
+    n2: Mat,
+    r2: Vec<f32>,
+    g: Mat,
+    u: Mat,
+    hact: Mat,
+}
+
+struct Forward {
+    layers: Vec<LayerCache>,
+    x_last: Mat,
+    nf: Mat,
+    rf: Vec<f32>,
+}
+
+/// Index of layer `l`'s tensor `t` (0..9) in the flat weight list.
+fn lw(l: usize, t: usize) -> usize {
+    1 + l * 9 + t
+}
+
+fn forward(cfg: &ModelCfg, weights: &[Mat], batch: &Batch) -> Forward {
+    let (b, s) = (batch.batch, batch.seq);
+    let (d, heads, hd) = (cfg.d_model, cfg.n_heads, cfg.head_dim());
+    let rows = b * s;
+    let embed = &weights[0];
+    let (cos, sin) = rope_tables(s, hd);
+    let scale = 1.0 / (hd as f32).sqrt();
+
+    let mut x = Mat::zeros(rows, d);
+    for r in 0..rows {
+        let tok = batch.inputs[r] as usize;
+        assert!(tok < cfg.vocab, "input token out of vocab range");
+        x.row_mut(r).copy_from_slice(embed.row(tok));
+    }
+
+    let mut layers = Vec::with_capacity(cfg.n_layers);
+    for l in 0..cfg.n_layers {
+        let (n1, r1) = rmsnorm_fwd(&x, &weights[lw(l, 0)]);
+        let mut q = matmul(&n1, &weights[lw(l, 1)]);
+        let mut k = matmul(&n1, &weights[lw(l, 2)]);
+        let v = matmul(&n1, &weights[lw(l, 3)]);
+        rope_apply(&mut q, s, heads, hd, &cos, &sin, 1.0);
+        rope_apply(&mut k, s, heads, hd, &cos, &sin, 1.0);
+
+        let mut ctx = Mat::zeros(rows, d);
+        let mut probs = Vec::with_capacity(b * heads);
+        for bi in 0..b {
+            for h in 0..heads {
+                let qh = head_block(&q, bi, h, s, hd);
+                let kh = head_block(&k, bi, h, s, hd);
+                let vh = head_block(&v, bi, h, s, hd);
+                let mut p = Mat::zeros(s, s);
+                for i in 0..s {
+                    let qi = qh.row(i);
+                    // Causal scores + row softmax over positions j <= i.
+                    let mut mx = f32::NEG_INFINITY;
+                    let pr = p.row_mut(i);
+                    for j in 0..=i {
+                        let mut dot = 0.0f32;
+                        let kj = kh.row(j);
+                        for t in 0..hd {
+                            dot += qi[t] * kj[t];
+                        }
+                        pr[j] = dot * scale;
+                        mx = mx.max(pr[j]);
+                    }
+                    let mut sum = 0.0f32;
+                    for j in 0..=i {
+                        pr[j] = (pr[j] - mx).exp();
+                        sum += pr[j];
+                    }
+                    for j in 0..=i {
+                        pr[j] /= sum;
+                    }
+                }
+                let ctxh = matmul(&p, &vh);
+                head_block_add(&mut ctx, &ctxh, bi, h, s, hd);
+                probs.push(p);
+            }
+        }
+        let attn_out = matmul(&ctx, &weights[lw(l, 4)]);
+        let mut x_mid = x.clone();
+        x_mid.axpy(1.0, &attn_out);
+
+        let (n2, r2) = rmsnorm_fwd(&x_mid, &weights[lw(l, 5)]);
+        let g = matmul(&n2, &weights[lw(l, 6)]);
+        let u = matmul(&n2, &weights[lw(l, 7)]);
+        let mut hact = Mat::zeros(rows, cfg.d_ff);
+        for r in 0..rows {
+            let (gr, ur) = (g.row(r), u.row(r));
+            let hr = hact.row_mut(r);
+            for j in 0..cfg.d_ff {
+                hr[j] = silu(gr[j]) * ur[j];
+            }
+        }
+        let mlp_out = matmul(&hact, &weights[lw(l, 8)]);
+        let mut x_out = x_mid.clone();
+        x_out.axpy(1.0, &mlp_out);
+
+        layers.push(LayerCache {
+            x_in: x,
+            n1,
+            r1,
+            q,
+            k,
+            v,
+            probs,
+            ctx,
+            x_mid,
+            n2,
+            r2,
+            g,
+            u,
+            hact,
+        });
+        x = x_out;
+    }
+
+    let (nf, rf) = rmsnorm_fwd(&x, &weights[weights.len() - 1]);
+    Forward {
+        layers,
+        x_last: x,
+        nf,
+        rf,
+    }
+}
+
+/// PAD-masked mean cross-entropy over `logits = nf @ embed^T`, computed row
+/// by row so the full logits matrix is never materialized twice. When
+/// `dlogits` is `Some`, it is filled with `(softmax - onehot) * mask / nmask`.
+fn head_loss(nf: &Mat, embed: &Mat, targets: &[u32], mut dlogits: Option<&mut Mat>) -> f64 {
+    let rows = nf.rows;
+    let logits = matmul_a_bt(nf, embed);
+    let mut nmask = 0usize;
+    for &t in targets {
+        if t != PAD {
+            nmask += 1;
+        }
+    }
+    let nmask = nmask.max(1);
+    let inv = 1.0 / nmask as f64;
+    let mut loss = 0.0f64;
+    for r in 0..rows {
+        let lr = logits.row(r);
+        let tgt = targets[r];
+        let masked = tgt != PAD;
+        let mut mx = f32::NEG_INFINITY;
+        for &v in lr {
+            mx = mx.max(v);
+        }
+        let mut sumexp = 0.0f64;
+        for &v in lr {
+            sumexp += ((v - mx) as f64).exp();
+        }
+        if masked {
+            let lse = mx as f64 + sumexp.ln();
+            loss += (lse - lr[tgt as usize] as f64) * inv;
+        }
+        if let Some(dl) = dlogits.as_deref_mut() {
+            let dr = dl.row_mut(r);
+            if masked {
+                for (j, &v) in lr.iter().enumerate() {
+                    let p = ((v - mx) as f64).exp() / sumexp;
+                    let one = if j == tgt as usize { 1.0 } else { 0.0 };
+                    dr[j] = ((p - one) * inv) as f32;
+                }
+            }
+            // PAD rows stay zero: they contribute neither loss nor gradient.
+        }
+    }
+    loss
+}
+
+/// Forward-only loss (no gradient buffers kept beyond the pass itself).
+pub fn eval_loss(cfg: &ModelCfg, weights: &[Mat], batch: &Batch) -> f64 {
+    check_shapes(cfg, weights, batch);
+    let fwd = forward(cfg, weights, batch);
+    head_loss(&fwd.nf, &weights[0], &batch.targets, None)
+}
+
+/// Full forward + backward: returns the PAD-masked mean LM loss and one
+/// gradient per weight tensor, in the same `param_specs` order as `weights`.
+pub fn loss_grads(cfg: &ModelCfg, weights: &[Mat], batch: &Batch) -> (f64, Vec<Mat>) {
+    check_shapes(cfg, weights, batch);
+    let (b, s) = (batch.batch, batch.seq);
+    let (d, heads, hd) = (cfg.d_model, cfg.n_heads, cfg.head_dim());
+    let rows = b * s;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let (cos, sin) = rope_tables(s, hd);
+
+    let fwd = forward(cfg, weights, batch);
+    let mut grads: Vec<Mat> = weights.iter().map(|w| Mat::zeros(w.rows, w.cols)).collect();
+
+    let mut dlogits = Mat::zeros(rows, cfg.vocab);
+    let loss = head_loss(&fwd.nf, &weights[0], &batch.targets, Some(&mut dlogits));
+
+    // Tied head: logits = nf @ embed^T.
+    let dnf = matmul(&dlogits, &weights[0]);
+    grads[0].axpy(1.0, &matmul_at_b(&dlogits, &fwd.nf));
+
+    let last = weights.len() - 1;
+    let mut dx = rmsnorm_bwd(&fwd.x_last, &weights[last], &fwd.rf, &dnf, &mut grads[last]);
+
+    for l in (0..cfg.n_layers).rev() {
+        let lc = &fwd.layers[l];
+
+        // MLP branch: x_out = x_mid + hact @ w_down.
+        let dhact = matmul_a_bt(&dx, &weights[lw(l, 8)]);
+        grads[lw(l, 8)].axpy(1.0, &matmul_at_b(&lc.hact, &dx));
+        let mut dg_pre = Mat::zeros(rows, cfg.d_ff);
+        let mut du = Mat::zeros(rows, cfg.d_ff);
+        for r in 0..rows {
+            let (gr, ur, dhr) = (lc.g.row(r), lc.u.row(r), dhact.row(r));
+            let dgr = dg_pre.row_mut(r);
+            for j in 0..cfg.d_ff {
+                dgr[j] = dhr[j] * ur[j] * silu_prime(gr[j]);
+            }
+            let dur = du.row_mut(r);
+            for j in 0..cfg.d_ff {
+                dur[j] = dhr[j] * silu(gr[j]);
+            }
+        }
+        grads[lw(l, 6)].axpy(1.0, &matmul_at_b(&lc.n2, &dg_pre));
+        grads[lw(l, 7)].axpy(1.0, &matmul_at_b(&lc.n2, &du));
+        let mut dn2 = matmul_a_bt(&dg_pre, &weights[lw(l, 6)]);
+        dn2.axpy(1.0, &matmul_a_bt(&du, &weights[lw(l, 7)]));
+        let dxm = rmsnorm_bwd(&lc.x_mid, &weights[lw(l, 5)], &lc.r2, &dn2, &mut grads[lw(l, 5)]);
+        let mut dx_mid = dx;
+        dx_mid.axpy(1.0, &dxm);
+
+        // Attention branch: x_mid = x_in + ctx @ wo.
+        let dctx = matmul_a_bt(&dx_mid, &weights[lw(l, 4)]);
+        grads[lw(l, 4)].axpy(1.0, &matmul_at_b(&lc.ctx, &dx_mid));
+
+        let mut dq = Mat::zeros(rows, d);
+        let mut dk = Mat::zeros(rows, d);
+        let mut dv = Mat::zeros(rows, d);
+        for bi in 0..b {
+            for h in 0..heads {
+                let p = &lc.probs[bi * heads + h];
+                let qh = head_block(&lc.q, bi, h, s, hd);
+                let kh = head_block(&lc.k, bi, h, s, hd);
+                let vh = head_block(&lc.v, bi, h, s, hd);
+                let dctxh = head_block(&dctx, bi, h, s, hd);
+                let dvh = matmul_at_b(p, &dctxh);
+                let dp = matmul_a_bt(&dctxh, &vh);
+                // Softmax backward per causal row: dS = P (dP - sum(dP * P)).
+                let mut ds = Mat::zeros(s, s);
+                for i in 0..s {
+                    let (pr, dpr) = (p.row(i), dp.row(i));
+                    let mut dot = 0.0f32;
+                    for j in 0..=i {
+                        dot += dpr[j] * pr[j];
+                    }
+                    let dsr = ds.row_mut(i);
+                    for j in 0..=i {
+                        dsr[j] = pr[j] * (dpr[j] - dot);
+                    }
+                }
+                let mut dqh = matmul(&ds, &kh);
+                dqh.scale(scale);
+                let mut dkh = matmul_at_b(&ds, &qh);
+                dkh.scale(scale);
+                head_block_add(&mut dq, &dqh, bi, h, s, hd);
+                head_block_add(&mut dk, &dkh, bi, h, s, hd);
+                head_block_add(&mut dv, &dvh, bi, h, s, hd);
+            }
+        }
+        // Undo the rotation: RoPE is orthogonal, its backward is the inverse.
+        rope_apply(&mut dq, s, heads, hd, &cos, &sin, -1.0);
+        rope_apply(&mut dk, s, heads, hd, &cos, &sin, -1.0);
+
+        grads[lw(l, 1)].axpy(1.0, &matmul_at_b(&lc.n1, &dq));
+        grads[lw(l, 2)].axpy(1.0, &matmul_at_b(&lc.n1, &dk));
+        grads[lw(l, 3)].axpy(1.0, &matmul_at_b(&lc.n1, &dv));
+        let mut dn1 = matmul_a_bt(&dq, &weights[lw(l, 1)]);
+        dn1.axpy(1.0, &matmul_a_bt(&dk, &weights[lw(l, 2)]));
+        dn1.axpy(1.0, &matmul_a_bt(&dv, &weights[lw(l, 3)]));
+        let dx_norm = rmsnorm_bwd(&lc.x_in, &weights[lw(l, 0)], &lc.r1, &dn1, &mut grads[lw(l, 0)]);
+        dx = dx_mid;
+        dx.axpy(1.0, &dx_norm);
+    }
+
+    // Embedding gather backward: scatter-add rows by input token id.
+    for r in 0..rows {
+        let tok = batch.inputs[r] as usize;
+        let src = dx.row(r);
+        let dst = grads[0].row_mut(tok);
+        for j in 0..d {
+            dst[j] += src[j];
+        }
+    }
+
+    (loss, grads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tiny_cfg() -> ModelCfg {
+        ModelCfg {
+            name: "gradcheck".into(),
+            vocab: 24,
+            d_model: 8,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 16,
+            seq_len: 5,
+            head: TaskHead::Lm,
+        }
+    }
+
+    fn tiny_weights(cfg: &ModelCfg, seed: u64) -> Vec<Mat> {
+        let mut rng = Rng::new(seed);
+        cfg.param_specs()
+            .iter()
+            .map(|(_, rows, cols)| {
+                if *rows == 1 {
+                    // Perturbed norm scales so their gradients are exercised.
+                    let mut m = Mat::randn(1, *cols, 0.1, &mut rng);
+                    for v in m.data.iter_mut() {
+                        *v += 1.0;
+                    }
+                    m
+                } else {
+                    Mat::randn(*rows, *cols, 0.1, &mut rng)
+                }
+            })
+            .collect()
+    }
+
+    fn tiny_batch(cfg: &ModelCfg, seed: u64) -> Batch {
+        let mut rng = Rng::new(seed);
+        let (b, s) = (2usize, cfg.seq_len);
+        let mut inputs = Vec::with_capacity(b * s);
+        let mut targets = Vec::with_capacity(b * s);
+        for _ in 0..b * s {
+            inputs.push(3 + rng.below((cfg.vocab - 3) as u64) as u32);
+            targets.push(3 + rng.below((cfg.vocab - 3) as u64) as u32);
+        }
+        // One PAD target exercises the loss mask.
+        targets[1] = PAD;
+        Batch {
+            batch: b,
+            seq: s,
+            inputs,
+            targets,
+        }
+    }
+
+    #[test]
+    fn eval_loss_matches_loss_grads() {
+        let cfg = tiny_cfg();
+        let w = tiny_weights(&cfg, 7);
+        let batch = tiny_batch(&cfg, 11);
+        let (loss, _) = loss_grads(&cfg, &w, &batch);
+        let only = eval_loss(&cfg, &w, &batch);
+        assert_eq!(loss, only);
+        assert!(loss.is_finite() && loss > 0.0);
+    }
+
+    #[test]
+    fn loss_grads_is_deterministic() {
+        let cfg = tiny_cfg();
+        let w = tiny_weights(&cfg, 3);
+        let batch = tiny_batch(&cfg, 5);
+        let (l1, g1) = loss_grads(&cfg, &w, &batch);
+        let (l2, g2) = loss_grads(&cfg, &w, &batch);
+        assert_eq!(l1, l2);
+        for (a, b) in g1.iter().zip(&g2) {
+            assert_eq!(a.data, b.data);
+        }
+    }
+
+    #[test]
+    fn directional_gradcheck_every_tensor() {
+        let cfg = tiny_cfg();
+        let w = tiny_weights(&cfg, 42);
+        let batch = tiny_batch(&cfg, 13);
+        let (_, grads) = loss_grads(&cfg, &w, &batch);
+        let eps = 1e-2f32;
+        let names: Vec<String> = cfg.param_specs().into_iter().map(|(n, _, _)| n).collect();
+        for (idx, name) in names.iter().enumerate() {
+            let mut rng = Rng::new(100 + idx as u64);
+            let dir = Mat::randn(w[idx].rows, w[idx].cols, 1.0, &mut rng);
+            let analytic: f64 = grads[idx]
+                .data
+                .iter()
+                .zip(&dir.data)
+                .map(|(&g, &d)| g as f64 * d as f64)
+                .sum();
+            let mut wp = w.clone();
+            wp[idx].axpy(eps, &dir);
+            let mut wm = w.clone();
+            wm[idx].axpy(-eps, &dir);
+            let fd = (eval_loss(&cfg, &wp, &batch) - eval_loss(&cfg, &wm, &batch)) / (2.0 * eps as f64);
+            let tol = 1e-3 + 0.08 * analytic.abs().max(fd.abs());
+            assert!(
+                (fd - analytic).abs() <= tol,
+                "tensor '{name}': fd {fd:.6e} vs analytic {analytic:.6e}"
+            );
+        }
+    }
+
+    #[test]
+    fn loss_descends_under_sgd() {
+        let cfg = tiny_cfg();
+        let mut w = tiny_weights(&cfg, 9);
+        let batch = tiny_batch(&cfg, 21);
+        let (first, _) = loss_grads(&cfg, &w, &batch);
+        let mut last = first;
+        for _ in 0..30 {
+            let (loss, grads) = loss_grads(&cfg, &w, &batch);
+            last = loss;
+            for (wi, gi) in w.iter_mut().zip(&grads) {
+                wi.axpy(-0.5, gi);
+            }
+        }
+        assert!(
+            last < first * 0.9,
+            "SGD should cut the fixed-batch loss: {first:.4} -> {last:.4}"
+        );
+    }
+
+    #[test]
+    fn pad_targets_are_ignored() {
+        let cfg = tiny_cfg();
+        let w = tiny_weights(&cfg, 4);
+        let mut batch = tiny_batch(&cfg, 6);
+        for t in batch.targets.iter_mut() {
+            *t = PAD;
+        }
+        let (loss, grads) = loss_grads(&cfg, &w, &batch);
+        assert_eq!(loss, 0.0);
+        // With every target masked the head contributes nothing; all grads
+        // flow only through... nothing. Everything must be exactly zero.
+        for g in &grads {
+            assert!(g.data.iter().all(|&v| v == 0.0), "masked-out grads must vanish");
+        }
+    }
+}

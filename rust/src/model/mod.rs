@@ -1,10 +1,12 @@
 //! Model-side state owned by the Rust coordinator: the parameter store
 //! (host-resident f32 tensors in registration order), seeded init,
 //! checkpoint I/O, and the Appendix-B post-hoc LoRA adapter extraction.
-//! The *compute* lives in the AOT HLO artifacts (Layer 2).
+//! Compiled *compute* lives in the AOT HLO artifacts (Layer 2); `lm` is the
+//! native CPU forward/backward that powers the cluster's real-model task.
 
 pub mod adapter;
 pub mod checkpoint;
+pub mod lm;
 pub mod params;
 
 pub use params::ParamStore;

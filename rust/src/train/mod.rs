@@ -6,4 +6,4 @@ pub mod eval;
 pub mod trainer;
 
 pub use eval::{accuracy_from_logits, perplexity};
-pub use trainer::{FinetuneReport, PretrainReport, Trainer};
+pub use trainer::{FinetuneReport, NativePretrainReport, PretrainReport, Trainer};

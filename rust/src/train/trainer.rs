@@ -1,11 +1,16 @@
 //! The Trainer: pretraining and fine-tuning loops over a Coordinator.
 
-use crate::config::TrainCfg;
+use crate::cluster::round::{run_rounds, LocalShards, RoundCfg};
+use crate::cluster::task::{init_weights, LmTask, TrainTask};
+use crate::cluster::{model_layers, weights_fingerprint};
+use crate::config::{ModelCfg, OptimCfg, TrainCfg};
 use crate::coordinator::Coordinator;
 use crate::data::glue::{score, GlueMetric, GlueTask};
 use crate::data::{Batcher, SyntheticCorpus};
-use crate::log_info;
+use crate::linalg::Mat;
 use crate::util::logging::CsvWriter;
+use crate::util::threadpool;
+use crate::{log_info, log_warn, optim};
 
 use super::eval::{accuracy_from_logits, perplexity, scores_from_logits};
 
@@ -20,6 +25,15 @@ pub struct PretrainReport {
     pub seconds: f64,
     pub optimizer_state_bytes: usize,
     pub loss_curve: Vec<(usize, f32)>,
+}
+
+/// Result of a native (in-process, artifact-free) pretraining run: the
+/// usual report plus the final weights and their fingerprint, so callers
+/// can compare bitwise against a cluster run of the same config.
+pub struct NativePretrainReport {
+    pub report: PretrainReport,
+    pub weights: Vec<Mat>,
+    pub weights_fnv: u64,
 }
 
 /// Result of a fine-tuning run.
@@ -93,6 +107,7 @@ impl Trainer {
             val_sum += coord.runner.eval_loss(&coord.params, &b)?;
         }
         let val_loss = val_sum / self.cfg.eval_batches.max(1) as f32;
+        warn_dp_fallbacks("pretrain", coord);
         Ok(PretrainReport {
             steps: self.cfg.steps,
             final_loss: last_loss,
@@ -102,6 +117,89 @@ impl Trainer {
             seconds: t0.secs(),
             optimizer_state_bytes: coord.optimizer_state_bytes(),
             loss_curve: curve,
+        })
+    }
+
+    /// Native LM pretraining: the real transformer forward/backward
+    /// ([`crate::model::lm`]) driven through the exact round engine the
+    /// cluster runs — cluster weight init, [`LmTask`] data/eval streams,
+    /// `dp_workers` gradient shards all-reduced per step, replicated
+    /// optimizer update. No PJRT artifacts needed. A cluster run with the
+    /// same model/seed/steps/batch/schedule and `workers == dp_workers`
+    /// produces bitwise-identical final weights (compare `weights_fnv`).
+    pub fn pretrain_native(
+        &self,
+        model: &ModelCfg,
+        optim_cfg: &OptimCfg,
+        mut csv: Option<&mut CsvWriter>,
+    ) -> crate::Result<NativePretrainReport> {
+        let t0 = crate::util::Timer::start();
+        let layers = model_layers(model);
+        let task = LmTask::new(model.clone(), self.cfg.clone(), self.cfg.seed, &layers)?;
+        let mut weights = init_weights(self.cfg.seed, &layers);
+        let shapes: Vec<(usize, usize)> = layers.iter().map(|l| (l.rows, l.cols)).collect();
+        let projected: Vec<bool> = layers.iter().map(|l| l.projected).collect();
+        let mut opt = optim::build(optim_cfg, &shapes, &projected, self.cfg.seed);
+
+        let mut io = LocalShards {
+            shards: self.cfg.dp_workers.max(1) as u64,
+        };
+        let rcfg = RoundCfg {
+            start_step: 0,
+            steps: self.cfg.steps as u64,
+            ckpt_every: 0,
+        };
+        let steps = self.cfg.steps;
+        let log_every = self.cfg.log_every.max(1);
+        let mut curve: Vec<(usize, f32)> = Vec::new();
+        let mut csv_err: Option<anyhow::Error> = None;
+        let mut row_timer = crate::util::Timer::start();
+        let mut observe = |step: u64, loss: f64, lr_mult: f32| {
+            let step = step as usize;
+            if step % log_every == 0 || step + 1 == steps {
+                curve.push((step, loss as f32));
+                log_info!("step {step:>5} loss {loss:.4} lr x{lr_mult:.3} ({:.2}s)", row_timer.secs());
+                if csv_err.is_none() {
+                    if let Some(w) = csv.as_deref_mut() {
+                        csv_err = w
+                            .row(&[step as f64, loss, lr_mult as f64, row_timer.secs()])
+                            .and_then(|_| w.flush())
+                            .err();
+                    }
+                }
+                row_timer = crate::util::Timer::start();
+            }
+        };
+        let out = run_rounds(
+            &task,
+            opt.as_mut(),
+            threadpool::global(),
+            &mut weights,
+            &mut io,
+            &rcfg,
+            &mut observe,
+        )?;
+        drop(observe);
+        if let Some(e) = csv_err {
+            return Err(e);
+        }
+
+        let val_loss = task.eval_loss(&weights) as f32;
+        let report = PretrainReport {
+            steps: self.cfg.steps,
+            final_loss: out.last_loss as f32,
+            val_loss,
+            val_ppl: perplexity(val_loss),
+            tokens_seen: self.cfg.steps * self.cfg.batch * model.seq_len,
+            seconds: t0.secs(),
+            optimizer_state_bytes: opt.state_bytes(),
+            loss_curve: curve,
+        };
+        let weights_fnv = weights_fingerprint(&weights);
+        Ok(NativePretrainReport {
+            report,
+            weights,
+            weights_fnv,
         })
     }
 
@@ -135,6 +233,7 @@ impl Trainer {
             }
         }
         let metric = self.eval_glue(coord, task)?;
+        warn_dp_fallbacks("finetune", coord);
         Ok(FinetuneReport {
             steps: self.cfg.steps,
             final_loss: last_loss,
@@ -162,6 +261,18 @@ impl Trainer {
             gold.extend(labels);
         }
         Ok(score(task.metric, &preds, &gold))
+    }
+}
+
+/// End-of-run summary: one warning line if any iteration silently dropped
+/// its requested data-parallel sharding (`Coordinator::dp_fallback_count`).
+fn warn_dp_fallbacks(what: &str, coord: &Coordinator) {
+    let n = coord.dp_fallback_count();
+    if n > 0 {
+        log_warn!(
+            "{what}: {n} iteration(s) fell back to a single full-batch pass — requested \
+             data-parallel sharding did not divide the batch"
+        );
     }
 }
 

@@ -7,10 +7,12 @@
 use std::net::{TcpListener, TcpStream};
 use std::time::Duration;
 
-use sumo::cluster::messages::{encode, read_msg, write_msg, Msg, HEADER_BYTES, WIRE_MAGIC};
+use sumo::cluster::messages::{
+    encode, read_msg, write_msg, Msg, HEADER_BYTES, TASK_SUPPORT_ALL, WIRE_MAGIC, WIRE_VERSION,
+};
 use sumo::cluster::worker::{WorkerCfg, WorkerReport};
 use sumo::cluster::{coordinator, local, task, weights_fingerprint, RunOutcome};
-use sumo::config::ClusterCfg;
+use sumo::config::{ClusterCfg, Schedule};
 
 fn test_cfg(name: &str, workers: usize, steps: usize) -> ClusterCfg {
     ClusterCfg {
@@ -131,6 +133,90 @@ fn resume_continues_from_shard_files_and_rejects_mismatched_steps() {
     std::fs::remove_dir_all(&cfg.ckpt_dir).ok();
 }
 
+/// `--task lm` over real sockets: the transformer gradient path through
+/// the wire must land on exactly the same bits as (a) the single-process
+/// reference runner and (b) the in-process `Trainer` on the native engine.
+#[test]
+fn lm_loopback_matches_local_runner_and_native_trainer() {
+    let mut cfg = test_cfg("lm_loopback", 2, 3);
+    cfg.task = "lm".to_string();
+    cfg.train.batch = 2;
+    cfg.train.eval_batches = 2;
+    std::fs::remove_dir_all(&cfg.ckpt_dir).ok();
+
+    let (addr, coord) = spawn_coordinator(cfg.clone());
+    let (w0, w1) = (spawn_worker(0, &addr), spawn_worker(1, &addr));
+    let outcome = coord.join().unwrap().expect("coordinator failed");
+    let r0 = w0.join().unwrap().expect("worker 0 failed");
+    let r1 = w1.join().unwrap().expect("worker 1 failed");
+
+    let fnv = weights_fingerprint(&outcome.weights);
+    assert_eq!(outcome.final_step, 3);
+    assert_eq!(r0.weights_fnv, fnv, "worker 0 replica diverged");
+    assert_eq!(r1.weights_fnv, fnv, "worker 1 replica diverged");
+
+    let reference = local::run_local(&cfg).unwrap();
+    assert_eq!(
+        fnv,
+        weights_fingerprint(&reference.weights),
+        "cluster LM weights must be bitwise identical to the local runner"
+    );
+    assert_eq!(outcome.final_loss, reference.final_loss);
+
+    // The Trainer path: same model/seed/steps/batch/schedule, dp_workers ==
+    // cluster workers — one training engine, three entry points, same bits.
+    let model = sumo::config::ModelCfg::preset(&cfg.preset).unwrap();
+    let mut tcfg = cfg.train.clone();
+    tcfg.steps = cfg.steps;
+    tcfg.seed = cfg.seed;
+    tcfg.dp_workers = cfg.workers;
+    let native = sumo::train::Trainer::new(tcfg)
+        .pretrain_native(&model, &cfg.optim, None)
+        .unwrap();
+    assert_eq!(
+        native.weights_fnv, fnv,
+        "single-process Trainer must agree bitwise with the cluster"
+    );
+    std::fs::remove_dir_all(&cfg.ckpt_dir).ok();
+}
+
+/// LM shard checkpoints resume across sessions exactly like synthetic ones.
+#[test]
+fn lm_resume_continues_across_sessions() {
+    let mut cfg = test_cfg("lm_resume", 2, 3);
+    cfg.task = "lm".to_string();
+    cfg.train.batch = 2;
+    cfg.train.eval_batches = 2;
+    // A constant schedule keeps step semantics identical across sessions
+    // (cosine spans would differ between a 3-step and a 2-step session).
+    cfg.train.schedule = Schedule::Constant;
+    std::fs::remove_dir_all(&cfg.ckpt_dir).ok();
+
+    let (addr, coord) = spawn_coordinator(cfg.clone());
+    let (w0, w1) = (spawn_worker(0, &addr), spawn_worker(1, &addr));
+    let first = coord.join().unwrap().unwrap();
+    w0.join().unwrap().unwrap();
+    w1.join().unwrap().unwrap();
+    assert_eq!(first.final_step, 3);
+
+    cfg.resume = true;
+    cfg.steps = 2;
+    let (addr, coord) = spawn_coordinator(cfg.clone());
+    let (w0, w1) = (spawn_worker(0, &addr), spawn_worker(1, &addr));
+    let second = coord.join().unwrap().unwrap();
+    let r0 = w0.join().unwrap().unwrap();
+    w1.join().unwrap().unwrap();
+    assert_eq!(second.start_step, 3);
+    assert_eq!(second.final_step, 5);
+    assert_eq!(r0.final_step, 5);
+    assert_ne!(
+        second.fingerprint(),
+        first.fingerprint(),
+        "resumed LM session must make progress"
+    );
+    std::fs::remove_dir_all(&cfg.ckpt_dir).ok();
+}
+
 #[test]
 fn killed_worker_times_out_cleanly_and_releases_survivors() {
     let mut cfg = test_cfg("deadworker", 2, 50);
@@ -145,7 +231,7 @@ fn killed_worker_times_out_cleanly_and_releases_survivors() {
     let zombie = std::thread::spawn(move || {
         let mut s = TcpStream::connect(&zaddr).unwrap();
         s.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
-        write_msg(&mut s, &Msg::Hello { worker_id: 1 }).unwrap();
+        write_msg(&mut s, &Msg::Hello { worker_id: 1, task_support: TASK_SUPPORT_ALL }).unwrap();
         let a = match read_msg(&mut s).unwrap() {
             Msg::AssignShards(a) => *a,
             m => panic!("expected assignment, got {}", m.name()),
@@ -193,7 +279,7 @@ fn hostile_frames_are_rejected_before_allocation() {
     // alone — decode never allocates the claimed size.
     let mut frame = Vec::new();
     frame.extend_from_slice(WIRE_MAGIC);
-    frame.push(1); // version
+    frame.push(WIRE_VERSION);
     frame.push(1); // Hello tag
     frame.extend_from_slice(&(1u64 << 60).to_le_bytes());
     assert_eq!(frame.len(), HEADER_BYTES);
@@ -201,12 +287,12 @@ fn hostile_frames_are_rejected_before_allocation() {
     assert!(err.contains("frame"), "got: {err}");
 
     // Truncated payload: header promises more bytes than are present.
-    let mut good = encode(&Msg::Hello { worker_id: 3 });
+    let mut good = encode(&Msg::Hello { worker_id: 3, task_support: TASK_SUPPORT_ALL });
     good.truncate(good.len() - 2);
     assert!(sumo::cluster::messages::decode(&good).is_err());
 
     // Bad version byte.
-    let mut bad = encode(&Msg::Hello { worker_id: 3 });
+    let mut bad = encode(&Msg::Hello { worker_id: 3, task_support: TASK_SUPPORT_ALL });
     bad[4] = 99;
     let err = sumo::cluster::messages::decode(&bad).unwrap_err().to_string();
     assert!(err.contains("version"), "got: {err}");
