@@ -145,6 +145,21 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // Invariant linter over the full crate source: the CI gate's cost.
+    // Staying sub-100ms keeps `sumo lint --deny all` cheap enough for a
+    // pre-commit hook; the perf-diff gate catches a rule turning
+    // accidentally quadratic in file size.
+    {
+        let src_root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+        let report = sumo::analysis::lint_tree(&src_root)?;
+        let files = report.files;
+        let s = time_fn(1, bench_iters(5), || {
+            let _ = sumo::analysis::lint_tree(&src_root).unwrap();
+        });
+        timing_row(&mut t, "lint full-crate scan", "rust/src", &s);
+        println!("lint scanned {files} files");
+    }
+
     // Dispatch overhead: the same worker-count parallel-for over trivial
     // tasks through (a) per-call scoped spawn/join — what every pool
     // dispatch paid before resident workers — and (b) the resident-worker

@@ -1,0 +1,293 @@
+//! Comment/string-aware lexical masking for Rust sources.
+//!
+//! The rule engine in [`super::rules`] works on *masked* lines: source text
+//! where every comment has been stripped out of the code channel and every
+//! string/char literal has had its contents blanked (quotes kept, payload
+//! replaced by spaces). This is the minimum machinery that lets purely
+//! lexical rules ("no `thread::spawn` outside the pool", "`with_capacity`
+//! only after a cap check") run without false positives on tokens that
+//! appear inside doc prose or string literals — and it needs no parser
+//! dependency, which keeps the linter usable in this offline workspace.
+//!
+//! Handled syntax: `//` line comments (incl. `///` and `//!` doc forms),
+//! nested `/* */` block comments, plain and byte strings with escapes,
+//! raw strings `r"…"`/`r#"…"#`/`br#"…"#` with any hash count, byte chars
+//! `b'x'`, char literals vs. lifetimes (`'a'` vs `'a`), and raw
+//! identifiers `r#match`. Column positions are preserved 1:1 only within
+//! the masked payloads; everything structural (quotes, brackets, braces,
+//! semicolons) passes through verbatim so brace matching still works.
+
+/// One source line split into its masked code and extracted comment text.
+#[derive(Debug, Default, Clone)]
+pub struct Line {
+    /// Code channel: source text with comments removed and string/char
+    /// literal contents blanked. Delimiting quotes are kept so the text
+    /// remains visually alignable with the original.
+    pub code: String,
+    /// Comment channel: concatenated text of every comment on this line,
+    /// without the `//`, `///`, `//!` or `/* */` markers.
+    pub comment: String,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Split `src` into per-line masked code and comment text.
+///
+/// Always returns at least one (possibly empty) line; line `i` of the
+/// result corresponds to 0-based source line `i`.
+pub fn mask_lines(src: &str) -> Vec<Line> {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut out: Vec<Line> = vec![Line::default()];
+
+    fn push_code(out: &mut Vec<Line>, c: char) {
+        if c == '\n' {
+            out.push(Line::default());
+        } else {
+            out.last_mut().expect("non-empty").code.push(c);
+        }
+    }
+    fn push_comment(out: &mut Vec<Line>, c: char) {
+        if c == '\n' {
+            out.push(Line::default());
+        } else {
+            out.last_mut().expect("non-empty").comment.push(c);
+        }
+    }
+
+    let mut i = 0usize;
+    while i < n {
+        let c = chars[i];
+
+        // `//` line comment: rest of the line goes to the comment channel.
+        if c == '/' && chars.get(i + 1) == Some(&'/') {
+            i += 2;
+            // Normalize `///` and `//!` doc markers away too.
+            if matches!(chars.get(i), Some('/') | Some('!')) {
+                i += 1;
+            }
+            while i < n && chars[i] != '\n' {
+                push_comment(&mut out, chars[i]);
+                i += 1;
+            }
+            continue;
+        }
+
+        // `/* */` block comment with nesting; may span lines.
+        if c == '/' && chars.get(i + 1) == Some(&'*') {
+            i += 2;
+            let mut depth = 1usize;
+            while i < n && depth > 0 {
+                if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    i += 2;
+                    continue;
+                }
+                if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    i += 2;
+                    continue;
+                }
+                if chars[i] == '\n' {
+                    out.push(Line::default());
+                } else {
+                    push_comment(&mut out, chars[i]);
+                }
+                i += 1;
+            }
+            continue;
+        }
+
+        // Raw strings, byte strings, raw identifiers. Only when the `r`/`b`
+        // is not the tail of a longer identifier (`expr"` is not a prefix).
+        if (c == 'r' || c == 'b') && !(i > 0 && is_ident(chars[i - 1])) {
+            // `b"…"`: emit the `b`, let the next iteration handle `"`.
+            if c == 'b' && chars.get(i + 1) == Some(&'"') {
+                push_code(&mut out, 'b');
+                i += 1;
+                continue;
+            }
+            // `b'x'`: emit the `b`, let the next iteration handle `'`.
+            if c == 'b' && chars.get(i + 1) == Some(&'\'') {
+                push_code(&mut out, 'b');
+                i += 1;
+                continue;
+            }
+            // `r…` or `br…`: candidate raw string.
+            let after_r = if c == 'b' && chars.get(i + 1) == Some(&'r') {
+                i + 2
+            } else if c == 'r' {
+                i + 1
+            } else {
+                usize::MAX
+            };
+            if after_r != usize::MAX {
+                let mut h = 0usize;
+                while chars.get(after_r + h) == Some(&'#') {
+                    h += 1;
+                }
+                if chars.get(after_r + h) == Some(&'"') {
+                    // Raw string: emit the prefix + opening quote, then mask
+                    // everything until `"` followed by `h` hashes.
+                    for &p in &chars[i..=after_r + h] {
+                        push_code(&mut out, p);
+                    }
+                    i = after_r + h + 1;
+                    'raw: while i < n {
+                        if chars[i] == '"' {
+                            let mut k = 0usize;
+                            while k < h && chars.get(i + 1 + k) == Some(&'#') {
+                                k += 1;
+                            }
+                            if k == h {
+                                for &p in &chars[i..=i + h] {
+                                    push_code(&mut out, p);
+                                }
+                                i += h + 1;
+                                break 'raw;
+                            }
+                        }
+                        push_code(&mut out, if chars[i] == '\n' { '\n' } else { ' ' });
+                        i += 1;
+                    }
+                    continue;
+                }
+                if c == 'r' && h == 1 && chars.get(after_r + 1).is_some_and(|&x| is_ident(x)) {
+                    // Raw identifier `r#match`: pass `r#` through as code.
+                    push_code(&mut out, 'r');
+                    push_code(&mut out, '#');
+                    i = after_r + 1;
+                    continue;
+                }
+            }
+            // Plain identifier starting with r/b — fall through.
+            push_code(&mut out, c);
+            i += 1;
+            continue;
+        }
+
+        // Plain string literal.
+        if c == '"' {
+            push_code(&mut out, '"');
+            i += 1;
+            while i < n {
+                if chars[i] == '\\' {
+                    push_code(&mut out, ' ');
+                    if i + 1 < n {
+                        push_code(&mut out, if chars[i + 1] == '\n' { '\n' } else { ' ' });
+                    }
+                    i += 2;
+                    continue;
+                }
+                if chars[i] == '"' {
+                    push_code(&mut out, '"');
+                    i += 1;
+                    break;
+                }
+                push_code(&mut out, if chars[i] == '\n' { '\n' } else { ' ' });
+                i += 1;
+            }
+            continue;
+        }
+
+        // Char literal vs. lifetime: a quote starts a char literal iff the
+        // next char is a backslash escape or the char after next closes it
+        // (`'a'`); otherwise it is a lifetime (`'a`, `'static`).
+        if c == '\'' {
+            let is_char = chars.get(i + 1) == Some(&'\\') || chars.get(i + 2) == Some(&'\'');
+            if is_char {
+                push_code(&mut out, '\'');
+                i += 1;
+                while i < n {
+                    if chars[i] == '\\' {
+                        push_code(&mut out, ' ');
+                        if i + 1 < n {
+                            push_code(&mut out, ' ');
+                        }
+                        i += 2;
+                        continue;
+                    }
+                    if chars[i] == '\'' {
+                        push_code(&mut out, '\'');
+                        i += 1;
+                        break;
+                    }
+                    push_code(&mut out, ' ');
+                    i += 1;
+                }
+                continue;
+            }
+            push_code(&mut out, '\'');
+            i += 1;
+            continue;
+        }
+
+        push_code(&mut out, c);
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_are_separated_from_code() {
+        let src = "let x = 1; // trailing note\n/* block\nspans */ let y = 2;\n";
+        let lines = mask_lines(src);
+        assert_eq!(lines[0].code.trim_end(), "let x = 1;");
+        assert_eq!(lines[0].comment.trim(), "trailing note");
+        assert_eq!(lines[1].comment.trim(), "block");
+        assert_eq!(lines[1].code, "");
+        assert_eq!(lines[2].comment.trim(), "spans");
+        assert_eq!(lines[2].code.trim(), "let y = 2;");
+    }
+
+    #[test]
+    fn string_contents_are_masked() {
+        let src = "let s = \"vec![0; 9] // not code\"; call(s);";
+        let lines = mask_lines(src);
+        assert!(!lines[0].code.contains("vec!"));
+        assert!(lines[0].comment.is_empty());
+        assert!(lines[0].code.contains("call(s);"));
+    }
+
+    #[test]
+    fn raw_strings_and_raw_identifiers() {
+        let src = "let r = r#\"unsafe { } \"# ; let r#match = 1; let b = br##\"x\"##;";
+        let lines = mask_lines(src);
+        assert!(!lines[0].code.contains("unsafe"));
+        assert!(lines[0].code.contains("r#match"));
+        // Structural quotes survive; payloads do not.
+        assert!(!lines[0].code.contains('x'), "code: {}", lines[0].code);
+    }
+
+    #[test]
+    fn lifetimes_are_not_chars() {
+        let src = "fn f<'a>(x: &'a str) -> char { 'x' }";
+        let lines = mask_lines(src);
+        assert!(lines[0].code.contains("<'a>"));
+        assert!(lines[0].code.contains("&'a str"));
+        assert!(!lines[0].code.contains("'x'"));
+    }
+
+    #[test]
+    fn escaped_quotes_do_not_unbalance() {
+        let src = "let a = \"he said \\\"hi\\\"\"; let c = '\\''; done();";
+        let lines = mask_lines(src);
+        assert!(lines[0].code.contains("done();"));
+        assert!(!lines[0].code.contains("hi"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "/* outer /* inner */ still comment */ code();";
+        let lines = mask_lines(src);
+        assert!(lines[0].code.contains("code();"));
+        assert!(!lines[0].code.contains("still"));
+        assert!(lines[0].comment.contains("still comment"));
+    }
+}

@@ -1,0 +1,120 @@
+//! In-tree invariant linter (`sumo lint`).
+//!
+//! The crate's correctness story rests on invariants that no type system
+//! checks: bitwise determinism across pool sizes and processes, a
+//! zero-spawn/zero-alloc steady-state step, and validate-before-allocate
+//! on every hostile byte surface. This module turns those from review
+//! folklore into machine-checked rules: a dependency-free, comment- and
+//! string-aware lexical scanner ([`lexer`]) feeds a rule engine
+//! ([`rules`]) that reports `file:line` diagnostics and drives the
+//! `sumo lint` CLI command plus the `lint-invariants` CI job.
+//!
+//! # Pragma grammar
+//!
+//! Each rule has a per-site escape hatch written as a comment whose text
+//! starts with the word `lint:` (doc prose that merely mentions the word
+//! elsewhere in a sentence is inert):
+//!
+//! ```text
+//! // lint: allow(<rule-id>) -- <reason>
+//! ```
+//!
+//! waives `<rule-id>` on the pragma's own line and the next code line; the
+//! reason is mandatory and must be nonempty (an unjustified waiver is
+//! itself a `bad-pragma` violation). The second form,
+//!
+//! ```text
+//! // lint: hot-path
+//! ```
+//!
+//! marks the next function as steady-state hot-path code, opting it into
+//! the `hot-path-alloc` rule (no `Vec::new`/`to_vec`/`clone`/`format!`).
+//!
+//! See [`rules`] for the rule table and [`rules::RULE_IDS`] for the ids.
+
+pub mod lexer;
+pub mod rules;
+
+pub use rules::{lint_source, Diagnostic, BAD_PRAGMA, RULE_IDS};
+
+use std::path::{Path, PathBuf};
+
+/// Outcome of linting a source tree.
+#[derive(Debug)]
+pub struct Report {
+    /// All findings, ordered by file path then line.
+    pub diagnostics: Vec<Diagnostic>,
+    /// Number of `.rs` files scanned.
+    pub files: usize,
+    /// Total source bytes scanned.
+    pub bytes: usize,
+}
+
+impl Report {
+    /// Findings matching one of the `deny` rule ids (empty slice = none).
+    pub fn matching<'a>(&'a self, deny: &'a [String]) -> impl Iterator<Item = &'a Diagnostic> {
+        self.diagnostics
+            .iter()
+            .filter(move |d| deny.iter().any(|r| r == d.rule))
+    }
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> crate::Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("read_dir {}: {e}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    // Deterministic scan order regardless of filesystem iteration order.
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `root`, reporting paths relative to it.
+pub fn lint_tree(root: &Path) -> crate::Result<Report> {
+    let mut paths = Vec::new();
+    walk(root, &mut paths)?;
+    let mut diagnostics = Vec::new();
+    let mut bytes = 0usize;
+    let files = paths.len();
+    for p in &paths {
+        let src = std::fs::read_to_string(p)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", p.display()))?;
+        bytes += src.len();
+        let rel = p
+            .strip_prefix(root)
+            .unwrap_or(p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        diagnostics.extend(lint_source(&rel, &src));
+    }
+    Ok(Report { diagnostics, files, bytes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The crate's own sources must be lint-clean: this is the in-repo
+    /// pin behind the `lint-invariants` CI gate. Deleting any SAFETY
+    /// comment, moving a cap check below its allocation, or adding a stray
+    /// spawn fails this test (and therefore `cargo test -q`) directly.
+    #[test]
+    fn crate_sources_are_lint_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+        let report = lint_tree(&root).expect("scan crate sources");
+        assert!(report.files > 20, "suspiciously few files: {}", report.files);
+        let listing: Vec<String> = report.diagnostics.iter().map(|d| d.to_string()).collect();
+        assert!(
+            report.diagnostics.is_empty(),
+            "crate sources violate lint invariants:\n{}",
+            listing.join("\n")
+        );
+    }
+}

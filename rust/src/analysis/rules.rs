@@ -1,0 +1,711 @@
+//! The invariant rule engine behind `sumo lint`.
+//!
+//! Five lexical rules run over the masked lines produced by
+//! [`super::lexer`]; each can be waived per-site with a written-reason
+//! pragma (see [`super`] for the grammar). The rules encode the crate's
+//! hand-enforced invariants — the ones the paper's determinism and memory
+//! claims lean on — so that breaking one fails CI instead of waiting for a
+//! reviewer to notice:
+//!
+//! | rule id            | invariant                                              |
+//! |--------------------|--------------------------------------------------------|
+//! | `safety-comments`  | every `unsafe` carries a `// SAFETY:` argument          |
+//! | `no-stray-spawn`   | `thread::spawn` only inside `util::threadpool`          |
+//! | `determinism`      | no wall-clock / hash-order types in step/reduce/wire    |
+//! | `decode-discipline`| byte decoders validate claimed sizes before allocating  |
+//! | `hot-path-alloc`   | annotated hot functions never allocate or format        |
+//!
+//! A sixth id, `bad-pragma`, flags malformed pragmas themselves and can
+//! never be waived.
+
+use super::lexer::{self, Line};
+
+/// Rule identifiers accepted by `allow(...)` pragmas and `--deny`.
+pub const RULE_IDS: [&str; 5] = [
+    "safety-comments",
+    "no-stray-spawn",
+    "determinism",
+    "decode-discipline",
+    "hot-path-alloc",
+];
+
+/// Rule id for malformed pragmas (not waivable, not a member of
+/// [`RULE_IDS`] because `allow(bad-pragma)` would be self-defeating).
+pub const BAD_PRAGMA: &str = "bad-pragma";
+
+/// One lint finding, addressed by file and 1-based line.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    /// Path of the offending file, relative to the scan root, `/`-separated.
+    pub file: String,
+    /// 1-based source line of the finding.
+    pub line: usize,
+    /// Rule id (one of [`RULE_IDS`] or [`BAD_PRAGMA`]).
+    pub rule: &'static str,
+    /// Human-readable description of the violation.
+    pub msg: String,
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+fn is_ident_b(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Byte columns where `tok` occurs in `code`, requiring word boundaries on
+/// whichever ends of the token are identifier characters.
+fn token_hits(code: &str, tok: &str) -> Vec<usize> {
+    let tb = tok.as_bytes();
+    let (edge_start, edge_end) = (is_ident_b(tb[0]), is_ident_b(tb[tb.len() - 1]));
+    let cb = code.as_bytes();
+    code.match_indices(tok)
+        .map(|(i, _)| i)
+        .filter(|&i| {
+            let before_ok = !edge_start || i == 0 || !is_ident_b(cb[i - 1]);
+            let j = i + tb.len();
+            let after_ok = !edge_end || j >= cb.len() || !is_ident_b(cb[j]);
+            before_ok && after_ok
+        })
+        .collect()
+}
+
+/// A function's extent in 0-based lines (`header` is the `fn` line; the
+/// body's closing brace is on `last`). Innermost-containing lookup gives
+/// nested items the right scope.
+#[derive(Debug, Clone, Copy)]
+struct FnSpan {
+    header: usize,
+    last: usize,
+}
+
+/// Locate function extents by brace matching over masked code. A `fn`
+/// token arms a pending header; the next `{` opens its body (a `;` first
+/// cancels it — trait method declarations and fn-pointer types).
+fn fn_spans(lines: &[Line]) -> Vec<FnSpan> {
+    let mut spans = Vec::new();
+    let mut depth: i64 = 0;
+    let mut pending: Option<usize> = None;
+    let mut stack: Vec<(usize, i64)> = Vec::new();
+    for (li, line) in lines.iter().enumerate() {
+        let fn_cols = token_hits(&line.code, "fn");
+        for (ci, &b) in line.code.as_bytes().iter().enumerate() {
+            if pending.is_none() && stack.len() < 32 && fn_cols.contains(&ci) {
+                pending = Some(li);
+            }
+            match b {
+                b'{' => {
+                    if let Some(h) = pending.take() {
+                        stack.push((h, depth));
+                    }
+                    depth += 1;
+                }
+                b'}' => {
+                    depth -= 1;
+                    if let Some(&(h, d)) = stack.last() {
+                        if depth == d {
+                            spans.push(FnSpan { header: h, last: li });
+                            stack.pop();
+                        }
+                    }
+                }
+                b';' => pending = None,
+                _ => {}
+            }
+        }
+    }
+    spans
+}
+
+/// Index of the innermost span containing 0-based `line`, if any.
+fn innermost(spans: &[FnSpan], line: usize) -> Option<usize> {
+    spans
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.header <= line && line <= s.last)
+        .min_by_key(|(_, s)| s.last - s.header)
+        .map(|(i, _)| i)
+}
+
+#[derive(Debug)]
+enum PragmaKind {
+    Allow(&'static str),
+    HotPath,
+}
+
+#[derive(Debug)]
+struct Pragma {
+    line: usize, // 0-based
+    kind: PragmaKind,
+}
+
+/// Parse pragma comments; malformed ones become [`BAD_PRAGMA`] findings.
+fn parse_pragmas(file: &str, lines: &[Line]) -> (Vec<Pragma>, Vec<Diagnostic>) {
+    let mut pragmas = Vec::new();
+    let mut diags = Vec::new();
+    let mut bad = |li: usize, msg: String| {
+        diags.push(Diagnostic { file: file.to_string(), line: li + 1, rule: BAD_PRAGMA, msg });
+    };
+    for (li, line) in lines.iter().enumerate() {
+        let t = line.comment.trim();
+        let Some(rest) = t.strip_prefix("lint:") else { continue };
+        let rest = rest.trim();
+        if rest == "hot-path" {
+            pragmas.push(Pragma { line: li, kind: PragmaKind::HotPath });
+            continue;
+        }
+        let Some(body) = rest.strip_prefix("allow(") else {
+            bad(li, format!("unrecognized pragma `{t}` (expected `allow(<rule>) -- <reason>` or `hot-path`)"));
+            continue;
+        };
+        let Some(close) = body.find(')') else {
+            bad(li, "unclosed `allow(` pragma".to_string());
+            continue;
+        };
+        let rule = body[..close].trim();
+        let tail = body[close + 1..].trim();
+        let Some(canon) = RULE_IDS.iter().copied().find(|r| *r == rule) else {
+            bad(li, format!("unknown rule `{rule}` in allow pragma (known: {})", RULE_IDS.join(", ")));
+            continue;
+        };
+        let Some(reason) = tail.strip_prefix("--") else {
+            bad(li, format!("allow({rule}) pragma is missing its ` -- <reason>` justification"));
+            continue;
+        };
+        if reason.trim().is_empty() {
+            bad(li, format!("allow({rule}) pragma has an empty reason"));
+            continue;
+        }
+        pragmas.push(Pragma { line: li, kind: PragmaKind::Allow(canon) });
+    }
+    (pragmas, diags)
+}
+
+/// An allow pragma covers its own line plus the next line that carries any
+/// code (blank and comment-only lines in between are skipped).
+fn covers(lines: &[Line], pragma_line: usize, target_line: usize) -> bool {
+    if target_line == pragma_line {
+        return true;
+    }
+    let mut j = pragma_line + 1;
+    while j < lines.len() {
+        if !lines[j].code.trim().is_empty() {
+            return target_line == j;
+        }
+        j += 1;
+    }
+    false
+}
+
+/// True when the `unsafe` on 0-based line `li` is justified by a
+/// contiguous immediately-preceding comment block containing `SAFETY`
+/// (case-sensitive). Attribute lines are transparent; for `unsafe impl`
+/// marker sites, sibling one-line `unsafe impl`s and the marker type's own
+/// declaration are transparent too (the contract is documented once, above
+/// the type).
+fn safety_justified(lines: &[Line], li: usize) -> bool {
+    let impl_site = lines[li].code.contains("unsafe impl");
+    if lines[li].comment.contains("SAFETY") {
+        return true;
+    }
+    let mut j = li;
+    while j > 0 {
+        j -= 1;
+        let l = &lines[j];
+        if l.comment.contains("SAFETY") {
+            return true;
+        }
+        let t = l.code.trim();
+        if t.is_empty() {
+            if l.comment.trim().is_empty() {
+                return false; // blank line breaks the comment block
+            }
+            continue; // comment line without SAFETY yet: keep scanning up
+        }
+        if t.starts_with('#') {
+            continue; // attribute
+        }
+        if impl_site
+            && (t.contains("unsafe impl")
+                || t.starts_with("struct ")
+                || t.starts_with("pub struct ")
+                || t.starts_with("pub(crate) struct "))
+        {
+            continue;
+        }
+        return false;
+    }
+    false
+}
+
+fn in_dir(rel: &str, dir: &str) -> bool {
+    rel.starts_with(dir) || rel.contains(&format!("/{dir}"))
+}
+
+/// Paths (suffix-matched) treated as hostile-byte decoders for
+/// `decode-discipline`.
+const DECODER_FILES: [&str; 4] =
+    ["util/codec.rs", "cluster/messages.rs", "model/checkpoint.rs", "cluster/shard.rs"];
+
+/// Lint a single source file. `rel` is the path relative to the scan root
+/// (used both for reporting and for path-scoped rules).
+pub fn lint_source(rel: &str, src: &str) -> Vec<Diagnostic> {
+    let rel = rel.replace('\\', "/");
+    let lines = lexer::mask_lines(src);
+    let spans = fn_spans(&lines);
+    let (pragmas, mut diags) = parse_pragmas(&rel, &lines);
+    let mut raw: Vec<Diagnostic> = Vec::new();
+    let mut push = |li: usize, rule: &'static str, msg: String, raw: &mut Vec<Diagnostic>| {
+        raw.push(Diagnostic { file: rel.clone(), line: li + 1, rule, msg });
+    };
+
+    // --- safety-comments -------------------------------------------------
+    for (li, line) in lines.iter().enumerate() {
+        if token_hits(&line.code, "unsafe").is_empty() {
+            continue;
+        }
+        if !safety_justified(&lines, li) {
+            push(
+                li,
+                "safety-comments",
+                "`unsafe` without an immediately preceding `// SAFETY:` comment stating the upheld invariant".to_string(),
+                &mut raw,
+            );
+        }
+    }
+
+    // --- no-stray-spawn ---------------------------------------------------
+    if !rel.ends_with("util/threadpool.rs") {
+        for (li, line) in lines.iter().enumerate() {
+            for _ in token_hits(&line.code, "thread::spawn") {
+                push(
+                    li,
+                    "no-stray-spawn",
+                    "`thread::spawn` outside util::threadpool — route work through the resident pool, or justify why a raw thread is required".to_string(),
+                    &mut raw,
+                );
+            }
+        }
+    }
+
+    // --- determinism ------------------------------------------------------
+    let det_scoped = in_dir(&rel, "optim/")
+        || in_dir(&rel, "linalg/")
+        || rel.ends_with("cluster/round.rs")
+        || rel.ends_with("cluster/messages.rs");
+    if det_scoped {
+        for (li, line) in lines.iter().enumerate() {
+            for tok in ["Instant::now", "SystemTime", "HashMap", "HashSet"] {
+                for _ in token_hits(&line.code, tok) {
+                    push(
+                        li,
+                        "determinism",
+                        format!("nondeterministic construct `{tok}` in a step/reduce/wire path (bitwise reproducibility is load-bearing here)"),
+                        &mut raw,
+                    );
+                }
+            }
+        }
+    }
+
+    // --- decode-discipline ------------------------------------------------
+    if DECODER_FILES.iter().any(|d| rel.ends_with(d)) {
+        // Collect cap-check call sites with their owning function.
+        let mut checks: Vec<(usize, usize, Option<usize>)> = Vec::new();
+        for (li, line) in lines.iter().enumerate() {
+            for tok in ["check_cap(", "require_le("] {
+                for col in token_hits(&line.code, tok) {
+                    checks.push((li, col, innermost(&spans, li)));
+                }
+            }
+        }
+        // Collect allocation sites: with_capacity / .resize / sized vec!.
+        let mut allocs: Vec<(usize, usize, &'static str)> = Vec::new();
+        for (li, line) in lines.iter().enumerate() {
+            for col in token_hits(&line.code, "with_capacity(") {
+                allocs.push((li, col, "with_capacity"));
+            }
+            for col in token_hits(&line.code, ".resize(") {
+                allocs.push((li, col, "resize"));
+            }
+        }
+        for (li, col) in sized_vec_sites(&lines) {
+            allocs.push((li, col, "vec![_; n]"));
+        }
+        for (al, ac, what) in allocs {
+            let span = innermost(&spans, al);
+            let ok = span.is_some()
+                && checks
+                    .iter()
+                    .any(|&(cl, cc, cs)| cs == span && (cl, cc) < (al, ac));
+            if !ok {
+                push(
+                    al,
+                    "decode-discipline",
+                    format!("`{what}` allocation in a byte-decoder file with no preceding cap check (`check_cap`/`require_le`) in the same function — validate the claimed size first"),
+                    &mut raw,
+                );
+            }
+        }
+        // Wire tag density applies to the message codec specifically.
+        if rel.ends_with("cluster/messages.rs") {
+            check_tag_density(&lines, &spans, &mut raw, &rel);
+        }
+    }
+
+    // --- hot-path-alloc ---------------------------------------------------
+    for p in &pragmas {
+        let PragmaKind::HotPath = p.kind else { continue };
+        let Some(span) = spans
+            .iter()
+            .filter(|s| s.header >= p.line)
+            .min_by_key(|s| s.header)
+        else {
+            diags.push(Diagnostic {
+                file: rel.clone(),
+                line: p.line + 1,
+                rule: BAD_PRAGMA,
+                msg: "hot-path pragma is not followed by a function".to_string(),
+            });
+            continue;
+        };
+        for li in span.header..=span.last {
+            for tok in ["Vec::new", ".to_vec(", ".clone(", "format!"] {
+                for _ in token_hits(&lines[li].code, tok) {
+                    push(
+                        li,
+                        "hot-path-alloc",
+                        format!("`{tok}` inside a `lint: hot-path` function — steady-state step code must not allocate or format"),
+                        &mut raw,
+                    );
+                }
+            }
+        }
+    }
+
+    // --- pragma suppression ----------------------------------------------
+    let allows: Vec<(usize, &'static str)> = pragmas
+        .iter()
+        .filter_map(|p| match p.kind {
+            PragmaKind::Allow(rule) => Some((p.line, rule)),
+            PragmaKind::HotPath => None,
+        })
+        .collect();
+    raw.retain(|d| {
+        !allows
+            .iter()
+            .any(|&(pl, rule)| rule == d.rule && covers(&lines, pl, d.line - 1))
+    });
+
+    diags.extend(raw);
+    diags.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    diags
+}
+
+/// `vec![` sites whose bracket content contains a top-level `;` — the
+/// sized-repeat form `vec![elem; n]`, which allocates `n` elements up
+/// front. The literal-list form `vec![a, b, c]` is exempt (its size is
+/// spelled in the source, not attacker-claimed).
+fn sized_vec_sites(lines: &[Line]) -> Vec<(usize, usize)> {
+    let mut sites = Vec::new();
+    for (li, line) in lines.iter().enumerate() {
+        for col in token_hits(&line.code, "vec!") {
+            let after = col + 4;
+            if line.code.as_bytes().get(after) != Some(&b'[') {
+                continue;
+            }
+            let mut depth = 1i64;
+            let (mut l, mut c) = (li, after + 1);
+            let mut sized = false;
+            'scan: while l < lines.len() {
+                let code = lines[l].code.as_bytes();
+                while c < code.len() {
+                    match code[c] {
+                        b'[' | b'(' | b'{' => depth += 1,
+                        b']' | b')' | b'}' => {
+                            depth -= 1;
+                            if depth == 0 {
+                                break 'scan;
+                            }
+                        }
+                        b';' if depth == 1 => {
+                            sized = true;
+                            break 'scan;
+                        }
+                        _ => {}
+                    }
+                    c += 1;
+                }
+                l += 1;
+                c = 0;
+            }
+            if sized {
+                sites.push((li, col));
+            }
+        }
+    }
+    sites
+}
+
+/// Wire `Msg` tags (the integer arms of `fn tag(`) must be unique and
+/// dense `1..=N` — a gap or duplicate silently breaks decode dispatch and
+/// cross-version compatibility.
+fn check_tag_density(lines: &[Line], spans: &[FnSpan], raw: &mut Vec<Diagnostic>, rel: &str) {
+    let Some(span) = spans
+        .iter()
+        .find(|s| lines[s.header].code.contains("fn tag("))
+    else {
+        raw.push(Diagnostic {
+            file: rel.to_string(),
+            line: 1,
+            rule: "decode-discipline",
+            msg: "message codec has no `fn tag(` — wire tag density cannot be checked".to_string(),
+        });
+        return;
+    };
+    let mut tags: Vec<u64> = Vec::new();
+    for line in &lines[span.header..=span.last] {
+        let mut rest = line.code.as_str();
+        while let Some(p) = rest.find("=>") {
+            let after = rest[p + 2..].trim_start();
+            let digits: String = after.chars().take_while(char::is_ascii_digit).collect();
+            if !digits.is_empty() {
+                let tail = &after[digits.len()..];
+                if tail.trim_start().starts_with(',') || tail.trim().is_empty() {
+                    if let Ok(v) = digits.parse::<u64>() {
+                        tags.push(v);
+                    }
+                }
+            }
+            rest = &rest[p + 2..];
+        }
+    }
+    let mut sorted = tags.clone();
+    sorted.sort_unstable();
+    let dense = !sorted.is_empty() && sorted.iter().enumerate().all(|(i, &t)| t == i as u64 + 1);
+    if !dense {
+        raw.push(Diagnostic {
+            file: rel.to_string(),
+            line: span.header + 1,
+            rule: "decode-discipline",
+            msg: format!("wire `Msg` tags must be unique and dense 1..=N, got {sorted:?}"),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(diags: &[Diagnostic]) -> Vec<&'static str> {
+        diags.iter().map(|d| d.rule).collect()
+    }
+
+    // --- safety-comments --------------------------------------------------
+
+    #[test]
+    fn unsafe_without_safety_comment_fails() {
+        let src = r#"
+fn f(p: *mut u8) {
+    let x = 1;
+    unsafe { p.write(0) };
+    let _ = x;
+}
+"#;
+        let d = lint_source("util/x.rs", src);
+        assert_eq!(rules_of(&d), ["safety-comments"], "{d:?}");
+    }
+
+    #[test]
+    fn unsafe_with_safety_comment_passes() {
+        let src = r#"
+fn f(p: *mut u8) {
+    // SAFETY: p is valid for writes for the caller-guaranteed lifetime.
+    unsafe { p.write(0) };
+}
+
+/// Marker over a raw pointer.
+/// SAFETY contract: only published under the state lock.
+struct P(*mut u8);
+unsafe impl Send for P {}
+unsafe impl Sync for P {}
+"#;
+        let d = lint_source("util/x.rs", src);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn removing_the_safety_comment_is_what_fails() {
+        // The identical site minus its SAFETY line must flip to a violation
+        // (acceptance pin: deleting any one SAFETY comment fails the lint).
+        let with = "// SAFETY: exclusive access.\nunsafe { go() };\n";
+        let without = "// exclusive access.\nunsafe { go() };\n";
+        assert!(lint_source("a/b.rs", with).is_empty());
+        assert_eq!(rules_of(&lint_source("a/b.rs", without)), ["safety-comments"]);
+    }
+
+    // --- no-stray-spawn ---------------------------------------------------
+
+    #[test]
+    fn stray_spawn_flagged_outside_threadpool() {
+        let src = "fn f() { std::thread::spawn(|| {}); }\n";
+        assert_eq!(rules_of(&lint_source("data/x.rs", src)), ["no-stray-spawn"]);
+        assert!(lint_source("util/threadpool.rs", src).is_empty());
+    }
+
+    #[test]
+    fn spawn_with_justified_pragma_passes() {
+        let src = "fn f() {\n    // lint: allow(no-stray-spawn) -- producer must block for the stream lifetime\n    std::thread::spawn(|| {});\n}\n";
+        let d = lint_source("data/x.rs", src);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    // --- determinism ------------------------------------------------------
+
+    #[test]
+    fn hashmap_flagged_only_in_scoped_paths() {
+        let src = "use std::collections::HashMap;\nfn f() { let m: HashMap<u32, u32> = HashMap::new(); let _ = m; }\n";
+        let d = lint_source("optim/x.rs", src);
+        assert!(d.iter().all(|d| d.rule == "determinism"), "{d:?}");
+        assert!(!d.is_empty());
+        assert!(lint_source("cli/x.rs", src).is_empty());
+    }
+
+    // --- decode-discipline ------------------------------------------------
+
+    #[test]
+    fn alloc_after_cap_check_passes() {
+        let src = r#"
+fn decode(n: usize) -> crate::Result<Vec<u8>> {
+    check_cap(n as u64, 64, "n")?;
+    let mut v = Vec::with_capacity(n);
+    v.resize(n, 0);
+    Ok(v)
+}
+"#;
+        let d = lint_source("util/codec.rs", src);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn alloc_before_cap_check_fails() {
+        // Acceptance pin: reordering a cap check to after its allocation
+        // must flip the file to failing.
+        let src = r#"
+fn decode(n: usize) -> crate::Result<Vec<u8>> {
+    let v = vec![0u8; n];
+    check_cap(n as u64, 64, "n")?;
+    Ok(v)
+}
+"#;
+        let d = lint_source("util/codec.rs", src);
+        assert_eq!(rules_of(&d), ["decode-discipline"], "{d:?}");
+    }
+
+    #[test]
+    fn literal_list_vec_is_exempt() {
+        let src = "fn f() -> Vec<u8> { vec![1, 2, 3] }\n";
+        assert!(lint_source("util/codec.rs", src).is_empty());
+    }
+
+    #[test]
+    fn cap_check_in_another_function_does_not_count() {
+        let src = r#"
+fn check(n: usize) -> bool {
+    require_le(n as u64, 64, "n").is_ok()
+}
+fn decode(n: usize) -> Vec<u8> {
+    vec![0u8; n]
+}
+"#;
+        let d = lint_source("util/codec.rs", src);
+        assert_eq!(rules_of(&d), ["decode-discipline"], "{d:?}");
+    }
+
+    #[test]
+    fn wire_tags_must_be_dense() {
+        let sparse = r#"
+impl Msg {
+    fn tag(&self) -> u8 {
+        match self {
+            Msg::A => 1,
+            Msg::B => 3,
+        }
+    }
+}
+"#;
+        let d = lint_source("cluster/messages.rs", sparse);
+        assert_eq!(rules_of(&d), ["decode-discipline"], "{d:?}");
+        let dense = sparse.replace("Msg::B => 3,", "Msg::B => 2,");
+        assert!(lint_source("cluster/messages.rs", &dense).is_empty());
+    }
+
+    // --- hot-path-alloc ---------------------------------------------------
+
+    #[test]
+    fn hot_path_function_may_not_allocate() {
+        let src = r#"
+// lint: hot-path
+fn kernel_into(out: &mut [f32]) {
+    let tmp = Vec::new();
+    let _ = (tmp, out);
+}
+"#;
+        let d = lint_source("linalg/x.rs", src);
+        assert_eq!(rules_of(&d), ["hot-path-alloc"], "{d:?}");
+    }
+
+    #[test]
+    fn unannotated_function_may_allocate() {
+        let src = "fn setup() -> Vec<f32> { let v = Vec::new(); v }\n";
+        assert!(lint_source("linalg/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn hot_path_clean_function_passes() {
+        let src = r#"
+// lint: hot-path
+fn kernel_into(out: &mut [f32], x: &[f32]) {
+    for (o, v) in out.iter_mut().zip(x) {
+        *o += *v;
+    }
+}
+"#;
+        assert!(lint_source("linalg/x.rs", src).is_empty());
+    }
+
+    // --- pragmas ----------------------------------------------------------
+
+    #[test]
+    fn pragma_without_reason_is_bad_and_does_not_suppress() {
+        let src = "fn f() {\n    // lint: allow(no-stray-spawn)\n    std::thread::spawn(|| {});\n}\n";
+        let mut r = rules_of(&lint_source("data/x.rs", src));
+        r.sort_unstable();
+        assert_eq!(r, ["bad-pragma", "no-stray-spawn"]);
+    }
+
+    #[test]
+    fn pragma_with_unknown_rule_is_bad() {
+        let src = "// lint: allow(made-up-rule) -- whatever\nfn f() {}\n";
+        assert_eq!(rules_of(&lint_source("a/b.rs", src)), ["bad-pragma"]);
+    }
+
+    #[test]
+    fn pragma_scope_is_one_code_line() {
+        // The pragma covers the next code line only — a second spawn below
+        // it stays flagged.
+        let src = "fn f() {\n    // lint: allow(no-stray-spawn) -- first one is special\n    std::thread::spawn(|| {});\n    std::thread::spawn(|| {});\n}\n";
+        let d = lint_source("data/x.rs", src);
+        assert_eq!(rules_of(&d), ["no-stray-spawn"], "{d:?}");
+        assert_eq!(d[0].line, 4);
+    }
+
+    #[test]
+    fn tokens_inside_strings_and_comments_are_ignored() {
+        let src = "fn f() -> &'static str { \"std::thread::spawn(HashMap)\" }\n// mentions thread::spawn and vec![0; 9] in prose\n";
+        assert!(lint_source("optim/x.rs", src).is_empty());
+    }
+}

@@ -35,6 +35,10 @@ COMMANDS:
   perf-diff   diff two BENCH_perf_hotpath.json artifacts (CI perf trajectory)
               --base PATH --new PATH [--threshold PCT=10] [--min-ms MS=0.05]
               [--out PATH (markdown report)] — exits nonzero on regressions
+  lint        in-tree invariant linter over the crate sources (CI gate)
+              [--path DIR=rust/src] [--deny all|rule,rule... (fatal set,
+              default all)] [--fix-report (remediation hints)] — exits
+              nonzero on fatal violations; see docs/ARCHITECTURE.md
   cluster     multi-process data-parallel training (see `sumo cluster help`)
               coordinator | worker | local | kill-all
   help        this text
@@ -49,6 +53,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
         "adapter" => leaf(args, cmd_adapter),
         "inspect" => leaf(args, cmd_inspect),
         "perf-diff" => leaf(args, cmd_perf_diff),
+        "lint" => leaf(args, cmd_lint),
         "cluster" => super::cluster_cmd::dispatch(args),
         "" | "help" | "--help" => {
             println!("{USAGE}");
@@ -330,6 +335,102 @@ fn cmd_perf_diff(args: &Args) -> Result<()> {
         d.regressions.len()
     );
     Ok(())
+}
+
+/// `sumo lint` — run the in-tree invariant linter (`crate::analysis`)
+/// over the crate sources and exit nonzero on fatal violations.
+fn cmd_lint(args: &Args) -> Result<()> {
+    use crate::analysis;
+    let root = match args.get("path") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => ["rust/src", "src"]
+            .iter()
+            .map(std::path::PathBuf::from)
+            .find(|p| p.is_dir())
+            .ok_or_else(|| {
+                anyhow::anyhow!("neither rust/src nor src exists here; pass --path DIR")
+            })?,
+    };
+    // Every rule is fatal by default; `--deny a,b` narrows the fatal set
+    // (everything is still reported, non-fatal findings as warnings) and
+    // `--deny all` is the explicit spelling of the default that CI uses.
+    let deny_arg = args.get_or("deny", "all");
+    let mut deny: Vec<String> = Vec::new();
+    if deny_arg == "all" {
+        deny.extend(analysis::RULE_IDS.iter().map(|s| s.to_string()));
+        deny.push(analysis::BAD_PRAGMA.to_string());
+    } else {
+        for r in deny_arg.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            anyhow::ensure!(
+                analysis::RULE_IDS.contains(&r) || r == analysis::BAD_PRAGMA,
+                "unknown rule {r:?} in --deny (known: {}, {})",
+                analysis::RULE_IDS.join(", "),
+                analysis::BAD_PRAGMA
+            );
+            deny.push(r.to_string());
+        }
+    }
+    let report = analysis::lint_tree(&root)?;
+    for d in &report.diagnostics {
+        let level = if deny.iter().any(|r| r == d.rule) { "deny" } else { "warn" };
+        println!("{level}: {d}");
+    }
+    let fatal = report.matching(&deny).count();
+    if args.has_flag("fix-report") && !report.diagnostics.is_empty() {
+        print_fix_report(&report);
+    }
+    println!(
+        "sumo lint: scanned {} files ({} bytes): {} violation(s), {fatal} fatal",
+        report.files,
+        report.bytes,
+        report.diagnostics.len()
+    );
+    anyhow::ensure!(fatal == 0, "sumo lint: {fatal} invariant violation(s) — see report above");
+    Ok(())
+}
+
+/// Per-rule remediation hints for `sumo lint --fix-report`.
+fn print_fix_report(report: &crate::analysis::Report) {
+    let hints: [(&str, &str); 6] = [
+        (
+            "safety-comments",
+            "add a `// SAFETY:` comment directly above the unsafe site stating the invariant \
+             that makes it sound (disjointness, lifetime, synchronization) — not boilerplate",
+        ),
+        (
+            "no-stray-spawn",
+            "route the work through util::threadpool's resident pool; if the thread must block \
+             indefinitely (producers, listeners), keep the spawn and add an allow pragma with \
+             the reason",
+        ),
+        (
+            "determinism",
+            "step/reduce/wire code must be bitwise reproducible: keep wall-clock reads in \
+             util::timer at the edges and use BTreeMap/sorted vecs instead of hash containers",
+        ),
+        (
+            "decode-discipline",
+            "call codec::check_cap or codec::require_le on the claimed size before the \
+             allocation, inside the same function",
+        ),
+        (
+            "hot-path-alloc",
+            "hoist the allocation into scratch/state built at setup; hot-path functions must \
+             be allocation-free in steady state",
+        ),
+        (
+            "bad-pragma",
+            "pragma grammar: `// lint: allow(<rule>) -- <reason>` (reason required) or \
+             `// lint: hot-path` before a function",
+        ),
+    ];
+    println!("\nfix report:");
+    for (rule, hint) in hints {
+        let n = report.diagnostics.iter().filter(|d| d.rule == rule).count();
+        if n > 0 {
+            println!("  [{rule}] {n} finding(s): {hint}");
+        }
+    }
 }
 
 fn cmd_inspect(args: &Args) -> Result<()> {

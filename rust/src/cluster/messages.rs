@@ -19,7 +19,7 @@
 use std::io::{Read, Write};
 
 use crate::linalg::Mat;
-use crate::util::codec::{ByteReader, ByteWriter};
+use crate::util::codec::{check_cap, require_le, ByteReader, ByteWriter};
 
 /// Frame magic (`SUmo Wire Protocol`).
 pub const WIRE_MAGIC: &[u8; 4] = b"SUWP";
@@ -289,7 +289,7 @@ fn put_mats(w: &mut ByteWriter, mats: &[Mat]) {
 
 fn take_mats(r: &mut ByteReader, what: &str) -> crate::Result<Vec<Mat>> {
     let n = r.take_u32(what)? as usize;
-    anyhow::ensure!(n <= MAX_MATS, "{what}: claimed {n} matrices exceeds cap {MAX_MATS}");
+    require_le(n as u64, MAX_MATS as u64, format_args!("{what}: matrix count"))?;
     let mut mats = Vec::with_capacity(n);
     for _ in 0..n {
         mats.push(r.take_mat(MAX_MAT_ELEMS, what)?);
@@ -358,10 +358,7 @@ fn take_assignment(r: &mut ByteReader) -> crate::Result<ShardAssignment> {
     let group_start = r.take_u32(what)?;
     let group_end = r.take_u32(what)?;
     let n_layers = r.take_u32(what)? as usize;
-    anyhow::ensure!(
-        n_layers <= MAX_LAYERS,
-        "{what}: claimed {n_layers} layers exceeds cap {MAX_LAYERS}"
-    );
+    require_le(n_layers as u64, MAX_LAYERS as u64, format_args!("{what}: layer count"))?;
     let mut layers = Vec::with_capacity(n_layers);
     for _ in 0..n_layers {
         layers.push(LayerSpec {
@@ -473,6 +470,7 @@ fn decode_payload(tag: u8, payload: &[u8]) -> crate::Result<Msg> {
 /// Encode a message into one complete frame (header + payload).
 pub fn encode(msg: &Msg) -> Vec<u8> {
     let payload = encode_payload(msg);
+    // lint: allow(decode-discipline) -- encoder side: sized by the payload we just built ourselves, not by wire-claimed data.
     let mut frame = Vec::with_capacity(HEADER_BYTES + payload.len());
     frame.extend_from_slice(WIRE_MAGIC);
     frame.push(WIRE_VERSION);
@@ -499,10 +497,7 @@ pub fn decode(frame: &[u8]) -> crate::Result<Msg> {
     );
     let tag = frame[5];
     let len = u64::from_le_bytes(frame[6..14].try_into().unwrap());
-    anyhow::ensure!(
-        len <= MAX_FRAME_BYTES,
-        "claimed payload length {len} exceeds frame cap {MAX_FRAME_BYTES}"
-    );
+    check_cap(len, MAX_FRAME_BYTES, "frame payload length")?;
     anyhow::ensure!(
         len == (frame.len() - HEADER_BYTES) as u64,
         "claimed payload length {len} != {} bytes present",
@@ -560,10 +555,7 @@ pub fn read_msg<R: Read>(r: &mut R) -> crate::Result<Msg> {
     );
     let tag = header[5];
     let len = u64::from_le_bytes(header[6..14].try_into().unwrap());
-    anyhow::ensure!(
-        len <= MAX_FRAME_BYTES,
-        "claimed payload length {len} exceeds frame cap {MAX_FRAME_BYTES}"
-    );
+    check_cap(len, MAX_FRAME_BYTES, "frame payload length")?;
     let mut payload = vec![0u8; len as usize];
     r.read_exact(&mut payload).map_err(|e| map_io(e, "frame payload"))?;
     decode_payload(tag, &payload)
@@ -667,7 +659,7 @@ mod tests {
         // Claimed length over the frame cap — must fail before allocating.
         let mut frame = encode(&Msg::KillAll);
         frame[6..14].copy_from_slice(&(u64::MAX).to_le_bytes());
-        assert!(decode(&frame).unwrap_err().to_string().contains("frame cap"));
+        assert!(decode(&frame).unwrap_err().to_string().contains("exceeds cap"));
 
         // Claimed length larger than the bytes present (under the cap).
         let mut frame = encode(&Msg::Checkpoint { step: 3 });
@@ -701,7 +693,7 @@ mod tests {
         frame.extend_from_slice(&(payload.len() as u64).to_le_bytes());
         frame.extend_from_slice(&payload);
         let err = decode(&frame).unwrap_err().to_string();
-        assert!(err.contains("element cap"), "{err}");
+        assert!(err.contains("exceeds cap"), "{err}");
     }
 
     #[test]

@@ -28,6 +28,7 @@ use super::task::TrainTask;
 /// `step_parallel` over the full layer list, per-layer weight finalization,
 /// then `end_step`. Any two processes that call this with identical
 /// `(optimizer state, weights, reduced, lr_mult)` stay bitwise identical.
+// lint: hot-path
 pub fn apply_replicated_update(
     opt: &mut dyn Optimizer,
     pool: &ThreadPool,
@@ -135,6 +136,7 @@ pub struct RoundOutcome {
 /// when `ckpt_every > 0` and `step+1` is a multiple of the cadence past
 /// `start_step`, except at the final step, which always gets the closing
 /// barrier regardless of cadence.
+// lint: hot-path
 pub fn run_rounds(
     task: &dyn TrainTask,
     opt: &mut dyn Optimizer,

@@ -24,6 +24,9 @@ use super::messages::LayerSpec;
 
 const MAGIC: &[u8; 8] = b"SUMOSHD1";
 
+/// Hard cap on the shard header's claimed JSON length.
+const MAX_HEADER_BYTES: u64 = 16 << 20;
+
 /// Identity + position of a shard checkpoint: which run shape it belongs
 /// to, which worker wrote it, and at which step.
 #[derive(Clone, Debug, PartialEq)]
@@ -101,8 +104,8 @@ pub fn load<P: AsRef<Path>>(path: P) -> crate::Result<(ShardMeta, Vec<Mat>)> {
     let mut r = BufReader::new(file);
     codec::expect_magic(&mut r, MAGIC, "SUMO shard checkpoint")?;
     let hlen = codec::read_u64_le(&mut r)? as usize;
-    anyhow::ensure!(hlen < 16 << 20, "shard header too large");
-    let hbytes = codec::read_vec(&mut r, hlen)?;
+    codec::require_le(hlen as u64, MAX_HEADER_BYTES, "shard header bytes")?;
+    let hbytes = codec::read_vec(&mut r, hlen, MAX_HEADER_BYTES as usize, "shard header")?;
     let header = Json::parse(std::str::from_utf8(&hbytes)?)
         .map_err(|e| anyhow::anyhow!("bad shard header: {e}"))?;
     let mut layers = Vec::new();
@@ -146,7 +149,8 @@ pub fn load<P: AsRef<Path>>(path: P) -> crate::Result<(ShardMeta, Vec<Mat>)> {
             l.cols
         );
         payload_off += bytes;
-        let data = codec::read_f32s(&mut r, l.rows * l.cols)?;
+        let data =
+            codec::read_f32s(&mut r, l.rows * l.cols, (remaining / 4) as usize, "shard layer")?;
         weights.push(Mat::from_vec(l.rows, l.cols, data));
     }
     Ok((meta, weights))

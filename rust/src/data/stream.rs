@@ -38,6 +38,7 @@ impl BatchStream {
             // Shard-disjoint corpus streams: distinct seeds.
             let shard_seed = seed ^ ((s as u64 + 1).wrapping_mul(0x2545_F491_4F6C_DD1D));
             let per_shard = max_batches.map(|m| m.div_ceil(shards));
+            // lint: allow(no-stray-spawn) -- producers block on the bounded channel for the stream's whole lifetime; parking them on the resident pool would pin its workers and wedge optimizer-step barrier dispatches.
             producers.push(std::thread::spawn(move || {
                 let corpus = SyntheticCorpus::new(vocab, shard_seed);
                 let mut batcher = super::batcher::Batcher::new(corpus, batch, seq);

@@ -43,6 +43,8 @@
 // `rust/docs/ARCHITECTURE.md`).
 #![warn(missing_docs)]
 
+/// In-tree invariant linter: lexical scanner + rule engine for `sumo lint`.
+pub mod analysis;
 /// Benchmark harness: timing, result tables, perf-diff gate.
 #[allow(missing_docs)]
 pub mod bench;

@@ -234,6 +234,10 @@ unsafe impl Sync for OutPtr {}
 /// disjoint regions, and the caller must keep the buffer alive and unaliased
 /// (no concurrent access outside this tile's region) for the whole call.
 #[allow(clippy::too_many_arguments)]
+// SAFETY: the `# Safety` contract above is discharged at the single call
+// site in `gemm_core`: `cp` is C's m×n buffer, the (bi, bj) grid tiles it
+// disjointly (each tile owns rows [bi·MC, …) × cols [bj·NC, …)), and the
+// pool barrier (or the serial loop) completes before C is touched again.
 unsafe fn run_tile<E: Fn(usize, f32) -> f32>(
     cp: *mut f32,
     (m, n, k): (usize, usize, usize),
@@ -373,6 +377,7 @@ fn auto_pool(m: usize, k: usize, n: usize) -> Option<&'static ThreadPool> {
 
 /// `C ← α·op(A, B) + β·C` with explicit packing scratch — the zero-alloc
 /// hot-path entry point. β = 0 writes C without reading it.
+// lint: hot-path
 pub fn gemm_into(
     op: GemmOp,
     alpha: f32,
@@ -390,6 +395,7 @@ pub fn gemm_into(
 /// across it (bitwise identical to `None`, which runs inline) — the
 /// pool-size invariance sweeps in `tests/gemm_engine.rs` use this.
 #[allow(clippy::too_many_arguments)]
+// lint: hot-path
 pub fn gemm_pooled_into(
     op: GemmOp,
     alpha: f32,
@@ -408,6 +414,7 @@ pub fn gemm_pooled_into(
 /// (after the whole k reduction) and its return value is stored; `i` is the
 /// row-major flat index into C.
 #[allow(clippy::too_many_arguments)]
+// lint: hot-path
 pub fn gemm_epilogue_into(
     op: GemmOp,
     alpha: f32,
@@ -431,6 +438,7 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
 
 /// C = A · B written into a preallocated output (overwritten, never read —
 /// the engine's β = 0 path replaced the old pre-zeroing pass).
+// lint: hot-path
 pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
     TL_GEMM.with(|ws| gemm_into(GemmOp::Nn, 1.0, a, b, 0.0, c, &mut ws.borrow_mut()));
 }
@@ -444,6 +452,7 @@ pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
 
 /// C = Aᵀ · B written into a preallocated output. The transpose folds into
 /// A-panel packing (same core as [`matmul_into`]).
+// lint: hot-path
 pub fn matmul_at_b_into(a: &Mat, b: &Mat, c: &mut Mat) {
     TL_GEMM.with(|ws| gemm_into(GemmOp::Tn, 1.0, a, b, 0.0, c, &mut ws.borrow_mut()));
 }
@@ -457,6 +466,7 @@ pub fn matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
 
 /// C = A · Bᵀ written into a preallocated output. The transpose folds into
 /// B-panel packing (same core as [`matmul_into`]).
+// lint: hot-path
 pub fn matmul_a_bt_into(a: &Mat, b: &Mat, c: &mut Mat) {
     TL_GEMM.with(|ws| gemm_into(GemmOp::Nt, 1.0, a, b, 0.0, c, &mut ws.borrow_mut()));
 }

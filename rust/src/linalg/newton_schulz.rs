@@ -56,6 +56,7 @@ pub fn newton_schulz5(m: &Mat, iters: usize) -> Mat {
 /// The wide case (rows ≤ cols) iterates `X ← a·X + (b·A + c·A²)·X` with
 /// `A = X Xᵀ`; the tall case uses `A = XᵀX` and right-multiplies, which is
 /// algebraically the transpose-convention of the wide case (A is symmetric).
+// lint: hot-path
 pub fn newton_schulz5_into(m: &Mat, iters: usize, out: &mut Mat, ws: &mut Ns5Scratch) {
     let (rows, cols) = m.shape();
     assert_eq!((out.rows, out.cols), (rows, cols), "ns5 output shape");

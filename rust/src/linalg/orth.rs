@@ -85,6 +85,7 @@ pub fn orth_svd(m: &Mat) -> Mat {
 
 /// Exact polar factor written into `out` using preallocated scratch.
 /// Performs no heap allocations.
+// lint: hot-path
 pub fn orth_svd_into(m: &Mat, out: &mut Mat, ws: &mut OrthScratch) {
     let (rows, cols) = m.shape();
     assert_eq!((out.rows, out.cols), (rows, cols), "orth output shape");

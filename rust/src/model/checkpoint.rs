@@ -19,6 +19,10 @@ use super::ParamStore;
 
 const MAGIC: &[u8; 8] = b"SUMOCKP1";
 
+/// Hard cap on the header's claimed JSON length (a hostile length prefix
+/// must fail here, not at allocation).
+const MAX_HEADER_BYTES: u64 = 16 << 20;
+
 /// Save a parameter store (+ step metadata) to `path`.
 pub fn save<P: AsRef<Path>>(store: &ParamStore, step: usize, path: P) -> crate::Result<()> {
     if let Some(dir) = path.as_ref().parent() {
@@ -62,8 +66,8 @@ pub fn load<P: AsRef<Path>>(path: P) -> crate::Result<(ParamStore, usize)> {
     let mut r = BufReader::new(file);
     codec::expect_magic(&mut r, MAGIC, "SUMO checkpoint")?;
     let hlen = codec::read_u64_le(&mut r)? as usize;
-    anyhow::ensure!(hlen < 16 << 20, "header too large");
-    let hbytes = codec::read_vec(&mut r, hlen)?;
+    codec::require_le(hlen as u64, MAX_HEADER_BYTES, "checkpoint header bytes")?;
+    let hbytes = codec::read_vec(&mut r, hlen, MAX_HEADER_BYTES as usize, "checkpoint header")?;
     let header = Json::parse(std::str::from_utf8(&hbytes)?)
         .map_err(|e| anyhow::anyhow!("bad header: {e}"))?;
     let cfg = ModelCfg::from_json(header.get("cfg"))
@@ -91,7 +95,7 @@ pub fn load<P: AsRef<Path>>(path: P) -> crate::Result<(ParamStore, usize)> {
              remain in the file — truncated or corrupt checkpoint header"
         );
         payload_off += bytes;
-        let data = codec::read_f32s(&mut r, rows * cols)?;
+        let data = codec::read_f32s(&mut r, rows * cols, (remaining / 4) as usize, "tensor data")?;
         tensors.push((name, Mat::from_vec(rows, cols, data)));
     }
     Ok((ParamStore { cfg, tensors }, step))

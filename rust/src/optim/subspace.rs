@@ -342,6 +342,7 @@ impl SubspaceState {
     /// scratch (zero heap allocations — the hot path of the SUMO step
     /// engine). Arithmetic is identical to [`Self::project`]: both route
     /// through the same packed core with the same tile geometry.
+    // lint: hot-path
     pub fn project_into(&self, g: &Mat, out: &mut Mat, ws: &mut GemmScratch) {
         let q = self.q.as_ref().expect("basis not initialized");
         match self.side {
@@ -360,6 +361,7 @@ impl SubspaceState {
     }
 
     /// Back-project into a preallocated output (zero heap allocations).
+    // lint: hot-path
     pub fn back_project_into(&self, o: &Mat, out: &mut Mat, ws: &mut GemmScratch) {
         let q = self.q.as_ref().expect("basis not initialized");
         match self.side {
@@ -373,6 +375,7 @@ impl SubspaceState {
     /// full-space intermediate is materialized and W is traversed once
     /// (`β = 1−ηλ` folds the decoupled pre-update weight decay in,
     /// `α = −η·scale·s` the update).
+    // lint: hot-path
     pub fn back_project_apply_into(
         &self,
         o: &Mat,

@@ -91,6 +91,7 @@ enum LayerState {
 /// Blocks 1–2a for one projected layer: basis refresh on schedule, gradient
 /// projection, first-moment EMA. Phase 1 of the grouped parallel dispatch
 /// and the first half of the serial [`step_layer`].
+// lint: hot-path
 fn project_and_ema(
     cfg: &OptimCfg,
     (m, n): (usize, usize),
@@ -125,6 +126,7 @@ fn project_and_ema(
 /// Blocks 3–4 for one projected layer: norm-growth limiter, back-projection,
 /// decoupled weight decay, update application. Phase 3 of the grouped
 /// parallel dispatch and the last part of the serial [`step_layer`].
+// lint: hot-path
 fn apply_update(
     cfg: &OptimCfg,
     (m, n): (usize, usize),
@@ -434,6 +436,7 @@ impl Optimizer for Sumo {
     /// results match the serial path bitwise (`tests/parallel_step.rs`).
     /// The NS5 ablation has no batched kernel and keeps the single-phase
     /// per-layer dispatch.
+    // lint: hot-path
     fn step_parallel(
         &mut self,
         pool: &ThreadPool,

@@ -21,6 +21,34 @@ use std::io::{Read, Write};
 use crate::linalg::Mat;
 
 // ---------------------------------------------------------------------------
+// Cap-check chokepoints.
+//
+// Every decoder in the crate funnels its validate-before-allocate checks
+// through these two helpers; the `decode-discipline` rule of `sumo lint`
+// keys on their names, so an allocation that drifts above its check — or a
+// new decoder that skips the check entirely — fails CI lexically.
+// ---------------------------------------------------------------------------
+
+/// Reject an attacker-claimed size that exceeds a hard cap.
+///
+/// Call this (or [`require_le`]) *before* allocating anything sized by
+/// untrusted input. `what` names the field for the error message.
+pub fn check_cap(claimed: u64, cap: u64, what: impl std::fmt::Display) -> crate::Result<()> {
+    anyhow::ensure!(claimed <= cap, "{what}: claimed {claimed} exceeds cap {cap}");
+    Ok(())
+}
+
+/// Reject a count that exceeds a structural limit.
+///
+/// Semantically identical to [`check_cap`]; the different name and message
+/// read better for protocol-level bounds (layer counts, matrix counts)
+/// than for raw byte sizes.
+pub fn require_le(n: u64, bound: u64, what: impl std::fmt::Display) -> crate::Result<()> {
+    anyhow::ensure!(n <= bound, "{what}: {n} exceeds limit {bound}");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
 // In-memory building of binary payloads.
 // ---------------------------------------------------------------------------
 
@@ -153,10 +181,7 @@ impl<'a> ByteReader<'a> {
     /// Read a u64 length-prefixed UTF-8 string of at most `max_len` bytes.
     pub fn take_str(&mut self, max_len: usize, what: &str) -> crate::Result<String> {
         let len = self.take_u64(what)?;
-        anyhow::ensure!(
-            len <= max_len as u64,
-            "{what}: claimed string length {len} exceeds cap {max_len}"
-        );
+        check_cap(len, max_len as u64, format_args!("{what}: string length"))?;
         let bytes = self.take(len as usize, what)?;
         Ok(std::str::from_utf8(bytes)
             .map_err(|e| anyhow::anyhow!("{what}: invalid UTF-8: {e}"))?
@@ -172,10 +197,7 @@ impl<'a> ByteReader<'a> {
         let elems = (rows as u64)
             .checked_mul(cols as u64)
             .ok_or_else(|| anyhow::anyhow!("{what}: {rows}x{cols} size overflows"))?;
-        anyhow::ensure!(
-            elems <= max_elems as u64,
-            "{what}: claimed {rows}x{cols} matrix exceeds element cap {max_elems}"
-        );
+        check_cap(elems, max_elems as u64, format_args!("{what}: {rows}x{cols} matrix elements"))?;
         let nbytes = (elems as usize) * 4;
         anyhow::ensure!(
             nbytes <= self.remaining(),
@@ -214,6 +236,7 @@ pub fn write_magic<W: Write>(w: &mut W, magic: &[u8]) -> crate::Result<()> {
 
 /// Read and verify a magic tag; `what` names the format for the error.
 pub fn expect_magic<R: Read>(r: &mut R, magic: &[u8], what: &str) -> crate::Result<()> {
+    // lint: allow(decode-discipline) -- sized by the in-tree magic constant's own length, not by attacker-claimed data.
     let mut got = vec![0u8; magic.len()];
     r.read_exact(&mut got)?;
     anyhow::ensure!(got == magic, "not a {what} (bad magic)");
@@ -233,9 +256,11 @@ pub fn read_u64_le<R: Read>(r: &mut R) -> crate::Result<u64> {
     Ok(u64::from_le_bytes(b))
 }
 
-/// Read exactly `n` bytes into a fresh buffer. Callers must validate `n`
-/// against a cap (and, for files, the bytes actually present) first.
-pub fn read_vec<R: Read>(r: &mut R, n: usize) -> crate::Result<Vec<u8>> {
+/// Read exactly `n` bytes into a fresh buffer, rejecting any `n` above
+/// `cap` before allocating. `cap` is the caller's structural bound (header
+/// size limit, frame cap, bytes known to be present in the file).
+pub fn read_vec<R: Read>(r: &mut R, n: usize, cap: usize, what: &str) -> crate::Result<Vec<u8>> {
+    check_cap(n as u64, cap as u64, what)?;
     let mut buf = vec![0u8; n];
     r.read_exact(&mut buf)?;
     Ok(buf)
@@ -249,11 +274,17 @@ pub fn write_f32s<W: Write>(w: &mut W, xs: &[f32]) -> crate::Result<()> {
     Ok(())
 }
 
-/// Read exactly `n` little-endian f32 values. Callers must validate `n`
-/// before this allocates (`checkpoint::load` checks the header's claimed
-/// sizes against the file length first).
-pub fn read_f32s<R: Read>(r: &mut R, n: usize) -> crate::Result<Vec<f32>> {
-    let bytes = read_vec(r, n * 4)?;
+/// Read exactly `n` little-endian f32 values, rejecting any `n` above
+/// `max_elems` before allocating (`checkpoint::load` passes the element
+/// count the file's actual length can back).
+pub fn read_f32s<R: Read>(
+    r: &mut R,
+    n: usize,
+    max_elems: usize,
+    what: &str,
+) -> crate::Result<Vec<f32>> {
+    check_cap(n as u64, max_elems as u64, format_args!("{what}: f32 count"))?;
+    let bytes = read_vec(r, n * 4, n * 4, what)?;
     let mut data = vec![0f32; n];
     for (x, chunk) in data.iter_mut().zip(bytes.chunks_exact(4)) {
         *x = f32::from_le_bytes(chunk.try_into().unwrap());
@@ -313,7 +344,7 @@ mod tests {
         w.put_u32(u32::MAX);
         let bytes = w.into_bytes();
         let err = ByteReader::new(&bytes).take_mat(1 << 20, "m").unwrap_err();
-        assert!(err.to_string().contains("exceeds element cap"), "{err}");
+        assert!(err.to_string().contains("exceeds cap"), "{err}");
 
         // A matrix over the element cap.
         let mut w = ByteWriter::new();
@@ -321,7 +352,7 @@ mod tests {
         w.put_u32(1 << 16);
         let bytes = w.into_bytes();
         let err = ByteReader::new(&bytes).take_mat(1 << 20, "m").unwrap_err();
-        assert!(err.to_string().contains("exceeds element cap"), "{err}");
+        assert!(err.to_string().contains("exceeds cap"), "{err}");
 
         // A matrix under the cap but with no payload behind the claim.
         let mut w = ByteWriter::new();
@@ -352,7 +383,7 @@ mod tests {
         let mut r = std::io::Cursor::new(&buf);
         expect_magic(&mut r, b"TESTMAG1", "test blob").unwrap();
         assert_eq!(read_u64_le(&mut r).unwrap(), 42);
-        assert_eq!(read_f32s(&mut r, 3).unwrap(), vec![1.0, -2.5, 3.25]);
+        assert_eq!(read_f32s(&mut r, 3, 3, "payload").unwrap(), vec![1.0, -2.5, 3.25]);
 
         let mut r = std::io::Cursor::new(&buf);
         assert!(expect_magic(&mut r, b"OTHERMAG", "test blob")

@@ -80,6 +80,11 @@ thread_local! {
 /// outlives every worker dereference; workers only reach it through the
 /// current epoch's descriptor.
 struct TaskPtr(*const (dyn Fn(usize) + Sync));
+// SAFETY: the pointee is `Sync` (shared calls from many workers are fine),
+// and the erased lifetime is re-tethered by the dispatch barrier: the
+// publishing thread cannot free the closure until `remaining == 0`, which
+// happens-after every worker's last dereference (the state-lock release on
+// completion synchronizes with the dispatcher's re-acquire).
 unsafe impl Send for TaskPtr {}
 
 /// Shares a mutable base pointer with pool workers for the element/chunk
@@ -388,14 +393,17 @@ impl ThreadPool {
         F: Fn(usize, &mut T) + Sync + Send,
     {
         let len = items.len();
-        // SAFETY: `par_for` invokes the closure exactly once per index in
-        // 0..len, so every `&mut T` handed out refers to a distinct
-        // element; no aliasing occurs, and the workers cannot observe
-        // `items` after return (the dispatch barrier completes first).
+        // Share the base pointer with the workers; the invariant argument
+        // lives on the dereference below.
         let base = SendPtr(items.as_mut_ptr());
         let base = &base;
         self.par_for(len, |i| {
             debug_assert!(i < len);
+            // SAFETY: `par_for` hands each index in 0..len to exactly one
+            // worker, so `base + i` stays in bounds and the `&mut T`s
+            // carved from the base pointer are pairwise disjoint; the
+            // dispatch barrier keeps `items` borrowed (alive, unmoved)
+            // until every worker is done with its element.
             let item = unsafe { &mut *base.0.add(i) };
             f(i, item);
         });

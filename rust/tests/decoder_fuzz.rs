@@ -1,0 +1,386 @@
+//! Deterministic structure-aware fuzzing of every hostile byte surface.
+//!
+//! Seeded `Rng`-driven mutations (truncation, length-field inflation, tag
+//! corruption, random byte flips) over valid wire frames, checkpoint and
+//! shard files, and config JSON. The contract under test is the crate's
+//! validate-before-allocate discipline: every guaranteed-bad mutant must
+//! produce a clean `Err` — never a panic, and never an allocation larger
+//! than the surface's documented cap. Byte flips that may legally decode
+//! still get the no-panic / bounded-allocation guarantee.
+//!
+//! The max-allocation tracker is a process-global allocator (same pattern
+//! as `alloc_free_step.rs`), so everything runs inside one `#[test]` in its
+//! own integration-test binary: concurrent tests would pollute the
+//! high-water mark.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use sumo::cluster::messages::{self, Msg, HEADER_BYTES, MAX_FRAME_BYTES};
+use sumo::cluster::shard::{self, ShardMeta};
+use sumo::config::{ClusterCfg, ModelCfg, OptimCfg, OptimKind};
+use sumo::linalg::Mat;
+use sumo::model::{checkpoint, ParamStore};
+use sumo::util::json::Json;
+use sumo::util::Rng;
+
+// ---------------------------------------------------------------------------
+// Max-single-allocation tracker.
+// ---------------------------------------------------------------------------
+
+struct TrackingAlloc;
+
+static MAX_ALLOC: AtomicU64 = AtomicU64::new(0);
+
+// Edition 2021: the bodies of `unsafe fn`s are implicitly unsafe blocks.
+unsafe impl GlobalAlloc for TrackingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        MAX_ALLOC.fetch_max(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        MAX_ALLOC.fetch_max(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        MAX_ALLOC.fetch_max(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: TrackingAlloc = TrackingAlloc;
+
+/// Generous bound for surfaces whose decode allocations are tied to the
+/// (small) input size: far over anything a legitimate decode of our tiny
+/// fixtures needs, far under an attacker-controlled multi-GB allocation.
+const GENERAL_CAP: u64 = 1 << 26;
+
+/// Run `f`, asserting it neither panics nor allocates a single block larger
+/// than `cap`; returns whether it succeeded (`Ok`).
+fn guarded<T, F: FnOnce() -> sumo::Result<T>>(label: &str, cap: u64, f: F) -> bool {
+    MAX_ALLOC.store(0, Ordering::SeqCst);
+    let outcome = catch_unwind(AssertUnwindSafe(f));
+    let peak = MAX_ALLOC.load(Ordering::SeqCst);
+    let res = match outcome {
+        Ok(r) => r,
+        Err(_) => panic!("{label}: decoder panicked on hostile input"),
+    };
+    assert!(peak <= cap, "{label}: allocated {peak} bytes (cap {cap}) on hostile input");
+    res.is_ok()
+}
+
+/// Like [`guarded`] but the mutant must be rejected.
+fn must_err<T, F: FnOnce() -> sumo::Result<T>>(label: &str, cap: u64, f: F) {
+    assert!(!guarded(label, cap, f), "{label}: hostile mutant decoded Ok");
+}
+
+// ---------------------------------------------------------------------------
+// Fixtures.
+// ---------------------------------------------------------------------------
+
+fn sample_msgs(rng: &mut Rng) -> Vec<Msg> {
+    let mats = vec![Mat::randn(3, 2, 1.0, rng), Mat::randn(1, 4, 1.0, rng)];
+    vec![
+        Msg::Hello { worker_id: 3, task_support: 3 },
+        Msg::GroupState { step: 7, mats: mats.clone() },
+        Msg::SyncWeights { start_step: 2, mats: mats.clone() },
+        Msg::Grads { step: 9, loss: 0.5, mats },
+        Msg::Checkpoint { step: 11 },
+        Msg::Ack { step: 1 },
+        Msg::KillAll,
+        Msg::Shutdown { reason: "bye".into() },
+    ]
+}
+
+fn scratch_dir() -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("sumo_decoder_fuzz_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+// ---------------------------------------------------------------------------
+// Surface 1: wire frames (`messages::decode` + `messages::read_msg`).
+// ---------------------------------------------------------------------------
+
+fn fuzz_wire(rng: &mut Rng) {
+    let msgs = sample_msgs(rng);
+    for msg in &msgs {
+        let frame = messages::encode(msg);
+        let payload_len = frame.len() - HEADER_BYTES;
+
+        // Every strict truncation must be rejected (the header's length
+        // field no longer matches the bytes present).
+        for _ in 0..40 {
+            let keep = rng.below_usize(frame.len());
+            must_err("decode/truncation", GENERAL_CAP, || messages::decode(&frame[..keep]));
+        }
+
+        // Length-field inflation: over the frame cap fails the cap check;
+        // under it fails the bytes-present check. Neither may allocate.
+        for _ in 0..40 {
+            let mut m = frame.clone();
+            let hostile = match rng.below(3) {
+                0 => rng.next_u64(),
+                1 => MAX_FRAME_BYTES + 1 + rng.below(1 << 30),
+                _ => payload_len as u64 + 1 + rng.below(1 << 20),
+            };
+            m[6..14].copy_from_slice(&hostile.to_le_bytes());
+            must_err("decode/len-inflation", GENERAL_CAP, || messages::decode(&m));
+        }
+
+        // Tag corruption outside the valid dense 1..=13 range must be
+        // rejected. A flip onto a *different valid* tag may legally decode
+        // if payload shapes coincide, so in-range foreign tags only get the
+        // no-panic / bounded-allocation guarantee.
+        for hostile_tag in [0u8, 14, 100, 255] {
+            let mut m = frame.clone();
+            m[5] = hostile_tag;
+            must_err("decode/bad-tag", GENERAL_CAP, || messages::decode(&m));
+        }
+        for _ in 0..8 {
+            let mut m = frame.clone();
+            m[5] = rng.below(16) as u8;
+            guarded("decode/foreign-tag", GENERAL_CAP, || messages::decode(&m));
+        }
+
+        // Magic and version corruption must be rejected.
+        for off in [0usize, 1, 2, 3, 4] {
+            let mut m = frame.clone();
+            m[off] ^= 0x5A;
+            must_err("decode/bad-magic-or-version", GENERAL_CAP, || messages::decode(&m));
+        }
+
+        // Arbitrary single-bit flips: no panic, no oversized allocation.
+        // Flips in the payload may legally still decode (e.g. an f32 bit).
+        for _ in 0..200 {
+            let mut m = frame.clone();
+            let off = rng.below_usize(m.len());
+            m[off] ^= 1 << rng.below(8);
+            guarded("decode/byte-flip", GENERAL_CAP, || messages::decode(&m));
+        }
+
+        // The streaming entry point (`read_msg`) may legitimately allocate
+        // the claimed payload once the claim passes the frame cap — but
+        // never more than MAX_FRAME_BYTES, and an over-cap claim must fail
+        // before any allocation of that size.
+        let stream_cap = MAX_FRAME_BYTES + (1 << 20);
+        for keep in [0, HEADER_BYTES.min(frame.len()), frame.len().saturating_sub(1)] {
+            if keep == frame.len() {
+                continue;
+            }
+            let mut cur = std::io::Cursor::new(frame[..keep].to_vec());
+            must_err("read_msg/truncation", stream_cap, || messages::read_msg(&mut cur));
+        }
+        {
+            // Claim just over the bytes present but far under the cap:
+            // allocates the claim, then fails reading the payload.
+            let mut m = frame.clone();
+            m[6..14].copy_from_slice(&(payload_len as u64 + 7).to_le_bytes());
+            let mut cur = std::io::Cursor::new(m);
+            must_err("read_msg/short-claim", stream_cap, || messages::read_msg(&mut cur));
+        }
+        {
+            // Claim over the frame cap: must fail in the cap check, i.e.
+            // BEFORE the 256 MiB payload buffer would be allocated.
+            let mut m = frame.clone();
+            m[6..14].copy_from_slice(&(MAX_FRAME_BYTES + 1).to_le_bytes());
+            let mut cur = std::io::Cursor::new(m);
+            must_err("read_msg/over-cap-claim", GENERAL_CAP, || messages::read_msg(&mut cur));
+        }
+    }
+
+    // A self-consistent frame whose payload claims a matrix far larger than
+    // the payload itself: the element cap / remaining-bytes checks must
+    // reject it before the ~4 TB allocation the dims imply.
+    let mut body = Vec::new();
+    body.extend_from_slice(&7u64.to_le_bytes()); // step
+    body.extend_from_slice(&1u32.to_le_bytes()); // one matrix
+    body.extend_from_slice(&(1u32 << 20).to_le_bytes()); // rows
+    body.extend_from_slice(&(1u32 << 20).to_le_bytes()); // cols
+    let mut frame = Vec::new();
+    frame.extend_from_slice(messages::WIRE_MAGIC);
+    frame.push(messages::WIRE_VERSION);
+    frame.push(3); // GroupState
+    frame.extend_from_slice(&(body.len() as u64).to_le_bytes());
+    frame.extend_from_slice(&body);
+    must_err("decode/hostile-mat-dims", GENERAL_CAP, || messages::decode(&frame));
+}
+
+// ---------------------------------------------------------------------------
+// Surface 2: checkpoint and shard files (shared 8-byte-magic + u64-header
+// layout, so one mutation driver covers both).
+// ---------------------------------------------------------------------------
+
+fn fuzz_file<L, T>(label: &str, rng: &mut Rng, valid: &[u8], path: &std::path::Path, load: L)
+where
+    L: Fn(&std::path::Path) -> sumo::Result<T>,
+{
+    // Strict truncations: some tensor (or the header) is now missing bytes.
+    for _ in 0..30 {
+        let keep = rng.below_usize(valid.len());
+        std::fs::write(path, &valid[..keep]).unwrap();
+        must_err(label, GENERAL_CAP, || load(path));
+    }
+
+    // Header-length inflation: over the 16 MiB cap must fail the cap check;
+    // moderate inflation must fail parsing/reading without a panic.
+    for hostile in [u64::MAX, (16 << 20) + 1] {
+        let mut m = valid.to_vec();
+        m[8..16].copy_from_slice(&hostile.to_le_bytes());
+        std::fs::write(path, &m).unwrap();
+        must_err(label, GENERAL_CAP, || load(path));
+    }
+    let hlen = u64::from_le_bytes(valid[8..16].try_into().unwrap());
+    for _ in 0..10 {
+        let mut m = valid.to_vec();
+        m[8..16].copy_from_slice(&(hlen + 1 + rng.below(64)).to_le_bytes());
+        std::fs::write(path, &m).unwrap();
+        guarded(label, GENERAL_CAP, || load(path));
+    }
+
+    // Magic corruption.
+    for off in [0usize, 1, 2, 3, 4, 5, 6, 7] {
+        let mut m = valid.to_vec();
+        m[off] ^= 0x5A;
+        std::fs::write(path, &m).unwrap();
+        must_err(label, GENERAL_CAP, || load(path));
+    }
+
+    // Random single-bit flips anywhere in the file: no panic, bounded
+    // allocation; flips in tensor payload bytes may legally still load.
+    for _ in 0..150 {
+        let mut m = valid.to_vec();
+        let off = rng.below_usize(m.len());
+        m[off] ^= 1 << rng.below(8);
+        std::fs::write(path, &m).unwrap();
+        guarded(label, GENERAL_CAP, || load(path));
+    }
+}
+
+fn fuzz_checkpoint(rng: &mut Rng, dir: &std::path::Path) {
+    let cfg = ModelCfg::preset("nano").unwrap();
+    let store = ParamStore {
+        cfg: cfg.clone(),
+        tensors: vec![
+            ("a".to_string(), Mat::randn(4, 3, 1.0, rng)),
+            ("b".to_string(), Mat::randn(2, 5, 1.0, rng)),
+        ],
+    };
+    let path = dir.join("fuzz.ckpt");
+    checkpoint::save(&store, 5, &path).unwrap();
+    let valid = std::fs::read(&path).unwrap();
+    fuzz_file("checkpoint", rng, &valid, &path, |p| checkpoint::load(p).map(|_| ()));
+
+    // A header that *claims* a ~40 GB tensor over a tiny payload: the claim
+    // must die against the file's actual length, before any allocation.
+    let cfg_json = cfg.to_json().dump();
+    let tensors = r#"[{"cols":99999,"name":"w","rows":99999}]"#;
+    let header = format!("{{\"cfg\":{cfg_json},\"step\":1,\"tensors\":{tensors}}}");
+    let mut hostile = Vec::new();
+    hostile.extend_from_slice(b"SUMOCKP1");
+    hostile.extend_from_slice(&(header.len() as u64).to_le_bytes());
+    hostile.extend_from_slice(header.as_bytes());
+    hostile.extend_from_slice(&[0u8; 8]);
+    std::fs::write(&path, &hostile).unwrap();
+    MAX_ALLOC.store(0, Ordering::SeqCst);
+    let err = match checkpoint::load(&path) {
+        Ok(_) => panic!("checkpoint claiming a 40 GB tensor loaded Ok"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains("remain in the file"), "unexpected rejection: {err}");
+    let peak = MAX_ALLOC.load(Ordering::SeqCst);
+    assert!(peak <= GENERAL_CAP, "hostile header allocated {peak} bytes");
+}
+
+fn fuzz_shard(rng: &mut Rng, dir: &std::path::Path) {
+    let layers = vec![
+        messages::LayerSpec { name: "l0.wq".into(), rows: 4, cols: 4, projected: true },
+        messages::LayerSpec { name: "l0.norm".into(), rows: 1, cols: 4, projected: false },
+    ];
+    let weights: Vec<Mat> = layers.iter().map(|l| Mat::randn(l.rows, l.cols, 1.0, rng)).collect();
+    let meta = ShardMeta {
+        tag: "nano".into(),
+        worker_id: 0,
+        n_workers: 1,
+        step: 3,
+        group_start: 0,
+        group_end: 2,
+        layers,
+    };
+    let path = dir.join("fuzz.shard");
+    shard::save(&meta, &weights, &path).unwrap();
+    let valid = std::fs::read(&path).unwrap();
+    fuzz_file("shard", rng, &valid, &path, |p| shard::load(p).map(|_| ()));
+}
+
+// ---------------------------------------------------------------------------
+// Surface 3: config JSON (`Json::parse` + typed `from_json`).
+// ---------------------------------------------------------------------------
+
+fn fuzz_config_json(rng: &mut Rng) {
+    let texts = [
+        ClusterCfg::default().to_json().dump(),
+        OptimCfg::new(OptimKind::Sumo).with_lr(0.01).with_rank(8).to_json().dump(),
+    ];
+    for text in &texts {
+        // Any strict prefix of a compact JSON object is unbalanced: the
+        // closing brace is the last byte, so every truncation must fail.
+        for _ in 0..40 {
+            let keep = rng.below_usize(text.len());
+            if !text.is_char_boundary(keep) {
+                continue;
+            }
+            let prefix = text[..keep].to_string();
+            must_err("json/truncation", GENERAL_CAP, || {
+                Json::parse(&prefix).map_err(|e| anyhow::anyhow!("{e}"))
+            });
+        }
+        // Byte flips (kept ASCII so the mutant stays a valid `str`):
+        // parsing may fail or succeed, typed extraction may yield `None` —
+        // but nothing may panic.
+        for _ in 0..200 {
+            let mut bytes = text.clone().into_bytes();
+            let off = rng.below_usize(bytes.len());
+            bytes[off] = (bytes[off] ^ (1 << rng.below(7))) & 0x7F;
+            let Ok(mutant) = String::from_utf8(bytes) else { continue };
+            guarded("json/byte-flip", GENERAL_CAP, || {
+                if let Ok(j) = Json::parse(&mutant) {
+                    let _ = ClusterCfg::from_json(&j);
+                    let _ = OptimCfg::from_json(&j);
+                }
+                Ok(())
+            });
+        }
+        // Number inflation: absurd numeric magnitudes must saturate through
+        // the typed accessors, not panic.
+        let inflated = text.replace(":2", ":999999999999999999999999");
+        guarded("json/number-inflation", GENERAL_CAP, || {
+            if let Ok(j) = Json::parse(&inflated) {
+                let _ = ClusterCfg::from_json(&j);
+                let _ = OptimCfg::from_json(&j);
+            }
+            Ok(())
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hostile_inputs_never_panic_or_overallocate() {
+    let mut rng = Rng::new(0xF077_2E5D);
+    let dir = scratch_dir();
+    fuzz_wire(&mut rng);
+    fuzz_checkpoint(&mut rng, &dir);
+    fuzz_shard(&mut rng, &dir);
+    fuzz_config_json(&mut rng);
+    std::fs::remove_dir_all(&dir).ok();
+}
