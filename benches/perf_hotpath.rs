@@ -14,7 +14,9 @@
 use sumo::bench::{bench_iters, TableWriter};
 use sumo::cluster::messages::{decode, encode, Msg};
 use sumo::cluster::model_layers;
+use sumo::cluster::task::{init_weights, SyntheticTask};
 use sumo::config::{ModelCfg, OptimCfg, OptimKind};
+use sumo::coordinator::allreduce_mean;
 use sumo::coordinator::Coordinator;
 use sumo::data::{Batcher, SyntheticCorpus};
 use sumo::linalg::{
@@ -132,7 +134,7 @@ fn main() -> anyhow::Result<()> {
             .map(|l| Mat::randn(l.rows, l.cols, 1.0, &mut rng))
             .collect();
         let nlayers = layers.len();
-        let msg = Msg::Grads { step: 7, loss: 3.25, mats };
+        let msg = Msg::Grads { step: 7, shard: 0, loss: 3.25, mats };
         let s = time_fn(1, bench_iters(8), || {
             let frame = encode(&msg);
             let _ = decode(&frame).unwrap();
@@ -143,6 +145,28 @@ fn main() -> anyhow::Result<()> {
             &format!("nano {nlayers}T"),
             &s,
         );
+    }
+
+    // Failover round: a worker dies owning 1 of 4 shards — a survivor
+    // recomputes the lost shard's gradients from its replicated weights and
+    // the reduction runs over all 4 shard sets again. This is the marginal
+    // cost a mid-round kill adds to one training round at nano shapes; the
+    // perf-diff gate keeps takeover from regressing into a full-round stall.
+    {
+        let mcfg = ModelCfg::preset("nano").unwrap();
+        let layers = model_layers(&mcfg);
+        let task = SyntheticTask::new(42, 0.01, &layers);
+        let weights = init_weights(42, &layers);
+        let shard_sets: Vec<Vec<Mat>> = (0..4u64)
+            .map(|s| task.shard_grads(&weights, 3, s).1)
+            .collect();
+        let s = time_fn(1, bench_iters(8), || {
+            let (_, recomputed) = task.shard_grads(&weights, 3, 1);
+            let mut sets = shard_sets.clone();
+            sets[1] = recomputed;
+            let _ = allreduce_mean(&mut sets);
+        });
+        timing_row(&mut t, "failover round (1 lost shard)", "nano 4-shard", &s);
     }
 
     // Invariant linter over the full crate source: the CI gate's cost.

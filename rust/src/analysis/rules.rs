@@ -247,8 +247,13 @@ fn in_dir(rel: &str, dir: &str) -> bool {
 
 /// Paths (suffix-matched) treated as hostile-byte decoders for
 /// `decode-discipline`.
-const DECODER_FILES: [&str; 4] =
-    ["util/codec.rs", "cluster/messages.rs", "model/checkpoint.rs", "cluster/shard.rs"];
+const DECODER_FILES: [&str; 5] = [
+    "util/codec.rs",
+    "cluster/messages.rs",
+    "model/checkpoint.rs",
+    "cluster/shard.rs",
+    "cluster/net.rs",
+];
 
 /// Lint a single source file. `rel` is the path relative to the scan root
 /// (used both for reporting and for path-scoped rules).
@@ -295,7 +300,8 @@ pub fn lint_source(rel: &str, src: &str) -> Vec<Diagnostic> {
     let det_scoped = in_dir(&rel, "optim/")
         || in_dir(&rel, "linalg/")
         || rel.ends_with("cluster/round.rs")
-        || rel.ends_with("cluster/messages.rs");
+        || rel.ends_with("cluster/messages.rs")
+        || rel.ends_with("cluster/chaos.rs");
     if det_scoped {
         for (li, line) in lines.iter().enumerate() {
             for tok in ["Instant::now", "SystemTime", "HashMap", "HashSet"] {

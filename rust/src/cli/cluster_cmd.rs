@@ -22,10 +22,13 @@ SUBCOMMANDS:
               --optimizer sumo|galore|... --lr X --rank R --update-freq K
               --ckpt-every N --ckpt-dir DIR --heartbeat-every N
               --io-timeout-ms MS --join-timeout-ms MS --resume
+              --straggler-factor X --straggler-min-ms MS
   worker      start worker K and connect to a coordinator
               --id K --connect HOST:PORT [--cfg FILE] [--ckpt-dir DIR]
               [--io-timeout-ms MS] [--connect-attempts N] [--backoff-ms MS]
-              [--backoff-cap-ms MS]
+              [--backoff-cap-ms MS] [--chaos SPEC]
+              SPEC is a JSON fault script, e.g.
+              '[{\"kind\":\"kill\",\"step\":5}]' — see docs/ARCHITECTURE.md
   local       run the identical computation single-process (the bitwise
               reference for the loopback test); same options as coordinator
   kill-all    ask a running coordinator to abort its session
@@ -67,6 +70,8 @@ pub(crate) fn cluster_cfg_from(args: &Args) -> Result<ClusterCfg> {
     cfg.heartbeat_every = args.usize_or("heartbeat-every", cfg.heartbeat_every)?;
     cfg.io_timeout_ms = args.u64_or("io-timeout-ms", cfg.io_timeout_ms)?;
     cfg.join_timeout_ms = args.u64_or("join-timeout-ms", cfg.join_timeout_ms)?;
+    cfg.straggler_factor = args.f64_or("straggler-factor", cfg.straggler_factor)?;
+    cfg.straggler_min_ms = args.u64_or("straggler-min-ms", cfg.straggler_min_ms)?;
     if args.has_flag("resume") {
         cfg.resume = true;
     }
@@ -129,6 +134,9 @@ fn cmd_worker(args: &Args) -> Result<()> {
     wcfg.connect_attempts = args.u64_or("connect-attempts", wcfg.connect_attempts as u64)? as u32;
     wcfg.backoff_ms = args.u64_or("backoff-ms", wcfg.backoff_ms)?;
     wcfg.backoff_cap_ms = args.u64_or("backoff-cap-ms", wcfg.backoff_cap_ms)?;
+    if let Some(spec) = args.get("chaos") {
+        wcfg.chaos = crate::cluster::chaos::ChaosSpec::parse(spec)?;
+    }
     let report = worker::run(&wcfg)?;
     println!(
         "worker {}: steps_run={} final_step={} reason={:?} weights_fnv=0x{:016x}",
@@ -197,6 +205,39 @@ mod tests {
         let cfg = cluster_cfg_from(&a).unwrap();
         assert_eq!(cfg.task, "lm");
         assert_eq!(cfg.train.batch, 4);
+    }
+
+    #[test]
+    fn straggler_flags_reach_the_cfg() {
+        let a = parse(&[
+            "cluster",
+            "local",
+            "--straggler-factor",
+            "2.5",
+            "--straggler-min-ms",
+            "50",
+        ]);
+        let cfg = cluster_cfg_from(&a).unwrap();
+        assert_eq!(cfg.straggler_factor, 2.5);
+        assert_eq!(cfg.straggler_min_ms, 50);
+    }
+
+    #[test]
+    fn bad_chaos_spec_fails_before_connecting() {
+        let a = parse(&[
+            "cluster",
+            "worker",
+            "--id",
+            "0",
+            "--connect",
+            "127.0.0.1:1",
+            "--connect-attempts",
+            "1",
+            "--chaos",
+            "{\"kind\":\"kill\"}",
+        ]);
+        let err = cmd_worker(&a).unwrap_err().to_string();
+        assert!(err.contains("chaos spec"), "got: {err}");
     }
 
     #[test]

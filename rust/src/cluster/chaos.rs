@@ -1,0 +1,351 @@
+//! Deterministic fault injection for the cluster (`--chaos <spec>`).
+//!
+//! A chaos spec is a JSON array of scripted faults a worker inflicts on
+//! itself at precise points in the run, so every recovery path in the
+//! coordinator (takeover, straggler speculation, elastic leave) is driven
+//! by reproducible tests instead of timing luck:
+//!
+//! ```text
+//! [{"kind":"kill","step":5},            // drop the socket mid-round 5
+//!  {"kind":"stall","step":3,"ms":500},  // sleep 500 ms before round 3
+//!  {"kind":"stall","ms":20},            // no step: stall EVERY round
+//!  {"kind":"leave","step":8},           // clean Msg::Leave before round 8
+//!  {"kind":"drop","frame":2},           // swallow the 3rd outbound frame
+//!  {"kind":"truncate","frame":4},       // send half a frame, then die
+//!  {"kind":"delay","frame":1,"ms":100}] // sleep before the 2nd frame
+//! ```
+//!
+//! `"step":"seeded"` (valid for `kill`/`stall`/`leave`) resolves to a
+//! deterministic step derived from the run seed, the worker id, and the
+//! fault's index in the spec — the same run seed always produces the same
+//! failure schedule, which is what makes chaos runs replayable.
+//!
+//! This module is in the determinism lint scope: no wall-clock reads, no
+//! hash-map iteration. The only time-shaped effect is `thread::sleep`,
+//! which is the *injected fault*, not a measurement.
+
+use crate::util::json::Json;
+
+/// When a step-scoped fault fires.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum StepSel {
+    /// At exactly this step.
+    At(u64),
+    /// At a step derived from (seed, worker id, fault index).
+    Seeded,
+    /// Every step (only `stall` accepts this).
+    Every,
+}
+
+/// One scripted fault, as parsed from the spec (steps possibly unresolved).
+#[derive(Clone, Debug, PartialEq)]
+enum FaultSpec {
+    /// Drop the socket without a word before running `step`.
+    Kill { step: StepSel },
+    /// Send `Msg::Leave` and exit cleanly before running `step`.
+    Leave { step: StepSel },
+    /// Sleep `ms` before running `step` (a straggler).
+    Stall { step: StepSel, ms: u64 },
+    /// Swallow outbound frame number `frame` (0-based).
+    Drop { frame: u64 },
+    /// Send only half of outbound frame `frame`, then drop the socket.
+    Truncate { frame: u64 },
+    /// Sleep `ms` before sending outbound frame `frame`.
+    Delay { frame: u64, ms: u64 },
+}
+
+/// A parsed, not-yet-resolved chaos script.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ChaosSpec {
+    faults: Vec<FaultSpec>,
+}
+
+/// What `on_step` tells the round loop to do (after any stalls slept).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StepFault {
+    /// Proceed normally.
+    None,
+    /// Drop the connection without a word and bail.
+    Kill,
+    /// Send `Msg::Leave` and exit cleanly.
+    Leave,
+}
+
+/// What `on_send` tells the send path to do with one outbound frame.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SendFault {
+    /// Send the frame normally.
+    Send,
+    /// Pretend to send; put nothing on the wire.
+    Drop,
+    /// Send only the first half of the frame, then drop the socket.
+    Truncate,
+}
+
+fn splitmix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+fn take_step(j: &Json, kind: &str, default_every: bool) -> crate::Result<StepSel> {
+    match j.get("step") {
+        Json::Null if default_every => Ok(StepSel::Every),
+        Json::Null => anyhow::bail!("chaos {kind}: missing \"step\""),
+        Json::Str(s) if s == "seeded" => Ok(StepSel::Seeded),
+        Json::Num(x) if *x >= 0.0 => Ok(StepSel::At(*x as u64)),
+        other => anyhow::bail!("chaos {kind}: bad \"step\" {}", other.dump()),
+    }
+}
+
+fn take_u64(j: &Json, kind: &str, field: &str) -> crate::Result<u64> {
+    match j.get(field) {
+        Json::Num(x) if *x >= 0.0 => Ok(*x as u64),
+        Json::Null => anyhow::bail!("chaos {kind}: missing \"{field}\""),
+        other => anyhow::bail!("chaos {kind}: bad \"{field}\" {}", other.dump()),
+    }
+}
+
+/// Cap on the fault count of one spec (hostile input discipline: the spec
+/// arrives from the command line today, but nothing stops a config file or
+/// wire field from carrying it tomorrow).
+pub const MAX_FAULTS: usize = 1024;
+
+impl ChaosSpec {
+    /// Parse a JSON chaos spec. Unknown kinds, missing fields, and
+    /// non-numeric steps are errors; an empty array is a valid no-op spec.
+    pub fn parse(src: &str) -> crate::Result<ChaosSpec> {
+        let j = Json::parse(src).map_err(|e| anyhow::anyhow!("chaos spec: {e}"))?;
+        let arr = j
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("chaos spec: expected a JSON array of faults"))?;
+        anyhow::ensure!(
+            arr.len() <= MAX_FAULTS,
+            "chaos spec: {} faults exceeds cap {MAX_FAULTS}",
+            arr.len()
+        );
+        let mut faults = Vec::with_capacity(arr.len());
+        for f in arr {
+            let kind = f
+                .get("kind")
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("chaos fault: missing \"kind\""))?;
+            let fault = match kind {
+                "kill" => FaultSpec::Kill { step: take_step(f, kind, false)? },
+                "leave" => FaultSpec::Leave { step: take_step(f, kind, false)? },
+                "stall" => FaultSpec::Stall {
+                    step: take_step(f, kind, true)?,
+                    ms: take_u64(f, kind, "ms")?,
+                },
+                "drop" => FaultSpec::Drop { frame: take_u64(f, kind, "frame")? },
+                "truncate" => FaultSpec::Truncate { frame: take_u64(f, kind, "frame")? },
+                "delay" => FaultSpec::Delay {
+                    frame: take_u64(f, kind, "frame")?,
+                    ms: take_u64(f, kind, "ms")?,
+                },
+                k => anyhow::bail!("chaos fault: unknown kind {k:?}"),
+            };
+            faults.push(fault);
+        }
+        Ok(ChaosSpec { faults })
+    }
+
+    /// True when the spec injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Resolve `"seeded"` steps against the run seed and this worker's id,
+    /// producing the live per-worker fault state. `steps` bounds seeded
+    /// step choices to the actual run length.
+    pub fn resolve(&self, seed: u64, worker_id: u32, steps: u64) -> ChaosState {
+        let span = steps.max(1);
+        let faults = self
+            .faults
+            .iter()
+            .enumerate()
+            .map(|(i, f)| {
+                let fix = |sel: StepSel| match sel {
+                    StepSel::Seeded => StepSel::At(
+                        splitmix(seed ^ splitmix(worker_id as u64 ^ splitmix(i as u64))) % span,
+                    ),
+                    other => other,
+                };
+                match f.clone() {
+                    FaultSpec::Kill { step } => FaultSpec::Kill { step: fix(step) },
+                    FaultSpec::Leave { step } => FaultSpec::Leave { step: fix(step) },
+                    FaultSpec::Stall { step, ms } => FaultSpec::Stall { step: fix(step), ms },
+                    other => other,
+                }
+            })
+            .collect();
+        ChaosState { faults, frames_sent: 0 }
+    }
+}
+
+/// Live fault state for one worker: resolved steps plus the outbound frame
+/// counter that frame-scoped faults key on.
+#[derive(Clone, Debug)]
+pub struct ChaosState {
+    faults: Vec<FaultSpec>,
+    frames_sent: u64,
+}
+
+impl ChaosState {
+    /// A state that injects nothing (workers without `--chaos`).
+    pub fn none() -> ChaosState {
+        ChaosState { faults: Vec::new(), frames_sent: 0 }
+    }
+
+    /// Consult the script before running `step`: sleeps any matching
+    /// stalls (the injected fault itself), then reports whether this step
+    /// kills the worker or makes it leave. Kill wins over leave if both are
+    /// scripted for the same step.
+    pub fn on_step(&self, step: u64) -> StepFault {
+        for f in &self.faults {
+            if let FaultSpec::Stall { step: sel, ms } = f {
+                let hit = *sel == StepSel::Every || *sel == StepSel::At(step);
+                if hit {
+                    std::thread::sleep(std::time::Duration::from_millis(*ms));
+                }
+            }
+        }
+        let hits = |want_kill: bool| {
+            self.faults.iter().any(|f| match f {
+                FaultSpec::Kill { step: s } if want_kill => *s == StepSel::At(step),
+                FaultSpec::Leave { step: s } if !want_kill => *s == StepSel::At(step),
+                _ => false,
+            })
+        };
+        if hits(true) {
+            return StepFault::Kill;
+        }
+        if hits(false) {
+            return StepFault::Leave;
+        }
+        StepFault::None
+    }
+
+    /// Consult the script before sending one outbound frame: sleeps any
+    /// matching delay, advances the frame counter, and reports what to do
+    /// with the frame. Truncate wins over drop on the same frame.
+    pub fn on_send(&mut self) -> SendFault {
+        let n = self.frames_sent;
+        self.frames_sent += 1;
+        for f in &self.faults {
+            if let FaultSpec::Delay { frame, ms } = f {
+                if *frame == n {
+                    std::thread::sleep(std::time::Duration::from_millis(*ms));
+                }
+            }
+        }
+        let trunc = self
+            .faults
+            .iter()
+            .any(|f| matches!(f, FaultSpec::Truncate { frame } if *frame == n));
+        if trunc {
+            return SendFault::Truncate;
+        }
+        let drop = self
+            .faults
+            .iter()
+            .any(|f| matches!(f, FaultSpec::Drop { frame } if *frame == n));
+        if drop {
+            return SendFault::Drop;
+        }
+        SendFault::Send
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_kind_and_rejects_junk() {
+        let spec = ChaosSpec::parse(
+            r#"[{"kind":"kill","step":5},
+                {"kind":"stall","ms":20},
+                {"kind":"stall","step":"seeded","ms":7},
+                {"kind":"leave","step":8},
+                {"kind":"drop","frame":2},
+                {"kind":"truncate","frame":4},
+                {"kind":"delay","frame":1,"ms":100}]"#,
+        )
+        .unwrap();
+        assert_eq!(spec.faults.len(), 7);
+        assert!(ChaosSpec::parse("[]").unwrap().is_empty());
+
+        for bad in [
+            "not json",
+            r#"{"kind":"kill","step":1}"#,            // not an array
+            r#"[{"kind":"explode","step":1}]"#,       // unknown kind
+            r#"[{"kind":"kill"}]"#,                   // kill needs a step
+            r#"[{"kind":"kill","step":-3}]"#,         // negative step
+            r#"[{"kind":"kill","step":"later"}]"#,    // bad step string
+            r#"[{"kind":"stall","step":2}]"#,         // stall needs ms
+            r#"[{"kind":"drop"}]"#,                   // drop needs frame
+            r#"[{"kind":"delay","frame":1}]"#,        // delay needs ms
+            r#"[{"step":1}]"#,                        // missing kind
+        ] {
+            assert!(ChaosSpec::parse(bad).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn seeded_steps_are_deterministic_and_in_range() {
+        let spec = ChaosSpec::parse(r#"[{"kind":"kill","step":"seeded"}]"#).unwrap();
+        let a = spec.resolve(42, 1, 20);
+        let b = spec.resolve(42, 1, 20);
+        let step_of = |st: &ChaosState| match st.faults[0] {
+            FaultSpec::Kill { step: StepSel::At(s) } => s,
+            ref other => panic!("unresolved fault: {other:?}"),
+        };
+        assert_eq!(step_of(&a), step_of(&b), "same inputs must resolve identically");
+        assert!(step_of(&a) < 20);
+        // Different workers get different (well, usually different) steps;
+        // at minimum the resolution must not ignore the worker id AND the
+        // seed simultaneously.
+        let c = spec.resolve(43, 2, 1_000_000);
+        let d = spec.resolve(42, 1, 1_000_000);
+        assert_ne!(step_of(&c), step_of(&d));
+    }
+
+    #[test]
+    fn step_faults_fire_exactly_on_their_step() {
+        let spec = ChaosSpec::parse(r#"[{"kind":"kill","step":3},{"kind":"leave","step":5}]"#)
+            .unwrap();
+        let st = spec.resolve(0, 0, 10);
+        assert_eq!(st.on_step(0), StepFault::None);
+        assert_eq!(st.on_step(3), StepFault::Kill);
+        assert_eq!(st.on_step(5), StepFault::Leave);
+        assert_eq!(st.on_step(6), StepFault::None);
+    }
+
+    #[test]
+    fn send_faults_key_on_the_frame_counter() {
+        let spec =
+            ChaosSpec::parse(r#"[{"kind":"drop","frame":1},{"kind":"truncate","frame":2}]"#)
+                .unwrap();
+        let mut st = spec.resolve(0, 0, 10);
+        assert_eq!(st.on_send(), SendFault::Send); // frame 0
+        assert_eq!(st.on_send(), SendFault::Drop); // frame 1
+        assert_eq!(st.on_send(), SendFault::Truncate); // frame 2
+        assert_eq!(st.on_send(), SendFault::Send); // frame 3
+    }
+
+    #[test]
+    fn fault_count_cap_holds() {
+        let mut spec = String::from("[");
+        for i in 0..(MAX_FAULTS + 1) {
+            if i > 0 {
+                spec.push(',');
+            }
+            spec.push_str(r#"{"kind":"drop","frame":0}"#);
+        }
+        spec.push(']');
+        let err = ChaosSpec::parse(&spec).unwrap_err().to_string();
+        assert!(err.contains("exceeds cap"), "{err}");
+    }
+}

@@ -1,25 +1,64 @@
 //! The coordinator side of a cluster session.
 //!
-//! One coordinator process drives N workers in lockstep rounds: collect
-//! `Grads` from every shard, reduce through the same
+//! One coordinator process drives the workers in lockstep rounds: collect
+//! one `Grads` frame per data shard, reduce through the same
 //! [`crate::coordinator::allreduce_mean`] tree the in-process engine uses,
-//! broadcast `ReducedGrads`, repeat. The coordinator owns liveness: its
-//! sockets carry short read timeouts, it heartbeats on a step cadence, and
-//! any silent worker fails the run with a clean error naming the worker —
-//! never a hang. A `kill-all` control connection can abort the run at any
-//! point (join phase or mid-run).
+//! broadcast `ReducedGrads`, repeat. The coordinator also maintains its own
+//! bitwise replica of the model (same seeded optimizer, same shared round
+//! arithmetic), which is what lets it survive failures:
+//!
+//! * **Dead workers** — every peer socket is polled with a short timeout
+//!   through a buffered frame reader; a peer that owes shards this round
+//!   and has been silent past `io_timeout_ms` (or whose socket errors) is
+//!   declared dead, and its shards are re-dealt to survivors with a
+//!   permanent `Reassign`. Survivors recompute the missing
+//!   `(seed, step, shard)` gradients exactly, so the round's reduction is
+//!   bitwise identical to the failure-free run.
+//! * **Stragglers** — when a round overruns a soft deadline (a multiple of
+//!   the rolling median round time), the laggard's missing shards are
+//!   speculatively dispatched to idle survivors with an ephemeral
+//!   `Reassign`; the first copy of each `(step, shard)` wins and
+//!   duplicates are discarded (both copies are bitwise equal anyway).
+//! * **Elastic membership** — a worker may send `Msg::Leave` to depart
+//!   cleanly, and a new worker may connect at any round boundary: it
+//!   receives the session-start weights plus the join step, deterministically
+//!   replays the session prefix locally, and participates from the next
+//!   round on.
+//!
+//! A `kill-all` control connection can still abort the run at any round
+//! boundary. The run only fails outright when no workers survive or the
+//! final gathered state contradicts the replica (a determinism bug, not a
+//! fault).
 
+use std::collections::VecDeque;
 use std::net::{TcpListener, TcpStream};
 use std::time::{Duration, Instant};
 
-use crate::config::{ClusterCfg, ModelCfg};
+use crate::config::{ClusterCfg, ModelCfg, OptimCfg};
 use crate::coordinator::allreduce_mean;
 use crate::linalg::Mat;
-use crate::{log_info, log_warn};
+use crate::log_info;
+use crate::log_warn;
+use crate::optim;
+use crate::util::json::Json;
+use crate::util::threadpool;
 
-use super::messages::{encode, read_msg, write_frame, write_msg, Msg, ShardAssignment, TaskDesc};
+use super::messages::{
+    encode, read_msg, write_frame, write_msg, LayerSpec, Msg, ShardAssignment, TaskDesc,
+};
+use super::net::FrameBuf;
+use super::round::apply_replicated_update;
 use super::task::TrainTask;
 use super::{model_layers, net, task, task_desc, RunOutcome};
+
+/// Peer poll granularity: each silent socket blocks a sweep for at most
+/// this long, so dead/straggler detection ticks at a few ms even while
+/// every worker is quiet.
+const POLL_MS: u64 = 5;
+
+/// Rolling window of completed round durations the straggler deadline's
+/// median is computed over.
+const ROUND_WINDOW: usize = 31;
 
 /// Split layer element counts into `n` contiguous groups balanced by
 /// parameter count (each group non-empty). Returns `(start, end)` index
@@ -49,6 +88,139 @@ pub(crate) fn layer_groups(sizes: &[usize], n: usize) -> Vec<(usize, usize)> {
     bounds
 }
 
+/// The heartbeat nonce window for one peer. Probes are cumulative: an ack
+/// for nonce `x` clears every outstanding probe ≤ `x`, and one unacked
+/// probe is tolerated at the next send (a reply legitimately trails by a
+/// round when the worker acks after the `Grads` it already started
+/// sending). Two unacked probes at send time is a miss.
+#[derive(Default, Debug)]
+pub(crate) struct HbWindow {
+    outstanding: VecDeque<u64>,
+}
+
+impl HbWindow {
+    /// Record a probe about to be sent.
+    pub(crate) fn on_send(&mut self, nonce: u64) {
+        self.outstanding.push_back(nonce);
+    }
+
+    /// Record an ack: clears the acked probe and every older one (a late
+    /// ack for a stale nonce is progress, not a miss).
+    pub(crate) fn on_ack(&mut self, nonce: u64) {
+        while self.outstanding.front().is_some_and(|&f| f <= nonce) {
+            self.outstanding.pop_front();
+        }
+    }
+
+    /// True when the peer has fallen two probes behind — checked right
+    /// before sending the next probe.
+    pub(crate) fn missed(&self) -> bool {
+        self.outstanding.len() >= 2
+    }
+}
+
+/// One live worker connection and everything the coordinator knows about
+/// its current duties.
+struct Peer {
+    id: u32,
+    stream: TcpStream,
+    fb: FrameBuf,
+    /// Data shards this peer currently owns.
+    shards: Vec<u64>,
+    /// Checkpoint layer group this peer currently owns.
+    group: (u32, u32),
+    /// Last instant any frame arrived from this peer.
+    last_rx: Instant,
+    hb: HbWindow,
+}
+
+/// Why a peer is being removed (drives the goodbye message, if any).
+enum Gone {
+    /// Socket error, protocol violation, or silence past the timeout.
+    Dead(String),
+    /// The peer asked to leave; it gets a clean `Shutdown{"left"}`.
+    Left,
+}
+
+/// Deal shards `0..n_shards` and the checkpoint layer groups across the
+/// given (ascending) worker ids: shards round-robin, groups contiguous and
+/// parameter-balanced with trailing empty groups once ids outnumber layers.
+fn deal(ids: &[u32], n_shards: usize, sizes: &[usize]) -> Vec<(Vec<u64>, (u32, u32))> {
+    let n_layers = sizes.len();
+    let grouped = ids.len().min(n_layers);
+    let groups = layer_groups(sizes, grouped);
+    ids.iter()
+        .enumerate()
+        .map(|(k, _)| {
+            let shards: Vec<u64> =
+                (0..n_shards as u64).filter(|s| *s as usize % ids.len() == k).collect();
+            let g = if k < grouped {
+                (groups[k].0 as u32, groups[k].1 as u32)
+            } else {
+                (n_layers as u32, n_layers as u32)
+            };
+            (shards, g)
+        })
+        .collect()
+}
+
+/// Remove `gone` peers and re-deal shards + groups across the survivors,
+/// broadcasting a permanent `Reassign` effective at `at_step`. Peers whose
+/// Reassign write fails are dead too; the loop runs until the deal sticks.
+/// Fails the run only when nobody survives.
+fn redeal(
+    peers: &mut Vec<Peer>,
+    n_shards: usize,
+    sizes: &[usize],
+    at_step: u64,
+) -> crate::Result<()> {
+    loop {
+        anyhow::ensure!(
+            !peers.is_empty(),
+            "no surviving workers at step {at_step}: every worker died or left"
+        );
+        peers.sort_by_key(|p| p.id);
+        let ids: Vec<u32> = peers.iter().map(|p| p.id).collect();
+        let deals = deal(&ids, n_shards, sizes);
+        let mut dead: Vec<usize> = Vec::new();
+        for (k, (shards, group)) in deals.into_iter().enumerate() {
+            peers[k].shards = shards.clone();
+            peers[k].group = group;
+            let msg = Msg::Reassign {
+                start_step: at_step,
+                permanent: true,
+                shards,
+                group_start: group.0,
+                group_end: group.1,
+            };
+            if let Err(e) = write_msg(&mut peers[k].stream, &msg) {
+                log_warn!("cluster: worker {} died during reassignment: {e}", peers[k].id);
+                dead.push(k);
+            }
+        }
+        if dead.is_empty() {
+            return Ok(());
+        }
+        for k in dead.into_iter().rev() {
+            peers.remove(k);
+        }
+    }
+}
+
+/// Say goodbye (for a clean leave) and drop the peer at `idx`.
+fn remove_peer(peers: &mut Vec<Peer>, idx: usize, why: Gone) {
+    let id = peers[idx].id;
+    match why {
+        Gone::Dead(detail) => log_warn!("cluster: worker {id} lost: {detail}"),
+        Gone::Left => {
+            let frame = encode(&Msg::Shutdown { reason: "left".to_string() });
+            let _ = write_frame(&mut peers[idx].stream, &frame);
+            log_info!("cluster: worker {id} left cleanly");
+        }
+    }
+    peers.remove(idx);
+}
+
 /// Run a coordinator bound to `cfg.bind`.
 pub fn run(cfg: &ClusterCfg) -> crate::Result<RunOutcome> {
     let listener = TcpListener::bind(&cfg.bind)
@@ -70,12 +242,11 @@ pub fn run_on(cfg: &ClusterCfg, listener: TcpListener) -> crate::Result<RunOutco
         layers.len()
     );
     let sizes: Vec<usize> = layers.iter().map(|l| l.rows * l.cols).collect();
-    let groups = layer_groups(&sizes, cfg.workers);
     let n = cfg.workers;
     let desc = task_desc(cfg)?;
     let task = task::build_task(&desc, cfg.seed, &layers)?;
 
-    // ---- Join phase: accept Hello from each worker id (or KillAll). ----
+    // ---- Join phase: accept Hello from each founding worker id. ----
     listener.set_nonblocking(true)?;
     let mut slots: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
     let deadline = Instant::now() + Duration::from_millis(cfg.join_timeout_ms);
@@ -103,11 +274,13 @@ pub fn run_on(cfg: &ClusterCfg, listener: TcpListener) -> crate::Result<RunOutco
 
     // ---- Assignment + resume reconciliation. ----
     let optim_json = cfg.optim.to_json().dump();
+    let groups = layer_groups(&sizes, n);
     for (k, stream) in streams.iter_mut().enumerate() {
         let (gs, ge) = groups[k];
         let assignment = ShardAssignment {
             worker_id: k as u32,
             n_workers: n as u32,
+            shards: vec![k as u64],
             steps: cfg.steps as u64,
             seed: cfg.seed,
             task: desc.clone(),
@@ -131,20 +304,20 @@ pub fn run_on(cfg: &ClusterCfg, listener: TcpListener) -> crate::Result<RunOutco
         let msg = match read_msg(&mut streams[k]) {
             Ok(m) => m,
             Err(e) => {
-                return fail_run(&mut streams, k, &format!(
-                    "worker {k} failed while offering group state: {e}"
-                ));
+                let why = format!("worker {k} failed while offering group state: {e}");
+                return fail_streams(&mut streams, k, &why);
             }
         };
         match msg {
             Msg::GroupState { step, mats } => {
                 let (gs, ge) = groups[k];
                 if mats.len() != ge - gs {
-                    return fail_run(&mut streams, usize::MAX, &format!(
+                    let why = format!(
                         "worker {k} offered {} tensors for a {}-layer group",
                         mats.len(),
                         ge - gs
-                    ));
+                    );
+                    return fail_streams(&mut streams, usize::MAX, &why);
                 }
                 if let Some(l) = mats
                     .iter()
@@ -152,170 +325,247 @@ pub fn run_on(cfg: &ClusterCfg, listener: TcpListener) -> crate::Result<RunOutco
                     .find(|(m, l)| m.shape() != (l.rows, l.cols))
                     .map(|(_, l)| l)
                 {
-                    return fail_run(&mut streams, usize::MAX, &format!(
-                        "worker {k} group tensor shape mismatch for {:?}",
-                        l.name
-                    ));
+                    let why = format!("worker {k} group tensor shape mismatch for {:?}", l.name);
+                    return fail_streams(&mut streams, usize::MAX, &why);
                 }
                 offers.push((step, mats));
             }
             m => {
-                return fail_run(&mut streams, usize::MAX, &format!(
+                let why = format!(
                     "unexpected {} from worker {k} while collecting group state",
                     m.name()
-                ));
+                );
+                return fail_streams(&mut streams, usize::MAX, &why);
             }
         }
     }
     let start_step = offers[0].0;
     if !offers.iter().all(|(s, _)| *s == start_step) {
         let steps: Vec<u64> = offers.iter().map(|(s, _)| *s).collect();
-        return fail_run(&mut streams, usize::MAX, &format!(
-            "inconsistent shard checkpoints: worker steps {steps:?} — run every worker with \
-             the same shard files (or without --resume)"
-        ));
+        let why = format!(
+            "inconsistent shard checkpoints: worker steps {steps:?} — run every worker with the \
+             same shard files (or without --resume)"
+        );
+        return fail_streams(&mut streams, usize::MAX, &why);
     }
 
     // Groups partition the layer list in worker order, so concatenating the
-    // offers reassembles the full model.
+    // offers reassembles the full model. This is both the broadcast start
+    // state and the seed of the coordinator's replica.
     let mut weights: Vec<Mat> = Vec::with_capacity(layers.len());
     for (_, mats) in offers {
         weights.extend(mats);
     }
-    let sync = encode(&Msg::SyncWeights { start_step, mats: weights });
+    // Session-start weights are kept for elastic joiners, which replay the
+    // session prefix from here to reconstruct optimizer state bitwise.
+    let session_start_weights = weights.clone();
+    let sync = encode(&Msg::SyncWeights {
+        start_step,
+        ckpt_base: start_step,
+        mats: weights.clone(),
+    });
     for stream in streams.iter_mut() {
         write_frame(stream, &sync)?;
     }
     drop(sync);
 
-    // ---- Lockstep rounds. ----
+    // The coordinator's replica optimizer: built from the same round-tripped
+    // JSON the workers parse, so replica arithmetic is the workers',
+    // bit for bit.
+    let ocfg_json = Json::parse(&optim_json)
+        .map_err(|e| anyhow::anyhow!("optimizer JSON round-trip failed: {e}"))?;
+    let ocfg = OptimCfg::from_json(&ocfg_json)
+        .ok_or_else(|| anyhow::anyhow!("optimizer config round-trip failed"))?;
+    let shapes: Vec<(usize, usize)> = layers.iter().map(|l| (l.rows, l.cols)).collect();
+    let projected: Vec<bool> = layers.iter().map(|l| l.projected).collect();
+    let mut opt = optim::build(&ocfg, &shapes, &projected, cfg.seed);
+
+    // Promote the handshake streams to polled peers.
+    let mut peers: Vec<Peer> = Vec::with_capacity(n);
+    for (k, stream) in streams.into_iter().enumerate() {
+        stream.set_read_timeout(Some(Duration::from_millis(POLL_MS)))?;
+        peers.push(Peer {
+            id: k as u32,
+            stream,
+            fb: FrameBuf::new(),
+            shards: vec![k as u64],
+            group: (groups[k].0 as u32, groups[k].1 as u32),
+            last_rx: Instant::now(),
+            hb: HbWindow::default(),
+        });
+    }
+
+    // ---- Lockstep rounds (event loop). ----
+    let n_shards = n;
     let final_step = start_step + cfg.steps as u64;
-    let mut pending_hb: Vec<Option<u64>> = vec![None; n];
+    // 0 means "no timeout" everywhere else in the cluster; for the dead
+    // detector that translates to "never declare silence fatal".
+    let io_timeout = Duration::from_millis(if cfg.io_timeout_ms == 0 {
+        u64::MAX
+    } else {
+        cfg.io_timeout_ms
+    });
     let mut hb_nonce = 0u64;
     let mut last_loss = 0.0f64;
+    let mut recovered = 0u64;
+    let mut round_times: VecDeque<u64> = VecDeque::with_capacity(ROUND_WINDOW);
     // A worker acks a heartbeat *after* the Grads it already sent for the
     // current round, so an ack can legitimately trail by one round; cadence 1
     // would false-positive the missed-ack check. Clamp to >= 2.
     let hb_every = if cfg.heartbeat_every == 0 { 0 } else { cfg.heartbeat_every.max(2) as u64 };
+
     for t in start_step..final_step {
-        // A KillAll control connection can arrive at any round boundary.
-        if poll_kill(&listener, cfg)? {
-            return killed_outcome(streams.iter_mut());
+        // Round boundary: control connections and elastic joins.
+        match boundary(
+            &listener,
+            cfg,
+            &mut peers,
+            t,
+            start_step,
+            final_step,
+            &desc,
+            &layers,
+            &sizes,
+            &optim_json,
+            &session_start_weights,
+        )? {
+            Boundary::Killed => return killed_outcome(peers.iter_mut().map(|p| &mut p.stream)),
+            Boundary::Continue => {}
         }
+
+        // Heartbeats: probe on cadence; two unacked probes is a miss.
         if hb_every > 0 && t > start_step && (t - start_step) % hb_every == 0 {
-            for k in 0..n {
-                if pending_hb[k].is_some() {
-                    return fail_run(&mut streams, k, &format!(
-                        "worker {k} missed a heartbeat (no ack within {hb_every} steps)"
-                    ));
+            let mut k = 0;
+            while k < peers.len() {
+                if peers[k].hb.missed() {
+                    let id = peers[k].id;
+                    let why = format!("worker {id} missed a heartbeat (two unacked probes)");
+                    remove_peer(&mut peers, k, Gone::Dead(why));
+                    redeal(&mut peers, n_shards, &sizes, t)?;
+                } else {
+                    k += 1;
                 }
             }
             hb_nonce += 1;
             let hb = encode(&Msg::Heartbeat { nonce: hb_nonce });
-            for (k, stream) in streams.iter_mut().enumerate() {
-                write_frame(stream, &hb)?;
-                pending_hb[k] = Some(hb_nonce);
-            }
-        }
-
-        let mut shard_grads: Vec<Vec<Mat>> = Vec::with_capacity(n);
-        let mut loss_sum = 0.0f64;
-        for k in 0..n {
-            loop {
-                let msg = match read_msg(&mut streams[k]) {
-                    Ok(m) => m,
-                    Err(e) => {
-                        return fail_run(&mut streams, k, &format!(
-                            "worker {k} failed at step {t}: {e}"
-                        ));
-                    }
-                };
-                match msg {
-                    Msg::HeartbeatAck { nonce } => {
-                        if pending_hb[k] == Some(nonce) {
-                            pending_hb[k] = None;
-                        }
-                    }
-                    Msg::Grads { step, loss, mats } => {
-                        if step != t || mats.len() != layers.len() {
-                            return fail_run(&mut streams, k, &format!(
-                                "worker {k} sent gradients for step {step} ({} tensors) during \
-                                 step {t}",
-                                mats.len()
-                            ));
-                        }
-                        loss_sum += loss;
-                        shard_grads.push(mats);
-                        break;
-                    }
-                    Msg::Error { detail } => {
-                        return fail_run(&mut streams, k, &format!("worker {k} reported: {detail}"));
-                    }
-                    m => {
-                        return fail_run(&mut streams, k, &format!(
-                            "unexpected {} from worker {k} at step {t}",
-                            m.name()
-                        ));
-                    }
+            let mut k = 0;
+            while k < peers.len() {
+                if let Err(e) = write_frame(&mut peers[k].stream, &hb) {
+                    remove_peer(&mut peers, k, Gone::Dead(e.to_string()));
+                    redeal(&mut peers, n_shards, &sizes, t)?;
+                } else {
+                    peers[k].hb.on_send(hb_nonce);
+                    k += 1;
                 }
             }
         }
-        last_loss = loss_sum / n as f64;
-        let reduced = allreduce_mean(&mut shard_grads);
-        let frame = encode(&Msg::ReducedGrads { step: t, loss: last_loss, mats: reduced });
-        for stream in streams.iter_mut() {
-            write_frame(stream, &frame)?;
+
+        // Collect one gradient per shard, surviving deaths and stragglers.
+        let round_start = Instant::now();
+        let mut got: Vec<Option<(f64, Vec<Mat>)>> = (0..n_shards).map(|_| None).collect();
+        let mut speculated: Vec<bool> = vec![false; n_shards];
+        let soft_deadline_ms = straggler_deadline_ms(cfg, &round_times);
+        while got.iter().any(|g| g.is_none()) {
+            let mut k = 0;
+            while k < peers.len() {
+                match pump_peer(&mut peers[k], t, &layers, &mut got) {
+                    Ok(PeerEvent::Fine) => k += 1,
+                    Ok(PeerEvent::Left) => {
+                        let lost = undelivered(&peers[k], &got);
+                        remove_peer(&mut peers, k, Gone::Left);
+                        redeal(&mut peers, n_shards, &sizes, t)?;
+                        recovered += lost;
+                    }
+                    Err(e) => {
+                        let lost = undelivered(&peers[k], &got);
+                        remove_peer(&mut peers, k, Gone::Dead(e.to_string()));
+                        redeal(&mut peers, n_shards, &sizes, t)?;
+                        recovered += lost;
+                    }
+                }
+            }
+            // Silence-based death: owes shards this round, nothing received
+            // for longer than the io timeout.
+            let mut k = 0;
+            while k < peers.len() {
+                let p = &peers[k];
+                let owes = p.shards.iter().any(|&s| got[s as usize].is_none());
+                let anchor = p.last_rx.max(round_start);
+                if owes && anchor.elapsed() > io_timeout {
+                    let lost = undelivered(p, &got);
+                    let ms = io_timeout.as_millis();
+                    let why = format!("worker {} silent for {ms}ms at step {t}", p.id);
+                    remove_peer(&mut peers, k, Gone::Dead(why));
+                    redeal(&mut peers, n_shards, &sizes, t)?;
+                    recovered += lost;
+                } else {
+                    k += 1;
+                }
+            }
+            // Straggler speculation: past the soft deadline, re-dispatch
+            // missing shards to idle peers (once per shard per round).
+            if let Some(deadline) = soft_deadline_ms {
+                if round_start.elapsed().as_millis() as u64 > deadline {
+                    recovered += speculate(&mut peers, t, &got, &mut speculated)? as u64;
+                }
+            }
         }
+
+        // Deterministic reduction: shards in index order, exactly like the
+        // single-process reference.
+        let mut loss_sum = 0.0f64;
+        let mut shard_grads: Vec<Vec<Mat>> = Vec::with_capacity(n_shards);
+        for g in got {
+            let (loss, mats) = g.unwrap();
+            loss_sum += loss;
+            shard_grads.push(mats);
+        }
+        last_loss = loss_sum / n_shards as f64;
+        let reduced = allreduce_mean(&mut shard_grads);
+        let frame = encode(&Msg::ReducedGrads { step: t, loss: last_loss, mats: reduced.clone() });
+        let mut k = 0;
+        while k < peers.len() {
+            if let Err(e) = write_frame(&mut peers[k].stream, &frame) {
+                remove_peer(&mut peers, k, Gone::Dead(e.to_string()));
+                redeal(&mut peers, n_shards, &sizes, t + 1)?;
+            } else {
+                k += 1;
+            }
+        }
+
+        // Advance the replica through the shared round arithmetic.
+        let lr_mult = task.lr_mult(t);
+        let mut refs: Vec<&mut Mat> = weights.iter_mut().collect();
+        apply_replicated_update(opt.as_mut(), threadpool::global(), &mut refs, &reduced, lr_mult);
+        drop(refs);
+
+        if round_times.len() == ROUND_WINDOW {
+            round_times.pop_front();
+        }
+        round_times.push_back(round_start.elapsed().as_millis() as u64);
 
         if cfg.ckpt_every > 0
             && (t + 1 - start_step) % cfg.ckpt_every as u64 == 0
             && t + 1 != final_step
         {
-            checkpoint_barrier(&mut streams, &mut pending_hb, t + 1)?;
+            barrier(&mut peers, n_shards, &sizes, t + 1, io_timeout)?;
         }
         if (t + 1 - start_step) % 10 == 0 {
             log_info!("cluster step {}/{final_step}: loss {last_loss:.6}", t + 1);
         }
     }
 
-    // ---- Session end: final checkpoint, state gather, shutdown. ----
-    checkpoint_barrier(&mut streams, &mut pending_hb, final_step)?;
-    let mut weights: Vec<Mat> = Vec::with_capacity(layers.len());
-    for k in 0..n {
-        let msg = match read_msg(&mut streams[k]) {
-            Ok(m) => m,
-            Err(e) => {
-                return fail_run(&mut streams, k, &format!(
-                    "worker {k} failed while sending final state: {e}"
-                ));
-            }
-        };
-        match msg {
-            Msg::GroupState { step, mats } => {
-                if step != final_step {
-                    return fail_run(&mut streams, usize::MAX, &format!(
-                        "worker {k} final state at step {step}, expected {final_step}"
-                    ));
-                }
-                weights.extend(mats);
-            }
-            m => {
-                return fail_run(&mut streams, usize::MAX, &format!(
-                    "unexpected {} from worker {k} while gathering final state",
-                    m.name()
-                ));
-            }
-        }
-    }
-    anyhow::ensure!(weights.len() == layers.len(), "gathered {} of {} layers", weights.len(), layers.len());
+    // ---- Session end: final barrier, gather-verify, shutdown. ----
+    barrier(&mut peers, n_shards, &sizes, final_step, io_timeout)?;
+    gather_verify(&mut peers, final_step, io_timeout, &weights, &layers)?;
     let done = encode(&Msg::Shutdown { reason: "done".to_string() });
-    for stream in streams.iter_mut() {
-        let _ = write_frame(stream, &done);
+    for p in peers.iter_mut() {
+        let _ = write_frame(&mut p.stream, &done);
     }
     let final_loss = task.eval_loss(&weights);
     log_info!(
         "cluster done: steps {start_step}..{final_step}, mean shard loss {last_loss:.6}, \
-         final loss {final_loss:.6}"
+         final loss {final_loss:.6}, recovered {recovered} shard results"
     );
     Ok(RunOutcome {
         start_step,
@@ -324,7 +574,480 @@ pub fn run_on(cfg: &ClusterCfg, listener: TcpListener) -> crate::Result<RunOutco
         weights,
         layer_names: layers.into_iter().map(|l| l.name).collect(),
         killed: false,
+        recovered,
     })
+}
+
+/// What one peer poll produced beyond recorded gradients.
+enum PeerEvent {
+    Fine,
+    Left,
+}
+
+/// Drain every complete frame currently available from one peer during the
+/// gradient-collection phase. Records on-time gradients, drops stale ones
+/// (an already-finished round), answers nothing (heartbeat probes come from
+/// us). Errors mean the peer is dead or hostile.
+fn pump_peer(
+    peer: &mut Peer,
+    t: u64,
+    layers: &[LayerSpec],
+    got: &mut [Option<(f64, Vec<Mat>)>],
+) -> crate::Result<PeerEvent> {
+    loop {
+        let msg = match peer.fb.poll(&mut peer.stream) {
+            Ok(Some(m)) => m,
+            Ok(None) => return Ok(PeerEvent::Fine),
+            Err(e) => anyhow::bail!("worker {} at step {t}: {e}", peer.id),
+        };
+        peer.last_rx = Instant::now();
+        match msg {
+            Msg::HeartbeatAck { nonce } => peer.hb.on_ack(nonce),
+            Msg::Grads { step, shard, loss, mats } => {
+                if step < t {
+                    continue; // stale: a round completed by speculation/takeover
+                }
+                anyhow::ensure!(
+                    step == t && (shard as usize) < got.len() && mats.len() == layers.len(),
+                    "worker {} sent gradients for step {step} shard {shard} ({} tensors) \
+                     during step {t}",
+                    peer.id,
+                    mats.len()
+                );
+                let slot = &mut got[shard as usize];
+                if slot.is_none() {
+                    *slot = Some((loss, mats));
+                }
+            }
+            Msg::Leave { .. } => return Ok(PeerEvent::Left),
+            Msg::Error { detail } => anyhow::bail!("worker {} reported: {detail}", peer.id),
+            // Stale barrier acks can trail a catching-up laggard.
+            Msg::Ack { .. } => {}
+            m => anyhow::bail!("unexpected {} from worker {} at step {t}", m.name(), peer.id),
+        }
+    }
+}
+
+/// Count the shards a departing peer owed this round — the work its loss
+/// shifts onto survivors.
+fn undelivered(peer: &Peer, got: &[Option<(f64, Vec<Mat>)>]) -> u64 {
+    peer.shards.iter().filter(|&&s| got[s as usize].is_none()).count() as u64
+}
+
+/// The straggler soft deadline for the next round, if speculation is
+/// enabled and there is history to base it on.
+fn straggler_deadline_ms(cfg: &ClusterCfg, round_times: &VecDeque<u64>) -> Option<u64> {
+    if cfg.straggler_factor <= 0.0 || round_times.is_empty() {
+        return None;
+    }
+    let mut sorted: Vec<u64> = round_times.iter().copied().collect();
+    sorted.sort_unstable();
+    let median = sorted[sorted.len() / 2];
+    Some(((median as f64 * cfg.straggler_factor) as u64).max(cfg.straggler_min_ms))
+}
+
+/// Speculatively dispatch missing shards to idle peers (peers whose own
+/// shards have all been delivered), at most once per shard per round.
+/// Returns the number of shards dispatched.
+fn speculate(
+    peers: &mut [Peer],
+    t: u64,
+    got: &[Option<(f64, Vec<Mat>)>],
+    speculated: &mut [bool],
+) -> crate::Result<usize> {
+    let missing: Vec<u64> = (0..got.len() as u64)
+        .filter(|&s| got[s as usize].is_none() && !speculated[s as usize])
+        .collect();
+    if missing.is_empty() {
+        return Ok(0);
+    }
+    let idle: Vec<usize> = (0..peers.len())
+        .filter(|&k| peers[k].shards.iter().all(|&s| got[s as usize].is_some()))
+        .collect();
+    if idle.is_empty() {
+        return Ok(0);
+    }
+    // Batch per idle peer so each target gets one ephemeral Reassign.
+    let mut batches: Vec<Vec<u64>> = vec![Vec::new(); idle.len()];
+    for (i, &s) in missing.iter().enumerate() {
+        batches[i % idle.len()].push(s);
+    }
+    let mut dispatched = 0usize;
+    for (b, &k) in batches.iter().zip(&idle) {
+        if b.is_empty() {
+            continue;
+        }
+        let msg = Msg::Reassign {
+            start_step: t,
+            permanent: false,
+            shards: b.clone(),
+            group_start: 0,
+            group_end: 0,
+        };
+        if write_msg(&mut peers[k].stream, &msg).is_ok() {
+            log_info!(
+                "cluster: speculating shards {:?} on worker {} at step {t}",
+                b,
+                peers[k].id
+            );
+            for &s in b {
+                speculated[s as usize] = true;
+            }
+            dispatched += b.len();
+        }
+        // A failed write surfaces as a dead peer on the next pump.
+    }
+    Ok(dispatched)
+}
+
+/// What a round boundary produced.
+enum Boundary {
+    Continue,
+    Killed,
+}
+
+/// Round-boundary housekeeping: accept control connections (`KillAll`) and
+/// elastic joiners. A broken joiner handshake is logged and dropped — it
+/// must never kill the run.
+#[allow(clippy::too_many_arguments)]
+fn boundary(
+    listener: &TcpListener,
+    cfg: &ClusterCfg,
+    peers: &mut Vec<Peer>,
+    t: u64,
+    start_step: u64,
+    final_step: u64,
+    desc: &TaskDesc,
+    layers: &[LayerSpec],
+    sizes: &[usize],
+    optim_json: &str,
+    session_start_weights: &[Mat],
+) -> crate::Result<Boundary> {
+    loop {
+        let stream = match listener.accept() {
+            Ok((stream, _)) => stream,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(Boundary::Continue),
+            Err(e) => anyhow::bail!("accept failed: {e}"),
+        };
+        stream.set_nonblocking(false)?;
+        net::configure(&stream, cfg.io_timeout_ms)?;
+        let mut stream = stream;
+        match read_msg(&mut stream) {
+            Ok(Msg::KillAll) => {
+                let _ = write_msg(&mut stream, &Msg::Ack { step: 0 });
+                return Ok(Boundary::Killed);
+            }
+            Ok(Msg::Hello { worker_id, task_support }) => {
+                if let Err(e) = admit_joiner(
+                    cfg,
+                    peers,
+                    stream,
+                    worker_id,
+                    task_support,
+                    t,
+                    start_step,
+                    final_step,
+                    desc,
+                    layers,
+                    sizes,
+                    optim_json,
+                    session_start_weights,
+                ) {
+                    log_warn!("cluster: rejecting joiner {worker_id} at step {t}: {e}");
+                }
+            }
+            Ok(m) => {
+                log_warn!("cluster: dropping mid-run connection ({})", m.name());
+                let detail = format!("expected Hello or KillAll, got {}", m.name());
+                let _ = write_msg(&mut stream, &Msg::Error { detail });
+            }
+            Err(e) => {
+                log_warn!("cluster: dropping undecodable mid-run connection: {e}");
+            }
+        }
+    }
+}
+
+/// Handshake one elastic joiner at round boundary `t`: assignment with the
+/// re-dealt shards/group, session-start weights + join step for the
+/// deterministic prefix replay, then a permanent `Reassign` broadcast so
+/// every peer agrees on the new deal.
+#[allow(clippy::too_many_arguments)]
+fn admit_joiner(
+    cfg: &ClusterCfg,
+    peers: &mut Vec<Peer>,
+    mut stream: TcpStream,
+    worker_id: u32,
+    task_support: u8,
+    t: u64,
+    start_step: u64,
+    final_step: u64,
+    desc: &TaskDesc,
+    layers: &[LayerSpec],
+    sizes: &[usize],
+    optim_json: &str,
+    session_start_weights: &[Mat],
+) -> crate::Result<()> {
+    let reject = |stream: &mut TcpStream, detail: String| -> anyhow::Error {
+        let _ = write_msg(stream, &Msg::Error { detail: detail.clone() });
+        anyhow::anyhow!(detail)
+    };
+    if peers.iter().any(|p| p.id == worker_id) {
+        return Err(reject(&mut stream, format!("worker id {worker_id} already active")));
+    }
+    if task_support & desc.support_bit() == 0 {
+        let why = format!(
+            "worker {worker_id} does not support the {} task (support mask {task_support:#04x})",
+            desc.kind_name()
+        );
+        return Err(reject(&mut stream, why));
+    }
+    if t >= final_step {
+        return Err(reject(&mut stream, format!("session is over (step {t})")));
+    }
+    // Provisional deal including the joiner (redeal broadcasts the same
+    // deterministic deal to everyone once the handshake succeeds).
+    let mut ids: Vec<u32> = peers.iter().map(|p| p.id).collect();
+    ids.push(worker_id);
+    ids.sort_unstable();
+    let slot = ids.iter().position(|&i| i == worker_id).unwrap();
+    let n_shards = cfg.workers;
+    let (shards, group) = deal(&ids, n_shards, sizes).swap_remove(slot);
+    let assignment = ShardAssignment {
+        worker_id,
+        n_workers: n_shards as u32,
+        shards: shards.clone(),
+        steps: final_step - t,
+        seed: cfg.seed,
+        task: desc.clone(),
+        // A joiner never resumes from disk: its state comes from the
+        // deterministic prefix replay.
+        resume: false,
+        ckpt_every: cfg.ckpt_every as u64,
+        ckpt_dir: cfg.ckpt_dir.clone(),
+        heartbeat_every: cfg.heartbeat_every as u64,
+        optim_json: optim_json.to_string(),
+        tag: cfg.preset.clone(),
+        layers: layers.to_vec(),
+        group_start: group.0,
+        group_end: group.1,
+    };
+    write_msg(&mut stream, &Msg::AssignShards(Box::new(assignment)))?;
+    match read_msg(&mut stream)? {
+        Msg::GroupState { .. } => {} // fresh joiner: offer is noise
+        m => anyhow::bail!("expected GroupState offer, got {}", m.name()),
+    }
+    write_msg(
+        &mut stream,
+        &Msg::SyncWeights {
+            start_step: t,
+            ckpt_base: start_step,
+            mats: session_start_weights.to_vec(),
+        },
+    )?;
+    stream.set_read_timeout(Some(Duration::from_millis(POLL_MS)))?;
+    peers.push(Peer {
+        id: worker_id,
+        stream,
+        fb: FrameBuf::new(),
+        shards,
+        group,
+        last_rx: Instant::now(),
+        hb: HbWindow::default(),
+    });
+    log_info!("cluster: worker {worker_id} joined at step {t}");
+    redeal(peers, n_shards, sizes, t)
+}
+
+/// Drive the `Checkpoint {step}` → `Ack {step}` barrier across all live
+/// peers. Laggards catching up interleave stale gradients and stale acks;
+/// peers that die or leave at the barrier are removed and their duties
+/// re-dealt for the rounds that follow.
+fn barrier(
+    peers: &mut Vec<Peer>,
+    n_shards: usize,
+    sizes: &[usize],
+    step: u64,
+    io_timeout: Duration,
+) -> crate::Result<()> {
+    let frame = encode(&Msg::Checkpoint { step });
+    let mut k = 0;
+    while k < peers.len() {
+        if let Err(e) = write_frame(&mut peers[k].stream, &frame) {
+            remove_peer(peers, k, Gone::Dead(e.to_string()));
+            redeal(peers, n_shards, sizes, step)?;
+        } else {
+            k += 1;
+        }
+    }
+    let barrier_start = Instant::now();
+    let mut acked: Vec<u32> = Vec::new();
+    loop {
+        if peers.iter().all(|p| acked.contains(&p.id)) {
+            return Ok(());
+        }
+        let mut k = 0;
+        while k < peers.len() {
+            let r = pump_barrier_peer(&mut peers[k], step, &mut acked);
+            match r {
+                Ok(PeerEvent::Fine) => k += 1,
+                Ok(PeerEvent::Left) => {
+                    remove_peer(peers, k, Gone::Left);
+                    redeal(peers, n_shards, sizes, step)?;
+                }
+                Err(e) => {
+                    remove_peer(peers, k, Gone::Dead(e.to_string()));
+                    redeal(peers, n_shards, sizes, step)?;
+                }
+            }
+        }
+        let mut k = 0;
+        while k < peers.len() {
+            let p = &peers[k];
+            let anchor = p.last_rx.max(barrier_start);
+            if !acked.contains(&p.id) && anchor.elapsed() > io_timeout {
+                let ms = io_timeout.as_millis();
+                let why = format!("worker {} silent for {ms}ms at checkpoint {step}", p.id);
+                remove_peer(peers, k, Gone::Dead(why));
+                redeal(peers, n_shards, sizes, step)?;
+            } else {
+                k += 1;
+            }
+        }
+    }
+}
+
+/// Drain frames from one peer while waiting at a barrier.
+fn pump_barrier_peer(peer: &mut Peer, step: u64, acked: &mut Vec<u32>) -> crate::Result<PeerEvent> {
+    loop {
+        let msg = match peer.fb.poll(&mut peer.stream) {
+            Ok(Some(m)) => m,
+            Ok(None) => return Ok(PeerEvent::Fine),
+            Err(e) => anyhow::bail!("worker {} at checkpoint {step}: {e}", peer.id),
+        };
+        peer.last_rx = Instant::now();
+        match msg {
+            Msg::HeartbeatAck { nonce } => peer.hb.on_ack(nonce),
+            Msg::Ack { step: s } if s == step => acked.push(peer.id),
+            Msg::Ack { .. } => {} // stale barrier ack from a laggard
+            Msg::Grads { step: s, .. } if s < step => {} // stale round traffic
+            Msg::Leave { .. } => return Ok(PeerEvent::Left),
+            Msg::Error { detail } => anyhow::bail!("worker {} reported: {detail}", peer.id),
+            m => anyhow::bail!(
+                "unexpected {} from worker {} during checkpoint {step}",
+                m.name(),
+                peer.id
+            ),
+        }
+    }
+}
+
+/// Collect each live peer's final `GroupState` and verify it bitwise
+/// against the replica. A mismatch is a determinism bug and fails the run;
+/// a peer dying here does not (its slice lives in the replica).
+fn gather_verify(
+    peers: &mut Vec<Peer>,
+    final_step: u64,
+    io_timeout: Duration,
+    replica: &[Mat],
+    layers: &[LayerSpec],
+) -> crate::Result<()> {
+    let gather_start = Instant::now();
+    let mut verified: Vec<u32> = Vec::new();
+    loop {
+        if peers.iter().all(|p| verified.contains(&p.id)) {
+            return Ok(());
+        }
+        let mut k = 0;
+        while k < peers.len() {
+            match pump_gather_peer(&mut peers[k], final_step, replica, layers, &mut verified)? {
+                GatherEvent::Fine => k += 1,
+                GatherEvent::Left => remove_peer(peers, k, Gone::Left),
+                GatherEvent::Dead(detail) => remove_peer(peers, k, Gone::Dead(detail)),
+            }
+        }
+        let mut k = 0;
+        while k < peers.len() {
+            let p = &peers[k];
+            let anchor = p.last_rx.max(gather_start);
+            if !verified.contains(&p.id) && anchor.elapsed() > io_timeout {
+                let ms = io_timeout.as_millis();
+                let why = format!("worker {} silent for {ms}ms at gather", p.id);
+                remove_peer(peers, k, Gone::Dead(why));
+            } else {
+                k += 1;
+            }
+        }
+    }
+}
+
+/// What one gather poll produced. `Dead` removes only that peer; a
+/// determinism violation is returned as a hard `Err` by
+/// [`pump_gather_peer`] and fails the run.
+enum GatherEvent {
+    Fine,
+    Left,
+    Dead(String),
+}
+
+/// Drain frames from one peer during the final gather, verifying its
+/// `GroupState` bitwise against the replica.
+fn pump_gather_peer(
+    peer: &mut Peer,
+    final_step: u64,
+    replica: &[Mat],
+    layers: &[LayerSpec],
+    verified: &mut Vec<u32>,
+) -> crate::Result<GatherEvent> {
+    loop {
+        let msg = match peer.fb.poll(&mut peer.stream) {
+            Ok(Some(m)) => m,
+            Ok(None) => return Ok(GatherEvent::Fine),
+            Err(e) => return Ok(GatherEvent::Dead(format!("worker {} at gather: {e}", peer.id))),
+        };
+        peer.last_rx = Instant::now();
+        match msg {
+            Msg::HeartbeatAck { nonce } => peer.hb.on_ack(nonce),
+            Msg::Ack { .. } => {}
+            Msg::Grads { step, .. } if step < final_step => {}
+            Msg::GroupState { step, mats } => {
+                let (gs, ge) = (peer.group.0 as usize, peer.group.1 as usize);
+                anyhow::ensure!(
+                    step == final_step,
+                    "worker {} final state at step {step}, expected {final_step}",
+                    peer.id
+                );
+                anyhow::ensure!(
+                    mats.len() == ge - gs,
+                    "worker {} final state has {} tensors for group {gs}..{ge}",
+                    peer.id,
+                    mats.len()
+                );
+                for (i, m) in mats.iter().enumerate() {
+                    let r = &replica[gs + i];
+                    anyhow::ensure!(
+                        m.shape() == r.shape() && m.data == r.data,
+                        "determinism violation: worker {} final weights for layer {:?} diverge \
+                         from the coordinator replica",
+                        peer.id,
+                        layers[gs + i].name
+                    );
+                }
+                verified.push(peer.id);
+            }
+            Msg::Leave { .. } => return Ok(GatherEvent::Left),
+            Msg::Error { detail } => {
+                return Ok(GatherEvent::Dead(format!("worker {} reported: {detail}", peer.id)));
+            }
+            m => {
+                return Ok(GatherEvent::Dead(format!(
+                    "unexpected {} from worker {} at gather",
+                    m.name(),
+                    peer.id
+                )));
+            }
+        }
+    }
 }
 
 /// Handle one freshly accepted connection during the join phase. Returns
@@ -372,43 +1095,14 @@ fn admit(
             // Not part of the protocol handshake — reject the connection but
             // keep the join going (a stray client must not kill the run).
             log_warn!("cluster: dropping connection with unexpected first message {}", m.name());
-            let _ = write_msg(&mut stream, &Msg::Error {
-                detail: format!("expected Hello, got {}", m.name()),
-            });
+            let detail = format!("expected Hello, got {}", m.name());
+            let _ = write_msg(&mut stream, &Msg::Error { detail });
             Ok(false)
         }
         Err(e) => {
             log_warn!("cluster: dropping undecodable connection: {e}");
             Ok(false)
         }
-    }
-}
-
-/// Non-blocking check for a `KillAll` control connection between rounds.
-/// Returns `true` when one arrived (already acked).
-fn poll_kill(listener: &TcpListener, cfg: &ClusterCfg) -> crate::Result<bool> {
-    match listener.accept() {
-        Ok((stream, _)) => {
-            stream.set_nonblocking(false)?;
-            net::configure(&stream, cfg.io_timeout_ms)?;
-            let mut stream = stream;
-            match read_msg(&mut stream) {
-                Ok(Msg::KillAll) => {
-                    let _ = write_msg(&mut stream, &Msg::Ack { step: 0 });
-                    Ok(true)
-                }
-                Ok(m) => {
-                    log_warn!("cluster: dropping mid-run connection ({})", m.name());
-                    Ok(false)
-                }
-                Err(e) => {
-                    log_warn!("cluster: dropping undecodable mid-run connection: {e}");
-                    Ok(false)
-                }
-            }
-        }
-        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(false),
-        Err(e) => anyhow::bail!("accept failed: {e}"),
     }
 }
 
@@ -429,12 +1123,15 @@ fn killed_outcome<'a, I: IntoIterator<Item = &'a mut TcpStream>>(
         weights: Vec::new(),
         layer_names: Vec::new(),
         killed: true,
+        recovered: 0,
     })
 }
 
-/// Abort the run: best-effort `Shutdown` to every worker except the failed
-/// one, then surface `detail` as the error.
-fn fail_run<T>(streams: &mut [TcpStream], failed: usize, detail: &str) -> crate::Result<T> {
+/// Abort the run during the join/handshake phase: best-effort `Shutdown` to
+/// every worker except the failed one, then surface `detail` as the error.
+/// Once rounds begin, individual failures are survivable and this is only
+/// used for unrecoverable conditions.
+fn fail_streams<T>(streams: &mut [TcpStream], failed: usize, detail: &str) -> crate::Result<T> {
     let frame = encode(&Msg::Shutdown { reason: format!("aborted: {detail}") });
     for (k, stream) in streams.iter_mut().enumerate() {
         if k != failed {
@@ -444,50 +1141,10 @@ fn fail_run<T>(streams: &mut [TcpStream], failed: usize, detail: &str) -> crate:
     anyhow::bail!("{detail}")
 }
 
-/// Drive the `Checkpoint {step}` → `Ack {step}` barrier across all
-/// workers (heartbeat acks may interleave).
-fn checkpoint_barrier(
-    streams: &mut [TcpStream],
-    pending_hb: &mut [Option<u64>],
-    step: u64,
-) -> crate::Result<()> {
-    let frame = encode(&Msg::Checkpoint { step });
-    for stream in streams.iter_mut() {
-        write_frame(stream, &frame)?;
-    }
-    for k in 0..streams.len() {
-        loop {
-            let msg = match read_msg(&mut streams[k]) {
-                Ok(m) => m,
-                Err(e) => {
-                    return fail_run(streams, k, &format!(
-                        "worker {k} failed during checkpoint {step}: {e}"
-                    ));
-                }
-            };
-            match msg {
-                Msg::HeartbeatAck { nonce } => {
-                    if pending_hb[k] == Some(nonce) {
-                        pending_hb[k] = None;
-                    }
-                }
-                Msg::Ack { step: s } if s == step => break,
-                m => {
-                    return fail_run(streams, k, &format!(
-                        "unexpected {} from worker {k} during checkpoint {step}",
-                        m.name()
-                    ));
-                }
-            }
-        }
-    }
-    Ok(())
-}
-
 /// Connect to a coordinator and ask it to abort the run (`sumo cluster
 /// kill-all`). Succeeds once the coordinator acknowledges.
 pub fn kill_all(addr: &str) -> crate::Result<()> {
-    let mut stream = net::connect_retry(addr, 3, 50, 2000, 5000)?;
+    let mut stream = net::connect_retry(addr, 3, 50, 2000, 5000, 0)?;
     write_msg(&mut stream, &Msg::KillAll)?;
     match read_msg(&mut stream)? {
         Msg::Ack { .. } => Ok(()),
@@ -529,5 +1186,52 @@ mod tests {
         let sizes = vec![10, 20, 30];
         let groups = layer_groups(&sizes, 3);
         assert_eq!(groups, vec![(0, 1), (1, 2), (2, 3)]);
+    }
+
+    #[test]
+    fn deal_covers_every_shard_and_handles_more_workers_than_layers() {
+        let sizes = vec![100, 50, 25];
+        // Fewer workers than shards: shards round-robin, groups partition.
+        let deals = deal(&[0, 2], 4, &sizes);
+        assert_eq!(deals[0].0, vec![0, 2]);
+        assert_eq!(deals[1].0, vec![1, 3]);
+        let mut all: Vec<u64> = deals.iter().flat_map(|(s, _)| s.clone()).collect();
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2, 3]);
+        // More workers than layers: trailing workers get empty groups but
+        // still draw shards.
+        let deals = deal(&[0, 1, 2, 3, 7], 2, &sizes);
+        assert_eq!(deals.len(), 5);
+        assert!(deals.iter().filter(|(_, g)| g.0 == g.1).count() == 2);
+        let covered: Vec<u64> = deals.iter().flat_map(|(s, _)| s.clone()).collect();
+        assert_eq!(covered, vec![0, 1]);
+        for (_, (gs, ge)) in &deals {
+            assert!(gs <= ge && *ge as usize <= sizes.len());
+        }
+    }
+
+    #[test]
+    fn hb_window_tolerates_one_late_ack() {
+        let mut hb = HbWindow::default();
+        // Probe 1 unacked at the next send point: tolerated.
+        hb.on_send(1);
+        assert!(!hb.missed());
+        hb.on_send(2);
+        // Now the late ack for the stale nonce 1 arrives — progress, and the
+        // window clears only what it covers.
+        hb.on_ack(1);
+        assert!(!hb.missed());
+        // Ack 2 clears the rest.
+        hb.on_ack(2);
+        assert!(!hb.missed());
+
+        // Two consecutive unacked probes IS a miss.
+        let mut hb = HbWindow::default();
+        hb.on_send(1);
+        hb.on_send(2);
+        assert!(hb.missed());
+        // A cumulative ack for the newer nonce clears both.
+        hb.on_ack(2);
+        assert!(!hb.missed());
     }
 }

@@ -43,6 +43,7 @@ pub fn run_local(cfg: &ClusterCfg) -> crate::Result<RunOutcome> {
         start_step: 0,
         steps: cfg.steps as u64,
         ckpt_every: 0,
+        ckpt_base: 0,
     };
     let out = run_rounds(
         task.as_ref(),
@@ -62,6 +63,7 @@ pub fn run_local(cfg: &ClusterCfg) -> crate::Result<RunOutcome> {
         weights,
         layer_names: layers.into_iter().map(|l| l.name).collect(),
         killed: false,
+        recovered: 0,
     })
 }
 

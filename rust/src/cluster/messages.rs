@@ -24,8 +24,12 @@ use crate::util::codec::{check_cap, require_le, ByteReader, ByteWriter};
 /// Frame magic (`SUmo Wire Protocol`).
 pub const WIRE_MAGIC: &[u8; 4] = b"SUWP";
 /// Protocol version carried in every frame header. v2 added the task
-/// descriptor to `AssignShards` and the task-support mask to `Hello`.
-pub const WIRE_VERSION: u8 = 2;
+/// descriptor to `AssignShards` and the task-support mask to `Hello`; v3
+/// added fault tolerance: `Grads` names its data shard, assignments carry
+/// an explicit owned-shard set, `SyncWeights` carries the checkpoint
+/// cadence base, and `Reassign`/`Leave` drive takeover and elastic
+/// membership.
+pub const WIRE_VERSION: u8 = 3;
 /// Frame header size: magic + version + tag + u64 payload length.
 pub const HEADER_BYTES: usize = 4 + 1 + 1 + 8;
 /// Hard cap on a frame payload (256 MiB — far above any real message for
@@ -37,6 +41,8 @@ pub const MAX_MAT_ELEMS: usize = 1 << 25;
 pub const MAX_MATS: usize = 4096;
 /// Cap on layer-spec count in an assignment.
 pub const MAX_LAYERS: usize = 4096;
+/// Cap on the data-shard index count of an assignment or reassignment.
+pub const MAX_SHARDS: usize = 4096;
 /// Cap on any string field.
 pub const MAX_STR: usize = 1 << 20;
 
@@ -114,10 +120,19 @@ impl TaskDesc {
 /// session. Sent by the coordinator right after `Hello`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ShardAssignment {
-    /// This worker's id (also its data-parallel shard index).
+    /// This worker's id. Ids `0..n_workers` are the session's founding
+    /// workers; elastic joiners may carry higher ids.
     pub worker_id: u32,
-    /// Total worker count N.
+    /// Founding worker count N — also the *permanent* data-shard count of
+    /// the run: shard indices are always `0..n_workers` regardless of how
+    /// membership changes later, which is what keeps failover bitwise
+    /// identical to the failure-free run.
     pub n_workers: u32,
+    /// The data shards this worker initially owns (computes gradients
+    /// for each round). A founding worker owns `[worker_id]`; an elastic
+    /// joiner receives whatever the rebalance dealt it. Updated at runtime
+    /// by [`Msg::Reassign`].
+    pub shards: Vec<u64>,
     /// Steps to run this session.
     pub steps: u64,
     /// Master seed (init + gradient noise streams derive from it).
@@ -170,15 +185,24 @@ pub enum Msg {
     },
     /// Coordinator → worker: full model weights every worker starts from.
     SyncWeights {
-        /// First step of this session.
+        /// First step this worker runs (for an elastic joiner this is the
+        /// join boundary, not the session start).
         start_step: u64,
+        /// The session's global start step — the base both sides derive
+        /// the checkpoint cadence from, so a joiner's barriers land on the
+        /// same steps as everyone else's.
+        ckpt_base: u64,
         /// Full weights, in layer order.
         mats: Vec<Mat>,
     },
-    /// Worker → coordinator: this shard's gradients for `step`.
+    /// Worker → coordinator: one data shard's gradients for `step`.
     Grads {
         /// The step these gradients belong to.
         step: u64,
+        /// The data shard index these gradients were computed for (the
+        /// coordinator dedups speculative/duplicate results by
+        /// `(step, shard)`).
+        shard: u64,
         /// This shard's loss at `step`.
         loss: f64,
         /// Per-layer gradients, in layer order.
@@ -215,6 +239,34 @@ pub enum Msg {
     },
     /// Control client → coordinator: abort the run, shut every worker down.
     KillAll,
+    /// Coordinator → worker: your owned-shard set (and possibly your layer
+    /// group) changed. Sent at takeover, rebalance, and straggler
+    /// speculation. The worker computes any shard in the new set it has not
+    /// already sent for the step named by `start_step`.
+    Reassign {
+        /// The step the new assignment takes effect at (the coordinator's
+        /// current round).
+        start_step: u64,
+        /// `true`: this is the worker's owned set from now on (takeover /
+        /// rebalance). `false`: a one-round speculative dispatch — compute
+        /// these shards for `start_step` only, then revert to the owned set.
+        permanent: bool,
+        /// The shard indices to compute.
+        shards: Vec<u64>,
+        /// New checkpoint layer-group start (inclusive); only meaningful
+        /// when `permanent`.
+        group_start: u32,
+        /// New checkpoint layer-group end (exclusive); only meaningful when
+        /// `permanent`.
+        group_end: u32,
+    },
+    /// Worker → coordinator: clean departure at a round boundary. The
+    /// coordinator redistributes the worker's shards and replies with
+    /// [`Msg::Shutdown`].
+    Leave {
+        /// The departing worker's id.
+        worker_id: u32,
+    },
     /// Coordinator → worker: session over (cleanly or not); exit.
     Shutdown {
         /// Human-readable cause (`"done"`, `"killed"`, …).
@@ -244,6 +296,8 @@ impl Msg {
             Msg::KillAll => 11,
             Msg::Shutdown { .. } => 12,
             Msg::Error { .. } => 13,
+            Msg::Reassign { .. } => 14,
+            Msg::Leave { .. } => 15,
         }
     }
 
@@ -264,6 +318,8 @@ impl Msg {
             Msg::KillAll => "KillAll",
             Msg::Shutdown { .. } => "Shutdown",
             Msg::Error { .. } => "Error",
+            Msg::Reassign { .. } => "Reassign",
+            Msg::Leave { .. } => "Leave",
         }
     }
 }
@@ -278,6 +334,23 @@ fn take_bool(r: &mut ByteReader, what: &str) -> crate::Result<bool> {
         1 => Ok(true),
         x => anyhow::bail!("{what}: invalid bool byte {x}"),
     }
+}
+
+fn put_shards(w: &mut ByteWriter, shards: &[u64]) {
+    w.put_u32(shards.len() as u32);
+    for s in shards {
+        w.put_u64(*s);
+    }
+}
+
+fn take_shards(r: &mut ByteReader, what: &str) -> crate::Result<Vec<u64>> {
+    let n = r.take_u32(what)? as usize;
+    require_le(n as u64, MAX_SHARDS as u64, format_args!("{what}: shard count"))?;
+    let mut shards = Vec::with_capacity(n);
+    for _ in 0..n {
+        shards.push(r.take_u64(what)?);
+    }
+    Ok(shards)
 }
 
 fn put_mats(w: &mut ByteWriter, mats: &[Mat]) {
@@ -333,6 +406,7 @@ fn put_assignment(w: &mut ByteWriter, a: &ShardAssignment) {
     w.put_str(&a.tag);
     w.put_u32(a.group_start);
     w.put_u32(a.group_end);
+    put_shards(w, &a.shards);
     w.put_u32(a.layers.len() as u32);
     for l in &a.layers {
         w.put_str(&l.name);
@@ -357,6 +431,7 @@ fn take_assignment(r: &mut ByteReader) -> crate::Result<ShardAssignment> {
     let tag = r.take_str(MAX_STR, what)?;
     let group_start = r.take_u32(what)?;
     let group_end = r.take_u32(what)?;
+    let shards = take_shards(r, what)?;
     let n_layers = r.take_u32(what)? as usize;
     require_le(n_layers as u64, MAX_LAYERS as u64, format_args!("{what}: layer count"))?;
     let mut layers = Vec::with_capacity(n_layers);
@@ -371,6 +446,7 @@ fn take_assignment(r: &mut ByteReader) -> crate::Result<ShardAssignment> {
     Ok(ShardAssignment {
         worker_id,
         n_workers,
+        shards,
         steps,
         seed,
         task,
@@ -398,11 +474,18 @@ fn encode_payload(msg: &Msg) -> Vec<u8> {
             w.put_u64(*step);
             put_mats(&mut w, mats);
         }
-        Msg::SyncWeights { start_step, mats } => {
+        Msg::SyncWeights { start_step, ckpt_base, mats } => {
             w.put_u64(*start_step);
+            w.put_u64(*ckpt_base);
             put_mats(&mut w, mats);
         }
-        Msg::Grads { step, loss, mats } | Msg::ReducedGrads { step, loss, mats } => {
+        Msg::Grads { step, shard, loss, mats } => {
+            w.put_u64(*step);
+            w.put_u64(*shard);
+            w.put_u64(loss.to_bits());
+            put_mats(&mut w, mats);
+        }
+        Msg::ReducedGrads { step, loss, mats } => {
             w.put_u64(*step);
             w.put_u64(loss.to_bits());
             put_mats(&mut w, mats);
@@ -412,6 +495,14 @@ fn encode_payload(msg: &Msg) -> Vec<u8> {
         Msg::KillAll => {}
         Msg::Shutdown { reason } => w.put_str(reason),
         Msg::Error { detail } => w.put_str(detail),
+        Msg::Reassign { start_step, permanent, shards, group_start, group_end } => {
+            w.put_u64(*start_step);
+            put_bool(&mut w, *permanent);
+            put_shards(&mut w, shards);
+            w.put_u32(*group_start);
+            w.put_u32(*group_end);
+        }
+        Msg::Leave { worker_id } => w.put_u32(*worker_id),
     }
     w.into_bytes()
 }
@@ -430,10 +521,12 @@ fn decode_payload(tag: u8, payload: &[u8]) -> crate::Result<Msg> {
         },
         4 => Msg::SyncWeights {
             start_step: r.take_u64("SyncWeights")?,
+            ckpt_base: r.take_u64("SyncWeights")?,
             mats: take_mats(&mut r, "SyncWeights")?,
         },
         5 => Msg::Grads {
             step: r.take_u64("Grads")?,
+            shard: r.take_u64("Grads")?,
             loss: f64::from_bits(r.take_u64("Grads")?),
             mats: take_mats(&mut r, "Grads")?,
         },
@@ -460,6 +553,16 @@ fn decode_payload(tag: u8, payload: &[u8]) -> crate::Result<Msg> {
         },
         13 => Msg::Error {
             detail: r.take_str(MAX_STR, "Error")?,
+        },
+        14 => Msg::Reassign {
+            start_step: r.take_u64("Reassign")?,
+            permanent: take_bool(&mut r, "Reassign")?,
+            shards: take_shards(&mut r, "Reassign")?,
+            group_start: r.take_u32("Reassign")?,
+            group_end: r.take_u32("Reassign")?,
+        },
+        15 => Msg::Leave {
+            worker_id: r.take_u32("Leave")?,
         },
         t => anyhow::bail!("unknown frame tag {t}"),
     };
@@ -570,6 +673,7 @@ mod tests {
         ShardAssignment {
             worker_id: 1,
             n_workers: 2,
+            shards: vec![1],
             steps: 20,
             seed: 42,
             task: TaskDesc::Synthetic { sigma: 0.01 },
@@ -601,8 +705,8 @@ mod tests {
             Msg::AssignShards(Box::new(sample_assignment())),
             Msg::AssignShards(Box::new(lm_assign)),
             Msg::GroupState { step: 7, mats: mats.clone() },
-            Msg::SyncWeights { start_step: 0, mats: mats.clone() },
-            Msg::Grads { step: 9, loss: 1.25, mats: mats.clone() },
+            Msg::SyncWeights { start_step: 0, ckpt_base: 0, mats: mats.clone() },
+            Msg::Grads { step: 9, shard: 1, loss: 1.25, mats: mats.clone() },
             Msg::ReducedGrads { step: 9, loss: f64::NAN, mats },
             Msg::Checkpoint { step: 10 },
             Msg::Ack { step: 10 },
@@ -611,6 +715,21 @@ mod tests {
             Msg::KillAll,
             Msg::Shutdown { reason: "done".into() },
             Msg::Error { detail: "boom".into() },
+            Msg::Reassign {
+                start_step: 11,
+                permanent: true,
+                shards: vec![0, 2],
+                group_start: 0,
+                group_end: 3,
+            },
+            Msg::Reassign {
+                start_step: 12,
+                permanent: false,
+                shards: vec![3],
+                group_start: 0,
+                group_end: 0,
+            },
+            Msg::Leave { worker_id: 2 },
         ]
     }
 
@@ -694,6 +813,26 @@ mod tests {
         frame.extend_from_slice(&payload);
         let err = decode(&frame).unwrap_err().to_string();
         assert!(err.contains("exceeds cap"), "{err}");
+    }
+
+    #[test]
+    fn rejects_hostile_shard_count_inside_valid_frame() {
+        // A Reassign payload claiming far more shard indices than the cap
+        // (and than the payload could hold): caught by MAX_SHARDS before
+        // any allocation sized by the claimed count.
+        let mut w = ByteWriter::new();
+        w.put_u64(0); // start_step
+        w.put_u8(1); // permanent
+        w.put_u32(u32::MAX); // hostile shard count
+        let payload = w.into_bytes();
+        let mut frame = Vec::new();
+        frame.extend_from_slice(WIRE_MAGIC);
+        frame.push(WIRE_VERSION);
+        frame.push(14); // Reassign
+        frame.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        let err = decode(&frame).unwrap_err().to_string();
+        assert!(err.contains("shard count"), "{err}");
     }
 
     #[test]

@@ -45,7 +45,23 @@
 //! out with the cluster and a restarted worker resumes from its own
 //! file. The coordinator reconciles offered steps at join time and
 //! rejects inconsistent shard sets instead of silently mixing steps.
+//!
+//! # Failure model
+//!
+//! The round engine is fault-tolerant, not abort-on-failure. Because
+//! [`task::TrainTask::shard_grads`] is a pure function of
+//! `(weights, step, shard)`, any process can recompute any shard's
+//! gradients bitwise-exactly; the coordinator exploits this to survive
+//! worker death (`Msg::Reassign` moves the lost shards to survivors),
+//! stragglers (speculative re-dispatch of laggard shards, duplicates
+//! deduped by `(step, shard)`), and elastic membership (`Hello` after
+//! start joins at a round boundary, `Msg::Leave` departs cleanly) — all
+//! while the final weights stay bitwise identical to the failure-free
+//! single-process reference. The [`chaos`] module injects scripted,
+//! seed-deterministic faults to drive every one of those paths in CI.
+//! See `docs/ARCHITECTURE.md` § "Failure model".
 
+pub mod chaos;
 pub mod coordinator;
 pub mod local;
 pub mod messages;
@@ -75,6 +91,11 @@ pub struct RunOutcome {
     pub layer_names: Vec<String>,
     /// True when the run was stopped by `kill-all` before completing.
     pub killed: bool,
+    /// Shard gradient results obtained through fault recovery — takeover
+    /// reassignment or straggler speculation. 0 in failure-free runs and
+    /// in the single-process reference, whose weights stay bitwise equal
+    /// regardless.
+    pub recovered: u64,
 }
 
 impl RunOutcome {

@@ -1,8 +1,15 @@
-//! TCP plumbing shared by coordinator and worker: socket configuration and
-//! bounded connect-retry with backoff.
+//! TCP plumbing shared by coordinator and worker: socket configuration,
+//! bounded connect-retry with jittered backoff, and a buffered partial-frame
+//! reader ([`FrameBuf`]) that lets the coordinator poll many peers without
+//! blocking on any one of them.
 
+use std::io::Read;
 use std::net::TcpStream;
 use std::time::Duration;
+
+use crate::cluster::messages::{
+    decode, HEADER_BYTES, MAX_FRAME_BYTES, Msg, WIRE_MAGIC, WIRE_VERSION,
+};
 
 /// Apply the cluster socket discipline: `TCP_NODELAY` (frames are small
 /// and latency-bound) and symmetric read/write timeouts so a dead peer
@@ -20,20 +27,49 @@ pub(crate) fn configure(stream: &TcpStream, io_timeout_ms: u64) -> crate::Result
     Ok(())
 }
 
-/// Connect to `addr` with bounded retry + exponential backoff (doubling
-/// from `backoff_ms`, capped at `backoff_cap_ms`). Workers typically start
-/// before the coordinator's listener is up; a handful of retries absorbs
-/// that race without masking a genuinely absent coordinator.
+/// The deterministic per-attempt retry delay: exponential doubling from
+/// `backoff_ms`, capped at `backoff_cap_ms`, plus a jitter slice derived
+/// from `jitter_seed` (the worker id) so N workers restarting after a
+/// coordinator blip spread their reconnects instead of hammering the listen
+/// socket in lockstep. Pure function of its arguments — unit-testable
+/// without sockets or clocks.
+pub(crate) fn backoff_delay_ms(
+    attempt: u32,
+    backoff_ms: u64,
+    backoff_cap_ms: u64,
+    jitter_seed: u64,
+) -> u64 {
+    let cap = backoff_cap_ms.max(1);
+    let base = backoff_ms.max(1).min(cap);
+    // Saturating doubling: attempt 0 → base, 1 → 2·base, … capped.
+    let exp = base.saturating_mul(1u64.checked_shl(attempt.min(63)).unwrap_or(u64::MAX)).min(cap);
+    // splitmix64 over (seed, attempt): a different, deterministic slice of
+    // [0, base) per worker per attempt.
+    let mut z = jitter_seed
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(attempt as u64)
+        .wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    let jitter = z % base;
+    exp.saturating_add(jitter).min(cap)
+}
+
+/// Connect to `addr` with bounded retry and jittered exponential backoff
+/// (see [`backoff_delay_ms`]; `jitter_seed` is typically the worker id).
+/// Workers typically start before the coordinator's listener is up; a
+/// handful of retries absorbs that race without masking a genuinely absent
+/// coordinator.
 pub(crate) fn connect_retry(
     addr: &str,
     attempts: u32,
     backoff_ms: u64,
     backoff_cap_ms: u64,
     io_timeout_ms: u64,
+    jitter_seed: u64,
 ) -> crate::Result<TcpStream> {
     let attempts = attempts.max(1);
-    let cap = Duration::from_millis(backoff_cap_ms.max(1));
-    let mut delay = Duration::from_millis(backoff_ms.max(1)).min(cap);
     let mut last_err = String::new();
     for attempt in 0..attempts {
         match TcpStream::connect(addr) {
@@ -44,8 +80,8 @@ pub(crate) fn connect_retry(
             Err(e) => {
                 last_err = e.to_string();
                 if attempt + 1 < attempts {
-                    std::thread::sleep(delay);
-                    delay = (delay * 2).min(cap);
+                    let ms = backoff_delay_ms(attempt, backoff_ms, backoff_cap_ms, jitter_seed);
+                    std::thread::sleep(Duration::from_millis(ms));
                 }
             }
         }
@@ -53,15 +89,122 @@ pub(crate) fn connect_retry(
     anyhow::bail!("cannot connect to coordinator at {addr} after {attempts} attempts: {last_err}")
 }
 
+/// Read scratch size for one [`FrameBuf::fill`] call. Big enough that bulk
+/// gradient frames drain in few syscalls, small enough to live on the stack.
+const FILL_CHUNK: usize = 65536;
+
+/// Incremental frame reassembly for a non-blocking (short-timeout) socket.
+///
+/// The coordinator's event loop polls many peers per tick; a blocking
+/// `read_msg` on one peer would stall detection on every other. `FrameBuf`
+/// instead accumulates whatever bytes are available, validates the header
+/// (magic / version / length cap) **as soon as 14 bytes are buffered** —
+/// hostile headers die before their payload is ever buffered — and yields a
+/// decoded [`Msg`] once the complete frame is present. The buffer only ever
+/// grows by bytes actually received, so a peer claiming a huge payload
+/// cannot make us allocate it.
+#[derive(Default)]
+pub(crate) struct FrameBuf {
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl FrameBuf {
+    /// New empty buffer.
+    pub(crate) fn new() -> Self {
+        Self::default()
+    }
+
+    /// Validate the header at the front of the buffer (called only when at
+    /// least [`HEADER_BYTES`] are buffered) and return the total frame size.
+    fn frame_len(&self) -> crate::Result<usize> {
+        let h = &self.buf[self.pos..self.pos + HEADER_BYTES];
+        anyhow::ensure!(&h[0..4] == WIRE_MAGIC, "bad frame magic");
+        let version = h[4];
+        anyhow::ensure!(
+            version == WIRE_VERSION,
+            "unsupported protocol version {version} (this build speaks {WIRE_VERSION})"
+        );
+        let len = u64::from_le_bytes(h[6..14].try_into().unwrap());
+        crate::util::codec::check_cap(len, MAX_FRAME_BYTES, "frame payload length")?;
+        Ok(HEADER_BYTES + len as usize)
+    }
+
+    /// Decode the frame at the front of the buffer if it is complete.
+    /// `Ok(None)` means "need more bytes"; errors are fatal for the peer
+    /// (hostile header or undecodable payload).
+    pub(crate) fn take_frame(&mut self) -> crate::Result<Option<Msg>> {
+        if self.buf.len() - self.pos < HEADER_BYTES {
+            return Ok(None);
+        }
+        let total = self.frame_len()?;
+        if self.buf.len() - self.pos < total {
+            return Ok(None);
+        }
+        let msg = decode(&self.buf[self.pos..self.pos + total])?;
+        self.pos += total;
+        // Reclaim consumed space once the buffer is drained (the common
+        // case: one frame per poll) or the dead prefix dominates.
+        if self.pos == self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+        } else if self.pos > (1 << 20) {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        Ok(Some(msg))
+    }
+
+    /// Pull whatever bytes the socket has ready into the buffer. Returns
+    /// `Ok(true)` if any bytes arrived, `Ok(false)` on a clean timeout
+    /// (nothing ready), and `Err` on EOF or a genuine I/O error.
+    pub(crate) fn fill(&mut self, stream: &mut TcpStream) -> crate::Result<bool> {
+        let mut scratch = [0u8; FILL_CHUNK];
+        match stream.read(&mut scratch) {
+            Ok(0) => anyhow::bail!("peer disconnected"),
+            Ok(n) => {
+                self.buf.extend_from_slice(&scratch[..n]);
+                Ok(true)
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                Ok(false)
+            }
+            Err(e) => anyhow::bail!("io error reading frame bytes: {e}"),
+        }
+    }
+
+    /// One poll step: fill from the socket, then try to complete a frame.
+    /// `Ok(None)` covers both "timed out, nothing ready" and "partial frame
+    /// still accumulating".
+    pub(crate) fn poll(&mut self, stream: &mut TcpStream) -> crate::Result<Option<Msg>> {
+        // A complete frame may already be buffered from an earlier fill.
+        if let Some(msg) = self.take_frame()? {
+            return Ok(Some(msg));
+        }
+        self.fill(stream)?;
+        self.take_frame()
+    }
+
+    /// Bytes currently buffered but not yet consumed (test introspection).
+    #[cfg(test)]
+    pub(crate) fn pending(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::messages::encode;
 
     #[test]
     fn connect_retry_reports_attempts_on_dead_address() {
         // Port 1 on localhost is essentially never listening; bounded retry
         // must return an error naming the address, not hang.
-        let err = connect_retry("127.0.0.1:1", 2, 1, 8, 100).unwrap_err().to_string();
+        let err = connect_retry("127.0.0.1:1", 2, 1, 8, 100, 0).unwrap_err().to_string();
         assert!(err.contains("127.0.0.1:1") && err.contains("2 attempts"), "{err}");
     }
 
@@ -69,8 +212,81 @@ mod tests {
     fn connect_retry_succeeds_against_listener() {
         let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
-        let stream = connect_retry(&addr, 3, 1, 8, 250).unwrap();
+        let stream = connect_retry(&addr, 3, 1, 8, 250, 7).unwrap();
         assert!(stream.read_timeout().unwrap().is_some());
         assert!(stream.nodelay().unwrap());
+    }
+
+    #[test]
+    fn backoff_is_deterministic_capped_and_jittered() {
+        // Deterministic: same inputs, same delay.
+        assert_eq!(backoff_delay_ms(2, 50, 1000, 3), backoff_delay_ms(2, 50, 1000, 3));
+        // Capped: delay never exceeds the cap even at absurd attempt counts.
+        for attempt in 0..80 {
+            for seed in 0..8 {
+                assert!(backoff_delay_ms(attempt, 50, 400, seed) <= 400);
+            }
+        }
+        // Jittered: different workers must not all share one schedule.
+        let schedules: Vec<Vec<u64>> = (0..4)
+            .map(|seed| (0..4).map(|a| backoff_delay_ms(a, 50, 100_000, seed)).collect())
+            .collect();
+        assert!(
+            schedules.iter().any(|s| s != &schedules[0]),
+            "all workers produced identical backoff schedules: {schedules:?}"
+        );
+        // Still exponential-ish: attempt 3 base component dominates attempt 0.
+        assert!(backoff_delay_ms(3, 50, 100_000, 1) > backoff_delay_ms(0, 50, 100_000, 1));
+    }
+
+    #[test]
+    fn framebuf_reassembles_split_frames() {
+        let msgs =
+            vec![Msg::Heartbeat { nonce: 1 }, Msg::Ack { step: 9 }, Msg::KillAll];
+        let mut bytes = Vec::new();
+        for m in &msgs {
+            bytes.extend_from_slice(&encode(m));
+        }
+        // Feed the byte stream 3 bytes at a time; every message must come
+        // out whole and in order.
+        let mut fb = FrameBuf::new();
+        let mut got = Vec::new();
+        for chunk in bytes.chunks(3) {
+            fb.buf.extend_from_slice(chunk);
+            while let Some(m) = fb.take_frame().unwrap() {
+                got.push(m);
+            }
+        }
+        assert_eq!(got.len(), msgs.len());
+        for (g, m) in got.iter().zip(&msgs) {
+            assert_eq!(encode(g), encode(m));
+        }
+        assert_eq!(fb.pending(), 0);
+    }
+
+    #[test]
+    fn framebuf_rejects_hostile_header_before_payload() {
+        let mut fb = FrameBuf::new();
+        // Valid magic/version, but a payload length over the frame cap: the
+        // error must fire with only the header buffered.
+        fb.buf.extend_from_slice(WIRE_MAGIC);
+        fb.buf.push(WIRE_VERSION);
+        fb.buf.push(1);
+        fb.buf.extend_from_slice(&u64::MAX.to_le_bytes());
+        let err = fb.take_frame().unwrap_err().to_string();
+        assert!(err.contains("exceeds cap"), "{err}");
+
+        let mut fb = FrameBuf::new();
+        fb.buf.extend_from_slice(b"XXXX");
+        fb.buf.extend_from_slice(&[WIRE_VERSION, 1]);
+        fb.buf.extend_from_slice(&0u64.to_le_bytes());
+        assert!(fb.take_frame().unwrap_err().to_string().contains("magic"));
+    }
+
+    #[test]
+    fn framebuf_waits_for_partial_header() {
+        let mut fb = FrameBuf::new();
+        fb.buf.extend_from_slice(&encode(&Msg::KillAll)[..5]);
+        assert!(fb.take_frame().unwrap().is_none());
     }
 }

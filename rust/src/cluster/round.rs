@@ -105,12 +105,18 @@ impl RoundIo for LocalShards {
 
 /// Step/checkpoint bookkeeping for one session of rounds.
 pub struct RoundCfg {
-    /// First step of this session (resume offset).
+    /// First step of this session (resume offset, or an elastic joiner's
+    /// join boundary).
     pub start_step: u64,
     /// Steps to run this session.
     pub steps: u64,
     /// Mid-run checkpoint cadence (0 ⇒ only the final barrier).
     pub ckpt_every: u64,
+    /// The step the cadence counts from. Equal to `start_step` for founding
+    /// participants; for an elastic joiner it is the *session's* start step,
+    /// so the joiner's barriers land on the same global steps as everyone
+    /// else's.
+    pub ckpt_base: u64,
 }
 
 /// How a session of rounds ended.
@@ -134,7 +140,7 @@ pub struct RoundOutcome {
 ///
 /// Checkpoint cadence matches the coordinator's: a mid-run barrier fires
 /// when `ckpt_every > 0` and `step+1` is a multiple of the cadence past
-/// `start_step`, except at the final step, which always gets the closing
+/// `ckpt_base`, except at the final step, which always gets the closing
 /// barrier regardless of cadence.
 // lint: hot-path
 pub fn run_rounds(
@@ -167,7 +173,7 @@ pub fn run_rounds(
         last_loss = loss;
         observe(t, loss, lr_mult);
 
-        let due = cfg.ckpt_every > 0 && (t + 1 - cfg.start_step) % cfg.ckpt_every == 0;
+        let due = cfg.ckpt_every > 0 && (t + 1 - cfg.ckpt_base) % cfg.ckpt_every == 0;
         if due && t + 1 != final_step {
             if let Some(reason) = io.checkpoint(weights, t + 1)? {
                 return Ok(RoundOutcome {
@@ -214,7 +220,7 @@ mod tests {
     fn local_rounds_are_deterministic() {
         let ls = layers();
         let task = SyntheticTask::new(11, 0.02, &ls);
-        let cfg = RoundCfg { start_step: 0, steps: 8, ckpt_every: 0 };
+        let cfg = RoundCfg { start_step: 0, steps: 8, ckpt_every: 0, ckpt_base: 0 };
         let run = || {
             let mut w = init_weights(11, &ls);
             let mut opt = build_opt(&ls, 11);
@@ -277,7 +283,7 @@ mod tests {
             stop_reduce_at: None,
             stop_ckpt_at: None,
         };
-        let cfg = RoundCfg { start_step: 4, steps: 6, ckpt_every: 2 };
+        let cfg = RoundCfg { start_step: 4, steps: 6, ckpt_every: 2, ckpt_base: 4 };
         let out = run_rounds(
             &task,
             opt.as_mut(),
@@ -297,6 +303,37 @@ mod tests {
     }
 
     #[test]
+    fn joiner_cadence_counts_from_ckpt_base() {
+        // An elastic joiner starting at step 5 of a session that began at 0
+        // with cadence 4 must barrier at the *global* multiples of 4 (step
+        // 8), not at its private offsets (step 9) — otherwise its shard
+        // checkpoints would land on different steps than everyone else's.
+        let ls = layers();
+        let task = SyntheticTask::new(3, 0.0, &ls);
+        let mut w = init_weights(3, &ls);
+        let mut opt = build_opt(&ls, 3);
+        let mut io = Scripted {
+            inner: LocalShards { shards: 2 },
+            barriers: vec![],
+            stop_reduce_at: None,
+            stop_ckpt_at: None,
+        };
+        let cfg = RoundCfg { start_step: 5, steps: 6, ckpt_every: 4, ckpt_base: 0 };
+        let out = run_rounds(
+            &task,
+            opt.as_mut(),
+            threadpool::global(),
+            &mut w,
+            &mut io,
+            &cfg,
+            &mut |_, _, _| {},
+        )
+        .unwrap();
+        assert_eq!(io.barriers, vec![8, 11]);
+        assert_eq!(out.final_step, 11);
+    }
+
+    #[test]
     fn stop_during_reduce_and_during_checkpoint() {
         let ls = layers();
         let task = SyntheticTask::new(3, 0.0, &ls);
@@ -310,7 +347,7 @@ mod tests {
             stop_reduce_at: Some(3),
             stop_ckpt_at: None,
         };
-        let cfg = RoundCfg { start_step: 0, steps: 10, ckpt_every: 0 };
+        let cfg = RoundCfg { start_step: 0, steps: 10, ckpt_every: 0, ckpt_base: 0 };
         let out = run_rounds(&task, opt.as_mut(), pool, &mut w, &mut io, &cfg, &mut |_, _, _| {}).unwrap();
         assert_eq!(out.final_step, 3);
         assert_eq!(out.steps_run, 3);
@@ -324,7 +361,7 @@ mod tests {
             stop_reduce_at: None,
             stop_ckpt_at: Some(4),
         };
-        let cfg = RoundCfg { start_step: 0, steps: 10, ckpt_every: 4 };
+        let cfg = RoundCfg { start_step: 0, steps: 10, ckpt_every: 4, ckpt_base: 0 };
         let out = run_rounds(&task, opt.as_mut(), pool, &mut w, &mut io, &cfg, &mut |_, _, _| {}).unwrap();
         assert_eq!(out.final_step, 4);
         assert_eq!(out.steps_run, 4);

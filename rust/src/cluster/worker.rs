@@ -2,14 +2,26 @@
 //!
 //! A worker connects to the coordinator, announces itself (`Hello`),
 //! receives its [`ShardAssignment`], and then runs the lockstep round
-//! protocol: compute this shard's gradients → `Grads` → wait for
-//! `ReducedGrads` → apply the (replicated) optimizer step. Every worker
-//! holds the full model and full optimizer state; because the reduced
-//! gradient, the optimizer arithmetic, and the RNG streams are all
-//! deterministic, the weights stay bitwise identical across workers —
-//! what is *sharded* is the data-parallel gradient work and the
-//! checkpoint: each worker persists only its own layer group to its own
-//! shard file and resumes from it.
+//! protocol: compute its owned data shards' gradients → `Grads` (one frame
+//! per shard) → wait for `ReducedGrads` → apply the (replicated) optimizer
+//! step. Every worker holds the full model and full optimizer state;
+//! because the reduced gradient, the optimizer arithmetic, and the RNG
+//! streams are all deterministic, the weights stay bitwise identical
+//! across workers — what is *sharded* is the data-parallel gradient work
+//! and the checkpoint: each worker persists only its own layer group to
+//! its own shard file and resumes from it.
+//!
+//! # Fault tolerance
+//!
+//! The owned-shard set is dynamic: a [`Msg::Reassign`] from the
+//! coordinator moves dead workers' shards onto survivors (permanent) or
+//! requests one-round speculative recomputation of a straggler's shards
+//! (ephemeral). Because `TrainTask::shard_grads` is pure in
+//! `(weights, step, shard)`, recomputed gradients are bitwise identical to
+//! what the lost worker would have sent. A worker may also depart cleanly
+//! by sending [`Msg::Leave`] (scripted via `--chaos`), and the scripted
+//! fault harness ([`super::chaos`]) can kill, stall, or corrupt this
+//! worker at exact steps/frames to drive the recovery paths in tests.
 
 use std::net::TcpStream;
 
@@ -20,8 +32,9 @@ use crate::optim;
 use crate::util::json::Json;
 use crate::util::threadpool;
 
-use super::messages::{read_msg, write_msg, Msg, ShardAssignment, TASK_SUPPORT_ALL};
-use super::round::{run_rounds, Round, RoundCfg, RoundIo};
+use super::chaos::{ChaosSpec, ChaosState, SendFault, StepFault};
+use super::messages::{encode, read_msg, write_msg, Msg, ShardAssignment, TASK_SUPPORT_ALL};
+use super::round::{run_rounds, LocalShards, Round, RoundCfg, RoundIo};
 use super::task::TrainTask;
 use super::{net, shard, task, weights_fingerprint};
 
@@ -29,7 +42,8 @@ use super::{net, shard, task, weights_fingerprint};
 /// assignment).
 #[derive(Clone, Debug)]
 pub struct WorkerCfg {
-    /// This worker's id (must match one of the coordinator's N slots).
+    /// This worker's id (founding ids are `0..N`; an elastic joiner uses a
+    /// fresh id ≥ N).
     pub id: u32,
     /// Coordinator address to connect to.
     pub connect: String,
@@ -43,10 +57,13 @@ pub struct WorkerCfg {
     /// Connection attempts before giving up (workers usually start before
     /// the coordinator's listener is ready).
     pub connect_attempts: u32,
-    /// Initial connect retry backoff (ms), doubling per attempt.
+    /// Initial connect retry backoff (ms), doubling per attempt with a
+    /// worker-id-seeded jitter slice (see `net::backoff_delay_ms`).
     pub backoff_ms: u64,
-    /// Upper bound on the doubled connect backoff (ms).
+    /// Upper bound on the jittered connect backoff (ms).
     pub backoff_cap_ms: u64,
+    /// Scripted fault-injection spec (`--chaos`); empty injects nothing.
+    pub chaos: ChaosSpec,
 }
 
 impl WorkerCfg {
@@ -63,6 +80,7 @@ impl WorkerCfg {
             connect_attempts: d.connect_attempts,
             backoff_ms: d.connect_backoff_ms,
             backoff_cap_ms: d.connect_backoff_cap_ms,
+            chaos: ChaosSpec::default(),
         }
     }
 
@@ -77,6 +95,7 @@ impl WorkerCfg {
             connect_attempts: cfg.connect_attempts,
             backoff_ms: cfg.connect_backoff_ms,
             backoff_cap_ms: cfg.connect_backoff_cap_ms,
+            chaos: ChaosSpec::default(),
         }
     }
 }
@@ -107,6 +126,7 @@ pub fn run(cfg: &WorkerCfg) -> crate::Result<WorkerReport> {
         cfg.backoff_ms,
         cfg.backoff_cap_ms,
         cfg.io_timeout_ms,
+        cfg.id as u64,
     )?;
     write_msg(
         &mut stream,
@@ -142,6 +162,11 @@ fn run_assignment(
         a.group_start,
         a.group_end,
         a.layers.len()
+    );
+    anyhow::ensure!(
+        a.shards.iter().all(|&s| s < a.n_workers as u64),
+        "assignment names a shard outside 0..{}",
+        a.n_workers
     );
     let ocfg_json = Json::parse(&a.optim_json)
         .map_err(|e| anyhow::anyhow!("bad optimizer JSON in assignment: {e}"))?;
@@ -181,11 +206,12 @@ fn run_assignment(
     )?;
 
     // The coordinator reconciles every worker's offer and replies with the
-    // authoritative full weights + start step.
-    let start_step = loop {
+    // authoritative full weights + start step (+ the session's cadence
+    // base, which differs from start_step for an elastic joiner).
+    let (start_step, ckpt_base) = loop {
         match read_msg(&mut stream)? {
             Msg::Heartbeat { nonce } => write_msg(&mut stream, &Msg::HeartbeatAck { nonce })?,
-            Msg::SyncWeights { start_step, mats } => {
+            Msg::SyncWeights { start_step, ckpt_base, mats } => {
                 anyhow::ensure!(
                     mats.len() == a.layers.len(),
                     "SyncWeights carries {} tensors for {} layers",
@@ -200,7 +226,7 @@ fn run_assignment(
                     );
                 }
                 weights = mats;
-                break start_step;
+                break (start_step, ckpt_base);
             }
             Msg::Shutdown { reason } => {
                 return Ok(WorkerReport {
@@ -222,17 +248,54 @@ fn run_assignment(
     let task = task::build_task(&a.task, a.seed, &a.layers)?;
     let final_step = start_step + a.steps;
 
-    let save_shard = |weights: &[Mat], step: u64| -> crate::Result<()> {
+    // Elastic joiner: the SyncWeights we adopted are the SESSION-START
+    // weights (optimizer state cannot travel over the wire bitwise — it is
+    // recomputed, not transferred). Replay the session prefix locally
+    // through the exact same round engine over all n_workers shards; the
+    // local reduction is bitwise identical to the cluster's (`cluster
+    // local` proves this in CI), so after the replay this worker's weights
+    // AND optimizer state match every incumbent's at `start_step` exactly.
+    if start_step > ckpt_base {
+        let mut replay = LocalShards { shards: a.n_workers as u64 };
+        let rcfg = RoundCfg {
+            start_step: ckpt_base,
+            steps: start_step - ckpt_base,
+            ckpt_every: 0,
+            ckpt_base,
+        };
+        run_rounds(
+            task.as_ref(),
+            opt.as_mut(),
+            threadpool::global(),
+            &mut weights,
+            &mut replay,
+            &rcfg,
+            &mut |_, _, _| {},
+        )?;
+        log_info!(
+            "worker {} replayed steps {ckpt_base}..{start_step} to join the session",
+            cfg.id
+        );
+    }
+
+    // Persist a layer group at a step. The group is a parameter (not the
+    // assignment's) because takeover/rebalance can move it mid-session; an
+    // empty group writes nothing.
+    let save_shard = |weights: &[Mat], step: u64, g: (u32, u32)| -> crate::Result<()> {
+        if g.0 >= g.1 {
+            return Ok(());
+        }
+        let range = g.0 as usize..g.1 as usize;
         let meta = shard::ShardMeta {
             tag: a.tag.clone(),
             worker_id: a.worker_id,
             n_workers: a.n_workers,
             step,
-            group_start: a.group_start,
-            group_end: a.group_end,
-            layers: a.layers[group.clone()].to_vec(),
+            group_start: g.0,
+            group_end: g.1,
+            layers: a.layers[range.clone()].to_vec(),
         };
-        shard::save(&meta, &weights[group.clone()], &path)
+        shard::save(&meta, &weights[range], &path)
     };
 
     // The round loop itself — shard grads → reduced update → checkpoint
@@ -240,27 +303,34 @@ fn run_assignment(
     // transport (`WireRounds`). Both sides derive the cadence from the
     // assignment, so the worker knows exactly when a Checkpoint frame is
     // next on the stream — no speculative reads, no buffering.
-    let out = {
-        let mut io = WireRounds {
-            stream: &mut stream,
-            shard: a.worker_id as u64,
-            save: &save_shard,
-        };
-        let rcfg = RoundCfg {
-            start_step,
-            steps: a.steps,
-            ckpt_every: a.ckpt_every,
-        };
-        run_rounds(
-            task.as_ref(),
-            opt.as_mut(),
-            threadpool::global(),
-            &mut weights,
-            &mut io,
-            &rcfg,
-            &mut |_, _, _| {},
-        )?
+    let mut io = WireRounds {
+        stream: &mut stream,
+        worker_id: a.worker_id,
+        n_layers: a.layers.len() as u32,
+        shards: a.shards.clone(),
+        group: (a.group_start, a.group_end),
+        save: &save_shard,
+        chaos: cfg.chaos.resolve(a.seed, a.worker_id, a.steps),
     };
+    let rcfg = RoundCfg {
+        start_step,
+        steps: a.steps,
+        ckpt_every: a.ckpt_every,
+        ckpt_base,
+    };
+    let out = run_rounds(
+        task.as_ref(),
+        opt.as_mut(),
+        threadpool::global(),
+        &mut weights,
+        &mut io,
+        &rcfg,
+        &mut |_, _, _| {},
+    )?;
+    // The group may have moved during the session (takeover/rebalance);
+    // the final report covers whatever we own *now*.
+    let final_group = io.group.0 as usize..io.group.1 as usize;
+    drop(io);
     if let Some(reason) = out.stopped {
         return Ok(WorkerReport {
             worker_id: cfg.id,
@@ -272,12 +342,13 @@ fn run_assignment(
     }
 
     // Session end (the engine already ran the final checkpoint barrier):
-    // hand the group state back and wait for Shutdown.
+    // hand the (current, possibly empty) group state back and wait for
+    // Shutdown. The coordinator verifies it against its replica.
     write_msg(
         &mut stream,
         &Msg::GroupState {
             step: final_step,
-            mats: weights[group.clone()].to_vec(),
+            mats: weights[final_group].to_vec(),
         },
     )?;
     let reason = loop {
@@ -285,6 +356,7 @@ fn run_assignment(
             Msg::Heartbeat { nonce } => write_msg(&mut stream, &Msg::HeartbeatAck { nonce })?,
             Msg::Shutdown { reason } => break reason,
             Msg::Error { detail } => anyhow::bail!("coordinator error: {detail}"),
+            Msg::Reassign { .. } | Msg::ReducedGrads { .. } => {}
             m => anyhow::bail!("unexpected {} while waiting for Shutdown", m.name()),
         }
     };
@@ -304,25 +376,130 @@ fn run_assignment(
     })
 }
 
-/// The wire-backed [`RoundIo`]: this shard's gradients go out as `Grads`,
-/// the reduction comes back as `ReducedGrads`, and checkpoint barriers wait
-/// for the coordinator's `Checkpoint` frame before persisting + `Ack`ing.
-/// Heartbeats are answered wherever the worker is blocked reading.
+/// The wire-backed [`RoundIo`]: every owned shard's gradients go out as
+/// `Grads` frames, the reduction comes back as `ReducedGrads`, and
+/// checkpoint barriers wait for the coordinator's `Checkpoint` frame before
+/// persisting + `Ack`ing. Heartbeats are answered and `Reassign` frames
+/// applied wherever the worker is blocked reading. Scripted chaos faults
+/// fire at the step boundary (kill/stall/leave) and on each outbound
+/// gradient frame (drop/truncate/delay).
 struct WireRounds<'a> {
     stream: &'a mut TcpStream,
-    /// This worker's data shard index (its worker id).
-    shard: u64,
-    /// Persists the layer group at a step (`shard::save` + meta).
-    save: &'a dyn Fn(&[Mat], u64) -> crate::Result<()>,
+    /// This worker's id (for `Msg::Leave`).
+    worker_id: u32,
+    /// Total model layer count (Reassign group validation).
+    n_layers: u32,
+    /// The data shards this worker currently owns.
+    shards: Vec<u64>,
+    /// Current checkpoint layer group (start, end], updated by permanent
+    /// reassignment.
+    group: (u32, u32),
+    /// Persists a layer group at a step (`shard::save` + meta).
+    save: &'a dyn Fn(&[Mat], u64, (u32, u32)) -> crate::Result<()>,
+    /// Scripted fault state (no-op without `--chaos`).
+    chaos: ChaosState,
+}
+
+impl WireRounds<'_> {
+    /// Send one gradient frame through the chaos layer: the frame counter
+    /// advances per *gradient* frame (control traffic is never corrupted —
+    /// a fault harness that broke heartbeat acks would test nothing but
+    /// itself).
+    fn send_grads(&mut self, msg: &Msg) -> crate::Result<()> {
+        match self.chaos.on_send() {
+            SendFault::Send => write_msg(self.stream, msg),
+            SendFault::Drop => Ok(()),
+            SendFault::Truncate => {
+                use std::io::Write;
+                let frame = encode(msg);
+                let _ = self.stream.write_all(&frame[..frame.len() / 2]);
+                let _ = self.stream.flush();
+                let _ = self.stream.shutdown(std::net::Shutdown::Both);
+                anyhow::bail!("chaos: truncated a gradient frame and dropped the connection")
+            }
+        }
+    }
+
+    /// Apply a permanent reassignment (owned shards + checkpoint group).
+    fn apply_permanent(&mut self, shards: &[u64], g: (u32, u32)) -> crate::Result<()> {
+        anyhow::ensure!(
+            g.0 <= g.1 && g.1 <= self.n_layers,
+            "Reassign layer group {}..{} over {} layers",
+            g.0,
+            g.1,
+            self.n_layers
+        );
+        self.shards = shards.to_vec();
+        self.group = g;
+        Ok(())
+    }
+
+    /// Compute and send the gradients of every shard in `want` not already
+    /// in `sent`, recording what was sent.
+    fn send_missing(
+        &mut self,
+        task: &dyn TrainTask,
+        weights: &[Mat],
+        step: u64,
+        want: &[u64],
+        sent: &mut Vec<u64>,
+    ) -> crate::Result<()> {
+        for &s in want {
+            if sent.contains(&s) {
+                continue;
+            }
+            let (loss, grads) = task.shard_grads(weights, step, s);
+            self.send_grads(&Msg::Grads { step, shard: s, loss, mats: grads })?;
+            sent.push(s);
+        }
+        Ok(())
+    }
 }
 
 impl RoundIo for WireRounds<'_> {
     fn reduce(&mut self, task: &dyn TrainTask, weights: &[Mat], step: u64) -> crate::Result<Round> {
-        let (loss, grads) = task.shard_grads(weights, step, self.shard);
-        write_msg(self.stream, &Msg::Grads { step, loss, mats: grads })?;
+        match self.chaos.on_step(step) {
+            StepFault::None => {}
+            StepFault::Kill => {
+                // Simulate a crash: drop the socket without a word. The
+                // coordinator's detector must notice and reassign.
+                let _ = self.stream.shutdown(std::net::Shutdown::Both);
+                anyhow::bail!("chaos: killed at step {step}")
+            }
+            StepFault::Leave => {
+                write_msg(self.stream, &Msg::Leave { worker_id: self.worker_id })?;
+                loop {
+                    match read_msg(self.stream)? {
+                        Msg::Heartbeat { nonce } => {
+                            write_msg(self.stream, &Msg::HeartbeatAck { nonce })?
+                        }
+                        Msg::Shutdown { reason } => return Ok(Round::Stopped { reason }),
+                        Msg::Error { detail } => anyhow::bail!("coordinator error: {detail}"),
+                        // Round traffic already in flight is not ours to
+                        // act on once we asked to leave.
+                        _ => {}
+                    }
+                }
+            }
+        }
+        let mut sent: Vec<u64> = Vec::new();
+        let owned = self.shards.clone();
+        self.send_missing(task, weights, step, &owned, &mut sent)?;
         loop {
             match read_msg(self.stream)? {
                 Msg::Heartbeat { nonce } => write_msg(self.stream, &Msg::HeartbeatAck { nonce })?,
+                Msg::Reassign { start_step, permanent, shards, group_start, group_end } => {
+                    if permanent {
+                        self.apply_permanent(&shards, (group_start, group_end))?;
+                    }
+                    // Compute requested shards only if the request is for
+                    // the round we are actually in (a stale speculative
+                    // request for a round the coordinator already finished
+                    // would waste work — its results get dropped anyway).
+                    if start_step == step {
+                        self.send_missing(task, weights, step, &shards, &mut sent)?;
+                    }
+                }
                 Msg::ReducedGrads { step: s, loss, mats } => {
                     anyhow::ensure!(
                         s == step && mats.len() == weights.len(),
@@ -342,9 +519,17 @@ impl RoundIo for WireRounds<'_> {
         loop {
             match read_msg(self.stream)? {
                 Msg::Heartbeat { nonce } => write_msg(self.stream, &Msg::HeartbeatAck { nonce })?,
+                Msg::Reassign { permanent, shards, group_start, group_end, .. } => {
+                    // A membership change at the round boundary: adopt the
+                    // new deal before the barrier write so the shard file
+                    // reflects the group we now own.
+                    if permanent {
+                        self.apply_permanent(&shards, (group_start, group_end))?;
+                    }
+                }
                 Msg::Checkpoint { step: s } => {
                     anyhow::ensure!(s == step, "Checkpoint for step {s}, expected {step}");
-                    (self.save)(weights, step)?;
+                    (self.save)(weights, step, self.group)?;
                     write_msg(self.stream, &Msg::Ack { step })?;
                     return Ok(None);
                 }

@@ -62,6 +62,14 @@ pub struct ClusterCfg {
     pub connect_backoff_cap_ms: u64,
     /// Resume workers from their shard checkpoint files.
     pub resume: bool,
+    /// Straggler soft deadline as a multiple of the rolling median round
+    /// time: once a round runs longer than `median × straggler_factor`, the
+    /// coordinator speculatively re-dispatches the missing shards to idle
+    /// workers. `0` disables speculation entirely.
+    pub straggler_factor: f64,
+    /// Floor on the straggler soft deadline (ms), so short rounds don't
+    /// trigger speculation on scheduler jitter alone.
+    pub straggler_min_ms: u64,
 }
 
 impl Default for ClusterCfg {
@@ -89,6 +97,8 @@ impl Default for ClusterCfg {
             connect_backoff_ms: 25,
             connect_backoff_cap_ms: 2000,
             resume: false,
+            straggler_factor: 4.0,
+            straggler_min_ms: 200,
         }
     }
 }
@@ -120,6 +130,8 @@ impl ClusterCfg {
             ("connect_backoff_ms", Json::num(self.connect_backoff_ms as f64)),
             ("connect_backoff_cap_ms", Json::num(self.connect_backoff_cap_ms as f64)),
             ("resume", Json::Bool(self.resume)),
+            ("straggler_factor", Json::num(self.straggler_factor)),
+            ("straggler_min_ms", Json::num(self.straggler_min_ms as f64)),
         ])
     }
 
@@ -184,6 +196,12 @@ impl ClusterCfg {
         if let Some(x) = j.get("resume").as_bool() {
             cfg.resume = x;
         }
+        if let Some(x) = j.get("straggler_factor").as_f64() {
+            cfg.straggler_factor = x;
+        }
+        if let Some(x) = j.get("straggler_min_ms").as_f64() {
+            cfg.straggler_min_ms = x as u64;
+        }
         Some(cfg)
     }
 
@@ -220,6 +238,8 @@ mod tests {
             connect_backoff_ms: 10,
             connect_backoff_cap_ms: 640,
             resume: true,
+            straggler_factor: 2.5,
+            straggler_min_ms: 75,
             ..ClusterCfg::default()
         };
         cfg.optim = OptimCfg::new(OptimKind::GaLore).with_lr(1e-2);
@@ -243,6 +263,8 @@ mod tests {
         assert_eq!(d.connect_backoff_ms, 25);
         assert_eq!(d.connect_backoff_cap_ms, 2000, "net::connect_retry cap");
         assert_eq!(d.task, "synthetic");
+        assert_eq!(d.straggler_factor, 4.0, "straggler soft-deadline multiple");
+        assert_eq!(d.straggler_min_ms, 200, "straggler deadline floor");
     }
 
     #[test]

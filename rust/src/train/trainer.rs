@@ -148,6 +148,7 @@ impl Trainer {
             start_step: 0,
             steps: self.cfg.steps as u64,
             ckpt_every: 0,
+            ckpt_base: 0,
         };
         let steps = self.cfg.steps;
         let log_every = self.cfg.log_every.max(1);

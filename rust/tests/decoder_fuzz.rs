@@ -2,11 +2,12 @@
 //!
 //! Seeded `Rng`-driven mutations (truncation, length-field inflation, tag
 //! corruption, random byte flips) over valid wire frames, checkpoint and
-//! shard files, and config JSON. The contract under test is the crate's
-//! validate-before-allocate discipline: every guaranteed-bad mutant must
-//! produce a clean `Err` — never a panic, and never an allocation larger
-//! than the surface's documented cap. Byte flips that may legally decode
-//! still get the no-panic / bounded-allocation guarantee.
+//! shard files, config JSON, and chaos fault specs. The contract under
+//! test is the crate's validate-before-allocate discipline: every
+//! guaranteed-bad mutant must produce a clean `Err` — never a panic, and
+//! never an allocation larger than the surface's documented cap. Byte
+//! flips that may legally decode still get the no-panic /
+//! bounded-allocation guarantee.
 //!
 //! The max-allocation tracker is a process-global allocator (same pattern
 //! as `alloc_free_step.rs`), so everything runs inside one `#[test]` in its
@@ -17,6 +18,7 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use sumo::cluster::chaos::{ChaosSpec, MAX_FAULTS};
 use sumo::cluster::messages::{self, Msg, HEADER_BYTES, MAX_FRAME_BYTES};
 use sumo::cluster::shard::{self, ShardMeta};
 use sumo::config::{ClusterCfg, ModelCfg, OptimCfg, OptimKind};
@@ -91,12 +93,20 @@ fn sample_msgs(rng: &mut Rng) -> Vec<Msg> {
     vec![
         Msg::Hello { worker_id: 3, task_support: 3 },
         Msg::GroupState { step: 7, mats: mats.clone() },
-        Msg::SyncWeights { start_step: 2, mats: mats.clone() },
-        Msg::Grads { step: 9, loss: 0.5, mats },
+        Msg::SyncWeights { start_step: 2, ckpt_base: 1, mats: mats.clone() },
+        Msg::Grads { step: 9, shard: 1, loss: 0.5, mats },
         Msg::Checkpoint { step: 11 },
         Msg::Ack { step: 1 },
         Msg::KillAll,
         Msg::Shutdown { reason: "bye".into() },
+        Msg::Reassign {
+            start_step: 4,
+            permanent: true,
+            shards: vec![0, 2, 5],
+            group_start: 1,
+            group_end: 2,
+        },
+        Msg::Leave { worker_id: 2 },
     ]
 }
 
@@ -136,11 +146,11 @@ fn fuzz_wire(rng: &mut Rng) {
             must_err("decode/len-inflation", GENERAL_CAP, || messages::decode(&m));
         }
 
-        // Tag corruption outside the valid dense 1..=13 range must be
+        // Tag corruption outside the valid dense 1..=15 range must be
         // rejected. A flip onto a *different valid* tag may legally decode
         // if payload shapes coincide, so in-range foreign tags only get the
         // no-panic / bounded-allocation guarantee.
-        for hostile_tag in [0u8, 14, 100, 255] {
+        for hostile_tag in [0u8, 16, 100, 255] {
             let mut m = frame.clone();
             m[5] = hostile_tag;
             must_err("decode/bad-tag", GENERAL_CAP, || messages::decode(&m));
@@ -373,6 +383,53 @@ fn fuzz_config_json(rng: &mut Rng) {
 }
 
 // ---------------------------------------------------------------------------
+// Surface 4: chaos fault specs (`ChaosSpec::parse`) — CLI today, but the
+// same hostile-input discipline as every other decoder.
+// ---------------------------------------------------------------------------
+
+fn fuzz_chaos_spec(rng: &mut Rng) {
+    let valid = concat!(
+        r#"[{"kind":"kill","step":5},{"kind":"leave","step":"seeded"},"#,
+        r#"{"kind":"stall","ms":40},{"kind":"drop","frame":2},"#,
+        r#"{"kind":"truncate","frame":9},{"kind":"delay","frame":1,"ms":10}]"#
+    );
+    ChaosSpec::parse(valid).expect("fixture spec must parse");
+
+    // Compact JSON array: the closing bracket is the last byte, so every
+    // strict truncation must be rejected.
+    for _ in 0..40 {
+        let keep = rng.below_usize(valid.len());
+        must_err("chaos/truncation", GENERAL_CAP, || {
+            ChaosSpec::parse(&valid[..keep]).map(|_| ())
+        });
+    }
+
+    // ASCII byte flips: parsing may fail, or legally succeed (a digit
+    // flip), but must never panic or over-allocate.
+    for _ in 0..200 {
+        let mut bytes = valid.as_bytes().to_vec();
+        let off = rng.below_usize(bytes.len());
+        bytes[off] = (bytes[off] ^ (1 << rng.below(7))) & 0x7F;
+        let Ok(mutant) = String::from_utf8(bytes) else { continue };
+        guarded("chaos/byte-flip", GENERAL_CAP, || {
+            let _ = ChaosSpec::parse(&mutant);
+            Ok(())
+        });
+    }
+
+    // The fault-count cap: one fault over MAX_FAULTS must be rejected.
+    let mut big = String::from("[");
+    for i in 0..=MAX_FAULTS {
+        if i > 0 {
+            big.push(',');
+        }
+        big.push_str(r#"{"kind":"kill","step":1}"#);
+    }
+    big.push(']');
+    must_err("chaos/over-cap", GENERAL_CAP, || ChaosSpec::parse(&big).map(|_| ()));
+}
+
+// ---------------------------------------------------------------------------
 
 #[test]
 fn hostile_inputs_never_panic_or_overallocate() {
@@ -382,5 +439,6 @@ fn hostile_inputs_never_panic_or_overallocate() {
     fuzz_checkpoint(&mut rng, &dir);
     fuzz_shard(&mut rng, &dir);
     fuzz_config_json(&mut rng);
+    fuzz_chaos_spec(&mut rng);
     std::fs::remove_dir_all(&dir).ok();
 }
