@@ -12,6 +12,7 @@
 //! accumulates across PRs.
 
 use sumo::bench::{bench_iters, TableWriter};
+use sumo::cluster::codec::{decode_mats, encode_mats, GradCodec};
 use sumo::cluster::messages::{decode, encode, Msg};
 use sumo::cluster::model_layers;
 use sumo::cluster::task::{init_weights, SyntheticTask};
@@ -125,26 +126,45 @@ fn main() -> anyhow::Result<()> {
 
     // Cluster wire codec at real LM gradient shapes: one `Grads` frame
     // carrying a full nano gradient set — the payload every worker sends
-    // each round under `--task lm` — encoded and decoded back.
+    // each round — through each negotiable codec, encoded and decoded back.
+    // Gradient-scale magnitudes (σ=1e-3) so the lossless byte planes see
+    // the redundancy they were designed for; the printed byte counts are
+    // the bytes-on-wire ratios recorded in EXPERIMENTS.md §Perf.
     {
         let mcfg = ModelCfg::preset("nano").unwrap();
         let layers = model_layers(&mcfg);
         let mats: Vec<Mat> = layers
             .iter()
-            .map(|l| Mat::randn(l.rows, l.cols, 1.0, &mut rng))
+            .map(|l| Mat::randn(l.rows, l.cols, 1e-3, &mut rng))
             .collect();
         let nlayers = layers.len();
-        let msg = Msg::Grads { step: 7, shard: 0, loss: 3.25, mats };
-        let s = time_fn(1, bench_iters(8), || {
-            let frame = encode(&msg);
-            let _ = decode(&frame).unwrap();
-        });
-        timing_row(
-            &mut t,
-            "grads codec (encode+decode)",
-            &format!("nano {nlayers}T"),
-            &s,
-        );
+        let mut wire = Vec::new();
+        for (codec, row) in [
+            (GradCodec::Raw, "grads codec (encode+decode)"),
+            (GradCodec::Lossless, "grads codec (lossless enc+dec)"),
+            (GradCodec::Q8Det, "grads codec (q8 enc+dec)"),
+        ] {
+            let payload = encode_mats(codec, &mats);
+            wire.push((codec, payload.len()));
+            let msg = Msg::Grads { step: 7, shard: 0, loss: 3.25, grads: payload };
+            let s = time_fn(1, bench_iters(8), || {
+                let frame = encode(&msg);
+                let Msg::Grads { grads, .. } = decode(&frame).unwrap() else {
+                    unreachable!()
+                };
+                let _ = decode_mats(codec, &grads).unwrap();
+            });
+            timing_row(&mut t, row, &format!("nano {nlayers}T"), &s);
+        }
+        let raw_bytes = wire[0].1 as f64;
+        for (codec, bytes) in &wire {
+            println!(
+                "grads payload {:?}: {} B ({:.2}x vs raw)",
+                codec,
+                bytes,
+                raw_bytes / *bytes as f64
+            );
+        }
     }
 
     // Failover round: a worker dies owning 1 of 4 shards — a survivor

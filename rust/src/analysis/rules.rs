@@ -247,12 +247,13 @@ fn in_dir(rel: &str, dir: &str) -> bool {
 
 /// Paths (suffix-matched) treated as hostile-byte decoders for
 /// `decode-discipline`.
-const DECODER_FILES: [&str; 5] = [
+const DECODER_FILES: [&str; 6] = [
     "util/codec.rs",
     "cluster/messages.rs",
     "model/checkpoint.rs",
     "cluster/shard.rs",
     "cluster/net.rs",
+    "cluster/codec.rs",
 ];
 
 /// Lint a single source file. `rel` is the path relative to the scan root
@@ -301,7 +302,8 @@ pub fn lint_source(rel: &str, src: &str) -> Vec<Diagnostic> {
         || in_dir(&rel, "linalg/")
         || rel.ends_with("cluster/round.rs")
         || rel.ends_with("cluster/messages.rs")
-        || rel.ends_with("cluster/chaos.rs");
+        || rel.ends_with("cluster/chaos.rs")
+        || rel.ends_with("cluster/codec.rs");
     if det_scoped {
         for (li, line) in lines.iter().enumerate() {
             for tok in ["Instant::now", "SystemTime", "HashMap", "HashSet"] {
@@ -578,6 +580,12 @@ unsafe impl Sync for P {}
         assert!(d.iter().all(|d| d.rule == "determinism"), "{d:?}");
         assert!(!d.is_empty());
         assert!(lint_source("cli/x.rs", src).is_empty());
+        // The gradient codec feeds cross-process bit-agreement: it is in
+        // scope for both determinism and decode-discipline.
+        assert!(!lint_source("cluster/codec.rs", src).is_empty());
+        let alloc = "fn decode(n: usize) -> Vec<u8> { vec![0u8; n] }\n";
+        let d = lint_source("cluster/codec.rs", alloc);
+        assert!(d.iter().any(|d| d.rule == "decode-discipline"), "{d:?}");
     }
 
     // --- decode-discipline ------------------------------------------------

@@ -23,10 +23,12 @@ SUBCOMMANDS:
               --ckpt-every N --ckpt-dir DIR --heartbeat-every N
               --io-timeout-ms MS --join-timeout-ms MS --resume
               --straggler-factor X --straggler-min-ms MS
+              --grad-codec raw|lossless|q8
   worker      start worker K and connect to a coordinator
               --id K --connect HOST:PORT [--cfg FILE] [--ckpt-dir DIR]
               [--io-timeout-ms MS] [--connect-attempts N] [--backoff-ms MS]
               [--backoff-cap-ms MS] [--chaos SPEC]
+              [--grad-codec raw|lossless|q8] (must match the coordinator)
               SPEC is a JSON fault script, e.g.
               '[{\"kind\":\"kill\",\"step\":5}]' — see docs/ARCHITECTURE.md
   local       run the identical computation single-process (the bitwise
@@ -72,6 +74,7 @@ pub(crate) fn cluster_cfg_from(args: &Args) -> Result<ClusterCfg> {
     cfg.join_timeout_ms = args.u64_or("join-timeout-ms", cfg.join_timeout_ms)?;
     cfg.straggler_factor = args.f64_or("straggler-factor", cfg.straggler_factor)?;
     cfg.straggler_min_ms = args.u64_or("straggler-min-ms", cfg.straggler_min_ms)?;
+    cfg.grad_codec = args.get_or("grad-codec", &cfg.grad_codec);
     if args.has_flag("resume") {
         cfg.resume = true;
     }
@@ -126,7 +129,9 @@ fn cmd_worker(args: &Args) -> Result<()> {
     // A worker can reuse the coordinator's cluster config file for the
     // connection-discipline knobs (timeouts/backoff); flags layer on top.
     let mut wcfg = match args.get("cfg") {
-        Some(path) => worker::WorkerCfg::from_cluster(id as u32, connect, &ClusterCfg::load(path)?),
+        Some(path) => {
+            worker::WorkerCfg::from_cluster(id as u32, connect, &ClusterCfg::load(path)?)?
+        }
         None => worker::WorkerCfg::new(id as u32, connect),
     };
     wcfg.ckpt_dir = args.get("ckpt-dir").map(|s| s.to_string());
@@ -136,6 +141,11 @@ fn cmd_worker(args: &Args) -> Result<()> {
     wcfg.backoff_cap_ms = args.u64_or("backoff-cap-ms", wcfg.backoff_cap_ms)?;
     if let Some(spec) = args.get("chaos") {
         wcfg.chaos = crate::cluster::chaos::ChaosSpec::parse(spec)?;
+    }
+    if let Some(name) = args.get("grad-codec") {
+        wcfg.grad_codec = crate::cluster::codec::GradCodec::parse(name).ok_or_else(|| {
+            anyhow::anyhow!("unknown grad codec {name:?} (expected raw, lossless, or q8)")
+        })?;
     }
     let report = worker::run(&wcfg)?;
     println!(
@@ -220,6 +230,28 @@ mod tests {
         let cfg = cluster_cfg_from(&a).unwrap();
         assert_eq!(cfg.straggler_factor, 2.5);
         assert_eq!(cfg.straggler_min_ms, 50);
+    }
+
+    #[test]
+    fn grad_codec_flag_reaches_the_cfg_and_rejects_unknown_names() {
+        let a = parse(&["cluster", "local", "--grad-codec", "lossless"]);
+        assert_eq!(cluster_cfg_from(&a).unwrap().grad_codec, "lossless");
+        // Coordinator/local path: the unknown name is caught when the run
+        // parses the codec; the worker path rejects it before connecting.
+        let a = parse(&[
+            "cluster",
+            "worker",
+            "--id",
+            "0",
+            "--connect",
+            "127.0.0.1:1",
+            "--connect-attempts",
+            "1",
+            "--grad-codec",
+            "zstd-9000",
+        ]);
+        let err = cmd_worker(&a).unwrap_err().to_string();
+        assert!(err.contains("unknown grad codec"), "got: {err}");
     }
 
     #[test]

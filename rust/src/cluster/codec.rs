@@ -1,0 +1,543 @@
+//! Gradient-frame codec (wire v4): the negotiated encoding of the mats
+//! inside `Msg::Grads` / `Msg::ReducedGrads`.
+//!
+//! Three codecs, negotiated once per session in `Hello` and never mixed:
+//!
+//! * [`GradCodec::Raw`] — the wire v3 bytes (u32 dims + LE f32s), the
+//!   default. Zero overhead beyond a 5-byte envelope.
+//! * [`GradCodec::Lossless`] — byte-plane transposition (plane *b* holds
+//!   byte *b* of every LE f32) with per-plane zero-page / run-length /
+//!   raw-passthrough coding. Exact round-trip for **every** f32 bit
+//!   pattern, NaN payloads and -0.0 included: the transform is pure byte
+//!   shuffling. Gradient exponent/sign planes are highly repetitive, so
+//!   they RLE well; a plane that doesn't compress ships raw, so the
+//!   worst case is `4 + elems` bytes per plane section over Raw.
+//! * [`GradCodec::Q8Det`] — deterministic symmetric per-mat int8
+//!   quantization (≈4× fewer bytes). The scale is constrained to a power
+//!   of two, which makes dequantization *exact* (an integer in ±127
+//!   times a power of two is an exact f32) and the codec *idempotent*:
+//!   encode∘decode is a projection, so re-encoding a decoded mat
+//!   reproduces the identical bytes. That idempotence is the whole
+//!   determinism argument — see [`GradCodec::canonicalize`].
+//!
+//! # Why `weights_fnv` stays pinned per codec
+//!
+//! The cluster's correctness story is "every process steps on bit-equal
+//! reduced gradients". `Raw` and `Lossless` are exact, so nothing changes.
+//! For `Q8Det`, every gradient that enters a reduction is first pushed
+//! through the quantize→dequantize projection (`canonicalize`): the worker
+//! ships quantized values, the coordinator reduces over the *dequantized*
+//! values it decoded, and the single-process reference applies the same
+//! projection to its locally computed shard gradients. The reduced mean is
+//! canonicalized again before broadcast, and idempotence guarantees the
+//! bytes the coordinator encodes decode to exactly the mats its own replica
+//! applies. Same inputs, same arithmetic, same weights — bitwise — just a
+//! *different* (quantized) trajectory than `Raw`'s.
+//!
+//! Decoding obeys the same validate-before-allocate discipline as
+//! `messages.rs`: every claimed count is checked against a cap and against
+//! the bytes actually present before any buffer is sized by it.
+
+use crate::linalg::Mat;
+use crate::util::codec::{check_cap, require_le, ByteReader, ByteWriter};
+
+use super::messages::{MAX_FRAME_BYTES, MAX_MATS, MAX_MAT_ELEMS};
+
+/// The gradient-frame codec negotiated for a cluster session.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum GradCodec {
+    /// Uncompressed LE f32 mats (wire v3 behavior).
+    #[default]
+    Raw,
+    /// Byte-plane transposed f32 with zero-page/RLE coding; exact.
+    Lossless,
+    /// Deterministic power-of-two-scale symmetric int8 quantization.
+    Q8Det,
+}
+
+/// Plane section mode: every byte of the plane is zero, nothing follows.
+const PLANE_ZERO: u8 = 0;
+/// Plane section mode: u32 encoded length + RLE stream follows.
+const PLANE_RLE: u8 = 1;
+/// Plane section mode: `elems` raw plane bytes follow.
+const PLANE_RAW: u8 = 2;
+
+impl GradCodec {
+    /// On-wire codec id (leads every encoded payload; part of the
+    /// protocol: append, never renumber).
+    pub fn id(self) -> u8 {
+        match self {
+            GradCodec::Raw => 0,
+            GradCodec::Lossless => 1,
+            GradCodec::Q8Det => 2,
+        }
+    }
+
+    /// Inverse of [`GradCodec::id`].
+    pub fn from_id(id: u8) -> Option<GradCodec> {
+        match id {
+            0 => Some(GradCodec::Raw),
+            1 => Some(GradCodec::Lossless),
+            2 => Some(GradCodec::Q8Det),
+            _ => None,
+        }
+    }
+
+    /// Parse a CLI/config name (`raw` | `lossless` | `q8`).
+    pub fn parse(name: &str) -> Option<GradCodec> {
+        match name {
+            "raw" => Some(GradCodec::Raw),
+            "lossless" => Some(GradCodec::Lossless),
+            "q8" => Some(GradCodec::Q8Det),
+            _ => None,
+        }
+    }
+
+    /// Canonical name (the string [`GradCodec::parse`] accepts).
+    pub fn name(self) -> &'static str {
+        match self {
+            GradCodec::Raw => "raw",
+            GradCodec::Lossless => "lossless",
+            GradCodec::Q8Det => "q8",
+        }
+    }
+
+    /// Project `mats` onto the codec's representable set, in place.
+    ///
+    /// Identity for `Raw` and `Lossless` (exact codecs). For `Q8Det` every
+    /// element becomes its quantize→dequantize image, which is exactly the
+    /// value any peer decodes off the wire. Every gradient entering a
+    /// reduction — on workers, on the coordinator, and in the
+    /// single-process reference — passes through this, so all processes
+    /// reduce over bit-equal inputs. Idempotent by construction.
+    pub fn canonicalize(self, mats: &mut [Mat]) {
+        if self != GradCodec::Q8Det {
+            return;
+        }
+        for m in mats.iter_mut() {
+            let s = q8_scale(&m.data);
+            for x in m.data.iter_mut() {
+                *x = q8_quantize(*x, s) as f32 * s;
+            }
+        }
+    }
+}
+
+/// Encode a gradient mat list under `codec` into a self-describing payload:
+/// codec id byte, u32 mat count, then per-mat bodies.
+pub fn encode_mats(codec: GradCodec, mats: &[Mat]) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_u8(codec.id());
+    w.put_u32(mats.len() as u32);
+    for m in mats {
+        match codec {
+            GradCodec::Raw => w.put_mat(m),
+            GradCodec::Lossless => put_lossless_mat(&mut w, m),
+            GradCodec::Q8Det => put_q8_mat(&mut w, m),
+        }
+    }
+    w.into_bytes()
+}
+
+/// Decode a payload built by [`encode_mats`], requiring the session's
+/// negotiated `codec`. A frame carrying any other codec id — corruption or
+/// a mis-negotiated peer — errors cleanly before any mat is decoded.
+pub fn decode_mats(codec: GradCodec, bytes: &[u8]) -> crate::Result<Vec<Mat>> {
+    let mut r = ByteReader::new(bytes);
+    let id = r.take_u8("grads codec id")?;
+    anyhow::ensure!(
+        id == codec.id(),
+        "grads codec mismatch: frame carries codec id {id}, session negotiated {:?} (id {})",
+        codec,
+        codec.id()
+    );
+    let n = r.take_u32("grads mat count")? as usize;
+    require_le(n as u64, MAX_MATS as u64, "grads mat count")?;
+    let mut mats = Vec::with_capacity(n);
+    for _ in 0..n {
+        mats.push(match codec {
+            GradCodec::Raw => r.take_mat(MAX_MAT_ELEMS, "grads mat")?,
+            GradCodec::Lossless => take_lossless_mat(&mut r)?,
+            GradCodec::Q8Det => take_q8_mat(&mut r)?,
+        });
+    }
+    r.expect_end("grads payload")?;
+    Ok(mats)
+}
+
+// ---------------------------------------------------------------------------
+// Q8Det: power-of-two-scale symmetric int8 quantization.
+// ---------------------------------------------------------------------------
+
+/// The quantization scale for a mat: the smallest power of two `s` with
+/// `amax <= 127*s`, where `amax` is the largest *finite* |x| (non-finite
+/// elements are clamped by the quantizer, not by the scale). 0.0 for an
+/// all-zero (or empty, or all-non-finite) mat. Restricting scales to powers
+/// of two is what buys exactness: `q * s` with `|q| <= 127` is always an
+/// exactly representable f32, so decode introduces no rounding of its own
+/// and re-encoding a decoded mat is a fixed point.
+fn q8_scale(data: &[f32]) -> f32 {
+    let mut amax = 0.0f32;
+    for &x in data {
+        let a = x.abs();
+        if a.is_finite() && a > amax {
+            amax = a;
+        }
+    }
+    if amax == 0.0 {
+        return 0.0;
+    }
+    let mut s = 1.0f32;
+    while amax > 127.0 * s {
+        s *= 2.0;
+    }
+    while s > f32::MIN_POSITIVE && amax <= 127.0 * (s * 0.5) {
+        s *= 0.5;
+    }
+    s
+}
+
+/// Quantize one value at scale `s`: round-to-nearest, clamped to ±127
+/// (never -128 — the asymmetric extra code would break idempotence).
+/// NaN maps to 0, ±Inf to ±127; both deterministically, so every process
+/// agrees even on pathological gradients.
+fn q8_quantize(x: f32, s: f32) -> i8 {
+    if s == 0.0 {
+        return 0;
+    }
+    let q = (x / s).round().clamp(-127.0, 127.0);
+    if q.is_nan() {
+        0
+    } else {
+        q as i8
+    }
+}
+
+/// Q8Det mat body: u32 rows, u32 cols, f32 scale, `rows*cols` int8 codes.
+fn put_q8_mat(w: &mut ByteWriter, m: &Mat) {
+    w.put_u32(m.rows as u32);
+    w.put_u32(m.cols as u32);
+    let s = q8_scale(&m.data);
+    w.put_f32(s);
+    for &x in &m.data {
+        w.put_u8(q8_quantize(x, s) as u8);
+    }
+}
+
+/// Decode a [`put_q8_mat`] body. The claimed dims are validated against the
+/// element cap and the bytes present before the element buffer exists, and
+/// a non-finite or negative wire scale is rejected (it could only come from
+/// corruption — [`q8_scale`] never produces one).
+fn take_q8_mat(r: &mut ByteReader) -> crate::Result<Mat> {
+    let what = "q8 grads mat";
+    let rows = r.take_u32(what)? as usize;
+    let cols = r.take_u32(what)? as usize;
+    let elems = (rows as u64)
+        .checked_mul(cols as u64)
+        .ok_or_else(|| anyhow::anyhow!("{what}: {rows}x{cols} size overflows"))?;
+    check_cap(elems, MAX_MAT_ELEMS as u64, format_args!("{what}: {rows}x{cols} elements"))?;
+    let s = r.take_f32(what)?;
+    anyhow::ensure!(s.is_finite() && s >= 0.0, "{what}: invalid quantization scale {s}");
+    let codes = r.take_bytes(elems as usize, MAX_MAT_ELEMS, what)?;
+    let mut data = Vec::with_capacity(elems as usize);
+    for &b in codes {
+        data.push(b as i8 as f32 * s);
+    }
+    Ok(Mat::from_vec(rows, cols, data))
+}
+
+// ---------------------------------------------------------------------------
+// Lossless: byte-plane transposition + zero-page / RLE / raw sections.
+// ---------------------------------------------------------------------------
+
+/// Lossless mat body: u32 rows, u32 cols, then four plane sections (plane
+/// `b` carries byte `b` of every element's LE representation). Grouping
+/// like bytes together is what exposes the redundancy: sign/exponent bytes
+/// of same-magnitude gradients repeat, mantissa bytes usually don't.
+fn put_lossless_mat(w: &mut ByteWriter, m: &Mat) {
+    w.put_u32(m.rows as u32);
+    w.put_u32(m.cols as u32);
+    for b in 0..4usize {
+        // lint: allow(decode-discipline) -- encoder side: sized by the mat we are encoding, not by wire-claimed data.
+        let mut plane = Vec::with_capacity(m.data.len());
+        for &x in &m.data {
+            plane.push(x.to_le_bytes()[b]);
+        }
+        put_plane(w, &plane);
+    }
+}
+
+/// One plane section: a mode byte, then nothing (zero page), a u32-length
+/// RLE stream (only when it actually saves bytes), or the raw plane.
+fn put_plane(w: &mut ByteWriter, plane: &[u8]) {
+    if plane.iter().all(|&b| b == 0) {
+        w.put_u8(PLANE_ZERO);
+        return;
+    }
+    let rle = rle_encode(plane);
+    if rle.len() < plane.len() {
+        w.put_u8(PLANE_RLE);
+        w.put_u32(rle.len() as u32);
+        w.put_bytes(&rle);
+    } else {
+        w.put_u8(PLANE_RAW);
+        w.put_bytes(plane);
+    }
+}
+
+/// Run-length encode one plane. Control byte `c < 128`: the next `c+1`
+/// bytes are literals. `c >= 128`: the next byte repeats `(c-128)+2` times
+/// (runs of 2..=129). The encoder only emits runs of >= 4 (shorter runs
+/// cost as much as literals) and batches literals up to 128 per control.
+fn rle_encode(bytes: &[u8]) -> Vec<u8> {
+    let mut out = Vec::new();
+    let mut lit: Vec<u8> = Vec::new();
+    let mut i = 0usize;
+    while i < bytes.len() {
+        let b = bytes[i];
+        let mut run = 1usize;
+        while i + run < bytes.len() && bytes[i + run] == b && run < 129 {
+            run += 1;
+        }
+        if run >= 4 {
+            flush_literals(&mut out, &mut lit);
+            out.push(128 + (run as u8 - 2));
+            out.push(b);
+        } else {
+            for _ in 0..run {
+                lit.push(b);
+            }
+        }
+        i += run;
+    }
+    flush_literals(&mut out, &mut lit);
+    out
+}
+
+/// Emit pending literal bytes in <=128-byte control groups.
+fn flush_literals(out: &mut Vec<u8>, lit: &mut Vec<u8>) {
+    for chunk in lit.chunks(128) {
+        out.push(chunk.len() as u8 - 1);
+        out.extend_from_slice(chunk);
+    }
+    lit.clear();
+}
+
+/// Decode an RLE stream into exactly `out_len` plane bytes. The output
+/// buffer is bounded by the element cap *before* allocation, and the
+/// decoded length must land exactly on `out_len` — a stream that under- or
+/// overruns the plane is corrupt.
+fn rle_decode(enc: &[u8], out_len: usize) -> crate::Result<Vec<u8>> {
+    require_le(out_len as u64, MAX_MAT_ELEMS as u64, "rle plane length")?;
+    let mut out = Vec::with_capacity(out_len);
+    let mut i = 0usize;
+    while i < enc.len() {
+        let c = enc[i];
+        i += 1;
+        if c < 128 {
+            let n = c as usize + 1;
+            anyhow::ensure!(i + n <= enc.len(), "truncated rle literal group");
+            anyhow::ensure!(out.len() + n <= out_len, "rle stream overruns the plane");
+            out.extend_from_slice(&enc[i..i + n]);
+            i += n;
+        } else {
+            let n = c as usize - 128 + 2;
+            anyhow::ensure!(i < enc.len(), "truncated rle run");
+            anyhow::ensure!(out.len() + n <= out_len, "rle stream overruns the plane");
+            let b = enc[i];
+            i += 1;
+            for _ in 0..n {
+                out.push(b);
+            }
+        }
+    }
+    anyhow::ensure!(
+        out.len() == out_len,
+        "rle stream decodes {} of {} plane bytes",
+        out.len(),
+        out_len
+    );
+    Ok(out)
+}
+
+/// Decode one plane section of `elems` bytes.
+fn take_plane(r: &mut ByteReader, elems: usize) -> crate::Result<Vec<u8>> {
+    let what = "lossless grads plane";
+    require_le(elems as u64, MAX_MAT_ELEMS as u64, what)?;
+    match r.take_u8(what)? {
+        PLANE_ZERO => Ok(vec![0u8; elems]),
+        PLANE_RLE => {
+            let enc_len = r.take_u32(what)? as usize;
+            let enc = r.take_bytes(enc_len, MAX_FRAME_BYTES as usize, what)?;
+            rle_decode(enc, elems)
+        }
+        PLANE_RAW => Ok(r.take_bytes(elems, MAX_MAT_ELEMS, what)?.to_vec()),
+        m => anyhow::bail!("{what}: unknown plane mode byte {m}"),
+    }
+}
+
+/// Decode a [`put_lossless_mat`] body, reassembling each f32 from its four
+/// plane bytes. Bit-exact for every input bit pattern.
+fn take_lossless_mat(r: &mut ByteReader) -> crate::Result<Mat> {
+    let what = "lossless grads mat";
+    let rows = r.take_u32(what)? as usize;
+    let cols = r.take_u32(what)? as usize;
+    let elems = (rows as u64)
+        .checked_mul(cols as u64)
+        .ok_or_else(|| anyhow::anyhow!("{what}: {rows}x{cols} size overflows"))?;
+    check_cap(elems, MAX_MAT_ELEMS as u64, format_args!("{what}: {rows}x{cols} elements"))?;
+    let elems = elems as usize;
+    let p0 = take_plane(r, elems)?;
+    let p1 = take_plane(r, elems)?;
+    let p2 = take_plane(r, elems)?;
+    let p3 = take_plane(r, elems)?;
+    let mut data = Vec::with_capacity(elems);
+    for i in 0..elems {
+        data.push(f32::from_le_bytes([p0[i], p1[i], p2[i], p3[i]]));
+    }
+    Ok(Mat::from_vec(rows, cols, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn bits(mats: &[Mat]) -> Vec<Vec<u32>> {
+        mats.iter().map(|m| m.data.iter().map(|x| x.to_bits()).collect()).collect()
+    }
+
+    fn adversarial_mats() -> Vec<Mat> {
+        let mut rng = Rng::new(0xC0DE);
+        vec![
+            Mat::from_vec(0, 0, vec![]),
+            Mat::from_vec(
+                2,
+                4,
+                vec![
+                    f32::NAN,
+                    f32::INFINITY,
+                    f32::NEG_INFINITY,
+                    -0.0,
+                    f32::from_bits(1), // smallest denormal
+                    f32::MIN_POSITIVE,
+                    f32::MAX,
+                    -f32::MAX,
+                ],
+            ),
+            Mat::from_vec(1, 5, vec![0.0; 5]),
+            Mat::from_vec(3, 1, vec![1.0, -2.5, 3.25]),
+            Mat::randn(7, 3, 1e-3, &mut rng),
+        ]
+    }
+
+    #[test]
+    fn raw_and_lossless_roundtrip_exactly() {
+        let mats = adversarial_mats();
+        for codec in [GradCodec::Raw, GradCodec::Lossless] {
+            let enc = encode_mats(codec, &mats);
+            let dec = decode_mats(codec, &enc).unwrap();
+            assert_eq!(bits(&dec), bits(&mats), "{codec:?} not exact");
+            for (a, b) in dec.iter().zip(&mats) {
+                assert_eq!(a.shape(), b.shape());
+            }
+        }
+    }
+
+    #[test]
+    fn q8_is_idempotent_and_deterministic() {
+        let mats = adversarial_mats();
+        let enc1 = encode_mats(GradCodec::Q8Det, &mats);
+        assert_eq!(enc1, encode_mats(GradCodec::Q8Det, &mats), "encode not deterministic");
+        let dec1 = decode_mats(GradCodec::Q8Det, &enc1).unwrap();
+        // Fixed point: re-encoding the decoded mats reproduces the bytes,
+        // and decoding again reproduces the values, bit for bit.
+        let enc2 = encode_mats(GradCodec::Q8Det, &dec1);
+        assert_eq!(enc2, enc1, "encode(decode(enc)) drifted");
+        let dec2 = decode_mats(GradCodec::Q8Det, &enc2).unwrap();
+        assert_eq!(bits(&dec2), bits(&dec1));
+    }
+
+    #[test]
+    fn q8_canonicalize_matches_the_wire_image() {
+        let mut mats = adversarial_mats();
+        let wire = decode_mats(GradCodec::Q8Det, &encode_mats(GradCodec::Q8Det, &mats)).unwrap();
+        GradCodec::Q8Det.canonicalize(&mut mats);
+        assert_eq!(bits(&mats), bits(&wire));
+        // Exact codecs canonicalize to identity.
+        let mut raw = adversarial_mats();
+        GradCodec::Raw.canonicalize(&mut raw);
+        GradCodec::Lossless.canonicalize(&mut raw);
+        assert_eq!(bits(&raw), bits(&adversarial_mats()));
+    }
+
+    #[test]
+    fn q8_scale_is_a_power_of_two_covering_amax() {
+        for amax in [1e-30f32, 0.003, 0.9, 1.0, 127.0, 128.0, 1e30] {
+            let s = q8_scale(&[amax, -amax / 2.0]);
+            assert!(s > 0.0 && s.log2().fract() == 0.0, "scale {s} not a power of two");
+            assert!(amax <= 127.0 * s, "amax {amax} not covered by scale {s}");
+            assert!(amax > 127.0 * (s / 2.0) || s <= f32::MIN_POSITIVE, "scale {s} not minimal");
+        }
+        assert_eq!(q8_scale(&[]), 0.0);
+        assert_eq!(q8_scale(&[0.0, -0.0]), 0.0);
+        assert_eq!(q8_scale(&[f32::NAN, f32::INFINITY]), 0.0, "non-finite ignored by amax");
+    }
+
+    #[test]
+    fn rle_roundtrips_and_compresses_runs() {
+        let cases: Vec<Vec<u8>> = vec![
+            vec![],
+            vec![7],
+            vec![1, 2, 3, 4, 5],
+            vec![9; 1000],
+            [vec![0; 300], vec![1, 2, 3], vec![5; 4]].concat(),
+            (0..=255u8).cycle().take(700).collect(),
+        ];
+        for plane in cases {
+            let enc = rle_encode(&plane);
+            assert_eq!(rle_decode(&enc, plane.len()).unwrap(), plane);
+        }
+        assert!(rle_encode(&[9; 1000]).len() < 20, "long runs must collapse");
+    }
+
+    #[test]
+    fn hostile_payloads_err_cleanly() {
+        let mats = vec![Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0])];
+        // Codec id mismatch (what a corrupted id byte decodes as).
+        let enc = encode_mats(GradCodec::Lossless, &mats);
+        let err = decode_mats(GradCodec::Q8Det, &enc).unwrap_err().to_string();
+        assert!(err.contains("codec mismatch"), "{err}");
+        // Unknown id byte.
+        let mut bad = enc.clone();
+        bad[0] = 200;
+        assert!(decode_mats(GradCodec::Lossless, &bad).is_err());
+        // Truncation anywhere must not panic.
+        for cut in 0..enc.len() {
+            assert!(decode_mats(GradCodec::Lossless, &enc[..cut]).is_err());
+        }
+        // Oversized dims claim dies at the cap, before allocation.
+        let mut w = ByteWriter::new();
+        w.put_u8(GradCodec::Lossless.id());
+        w.put_u32(1);
+        w.put_u32(u32::MAX);
+        w.put_u32(u32::MAX);
+        let err = decode_mats(GradCodec::Lossless, &w.into_bytes()).unwrap_err().to_string();
+        assert!(err.contains("exceeds cap"), "{err}");
+        // Trailing garbage after a valid payload.
+        let mut trail = encode_mats(GradCodec::Raw, &mats);
+        trail.push(0);
+        assert!(decode_mats(GradCodec::Raw, &trail).is_err());
+    }
+
+    #[test]
+    fn names_and_ids_roundtrip() {
+        for c in [GradCodec::Raw, GradCodec::Lossless, GradCodec::Q8Det] {
+            assert_eq!(GradCodec::from_id(c.id()), Some(c));
+            assert_eq!(GradCodec::parse(c.name()), Some(c));
+        }
+        assert_eq!(GradCodec::from_id(9), None);
+        assert_eq!(GradCodec::parse("zstd"), None);
+        assert_eq!(GradCodec::default(), GradCodec::Raw);
+    }
+}

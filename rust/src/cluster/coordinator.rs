@@ -43,6 +43,7 @@ use crate::optim;
 use crate::util::json::Json;
 use crate::util::threadpool;
 
+use super::codec::{decode_mats, encode_mats, GradCodec};
 use super::messages::{
     encode, read_msg, write_frame, write_msg, LayerSpec, Msg, ShardAssignment, TaskDesc,
 };
@@ -245,6 +246,9 @@ pub fn run_on(cfg: &ClusterCfg, listener: TcpListener) -> crate::Result<RunOutco
     let n = cfg.workers;
     let desc = task_desc(cfg)?;
     let task = task::build_task(&desc, cfg.seed, &layers)?;
+    let codec = GradCodec::parse(&cfg.grad_codec).ok_or_else(|| {
+        anyhow::anyhow!("unknown grad codec {:?} (expected raw, lossless, or q8)", cfg.grad_codec)
+    })?;
 
     // ---- Join phase: accept Hello from each founding worker id. ----
     listener.set_nonblocking(true)?;
@@ -259,7 +263,7 @@ pub fn run_on(cfg: &ClusterCfg, listener: TcpListener) -> crate::Result<RunOutco
         );
         match listener.accept() {
             Ok((stream, _)) => {
-                if admit(cfg, &desc, &mut slots, stream, &mut joined)? {
+                if admit(cfg, &desc, codec, &mut slots, stream, &mut joined)? {
                     return killed_outcome(slots.iter_mut().filter_map(|s| s.as_mut()));
                 }
             }
@@ -419,6 +423,7 @@ pub fn run_on(cfg: &ClusterCfg, listener: TcpListener) -> crate::Result<RunOutco
         match boundary(
             &listener,
             cfg,
+            codec,
             &mut peers,
             t,
             start_step,
@@ -468,7 +473,7 @@ pub fn run_on(cfg: &ClusterCfg, listener: TcpListener) -> crate::Result<RunOutco
         while got.iter().any(|g| g.is_none()) {
             let mut k = 0;
             while k < peers.len() {
-                match pump_peer(&mut peers[k], t, &layers, &mut got) {
+                match pump_peer(&mut peers[k], t, codec, &layers, &mut got) {
                     Ok(PeerEvent::Fine) => k += 1,
                     Ok(PeerEvent::Left) => {
                         let lost = undelivered(&peers[k], &got);
@@ -521,8 +526,14 @@ pub fn run_on(cfg: &ClusterCfg, listener: TcpListener) -> crate::Result<RunOutco
             shard_grads.push(mats);
         }
         last_loss = loss_sum / n_shards as f64;
-        let reduced = allreduce_mean(&mut shard_grads);
-        let frame = encode(&Msg::ReducedGrads { step: t, loss: last_loss, mats: reduced.clone() });
+        let mut reduced = allreduce_mean(&mut shard_grads);
+        // Canonicalize through the session codec before either consumer:
+        // the broadcast payload and the replica update see the identical
+        // (possibly quantized) gradient, so workers and replica stay
+        // bitwise in lockstep under every codec.
+        codec.canonicalize(&mut reduced);
+        let payload = encode_mats(codec, &reduced);
+        let frame = encode(&Msg::ReducedGrads { step: t, loss: last_loss, grads: payload });
         let mut k = 0;
         while k < peers.len() {
             if let Err(e) = write_frame(&mut peers[k].stream, &frame) {
@@ -591,6 +602,7 @@ enum PeerEvent {
 fn pump_peer(
     peer: &mut Peer,
     t: u64,
+    codec: GradCodec,
     layers: &[LayerSpec],
     got: &mut [Option<(f64, Vec<Mat>)>],
 ) -> crate::Result<PeerEvent> {
@@ -603,19 +615,29 @@ fn pump_peer(
         peer.last_rx = Instant::now();
         match msg {
             Msg::HeartbeatAck { nonce } => peer.hb.on_ack(nonce),
-            Msg::Grads { step, shard, loss, mats } => {
+            Msg::Grads { step, shard, loss, grads } => {
                 if step < t {
                     continue; // stale: a round completed by speculation/takeover
                 }
                 anyhow::ensure!(
-                    step == t && (shard as usize) < got.len() && mats.len() == layers.len(),
-                    "worker {} sent gradients for step {step} shard {shard} ({} tensors) \
-                     during step {t}",
-                    peer.id,
-                    mats.len()
+                    step == t && (shard as usize) < got.len(),
+                    "worker {} sent gradients for step {step} shard {shard} during step {t}",
+                    peer.id
                 );
+                // Decode only frames this round still needs: the codec work
+                // for duplicate speculative copies is skipped, not just the
+                // recording.
                 let slot = &mut got[shard as usize];
                 if slot.is_none() {
+                    let mats = decode_mats(codec, &grads)
+                        .map_err(|e| anyhow::anyhow!("worker {} at step {t}: {e}", peer.id))?;
+                    anyhow::ensure!(
+                        mats.len() == layers.len(),
+                        "worker {} sent {} gradient tensors for a {}-layer model",
+                        peer.id,
+                        mats.len(),
+                        layers.len()
+                    );
                     *slot = Some((loss, mats));
                 }
             }
@@ -713,6 +735,7 @@ enum Boundary {
 fn boundary(
     listener: &TcpListener,
     cfg: &ClusterCfg,
+    codec: GradCodec,
     peers: &mut Vec<Peer>,
     t: u64,
     start_step: u64,
@@ -737,13 +760,15 @@ fn boundary(
                 let _ = write_msg(&mut stream, &Msg::Ack { step: 0 });
                 return Ok(Boundary::Killed);
             }
-            Ok(Msg::Hello { worker_id, task_support }) => {
+            Ok(Msg::Hello { worker_id, task_support, codec: wire_codec }) => {
                 if let Err(e) = admit_joiner(
                     cfg,
+                    codec,
                     peers,
                     stream,
                     worker_id,
                     task_support,
+                    wire_codec,
                     t,
                     start_step,
                     final_step,
@@ -775,10 +800,12 @@ fn boundary(
 #[allow(clippy::too_many_arguments)]
 fn admit_joiner(
     cfg: &ClusterCfg,
+    session_codec: GradCodec,
     peers: &mut Vec<Peer>,
     mut stream: TcpStream,
     worker_id: u32,
     task_support: u8,
+    wire_codec: u8,
     t: u64,
     start_step: u64,
     final_step: u64,
@@ -799,6 +826,15 @@ fn admit_joiner(
         let why = format!(
             "worker {worker_id} does not support the {} task (support mask {task_support:#04x})",
             desc.kind_name()
+        );
+        return Err(reject(&mut stream, why));
+    }
+    if wire_codec != session_codec.id() {
+        let why = format!(
+            "worker {worker_id} offered grad codec id {wire_codec}, session uses {} (id {}) — \
+             run every process with the same --grad-codec",
+            session_codec.name(),
+            session_codec.id()
         );
         return Err(reject(&mut stream, why));
     }
@@ -870,7 +906,12 @@ fn barrier(
     step: u64,
     io_timeout: Duration,
 ) -> crate::Result<()> {
-    let frame = encode(&Msg::Checkpoint { step });
+    // The owner map is the *surviving* topology at this barrier — after any
+    // failover re-deals — so shard metadata written now lets `--resume`
+    // reconcile against whatever worker count comes back later.
+    let owners: Vec<(u32, u32, u32)> =
+        peers.iter().map(|p| (p.id, p.group.0, p.group.1)).collect();
+    let frame = encode(&Msg::Checkpoint { step, owners });
     let mut k = 0;
     while k < peers.len() {
         if let Err(e) = write_frame(&mut peers[k].stream, &frame) {
@@ -1055,6 +1096,7 @@ fn pump_gather_peer(
 fn admit(
     cfg: &ClusterCfg,
     desc: &TaskDesc,
+    session_codec: GradCodec,
     slots: &mut [Option<TcpStream>],
     stream: TcpStream,
     joined: &mut usize,
@@ -1064,7 +1106,7 @@ fn admit(
     net::configure(&stream, cfg.io_timeout_ms)?;
     let mut stream = stream;
     match read_msg(&mut stream) {
-        Ok(Msg::Hello { worker_id, task_support }) => {
+        Ok(Msg::Hello { worker_id, task_support, codec }) => {
             let id = worker_id as usize;
             if id >= slots.len() || slots[id].is_some() {
                 let detail = if id >= slots.len() {
@@ -1079,6 +1121,16 @@ fn admit(
                 let detail = format!(
                     "worker {id} does not support the {} task (support mask {task_support:#04x})",
                     desc.kind_name()
+                );
+                let _ = write_msg(&mut stream, &Msg::Error { detail: detail.clone() });
+                anyhow::bail!("{detail}");
+            }
+            if codec != session_codec.id() {
+                let detail = format!(
+                    "worker {id} offered grad codec id {codec}, session uses {} (id {}) — \
+                     run every process with the same --grad-codec",
+                    session_codec.name(),
+                    session_codec.id()
                 );
                 let _ = write_msg(&mut stream, &Msg::Error { detail: detail.clone() });
                 anyhow::bail!("{detail}");

@@ -12,6 +12,7 @@ use crate::config::{ClusterCfg, ModelCfg};
 use crate::optim;
 use crate::util::threadpool;
 
+use super::codec::GradCodec;
 use super::round::{run_rounds, LocalShards, RoundCfg};
 use super::{model_layers, task, task_desc, RunOutcome};
 
@@ -36,8 +37,12 @@ pub fn run_local(cfg: &ClusterCfg) -> crate::Result<RunOutcome> {
     let projected: Vec<bool> = layers.iter().map(|l| l.projected).collect();
     let mut opt = optim::build(&cfg.optim, &shapes, &projected, cfg.seed);
 
+    let codec = GradCodec::parse(&cfg.grad_codec).ok_or_else(|| {
+        anyhow::anyhow!("unknown grad codec {:?} (expected raw, lossless, or q8)", cfg.grad_codec)
+    })?;
     let mut io = LocalShards {
         shards: cfg.workers as u64,
+        codec,
     };
     let rcfg = RoundCfg {
         start_step: 0,

@@ -28,8 +28,12 @@ pub const WIRE_MAGIC: &[u8; 4] = b"SUWP";
 /// added fault tolerance: `Grads` names its data shard, assignments carry
 /// an explicit owned-shard set, `SyncWeights` carries the checkpoint
 /// cadence base, and `Reassign`/`Leave` drive takeover and elastic
-/// membership.
-pub const WIRE_VERSION: u8 = 3;
+/// membership; v4 added wire-efficient gradient frames: `Hello` carries
+/// the worker's gradient codec, `Grads`/`ReducedGrads` ship an opaque
+/// codec-framed payload (`cluster::codec`) instead of raw mats, and
+/// `Checkpoint` carries the surviving owner topology for post-failover
+/// resume.
+pub const WIRE_VERSION: u8 = 4;
 /// Frame header size: magic + version + tag + u64 payload length.
 pub const HEADER_BYTES: usize = 4 + 1 + 1 + 8;
 /// Hard cap on a frame payload (256 MiB — far above any real message for
@@ -172,6 +176,11 @@ pub enum Msg {
         /// ([`TASK_SUPPORT_SYNTHETIC`] | [`TASK_SUPPORT_LM`]); the
         /// coordinator rejects workers missing the session's task bit.
         task_support: u8,
+        /// The gradient codec this worker was launched with
+        /// (`cluster::codec::GradCodec::id`). The coordinator rejects a
+        /// worker whose codec differs from the session's — mixed codecs
+        /// would break the bit-equal-reduction guarantee.
+        codec: u8,
     },
     /// Coordinator → worker: the session plan.
     AssignShards(Box<ShardAssignment>),
@@ -205,8 +214,11 @@ pub enum Msg {
         shard: u64,
         /// This shard's loss at `step`.
         loss: f64,
-        /// Per-layer gradients, in layer order.
-        mats: Vec<Mat>,
+        /// Per-layer gradients in layer order, encoded under the session's
+        /// negotiated codec (`cluster::codec::encode_mats`). Opaque at the
+        /// framing layer: speculation/takeover re-deals these bytes
+        /// unchanged, and the coordinator skips decoding stale frames.
+        grads: Vec<u8>,
     },
     /// Coordinator → worker: all-reduced mean gradients for `step`.
     ReducedGrads {
@@ -214,13 +226,19 @@ pub enum Msg {
         step: u64,
         /// Mean loss across shards at `step`.
         loss: f64,
-        /// Per-layer mean gradients, in layer order.
-        mats: Vec<Mat>,
+        /// Per-layer mean gradients in layer order, codec-framed exactly
+        /// like [`Msg::Grads::grads`] — encoded once, broadcast to all.
+        grads: Vec<u8>,
     },
     /// Coordinator → worker: write your shard checkpoint for `step` now.
     Checkpoint {
         /// The step the saved weights correspond to.
         step: u64,
+        /// The live topology at this barrier: `(worker_id, group_start,
+        /// group_end)` for every surviving peer. Persisted into shard
+        /// metadata so `--resume` can reconcile against a *different*
+        /// worker count than the one that wrote the files.
+        owners: Vec<(u32, u32, u32)>,
     },
     /// Worker → coordinator: checkpoint for `step` is on disk.
     Ack {
@@ -370,6 +388,39 @@ fn take_mats(r: &mut ByteReader, what: &str) -> crate::Result<Vec<Mat>> {
     Ok(mats)
 }
 
+/// Codec-framed gradient payload: u64 byte length + the opaque bytes
+/// (`cluster::codec` owns their interior structure).
+fn put_grads(w: &mut ByteWriter, grads: &[u8]) {
+    w.put_u64(grads.len() as u64);
+    w.put_bytes(grads);
+}
+
+fn take_grads(r: &mut ByteReader, what: &str) -> crate::Result<Vec<u8>> {
+    let len = r.take_u64(what)? as usize;
+    Ok(r.take_bytes(len, MAX_FRAME_BYTES as usize, what)?.to_vec())
+}
+
+/// Surviving-topology owner map: u32 count + `(worker_id, group_start,
+/// group_end)` triples.
+fn put_owners(w: &mut ByteWriter, owners: &[(u32, u32, u32)]) {
+    w.put_u32(owners.len() as u32);
+    for &(id, start, end) in owners {
+        w.put_u32(id);
+        w.put_u32(start);
+        w.put_u32(end);
+    }
+}
+
+fn take_owners(r: &mut ByteReader, what: &str) -> crate::Result<Vec<(u32, u32, u32)>> {
+    let n = r.take_u32(what)? as usize;
+    require_le(n as u64, MAX_SHARDS as u64, format_args!("{what}: owner count"))?;
+    let mut owners = Vec::with_capacity(n);
+    for _ in 0..n {
+        owners.push((r.take_u32(what)?, r.take_u32(what)?, r.take_u32(what)?));
+    }
+    Ok(owners)
+}
+
 fn put_task(w: &mut ByteWriter, t: &TaskDesc) {
     w.put_u8(t.kind());
     match t {
@@ -465,9 +516,10 @@ fn take_assignment(r: &mut ByteReader) -> crate::Result<ShardAssignment> {
 fn encode_payload(msg: &Msg) -> Vec<u8> {
     let mut w = ByteWriter::new();
     match msg {
-        Msg::Hello { worker_id, task_support } => {
+        Msg::Hello { worker_id, task_support, codec } => {
             w.put_u32(*worker_id);
             w.put_u8(*task_support);
+            w.put_u8(*codec);
         }
         Msg::AssignShards(a) => put_assignment(&mut w, a),
         Msg::GroupState { step, mats } => {
@@ -479,18 +531,22 @@ fn encode_payload(msg: &Msg) -> Vec<u8> {
             w.put_u64(*ckpt_base);
             put_mats(&mut w, mats);
         }
-        Msg::Grads { step, shard, loss, mats } => {
+        Msg::Grads { step, shard, loss, grads } => {
             w.put_u64(*step);
             w.put_u64(*shard);
             w.put_u64(loss.to_bits());
-            put_mats(&mut w, mats);
+            put_grads(&mut w, grads);
         }
-        Msg::ReducedGrads { step, loss, mats } => {
+        Msg::ReducedGrads { step, loss, grads } => {
             w.put_u64(*step);
             w.put_u64(loss.to_bits());
-            put_mats(&mut w, mats);
+            put_grads(&mut w, grads);
         }
-        Msg::Checkpoint { step } | Msg::Ack { step } => w.put_u64(*step),
+        Msg::Checkpoint { step, owners } => {
+            w.put_u64(*step);
+            put_owners(&mut w, owners);
+        }
+        Msg::Ack { step } => w.put_u64(*step),
         Msg::Heartbeat { nonce } | Msg::HeartbeatAck { nonce } => w.put_u64(*nonce),
         Msg::KillAll => {}
         Msg::Shutdown { reason } => w.put_str(reason),
@@ -513,6 +569,7 @@ fn decode_payload(tag: u8, payload: &[u8]) -> crate::Result<Msg> {
         1 => Msg::Hello {
             worker_id: r.take_u32("Hello")?,
             task_support: r.take_u8("Hello")?,
+            codec: r.take_u8("Hello")?,
         },
         2 => Msg::AssignShards(Box::new(take_assignment(&mut r)?)),
         3 => Msg::GroupState {
@@ -528,15 +585,16 @@ fn decode_payload(tag: u8, payload: &[u8]) -> crate::Result<Msg> {
             step: r.take_u64("Grads")?,
             shard: r.take_u64("Grads")?,
             loss: f64::from_bits(r.take_u64("Grads")?),
-            mats: take_mats(&mut r, "Grads")?,
+            grads: take_grads(&mut r, "Grads")?,
         },
         6 => Msg::ReducedGrads {
             step: r.take_u64("ReducedGrads")?,
             loss: f64::from_bits(r.take_u64("ReducedGrads")?),
-            mats: take_mats(&mut r, "ReducedGrads")?,
+            grads: take_grads(&mut r, "ReducedGrads")?,
         },
         7 => Msg::Checkpoint {
             step: r.take_u64("Checkpoint")?,
+            owners: take_owners(&mut r, "Checkpoint")?,
         },
         8 => Msg::Ack {
             step: r.take_u64("Ack")?,
@@ -695,20 +753,22 @@ mod tests {
     fn sample_msgs() -> Vec<Msg> {
         let mut rng = Rng::new(5);
         let mats = vec![Mat::randn(3, 2, 1.0, &mut rng), Mat::randn(1, 4, 1.0, &mut rng)];
+        let grads = crate::cluster::codec::encode_mats(crate::cluster::codec::GradCodec::Raw, &mats);
         let mut lm_assign = sample_assignment();
         lm_assign.task = TaskDesc::Lm {
             model_json: r#"{"name":"nano"}"#.to_string(),
             train_json: r#"{"batch":4}"#.to_string(),
         };
         vec![
-            Msg::Hello { worker_id: 3, task_support: TASK_SUPPORT_ALL },
+            Msg::Hello { worker_id: 3, task_support: TASK_SUPPORT_ALL, codec: 0 },
             Msg::AssignShards(Box::new(sample_assignment())),
             Msg::AssignShards(Box::new(lm_assign)),
             Msg::GroupState { step: 7, mats: mats.clone() },
-            Msg::SyncWeights { start_step: 0, ckpt_base: 0, mats: mats.clone() },
-            Msg::Grads { step: 9, shard: 1, loss: 1.25, mats: mats.clone() },
-            Msg::ReducedGrads { step: 9, loss: f64::NAN, mats },
-            Msg::Checkpoint { step: 10 },
+            Msg::SyncWeights { start_step: 0, ckpt_base: 0, mats },
+            Msg::Grads { step: 9, shard: 1, loss: 1.25, grads: grads.clone() },
+            Msg::ReducedGrads { step: 9, loss: f64::NAN, grads },
+            Msg::Checkpoint { step: 10, owners: vec![(0, 0, 3), (2, 3, 5)] },
+            Msg::Checkpoint { step: 10, owners: vec![] },
             Msg::Ack { step: 10 },
             Msg::Heartbeat { nonce: 0xABCD },
             Msg::HeartbeatAck { nonce: 0xABCD },
@@ -781,7 +841,7 @@ mod tests {
         assert!(decode(&frame).unwrap_err().to_string().contains("exceeds cap"));
 
         // Claimed length larger than the bytes present (under the cap).
-        let mut frame = encode(&Msg::Checkpoint { step: 3 });
+        let mut frame = encode(&Msg::Checkpoint { step: 3, owners: vec![] });
         frame[6..14].copy_from_slice(&1000u64.to_le_bytes());
         assert!(decode(&frame).unwrap_err().to_string().contains("bytes present"));
 
@@ -833,6 +893,41 @@ mod tests {
         frame.extend_from_slice(&payload);
         let err = decode(&frame).unwrap_err().to_string();
         assert!(err.contains("shard count"), "{err}");
+    }
+
+    #[test]
+    fn rejects_hostile_grads_length_and_owner_count() {
+        // A Grads payload claiming more codec bytes than the frame cap:
+        // caught by take_bytes' cap check before any buffer is sized by it.
+        let mut w = ByteWriter::new();
+        w.put_u64(0); // step
+        w.put_u64(0); // shard
+        w.put_u64(0); // loss bits
+        w.put_u64(u64::MAX); // hostile grads byte length
+        let payload = w.into_bytes();
+        let mut frame = Vec::new();
+        frame.extend_from_slice(WIRE_MAGIC);
+        frame.push(WIRE_VERSION);
+        frame.push(5); // Grads
+        frame.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        let err = decode(&frame).unwrap_err().to_string();
+        assert!(err.contains("exceeds cap"), "{err}");
+
+        // A Checkpoint payload with a hostile owner count: caught by
+        // MAX_SHARDS before the owner vec is allocated.
+        let mut w = ByteWriter::new();
+        w.put_u64(0); // step
+        w.put_u32(u32::MAX); // hostile owner count
+        let payload = w.into_bytes();
+        let mut frame = Vec::new();
+        frame.extend_from_slice(WIRE_MAGIC);
+        frame.push(WIRE_VERSION);
+        frame.push(7); // Checkpoint
+        frame.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        let err = decode(&frame).unwrap_err().to_string();
+        assert!(err.contains("owner count"), "{err}");
     }
 
     #[test]

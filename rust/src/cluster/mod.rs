@@ -36,7 +36,11 @@
 //! `Hello → AssignShards → GroupState → SyncWeights → (Grads →
 //! ReducedGrads)* → Checkpoint/Ack barriers → GroupState → Shutdown`,
 //! with `Heartbeat`/`HeartbeatAck` interleaved for liveness and
-//! `KillAll` accepted on fresh connections as an out-of-band stop.
+//! `KillAll` accepted on fresh connections as an out-of-band stop. As of
+//! wire v4 the gradient frames carry an opaque payload encoded under the
+//! session's negotiated [`codec::GradCodec`] (raw, lossless byte-plane,
+//! or deterministic int8) — see `docs/ARCHITECTURE.md` § "Wire
+//! efficiency".
 //!
 //! # Shard checkpoints
 //!
@@ -62,6 +66,7 @@
 //! See `docs/ARCHITECTURE.md` § "Failure model".
 
 pub mod chaos;
+pub mod codec;
 pub mod coordinator;
 pub mod local;
 pub mod messages;

@@ -22,6 +22,7 @@ use crate::linalg::Mat;
 use crate::optim::Optimizer;
 use crate::util::threadpool::ThreadPool;
 
+use super::codec::GradCodec;
 use super::task::TrainTask;
 
 /// The replicated optimizer step, shared verbatim by every mode: one
@@ -81,6 +82,13 @@ pub trait RoundIo {
 pub struct LocalShards {
     /// Number of data-parallel shards to emulate.
     pub shards: u64,
+    /// The gradient codec to emulate. Each shard's gradients are pushed
+    /// through [`GradCodec::canonicalize`] before the reduction and the
+    /// mean is canonicalized after it — exactly what the wire does — so a
+    /// local run stays the bitwise reference for a cluster run under the
+    /// same codec. Identity for [`GradCodec::Raw`] and
+    /// [`GradCodec::Lossless`].
+    pub codec: GradCodec,
 }
 
 impl RoundIo for LocalShards {
@@ -88,13 +96,16 @@ impl RoundIo for LocalShards {
         let mut loss_sum = 0.0f64;
         let mut shard_grads: Vec<Vec<Mat>> = Vec::with_capacity(self.shards as usize);
         for s in 0..self.shards {
-            let (loss, grads) = task.shard_grads(weights, step, s);
+            let (loss, mut grads) = task.shard_grads(weights, step, s);
+            self.codec.canonicalize(&mut grads);
             loss_sum += loss;
             shard_grads.push(grads);
         }
+        let mut mats = allreduce_mean(&mut shard_grads);
+        self.codec.canonicalize(&mut mats);
         Ok(Round::Reduced {
             loss: loss_sum / self.shards as f64,
-            mats: allreduce_mean(&mut shard_grads),
+            mats,
         })
     }
 
@@ -224,7 +235,7 @@ mod tests {
         let run = || {
             let mut w = init_weights(11, &ls);
             let mut opt = build_opt(&ls, 11);
-            let mut io = LocalShards { shards: 3 };
+            let mut io = LocalShards { shards: 3, codec: GradCodec::Raw };
             let out = run_rounds(
                 &task,
                 opt.as_mut(),
@@ -278,7 +289,7 @@ mod tests {
         let mut w = init_weights(3, &ls);
         let mut opt = build_opt(&ls, 3);
         let mut io = Scripted {
-            inner: LocalShards { shards: 2 },
+            inner: LocalShards { shards: 2, codec: GradCodec::Raw },
             barriers: vec![],
             stop_reduce_at: None,
             stop_ckpt_at: None,
@@ -313,7 +324,7 @@ mod tests {
         let mut w = init_weights(3, &ls);
         let mut opt = build_opt(&ls, 3);
         let mut io = Scripted {
-            inner: LocalShards { shards: 2 },
+            inner: LocalShards { shards: 2, codec: GradCodec::Raw },
             barriers: vec![],
             stop_reduce_at: None,
             stop_ckpt_at: None,
@@ -342,7 +353,7 @@ mod tests {
         let mut w = init_weights(3, &ls);
         let mut opt = build_opt(&ls, 3);
         let mut io = Scripted {
-            inner: LocalShards { shards: 2 },
+            inner: LocalShards { shards: 2, codec: GradCodec::Raw },
             barriers: vec![],
             stop_reduce_at: Some(3),
             stop_ckpt_at: None,
@@ -356,7 +367,7 @@ mod tests {
         let mut w = init_weights(3, &ls);
         let mut opt = build_opt(&ls, 3);
         let mut io = Scripted {
-            inner: LocalShards { shards: 2 },
+            inner: LocalShards { shards: 2, codec: GradCodec::Raw },
             barriers: vec![],
             stop_reduce_at: None,
             stop_ckpt_at: Some(4),

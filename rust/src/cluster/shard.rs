@@ -20,7 +20,7 @@ use crate::linalg::Mat;
 use crate::util::codec;
 use crate::util::json::Json;
 
-use super::messages::LayerSpec;
+use super::messages::{LayerSpec, MAX_LAYERS};
 
 const MAGIC: &[u8; 8] = b"SUMOSHD1";
 
@@ -44,6 +44,14 @@ pub struct ShardMeta {
     pub group_start: u32,
     /// One past the last layer index of the group (exclusive).
     pub group_end: u32,
+    /// The session's checkpoint cadence base (global start step) at write
+    /// time. 0 for files written before wire v4.
+    pub ckpt_base: u64,
+    /// The live topology at the barrier that wrote this file:
+    /// `(worker_id, group_start, group_end)` for every surviving peer.
+    /// Lets `--resume` reconcile against a different worker count than the
+    /// one that wrote the files. Empty for files written before wire v4.
+    pub owners: Vec<(u32, u32, u32)>,
     /// Specs of the layers in the group, in order.
     pub layers: Vec<LayerSpec>,
 }
@@ -73,6 +81,13 @@ pub fn save<P: AsRef<Path>>(meta: &ShardMeta, weights: &[Mat], path: P) -> crate
         ("step", Json::num(meta.step as f64)),
         ("group_start", Json::num(meta.group_start as f64)),
         ("group_end", Json::num(meta.group_end as f64)),
+        ("ckpt_base", Json::num(meta.ckpt_base as f64)),
+        (
+            "owners",
+            Json::arr(meta.owners.iter().map(|&(id, start, end)| {
+                Json::arr([id, start, end].iter().map(|&x| Json::num(x as f64)))
+            })),
+        ),
         (
             "layers",
             Json::arr(meta.layers.iter().map(|l| {
@@ -121,6 +136,22 @@ pub fn load<P: AsRef<Path>>(path: P) -> crate::Result<(ShardMeta, Vec<Mat>)> {
             projected: l.get("projected").as_bool().unwrap_or(false),
         });
     }
+    // Pre-v4 files carry neither key; they parse with the defaults (base 0,
+    // no recorded topology) and resume exactly as they always did.
+    let mut owners = Vec::new();
+    if let Some(arr) = header.get("owners").as_arr() {
+        for o in arr {
+            if let Some(triple) = o.as_arr() {
+                if triple.len() == 3 {
+                    owners.push((
+                        triple[0].as_usize().unwrap_or(0) as u32,
+                        triple[1].as_usize().unwrap_or(0) as u32,
+                        triple[2].as_usize().unwrap_or(0) as u32,
+                    ));
+                }
+            }
+        }
+    }
     let meta = ShardMeta {
         tag: header.get("tag").as_str().unwrap_or("").to_string(),
         worker_id: header.get("worker_id").as_usize().unwrap_or(0) as u32,
@@ -128,6 +159,8 @@ pub fn load<P: AsRef<Path>>(path: P) -> crate::Result<(ShardMeta, Vec<Mat>)> {
         step: header.get("step").as_f64().unwrap_or(0.0) as u64,
         group_start: header.get("group_start").as_usize().unwrap_or(0) as u32,
         group_end: header.get("group_end").as_usize().unwrap_or(0) as u32,
+        ckpt_base: header.get("ckpt_base").as_f64().unwrap_or(0.0) as u64,
+        owners,
         layers,
     };
     let mut weights = Vec::with_capacity(meta.layers.len());
@@ -156,6 +189,102 @@ pub fn load<P: AsRef<Path>>(path: P) -> crate::Result<(ShardMeta, Vec<Mat>)> {
     Ok((meta, weights))
 }
 
+/// Reconcile a worker's `--resume` against *whatever* shard files are in
+/// `dir`, instead of demanding the file that this exact `(worker_id,
+/// n_workers)` would have written. This is what makes resume survive a
+/// failover: after a worker death the survivors' final checkpoints cover
+/// the full layer list between them (takeover re-dealt the orphaned
+/// groups), and a restarted cluster with a *different* worker count can
+/// still reassemble any layer group from those files.
+///
+/// Scans `dir` for `shard_*.bin` files (sorted by filename, so extraction
+/// order is deterministic), validates every file against this run's `tag`
+/// and layer list, then picks the **highest** step at which the files
+/// jointly cover every layer and extracts `group`'s layers from the
+/// covering files. On overlap the first file in sorted order wins —
+/// overlapping owners hold bitwise-identical weights by the replication
+/// invariant, so the choice cannot matter.
+///
+/// Returns `Ok(None)` when the directory holds no shard files (fresh
+/// start), a clean error when files exist but belong to another run or
+/// cover no complete step (genuinely missing shards).
+pub fn reconcile(
+    dir: &str,
+    tag: &str,
+    layers: &[LayerSpec],
+    group: std::ops::Range<usize>,
+) -> crate::Result<Option<(u64, Vec<Mat>)>> {
+    codec::require_le(layers.len() as u64, MAX_LAYERS as u64, "reconcile layer count")?;
+    let mut paths: Vec<PathBuf> = match std::fs::read_dir(dir) {
+        Ok(rd) => rd
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .map(|n| n.starts_with("shard_") && n.ends_with(".bin"))
+                    .unwrap_or(false)
+            })
+            .collect(),
+        Err(_) => return Ok(None),
+    };
+    if paths.is_empty() {
+        return Ok(None);
+    }
+    paths.sort();
+    let mut files: Vec<(ShardMeta, Vec<Mat>)> = Vec::new();
+    for p in &paths {
+        let (meta, w) = load(p)?;
+        anyhow::ensure!(
+            meta.tag == tag,
+            "stale shard checkpoint {}: written for run tag {:?}, this run is {:?}",
+            p.display(),
+            meta.tag,
+            tag
+        );
+        let (gs, ge) = (meta.group_start as usize, meta.group_end as usize);
+        anyhow::ensure!(
+            gs <= ge && ge <= layers.len() && layers[gs..ge] == meta.layers[..],
+            "stale shard checkpoint {}: layer group [{gs}, {ge}) does not match this run's \
+             model shape",
+            p.display()
+        );
+        files.push((meta, w));
+    }
+    let mut steps: Vec<u64> = files.iter().map(|(m, _)| m.step).collect();
+    steps.sort_unstable();
+    steps.dedup();
+    for &s in steps.iter().rev() {
+        let mut covered = vec![false; layers.len()];
+        for (m, _) in files.iter().filter(|(m, _)| m.step == s) {
+            for c in covered[m.group_start as usize..m.group_end as usize].iter_mut() {
+                *c = true;
+            }
+        }
+        if !covered.iter().all(|&c| c) {
+            continue;
+        }
+        let mut out: Vec<Option<Mat>> = vec![None; group.len()];
+        for (m, w) in files.iter().filter(|(m, _)| m.step == s) {
+            let (gs, ge) = (m.group_start as usize, m.group_end as usize);
+            for (li, mat) in (gs..ge).zip(w) {
+                if li >= group.start && li < group.end {
+                    let slot = &mut out[li - group.start];
+                    if slot.is_none() {
+                        *slot = Some(mat.clone());
+                    }
+                }
+            }
+        }
+        // `covered` spans every layer at step s, so every slot was filled.
+        let mats: Vec<Mat> = out.into_iter().map(|o| o.expect("covered layer")).collect();
+        return Ok(Some((s, mats)));
+    }
+    anyhow::bail!(
+        "shard checkpoints in {dir} cover no complete step of the model — genuinely missing \
+         shards; delete the directory (or run without --resume) to start fresh"
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -178,6 +307,8 @@ mod tests {
             step: 17,
             group_start: 3,
             group_end: 5,
+            ckpt_base: 2,
+            owners: vec![(0, 0, 3), (1, 3, 5)],
             layers,
         };
         (meta, weights)
@@ -194,6 +325,147 @@ mod tests {
         for (a, b) in weights.iter().zip(&w2) {
             assert_eq!(a.data, b.data);
         }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    fn spec(name: &str, rows: usize, cols: usize) -> LayerSpec {
+        LayerSpec { name: name.into(), rows, cols, projected: false }
+    }
+
+    fn model() -> Vec<LayerSpec> {
+        (0..4).map(|i| spec(&format!("l{i}"), 2, 2)).collect()
+    }
+
+    /// Write one worker's group checkpoint with recognizable weights
+    /// (layer index + 100·step), so extraction correctness is checkable.
+    fn write_group(dir: &Path, id: u32, n: u32, step: u64, gs: usize, ge: usize, ls: &[LayerSpec]) {
+        let w: Vec<Mat> = (gs..ge)
+            .map(|li| Mat::from_vec(2, 2, vec![li as f32 + step as f32 * 100.0; 4]))
+            .collect();
+        let meta = ShardMeta {
+            tag: "nano".into(),
+            worker_id: id,
+            n_workers: n,
+            step,
+            group_start: gs as u32,
+            group_end: ge as u32,
+            ckpt_base: 0,
+            owners: vec![],
+            layers: ls[gs..ge].to_vec(),
+        };
+        save(&meta, &w, &shard_path(dir.to_str().unwrap(), id, n)).unwrap();
+    }
+
+    #[test]
+    fn reconcile_picks_max_covering_step_over_a_failover_topology() {
+        let dir = std::env::temp_dir().join("sumo_shard_reconcile");
+        std::fs::remove_dir_all(&dir).ok();
+        let ls = model();
+        // Post-failover disk state of a 3-worker run: worker 1 died after
+        // the step-4 barrier, survivors took over its group and wrote the
+        // step-8 barrier with re-dealt groups. Worker 1's stale file stays.
+        write_group(&dir, 0, 3, 8, 0, 2, &ls);
+        write_group(&dir, 1, 3, 4, 2, 3, &ls);
+        write_group(&dir, 2, 3, 8, 2, 4, &ls);
+        let d = dir.to_str().unwrap();
+        // A 2-worker resume reconciles to step 8 — the stale step-4 file is
+        // ignored, and each new group reassembles from the covering files.
+        let (s, w) = reconcile(d, "nano", &ls, 0..2).unwrap().unwrap();
+        assert_eq!(s, 8);
+        assert_eq!(w[0].data, vec![800.0; 4]);
+        assert_eq!(w[1].data, vec![801.0; 4]);
+        let (s, w) = reconcile(d, "nano", &ls, 2..4).unwrap().unwrap();
+        assert_eq!(s, 8);
+        assert_eq!(w[0].data, vec![802.0; 4]);
+        assert_eq!(w[1].data, vec![803.0; 4]);
+        // A group that straddles the old file boundary works too.
+        let (s, w) = reconcile(d, "nano", &ls, 1..3).unwrap().unwrap();
+        assert_eq!(s, 8);
+        assert_eq!(w[0].data, vec![801.0; 4]);
+        assert_eq!(w[1].data, vec![802.0; 4]);
+        // Empty group: step comes back, no mats.
+        let (s, w) = reconcile(d, "nano", &ls, 4..4).unwrap().unwrap();
+        assert_eq!((s, w.len()), (8, 0));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reconcile_empty_dir_is_a_fresh_start() {
+        let dir = std::env::temp_dir().join("sumo_shard_reconcile_empty");
+        std::fs::remove_dir_all(&dir).ok();
+        let ls = model();
+        // Missing directory and present-but-empty directory both mean "no
+        // checkpoint": resume falls back to step 0 without erroring.
+        assert!(reconcile(dir.to_str().unwrap(), "nano", &ls, 0..4).unwrap().is_none());
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(reconcile(dir.to_str().unwrap(), "nano", &ls, 0..4).unwrap().is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reconcile_rejects_missing_coverage_and_foreign_runs() {
+        let dir = std::env::temp_dir().join("sumo_shard_reconcile_bad");
+        std::fs::remove_dir_all(&dir).ok();
+        let ls = model();
+        // Only layers 0..2 ever checkpointed: no step covers the model.
+        write_group(&dir, 0, 3, 4, 0, 2, &ls);
+        let d = dir.to_str().unwrap();
+        let err = reconcile(d, "nano", &ls, 0..2).unwrap_err().to_string();
+        assert!(err.contains("cover"), "{err}");
+        // A tag mismatch is a different-run error, not a fresh start.
+        let err = reconcile(d, "other", &ls, 0..2).unwrap_err().to_string();
+        assert!(err.contains("run tag"), "{err}");
+        // A model-shape mismatch (fewer layers than the file's group) errs.
+        let err = reconcile(d, "nano", &ls[..1], 0..1).unwrap_err().to_string();
+        assert!(err.contains("model shape"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn pre_v4_files_parse_with_default_topology() {
+        // A header without ckpt_base/owners (what pre-v4 builds wrote)
+        // loads with the defaults and reconciles like any other file.
+        let dir = std::env::temp_dir().join("sumo_shard_prev4");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("shard_000_of_001.bin");
+        let ls = vec![spec("l0", 1, 2)];
+        {
+            use std::io::Write;
+            let mut f = File::create(&path).unwrap();
+            f.write_all(MAGIC).unwrap();
+            let header = Json::obj(vec![
+                ("tag", Json::str("nano")),
+                ("worker_id", Json::num(0.0)),
+                ("n_workers", Json::num(1.0)),
+                ("step", Json::num(6.0)),
+                ("group_start", Json::num(0.0)),
+                ("group_end", Json::num(1.0)),
+                (
+                    "layers",
+                    Json::arr(ls.iter().map(|l| {
+                        Json::obj(vec![
+                            ("name", Json::str(&l.name)),
+                            ("rows", Json::num(l.rows as f64)),
+                            ("cols", Json::num(l.cols as f64)),
+                            ("projected", Json::Bool(l.projected)),
+                        ])
+                    })),
+                ),
+            ])
+            .dump();
+            f.write_all(&(header.len() as u64).to_le_bytes()).unwrap();
+            f.write_all(header.as_bytes()).unwrap();
+            f.write_all(&1.0f32.to_le_bytes()).unwrap();
+            f.write_all(&2.0f32.to_le_bytes()).unwrap();
+        }
+        let (meta, w) = load(&path).unwrap();
+        assert_eq!(meta.ckpt_base, 0);
+        assert!(meta.owners.is_empty());
+        assert_eq!(w[0].data, vec![1.0, 2.0]);
+        let (s, w) = reconcile(dir.to_str().unwrap(), "nano", &ls, 0..1).unwrap().unwrap();
+        assert_eq!(s, 6);
+        assert_eq!(w[0].data, vec![1.0, 2.0]);
         std::fs::remove_dir_all(&dir).ok();
     }
 

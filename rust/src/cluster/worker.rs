@@ -33,6 +33,7 @@ use crate::util::json::Json;
 use crate::util::threadpool;
 
 use super::chaos::{ChaosSpec, ChaosState, SendFault, StepFault};
+use super::codec::{decode_mats, encode_mats, GradCodec};
 use super::messages::{encode, read_msg, write_msg, Msg, ShardAssignment, TASK_SUPPORT_ALL};
 use super::round::{run_rounds, LocalShards, Round, RoundCfg, RoundIo};
 use super::task::TrainTask;
@@ -64,6 +65,9 @@ pub struct WorkerCfg {
     pub backoff_cap_ms: u64,
     /// Scripted fault-injection spec (`--chaos`); empty injects nothing.
     pub chaos: ChaosSpec,
+    /// Gradient-frame codec this worker speaks (`--grad-codec`). Must match
+    /// the coordinator's — announced in `Hello`, enforced at admission.
+    pub grad_codec: GradCodec,
 }
 
 impl WorkerCfg {
@@ -81,13 +85,23 @@ impl WorkerCfg {
             backoff_ms: d.connect_backoff_ms,
             backoff_cap_ms: d.connect_backoff_cap_ms,
             chaos: ChaosSpec::default(),
+            grad_codec: GradCodec::Raw,
         }
     }
 
     /// Worker settings from a shared cluster config file (`--cfg` on the
     /// worker CLI): same struct the coordinator loads, worker-side fields.
-    pub fn from_cluster(id: u32, connect: &str, cfg: &ClusterCfg) -> WorkerCfg {
-        WorkerCfg {
+    /// Errors on an unknown `grad_codec` name rather than silently falling
+    /// back to raw — a worker speaking the wrong codec would be rejected at
+    /// admission anyway, but with a far less actionable message.
+    pub fn from_cluster(id: u32, connect: &str, cfg: &ClusterCfg) -> crate::Result<WorkerCfg> {
+        let grad_codec = GradCodec::parse(&cfg.grad_codec).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown grad codec {:?} (expected raw, lossless, or q8)",
+                cfg.grad_codec
+            )
+        })?;
+        Ok(WorkerCfg {
             id,
             connect: connect.to_string(),
             ckpt_dir: None,
@@ -96,7 +110,8 @@ impl WorkerCfg {
             backoff_ms: cfg.connect_backoff_ms,
             backoff_cap_ms: cfg.connect_backoff_cap_ms,
             chaos: ChaosSpec::default(),
-        }
+            grad_codec,
+        })
     }
 }
 
@@ -133,6 +148,7 @@ pub fn run(cfg: &WorkerCfg) -> crate::Result<WorkerReport> {
         &Msg::Hello {
             worker_id: cfg.id,
             task_support: TASK_SUPPORT_ALL,
+            codec: cfg.grad_codec.id(),
         },
     )?;
     match read_msg(&mut stream)? {
@@ -177,25 +193,24 @@ fn run_assignment(
     let ckpt_dir = cfg.ckpt_dir.clone().unwrap_or_else(|| a.ckpt_dir.clone());
     let path = shard::shard_path(&ckpt_dir, a.worker_id, a.n_workers);
 
-    // Resume offer: if this worker has a shard file matching the run shape,
-    // its group weights + step go to the coordinator, which reconciles all
-    // offers into one consistent start state for everyone.
+    // Resume offer: reconcile against whatever shard files live in the
+    // checkpoint dir — not just the file this exact topology would have
+    // written. `shard::reconcile` reassembles this worker's layer group
+    // from the highest step the on-disk files jointly cover, so a run
+    // restarted with a *different* worker count (e.g. after a failover left
+    // re-dealt groups behind) resumes instead of aborting. The group
+    // weights + step go to the coordinator, which reconciles all offers
+    // into one consistent start state for everyone.
     let mut my_step = 0u64;
-    if a.resume && path.exists() {
-        let (meta, group_w) = shard::load(&path)?;
-        anyhow::ensure!(
-            meta.tag == a.tag
-                && meta.n_workers == a.n_workers
-                && meta.group_start == a.group_start
-                && meta.group_end == a.group_end
-                && meta.layers == a.layers[group.clone()],
-            "stale shard checkpoint {}: written for a different run shape",
-            path.display()
-        );
-        for (dst, src) in weights[group.clone()].iter_mut().zip(group_w) {
-            *dst = src;
+    if a.resume {
+        if let Some((step, group_w)) =
+            shard::reconcile(&ckpt_dir, &a.tag, &a.layers, group.clone())?
+        {
+            for (dst, src) in weights[group.clone()].iter_mut().zip(group_w) {
+                *dst = src;
+            }
+            my_step = step;
         }
-        my_step = meta.step;
     }
     write_msg(
         &mut stream,
@@ -256,7 +271,7 @@ fn run_assignment(
     // local` proves this in CI), so after the replay this worker's weights
     // AND optimizer state match every incumbent's at `start_step` exactly.
     if start_step > ckpt_base {
-        let mut replay = LocalShards { shards: a.n_workers as u64 };
+        let mut replay = LocalShards { shards: a.n_workers as u64, codec: cfg.grad_codec };
         let rcfg = RoundCfg {
             start_step: ckpt_base,
             steps: start_step - ckpt_base,
@@ -280,23 +295,29 @@ fn run_assignment(
 
     // Persist a layer group at a step. The group is a parameter (not the
     // assignment's) because takeover/rebalance can move it mid-session; an
-    // empty group writes nothing.
-    let save_shard = |weights: &[Mat], step: u64, g: (u32, u32)| -> crate::Result<()> {
-        if g.0 >= g.1 {
-            return Ok(());
-        }
-        let range = g.0 as usize..g.1 as usize;
-        let meta = shard::ShardMeta {
-            tag: a.tag.clone(),
-            worker_id: a.worker_id,
-            n_workers: a.n_workers,
-            step,
-            group_start: g.0,
-            group_end: g.1,
-            layers: a.layers[range.clone()].to_vec(),
+    // empty group writes nothing. `owners` is the surviving topology the
+    // coordinator shipped with the Checkpoint frame — recorded so a later
+    // `--resume` can reconcile against whatever cluster shape wrote these
+    // files.
+    let save_shard =
+        |weights: &[Mat], step: u64, g: (u32, u32), owners: &[(u32, u32, u32)]| -> crate::Result<()> {
+            if g.0 >= g.1 {
+                return Ok(());
+            }
+            let range = g.0 as usize..g.1 as usize;
+            let meta = shard::ShardMeta {
+                tag: a.tag.clone(),
+                worker_id: a.worker_id,
+                n_workers: a.n_workers,
+                step,
+                group_start: g.0,
+                group_end: g.1,
+                ckpt_base,
+                owners: owners.to_vec(),
+                layers: a.layers[range.clone()].to_vec(),
+            };
+            shard::save(&meta, &weights[range], &path)
         };
-        shard::save(&meta, &weights[range], &path)
-    };
 
     // The round loop itself — shard grads → reduced update → checkpoint
     // cadence — is the shared engine; this worker only supplies the wire
@@ -311,6 +332,7 @@ fn run_assignment(
         group: (a.group_start, a.group_end),
         save: &save_shard,
         chaos: cfg.chaos.resolve(a.seed, a.worker_id, a.steps),
+        codec: cfg.grad_codec,
     };
     let rcfg = RoundCfg {
         start_step,
@@ -394,10 +416,14 @@ struct WireRounds<'a> {
     /// Current checkpoint layer group (start, end], updated by permanent
     /// reassignment.
     group: (u32, u32),
-    /// Persists a layer group at a step (`shard::save` + meta).
-    save: &'a dyn Fn(&[Mat], u64, (u32, u32)) -> crate::Result<()>,
+    /// Persists a layer group at a step (`shard::save` + meta), with the
+    /// surviving topology the coordinator attached to the barrier.
+    save: &'a dyn Fn(&[Mat], u64, (u32, u32), &[(u32, u32, u32)]) -> crate::Result<()>,
     /// Scripted fault state (no-op without `--chaos`).
     chaos: ChaosState,
+    /// The session's gradient-frame codec (outbound `Grads` encode,
+    /// inbound `ReducedGrads` decode).
+    codec: GradCodec,
 }
 
 impl WireRounds<'_> {
@@ -449,7 +475,8 @@ impl WireRounds<'_> {
                 continue;
             }
             let (loss, grads) = task.shard_grads(weights, step, s);
-            self.send_grads(&Msg::Grads { step, shard: s, loss, mats: grads })?;
+            let payload = encode_mats(self.codec, &grads);
+            self.send_grads(&Msg::Grads { step, shard: s, loss, grads: payload })?;
             sent.push(s);
         }
         Ok(())
@@ -500,11 +527,14 @@ impl RoundIo for WireRounds<'_> {
                         self.send_missing(task, weights, step, &shards, &mut sent)?;
                     }
                 }
-                Msg::ReducedGrads { step: s, loss, mats } => {
+                Msg::ReducedGrads { step: s, loss, grads } => {
+                    anyhow::ensure!(s == step, "ReducedGrads for step {s} at local step {step}");
+                    let mats = decode_mats(self.codec, &grads)?;
                     anyhow::ensure!(
-                        s == step && mats.len() == weights.len(),
-                        "ReducedGrads for step {s} ({} tensors) at local step {step}",
-                        mats.len()
+                        mats.len() == weights.len(),
+                        "ReducedGrads carries {} tensors for {} layers",
+                        mats.len(),
+                        weights.len()
                     );
                     return Ok(Round::Reduced { loss, mats });
                 }
@@ -527,9 +557,9 @@ impl RoundIo for WireRounds<'_> {
                         self.apply_permanent(&shards, (group_start, group_end))?;
                     }
                 }
-                Msg::Checkpoint { step: s } => {
+                Msg::Checkpoint { step: s, owners } => {
                     anyhow::ensure!(s == step, "Checkpoint for step {s}, expected {step}");
-                    (self.save)(weights, step, self.group)?;
+                    (self.save)(weights, step, self.group, &owners)?;
                     write_msg(self.stream, &Msg::Ack { step })?;
                     return Ok(None);
                 }

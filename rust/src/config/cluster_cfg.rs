@@ -70,6 +70,10 @@ pub struct ClusterCfg {
     /// Floor on the straggler soft deadline (ms), so short rounds don't
     /// trigger speculation on scheduler jitter alone.
     pub straggler_min_ms: u64,
+    /// Gradient frame codec for the wire: `"raw"` (plain f32), `"lossless"`
+    /// (byte-plane transposed + RLE, exact), or `"q8"` (deterministic int8
+    /// quantization). Negotiated at `Hello`; every process must agree.
+    pub grad_codec: String,
 }
 
 impl Default for ClusterCfg {
@@ -99,6 +103,7 @@ impl Default for ClusterCfg {
             resume: false,
             straggler_factor: 4.0,
             straggler_min_ms: 200,
+            grad_codec: "raw".to_string(),
         }
     }
 }
@@ -132,6 +137,7 @@ impl ClusterCfg {
             ("resume", Json::Bool(self.resume)),
             ("straggler_factor", Json::num(self.straggler_factor)),
             ("straggler_min_ms", Json::num(self.straggler_min_ms as f64)),
+            ("grad_codec", Json::str(&self.grad_codec)),
         ])
     }
 
@@ -202,6 +208,9 @@ impl ClusterCfg {
         if let Some(x) = j.get("straggler_min_ms").as_f64() {
             cfg.straggler_min_ms = x as u64;
         }
+        if let Some(s) = j.get("grad_codec").as_str() {
+            cfg.grad_codec = s.to_string();
+        }
         Some(cfg)
     }
 
@@ -240,6 +249,7 @@ mod tests {
             resume: true,
             straggler_factor: 2.5,
             straggler_min_ms: 75,
+            grad_codec: "q8".to_string(),
             ..ClusterCfg::default()
         };
         cfg.optim = OptimCfg::new(OptimKind::GaLore).with_lr(1e-2);
@@ -276,6 +286,7 @@ mod tests {
         assert_eq!(cfg.steps, 3);
         assert_eq!(cfg.preset, dflt.preset);
         assert_eq!(cfg.optim, dflt.optim);
+        assert_eq!(cfg.grad_codec, "raw", "grad codec defaults to raw");
         assert_eq!(ClusterCfg::from_json(&Json::parse("{}").unwrap()).unwrap(), dflt);
     }
 

@@ -143,6 +143,7 @@ impl Trainer {
 
         let mut io = LocalShards {
             shards: self.cfg.dp_workers.max(1) as u64,
+            codec: crate::cluster::codec::GradCodec::Raw,
         };
         let rcfg = RoundCfg {
             start_step: 0,

@@ -212,6 +212,14 @@ impl<'a> ByteReader<'a> {
         Ok(Mat::from_vec(rows, cols, data))
     }
 
+    /// Read exactly `n` raw bytes, rejecting any `n` above `cap` before
+    /// touching the buffer. Borrows from the underlying slice — no copy,
+    /// no allocation; the cap bounds what a caller may later size by `n`.
+    pub fn take_bytes(&mut self, n: usize, cap: usize, what: &str) -> crate::Result<&'a [u8]> {
+        check_cap(n as u64, cap as u64, format_args!("{what}: byte length"))?;
+        self.take(n, what)
+    }
+
     /// Error unless every byte has been consumed (catches frames that carry
     /// trailing garbage after a well-formed prefix).
     pub fn expect_end(&self, what: &str) -> crate::Result<()> {

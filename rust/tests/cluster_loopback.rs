@@ -12,6 +12,7 @@ use std::net::{TcpListener, TcpStream};
 use std::time::Duration;
 
 use sumo::cluster::chaos::ChaosSpec;
+use sumo::cluster::codec::GradCodec;
 use sumo::cluster::messages::{
     encode, read_msg, write_msg, Msg, HEADER_BYTES, TASK_SUPPORT_ALL, WIRE_MAGIC, WIRE_VERSION,
 };
@@ -61,6 +62,23 @@ fn spawn_chaos_worker(
 ) -> std::thread::JoinHandle<sumo::Result<WorkerReport>> {
     let mut cfg = WorkerCfg::new(id, addr);
     cfg.chaos = ChaosSpec::parse(spec).unwrap();
+    std::thread::spawn(move || sumo::cluster::worker::run(&cfg))
+}
+
+/// A worker speaking a specific gradient codec (and optionally a chaos
+/// script) — the wire v4 conformance tests drive every codec through the
+/// same spawn path.
+fn spawn_codec_worker(
+    id: u32,
+    addr: &str,
+    codec: &str,
+    chaos: Option<&str>,
+) -> std::thread::JoinHandle<sumo::Result<WorkerReport>> {
+    let mut cfg = WorkerCfg::new(id, addr);
+    cfg.grad_codec = GradCodec::parse(codec).unwrap();
+    if let Some(spec) = chaos {
+        cfg.chaos = ChaosSpec::parse(spec).unwrap();
+    }
     std::thread::spawn(move || sumo::cluster::worker::run(&cfg))
 }
 
@@ -246,7 +264,11 @@ fn chaos_silent_worker_is_taken_over_and_the_run_completes() {
     let zombie = std::thread::spawn(move || {
         let mut s = TcpStream::connect(&zaddr).unwrap();
         s.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
-        write_msg(&mut s, &Msg::Hello { worker_id: 1, task_support: TASK_SUPPORT_ALL }).unwrap();
+        write_msg(
+            &mut s,
+            &Msg::Hello { worker_id: 1, task_support: TASK_SUPPORT_ALL, codec: 0 },
+        )
+        .unwrap();
         let a = match read_msg(&mut s).unwrap() {
             Msg::AssignShards(a) => *a,
             m => panic!("expected assignment, got {}", m.name()),
@@ -443,6 +465,167 @@ fn chaos_total_loss_fails_with_a_clean_error() {
     assert!(werr.contains("chaos: killed at step 2"), "got: {werr}");
 }
 
+/// Wire v4 acceptance: under every negotiated codec the cluster lands on
+/// exactly the bits the single-process reference produces. The reference
+/// runs the same codec canonicalization, so the comparison also proves the
+/// coordinator and workers agree on what "canonical" means.
+#[test]
+fn wire_v4_every_codec_matches_local_bitwise() {
+    let mut fnvs = Vec::new();
+    for codec in ["raw", "lossless", "q8"] {
+        let mut cfg = test_cfg(&format!("codec_{codec}"), 2, 6);
+        cfg.grad_codec = codec.to_string();
+        std::fs::remove_dir_all(&cfg.ckpt_dir).ok();
+
+        let (addr, coord) = spawn_coordinator(cfg.clone());
+        let w0 = spawn_codec_worker(0, &addr, codec, None);
+        let w1 = spawn_codec_worker(1, &addr, codec, None);
+        let outcome = coord.join().unwrap().unwrap_or_else(|e| panic!("{codec}: {e}"));
+        let r0 = w0.join().unwrap().expect("worker 0 failed");
+        let r1 = w1.join().unwrap().expect("worker 1 failed");
+
+        let reference = local::run_local(&cfg).unwrap();
+        let fnv = weights_fingerprint(&outcome.weights);
+        assert_eq!(
+            fnv,
+            weights_fingerprint(&reference.weights),
+            "{codec}: cluster weights must be bitwise identical to the local reference"
+        );
+        assert_eq!(outcome.final_loss, reference.final_loss, "{codec}: loss drift");
+        assert_eq!(r0.weights_fnv, fnv, "{codec}: worker 0 replica diverged");
+        assert_eq!(r1.weights_fnv, fnv, "{codec}: worker 1 replica diverged");
+        std::fs::remove_dir_all(&cfg.ckpt_dir).ok();
+        fnvs.push((codec, fnv));
+    }
+    // Exact codecs reproduce the raw trajectory bit-for-bit; the lossy one
+    // must NOT — if it did, canonicalization would be vacuously untested.
+    assert_eq!(fnvs[0].1, fnvs[1].1, "lossless must reproduce the raw trajectory");
+    assert_ne!(fnvs[2].1, fnvs[0].1, "q8 should quantize onto a different trajectory");
+}
+
+/// The failure-free determinism above must survive a mid-run kill: the
+/// survivor's recomputation of the lost shard goes through the same
+/// canonicalization as the wire path, under both compressed codecs.
+#[test]
+fn wire_v4_chaos_kill_stays_bitwise_identical_under_compressed_codecs() {
+    for codec in ["lossless", "q8"] {
+        let mut cfg = test_cfg(&format!("codec_kill_{codec}"), 2, 8);
+        cfg.grad_codec = codec.to_string();
+        std::fs::remove_dir_all(&cfg.ckpt_dir).ok();
+
+        let (addr, coord) = spawn_coordinator(cfg.clone());
+        let w0 = spawn_codec_worker(0, &addr, codec, None);
+        let w1 = spawn_codec_worker(1, &addr, codec, Some(r#"[{"kind":"kill","step":4}]"#));
+        let outcome = coord.join().unwrap().unwrap_or_else(|e| panic!("{codec}: {e}"));
+        let r0 = w0.join().unwrap().expect("survivor failed");
+        let err = w1.join().unwrap().unwrap_err().to_string();
+        assert!(err.contains("chaos: killed at step 4"), "{codec}: {err}");
+
+        let reference = local::run_local(&cfg).unwrap();
+        assert_eq!(
+            weights_fingerprint(&outcome.weights),
+            weights_fingerprint(&reference.weights),
+            "{codec}: takeover must stay bitwise identical to the failure-free reference"
+        );
+        assert!(outcome.recovered >= 1, "{codec}: the killed shard was recovered");
+        assert_eq!(r0.shutdown_reason, "done");
+        assert_eq!(r0.weights_fnv, weights_fingerprint(&outcome.weights));
+        std::fs::remove_dir_all(&cfg.ckpt_dir).ok();
+    }
+}
+
+/// A worker offering a different codec than the session negotiated must be
+/// rejected at the handshake with an explanatory error on BOTH sides —
+/// never admitted to exchange frames it would misinterpret.
+#[test]
+fn wire_v4_codec_mismatch_is_rejected_at_the_handshake() {
+    let cfg = test_cfg("codec_mismatch", 1, 4); // session codec: raw (default)
+    let (addr, coord) = spawn_coordinator(cfg);
+    let w0 = spawn_codec_worker(0, &addr, "q8", None);
+    let cerr = coord.join().unwrap().unwrap_err().to_string();
+    assert!(cerr.contains("offered grad codec"), "got: {cerr}");
+    let werr = w0.join().unwrap().unwrap_err().to_string();
+    assert!(werr.contains("coordinator rejected worker 0"), "got: {werr}");
+}
+
+/// Post-failover resume: session 1 loses a worker mid-run, so its final
+/// shard files reflect the re-dealt surviving topology — and session 2
+/// resumes from them with a DIFFERENT worker count. Reconciliation must
+/// assemble the newest complete step from whatever files cover the model,
+/// ignoring the dead worker's stale earlier-step shard.
+#[test]
+fn resume_reconciles_post_failover_topology_with_fewer_workers() {
+    let mut cfg = test_cfg("resume_failover", 3, 8);
+    cfg.ckpt_every = 2;
+    std::fs::remove_dir_all(&cfg.ckpt_dir).ok();
+
+    // Session 1: worker 2 dies at step 3, after the step-2 checkpoint wrote
+    // its shard. Survivors take over its layer group, so the step-8 files
+    // from workers 0 and 1 cover the whole model between them.
+    let (addr, coord) = spawn_coordinator(cfg.clone());
+    let w0 = spawn_worker(0, &addr);
+    let w1 = spawn_worker(1, &addr);
+    let w2 = spawn_chaos_worker(2, &addr, r#"[{"kind":"kill","step":3}]"#);
+    let first = coord.join().unwrap().expect("session 1 failed");
+    w0.join().unwrap().unwrap();
+    w1.join().unwrap().unwrap();
+    assert!(w2.join().unwrap().is_err());
+    assert_eq!(first.final_step, 8);
+    assert!(first.recovered >= 1);
+    // The dead worker's shard file is still on disk at its last checkpoint
+    // step — reconciliation must skip past it to the newer complete step.
+    assert!(sumo::cluster::shard::shard_path(&cfg.ckpt_dir, 2, 3).exists());
+
+    // Session 2: two workers, not three. The old 3-way group boundaries no
+    // longer exist; each worker re-slices its new group out of the files.
+    cfg.workers = 2;
+    cfg.resume = true;
+    cfg.steps = 3;
+    let (addr, coord) = spawn_coordinator(cfg.clone());
+    let w0 = spawn_worker(0, &addr);
+    let w1 = spawn_worker(1, &addr);
+    let second = coord.join().unwrap().expect("post-failover resume failed");
+    let r0 = w0.join().unwrap().unwrap();
+    let r1 = w1.join().unwrap().unwrap();
+    assert_eq!(second.start_step, 8, "must resume from the newest complete step");
+    assert_eq!(second.final_step, 11);
+    assert_eq!((r0.final_step, r1.final_step), (11, 11));
+    let fnv = weights_fingerprint(&second.weights);
+    assert_eq!(r0.weights_fnv, fnv, "resumed replica diverged");
+    assert_eq!(r1.weights_fnv, fnv, "resumed replica diverged");
+    assert_ne!(fnv, first.fingerprint(), "resumed session must make progress");
+    std::fs::remove_dir_all(&cfg.ckpt_dir).ok();
+}
+
+/// Genuinely missing shards (no step is fully covered) must fail the
+/// resume with an explanatory error instead of silently restarting at 0.
+#[test]
+fn resume_with_a_lost_shard_fails_with_a_clean_error() {
+    let mut cfg = test_cfg("resume_lost", 2, 4);
+    std::fs::remove_dir_all(&cfg.ckpt_dir).ok();
+
+    let (addr, coord) = spawn_coordinator(cfg.clone());
+    let (w0, w1) = (spawn_worker(0, &addr), spawn_worker(1, &addr));
+    coord.join().unwrap().unwrap();
+    w0.join().unwrap().unwrap();
+    w1.join().unwrap().unwrap();
+
+    // Lose worker 0's shard: the surviving file covers only half the model,
+    // so no step is complete and reconciliation must say so.
+    std::fs::remove_file(sumo::cluster::shard::shard_path(&cfg.ckpt_dir, 0, 2)).unwrap();
+    cfg.resume = true;
+    let (addr, coord) = spawn_coordinator(cfg.clone());
+    let w0 = spawn_worker(0, &addr);
+    let w1 = spawn_worker(1, &addr);
+    let cerr = coord.join().unwrap().unwrap_err().to_string();
+    assert!(cerr.contains("failed while offering group state"), "got: {cerr}");
+    let werr = w0.join().unwrap().unwrap_err().to_string();
+    assert!(werr.contains("cover no complete step"), "got: {werr}");
+    let werr = w1.join().unwrap().unwrap_err().to_string();
+    assert!(werr.contains("cover no complete step"), "got: {werr}");
+    std::fs::remove_dir_all(&cfg.ckpt_dir).ok();
+}
+
 #[test]
 fn kill_all_aborts_the_join_phase() {
     let cfg = test_cfg("killall", 2, 10);
@@ -467,12 +650,14 @@ fn hostile_frames_are_rejected_before_allocation() {
     assert!(err.contains("frame"), "got: {err}");
 
     // Truncated payload: header promises more bytes than are present.
-    let mut good = encode(&Msg::Hello { worker_id: 3, task_support: TASK_SUPPORT_ALL });
+    let mut good =
+        encode(&Msg::Hello { worker_id: 3, task_support: TASK_SUPPORT_ALL, codec: 0 });
     good.truncate(good.len() - 2);
     assert!(sumo::cluster::messages::decode(&good).is_err());
 
     // Bad version byte.
-    let mut bad = encode(&Msg::Hello { worker_id: 3, task_support: TASK_SUPPORT_ALL });
+    let mut bad =
+        encode(&Msg::Hello { worker_id: 3, task_support: TASK_SUPPORT_ALL, codec: 0 });
     bad[4] = 99;
     let err = sumo::cluster::messages::decode(&bad).unwrap_err().to_string();
     assert!(err.contains("version"), "got: {err}");

@@ -19,6 +19,7 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use sumo::cluster::chaos::{ChaosSpec, MAX_FAULTS};
+use sumo::cluster::codec::{decode_mats, encode_mats, GradCodec};
 use sumo::cluster::messages::{self, Msg, HEADER_BYTES, MAX_FRAME_BYTES};
 use sumo::cluster::shard::{self, ShardMeta};
 use sumo::config::{ClusterCfg, ModelCfg, OptimCfg, OptimKind};
@@ -90,12 +91,14 @@ fn must_err<T, F: FnOnce() -> sumo::Result<T>>(label: &str, cap: u64, f: F) {
 
 fn sample_msgs(rng: &mut Rng) -> Vec<Msg> {
     let mats = vec![Mat::randn(3, 2, 1.0, rng), Mat::randn(1, 4, 1.0, rng)];
+    let grads = encode_mats(GradCodec::Raw, &mats);
     vec![
-        Msg::Hello { worker_id: 3, task_support: 3 },
+        Msg::Hello { worker_id: 3, task_support: 3, codec: 0 },
         Msg::GroupState { step: 7, mats: mats.clone() },
-        Msg::SyncWeights { start_step: 2, ckpt_base: 1, mats: mats.clone() },
-        Msg::Grads { step: 9, shard: 1, loss: 0.5, mats },
-        Msg::Checkpoint { step: 11 },
+        Msg::SyncWeights { start_step: 2, ckpt_base: 1, mats },
+        Msg::Grads { step: 9, shard: 1, loss: 0.5, grads: grads.clone() },
+        Msg::ReducedGrads { step: 9, loss: 0.25, grads },
+        Msg::Checkpoint { step: 11, owners: vec![(0, 0, 1), (1, 1, 2)] },
         Msg::Ack { step: 1 },
         Msg::KillAll,
         Msg::Shutdown { reason: "bye".into() },
@@ -324,6 +327,8 @@ fn fuzz_shard(rng: &mut Rng, dir: &std::path::Path) {
         group_start: 0,
         group_end: 2,
         layers,
+        ckpt_base: 0,
+        owners: vec![(0, 0, 2)],
     };
     let path = dir.join("fuzz.shard");
     shard::save(&meta, &weights, &path).unwrap();
@@ -430,6 +435,92 @@ fn fuzz_chaos_spec(rng: &mut Rng) {
 }
 
 // ---------------------------------------------------------------------------
+// Surface 5: compressed gradient frames (`cluster::codec::decode_mats`).
+// The wire v4 payload inside `Msg::Grads`/`Msg::ReducedGrads`: codec
+// envelope, per-mat dims, RLE plane streams, quantization scales.
+// ---------------------------------------------------------------------------
+
+fn fuzz_grads_codec(rng: &mut Rng) {
+    let mats = vec![
+        Mat::randn(8, 5, 1e-3, rng),
+        Mat::from_vec(1, 6, vec![0.0; 6]), // zero pages in the lossless path
+        Mat::from_vec(0, 0, vec![]),
+    ];
+    for codec in [GradCodec::Raw, GradCodec::Lossless, GradCodec::Q8Det] {
+        let valid = encode_mats(codec, &mats);
+        decode_mats(codec, &valid).expect("fixture payload must decode");
+
+        // Every strict truncation is rejected: dims without bodies,
+        // RLE streams cut mid-run, missing plane sections.
+        for _ in 0..60 {
+            let keep = rng.below_usize(valid.len());
+            must_err("grads-codec/truncation", GENERAL_CAP, || {
+                decode_mats(codec, &valid[..keep])
+            });
+        }
+
+        // Codec-id corruption: any id but the negotiated one — valid
+        // foreign ids and garbage alike — errs cleanly before mat decode.
+        for hostile_id in [0u8, 1, 2, 3, 77, 255] {
+            if hostile_id == codec.id() {
+                continue;
+            }
+            let mut m = valid.clone();
+            m[0] = hostile_id;
+            must_err("grads-codec/id-corruption", GENERAL_CAP, || decode_mats(codec, &m));
+        }
+
+        // Inflated mat-count claim dies at the MAX_MATS cap, before the
+        // mat vector is sized by it.
+        {
+            let mut m = valid.clone();
+            m[1..5].copy_from_slice(&u32::MAX.to_le_bytes());
+            must_err("grads-codec/count-inflation", GENERAL_CAP, || decode_mats(codec, &m));
+        }
+
+        // Inflated dims on the first mat body (rows at offset 5): the
+        // element-cap check fires before any allocation sized by the claim.
+        {
+            let mut m = valid.clone();
+            m[5..9].copy_from_slice(&u32::MAX.to_le_bytes());
+            must_err("grads-codec/dim-inflation", GENERAL_CAP, || decode_mats(codec, &m));
+        }
+
+        // Arbitrary single-bit flips: a payload-byte flip may legally still
+        // decode; nothing may panic or allocate past the cap.
+        for _ in 0..300 {
+            let mut m = valid.clone();
+            let off = rng.below_usize(m.len());
+            m[off] ^= 1 << rng.below(8);
+            guarded("grads-codec/byte-flip", GENERAL_CAP, || decode_mats(codec, &m));
+        }
+    }
+
+    // Hand-built lossless mutant: an RLE section claiming a huge encoded
+    // length over a short payload must die against the frame cap / bytes
+    // present, never allocate the claim.
+    let mut m = vec![1u8]; // lossless id
+    m.extend_from_slice(&1u32.to_le_bytes()); // one mat
+    m.extend_from_slice(&2u32.to_le_bytes()); // rows
+    m.extend_from_slice(&2u32.to_le_bytes()); // cols
+    m.push(1); // PLANE_RLE
+    m.extend_from_slice(&u32::MAX.to_le_bytes()); // hostile encoded length
+    must_err("grads-codec/hostile-rle-len", GENERAL_CAP, || {
+        decode_mats(GradCodec::Lossless, &m)
+    });
+
+    // Hand-built q8 mutant: a NaN wire scale is corruption (the encoder
+    // can never produce one) and must be rejected.
+    let mut m = vec![2u8];
+    m.extend_from_slice(&1u32.to_le_bytes());
+    m.extend_from_slice(&1u32.to_le_bytes());
+    m.extend_from_slice(&2u32.to_le_bytes());
+    m.extend_from_slice(&f32::NAN.to_le_bytes());
+    m.extend_from_slice(&[1, 2]);
+    must_err("grads-codec/nan-scale", GENERAL_CAP, || decode_mats(GradCodec::Q8Det, &m));
+}
+
+// ---------------------------------------------------------------------------
 
 #[test]
 fn hostile_inputs_never_panic_or_overallocate() {
@@ -440,5 +531,6 @@ fn hostile_inputs_never_panic_or_overallocate() {
     fuzz_shard(&mut rng, &dir);
     fuzz_config_json(&mut rng);
     fuzz_chaos_spec(&mut rng);
+    fuzz_grads_codec(&mut rng);
     std::fs::remove_dir_all(&dir).ok();
 }

@@ -1,0 +1,200 @@
+//! Wire v4 gradient-frame codec conformance battery.
+//!
+//! Three layers of pinning, from the outside in:
+//!
+//! 1. **Exactness / round-trip properties** over adversarial mats — NaN
+//!    payloads, ±Inf, -0.0, denormals, empty / 1×n / n×1 shapes — compared
+//!    *bitwise* (`to_bits`), never by float equality.
+//! 2. **Determinism and idempotence** of the lossy codec: encode is a pure
+//!    function of the mats, decode∘encode is a projection with encode∘decode
+//!    a fixed point, and canonicalize produces exactly the wire image. This
+//!    is the property the whole cluster determinism story leans on.
+//! 3. **Golden bytes**: hand-computed envelopes pinned byte-for-byte, so an
+//!    accidental wire-format change fails loudly instead of silently
+//!    breaking cross-version clusters.
+
+use sumo::cluster::codec::{decode_mats, encode_mats, GradCodec};
+use sumo::cluster::weights_fingerprint;
+use sumo::linalg::Mat;
+use sumo::util::Rng;
+
+const ALL_CODECS: [GradCodec; 3] = [GradCodec::Raw, GradCodec::Lossless, GradCodec::Q8Det];
+
+/// Bit patterns of every element, mat by mat — the only honest equality
+/// for payloads that may carry NaN or -0.0.
+fn bits(mats: &[Mat]) -> Vec<Vec<u32>> {
+    mats.iter().map(|m| m.data.iter().map(|x| x.to_bits()).collect()).collect()
+}
+
+/// Mats chosen to hit every decoder edge: empty, degenerate shapes, all
+/// the IEEE specials, subnormals, extreme magnitudes, and realistic
+/// small-magnitude gradient noise.
+fn adversarial_mats() -> Vec<Mat> {
+    let mut rng = Rng::new(0x9E37);
+    vec![
+        Mat::from_vec(0, 0, vec![]),
+        Mat::from_vec(1, 8, vec![
+            f32::NAN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            -0.0,
+            f32::from_bits(1), // smallest subnormal
+            f32::MIN_POSITIVE,
+            f32::MAX,
+            -f32::MAX,
+        ]),
+        Mat::from_vec(1, 7, vec![0.0; 7]),
+        Mat::from_vec(5, 1, vec![1.0, -2.0, 0.5, -0.25, 3.75]),
+        Mat::randn(11, 3, 1e-3, &mut rng),
+        Mat::randn(2, 17, 1e4, &mut rng),
+    ]
+}
+
+#[test]
+fn raw_and_lossless_are_exact_for_arbitrary_f32() {
+    let mats = adversarial_mats();
+    for codec in [GradCodec::Raw, GradCodec::Lossless] {
+        let dec = decode_mats(codec, &encode_mats(codec, &mats)).unwrap();
+        assert_eq!(bits(&dec), bits(&mats), "{codec:?} must be bit-exact");
+        for (a, b) in dec.iter().zip(&mats) {
+            assert_eq!(a.shape(), b.shape(), "{codec:?} shape drift");
+        }
+    }
+}
+
+#[test]
+fn lossless_shrinks_gradient_like_payloads() {
+    // Same-magnitude gradients share sign/exponent bytes, so the
+    // transposed planes must RLE below Raw. Not a property of arbitrary
+    // data — pinned only for the payload shape the cluster actually ships.
+    let mut rng = Rng::new(77);
+    let mats = vec![Mat::randn(64, 64, 1e-3, &mut rng)];
+    let raw = encode_mats(GradCodec::Raw, &mats).len();
+    let lossless = encode_mats(GradCodec::Lossless, &mats).len();
+    assert!(
+        lossless < raw,
+        "lossless ({lossless} B) should beat raw ({raw} B) on gradient noise"
+    );
+}
+
+#[test]
+fn q8_is_idempotent_under_every_roundtrip_depth() {
+    let mats = adversarial_mats();
+    let enc1 = encode_mats(GradCodec::Q8Det, &mats);
+    let dec1 = decode_mats(GradCodec::Q8Det, &enc1).unwrap();
+    let enc2 = encode_mats(GradCodec::Q8Det, &dec1);
+    assert_eq!(enc2, enc1, "re-encoding decoded mats must reproduce the bytes");
+    let dec2 = decode_mats(GradCodec::Q8Det, &enc2).unwrap();
+    assert_eq!(bits(&dec2), bits(&dec1), "second decode must be a fixed point");
+    // Canonicalize IS the wire image: what a worker quantizes locally is
+    // bit-equal to what any peer decodes off the wire.
+    let mut canon = adversarial_mats();
+    GradCodec::Q8Det.canonicalize(&mut canon);
+    assert_eq!(bits(&canon), bits(&dec1));
+}
+
+#[test]
+fn encode_is_a_pure_function_across_processes() {
+    // Cross-process determinism, single-process stand-in: two independently
+    // constructed (bit-equal) mat sets — as two workers would compute from
+    // the same seeded streams — must encode to identical bytes under every
+    // codec, and the decoded image must fingerprint identically.
+    for codec in ALL_CODECS {
+        let a = encode_mats(codec, &adversarial_mats());
+        let b = encode_mats(codec, &adversarial_mats());
+        assert_eq!(a, b, "{codec:?} encode differs across identical inputs");
+        let fa = weights_fingerprint(&decode_mats(codec, &a).unwrap());
+        let fb = weights_fingerprint(&decode_mats(codec, &b).unwrap());
+        assert_eq!(fa, fb, "{codec:?} decoded fingerprints differ");
+    }
+}
+
+#[test]
+fn canonicalize_is_identity_for_exact_codecs_and_idempotent_for_q8() {
+    let reference = adversarial_mats();
+    let mut mats = adversarial_mats();
+    GradCodec::Raw.canonicalize(&mut mats);
+    GradCodec::Lossless.canonicalize(&mut mats);
+    assert_eq!(bits(&mats), bits(&reference), "exact codecs must not touch data");
+    GradCodec::Q8Det.canonicalize(&mut mats);
+    let once = bits(&mats);
+    GradCodec::Q8Det.canonicalize(&mut mats);
+    assert_eq!(bits(&mats), once, "canonicalize must be a projection");
+}
+
+#[test]
+fn golden_bytes_raw() {
+    // Envelope: codec id, u32 mat count, then u32 rows, u32 cols, LE f32s.
+    let mats = vec![Mat::from_vec(1, 1, vec![1.0])];
+    let enc = encode_mats(GradCodec::Raw, &mats);
+    assert_eq!(
+        enc,
+        vec![0, 1, 0, 0, 0, 1, 0, 0, 0, 1, 0, 0, 0, 0x00, 0x00, 0x80, 0x3f],
+        "raw wire image changed — that breaks every deployed v4 peer"
+    );
+}
+
+#[test]
+fn golden_bytes_lossless_zero_pages() {
+    // An all-zero mat: dims, then four PLANE_ZERO mode bytes and nothing
+    // else. The zero page is the cheapest section the format has.
+    let mats = vec![Mat::from_vec(1, 2, vec![0.0, 0.0])];
+    let enc = encode_mats(GradCodec::Lossless, &mats);
+    assert_eq!(
+        enc,
+        vec![1, 1, 0, 0, 0, 1, 0, 0, 0, 2, 0, 0, 0, 0, 0, 0, 0],
+        "lossless wire image changed — that breaks every deployed v4 peer"
+    );
+    // And an empty mat is dims + four zero pages, nothing more.
+    let empty = encode_mats(GradCodec::Lossless, &[Mat::from_vec(0, 0, vec![])]);
+    assert_eq!(empty, vec![1, 1, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0]);
+}
+
+#[test]
+fn golden_bytes_q8() {
+    // [1.0, -2.0]: amax 2.0 → minimal power-of-two scale with
+    // 127·s ≥ 2.0 is s = 2⁻⁵ = 0.03125 (f32 LE 00 00 00 3d). Codes:
+    // 1.0/s = 32 = 0x20, -2.0/s = -64 = 0xc0 as a byte.
+    let mats = vec![Mat::from_vec(1, 2, vec![1.0, -2.0])];
+    let enc = encode_mats(GradCodec::Q8Det, &mats);
+    assert_eq!(
+        enc,
+        vec![2, 1, 0, 0, 0, 1, 0, 0, 0, 2, 0, 0, 0, 0x00, 0x00, 0x00, 0x3d, 0x20, 0xc0],
+        "q8 wire image changed — that breaks every deployed v4 peer"
+    );
+    // The decode must land exactly on the quantized grid, not nearby.
+    let dec = decode_mats(GradCodec::Q8Det, &enc).unwrap();
+    assert_eq!(dec[0].data, vec![1.0, -2.0], "±2^k values are on the q8 grid");
+}
+
+#[test]
+fn q8_specials_map_deterministically() {
+    let mats = vec![Mat::from_vec(1, 4, vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 1.0])];
+    let dec = decode_mats(GradCodec::Q8Det, &encode_mats(GradCodec::Q8Det, &mats)).unwrap();
+    // amax sees only the finite 1.0 → minimal power-of-two scale with
+    // 127·s ≥ 1.0 is s = 2⁻⁶ (127·2⁻⁷ ≈ 0.99 falls short). NaN → 0,
+    // ±Inf clamp to ±127·s.
+    let s = 1.0 / 64.0;
+    assert_eq!(dec[0].data, vec![0.0, 127.0 * s, -127.0 * s, 1.0]);
+}
+
+#[test]
+fn every_codec_rejects_the_other_ids_and_truncation() {
+    let mats = vec![Mat::from_vec(2, 3, vec![1.0, -2.0, 3.0, -4.0, 5.5, -6.5])];
+    for codec in ALL_CODECS {
+        let enc = encode_mats(codec, &mats);
+        for other in ALL_CODECS {
+            if other == codec {
+                continue;
+            }
+            let err = decode_mats(other, &enc).unwrap_err().to_string();
+            assert!(err.contains("codec mismatch"), "{codec:?} vs {other:?}: {err}");
+        }
+        for cut in 0..enc.len() {
+            assert!(
+                decode_mats(codec, &enc[..cut]).is_err(),
+                "{codec:?} accepted a {cut}-byte truncation"
+            );
+        }
+    }
+}
